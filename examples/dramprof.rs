@@ -1,0 +1,6 @@
+fn main() {
+    let mut mem = camc::dram::MemorySystem::new(camc::configs::ddr5::DDR5_4800_PAPER.clone());
+    let t0 = std::time::Instant::now();
+    let cycles = mem.run_stream_read(0, 64 << 20);
+    eprintln!("{} cycles in {:?}", cycles, t0.elapsed());
+}

@@ -1,0 +1,171 @@
+//! END-TO-END validation driver (EXPERIMENTS.md §E2E): proves all three
+//! layers compose on a real workload.
+//!
+//!   L1/L2  the trained tinylm (Pallas decode attention inside the AOT'd
+//!          HLO) runs via PJRT from Rust — Python never executes;
+//!   L3     every generated KV page is stored through the compression-
+//!          aware memory controller (cluster + expdelta + bit-plane +
+//!          ZSTD) and every policy read is a partial-plane fetch, timed on
+//!          the DDR5-4800 simulator.
+//!
+//! Outputs: Table II (perplexity under KV policies) on both corpora, the
+//! paper's headline KV/weight compression ratios measured on *real* model
+//! tensors, and DRAM load latency/energy P vs T for the model's weights.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+
+use camc::compress::Codec;
+use camc::configs::ddr5::DDR5_4800_PAPER;
+use camc::coordinator::{KvPageStore, PolicyEngine};
+use camc::dram::MemorySystem;
+use camc::fmt::minifloat::BF16;
+use camc::fmt::{CodeTensor, Dtype};
+use camc::memctrl::{Layout, MemController};
+use camc::quant::policy::KvPolicy;
+use camc::report::Table;
+use camc::runtime::model::KvState;
+use camc::runtime::{read_u16_stream, TinyLm};
+
+const EVAL_TOKENS: usize = 224; // per corpus per policy (fits max_seq=256)
+
+fn eval_policy(
+    lm: &TinyLm,
+    toks: &[u16],
+    policy: &KvPolicy,
+) -> anyhow::Result<(f64, u64, f64)> {
+    let engine = PolicyEngine::new(policy.clone());
+    let mut kv = KvState::new(&lm.meta);
+    let mut store = KvPageStore::new(&lm.meta, Layout::Proposed, Codec::Zstd);
+    let mut nll = 0.0;
+    let mut fetched = 0u64;
+    for i in 0..EVAL_TOKENS {
+        let plan = engine.plan(&kv, &lm.meta);
+        let logits = lm.decode_step_degraded(
+            &mut kv,
+            &plan.degraded_k,
+            &plan.degraded_v,
+            toks[i],
+            &plan.mask,
+        )?;
+        store.sync(&kv, &lm.meta);
+        fetched += store.fetch_bytes(&plan.page_bits);
+        nll += TinyLm::nll(&logits, toks[i + 1]);
+    }
+    Ok(((nll / EVAL_TOKENS as f64).exp(), fetched, store.ratio()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    let lm = TinyLm::load("artifacts")?;
+    println!(
+        "tinylm via PJRT ({} params tensors); corpora: wiki + book\n",
+        lm.meta.param_names.len()
+    );
+
+    // ---------------- Table II analog: perplexity under KV policies ------
+    for corpus in ["wiki", "book"] {
+        let toks = read_u16_stream(std::path::Path::new(&format!(
+            "artifacts/corpus_{corpus}.bin"
+        )))?;
+        let mut tab = Table::new(
+            &format!("Table II analog — perplexity on {corpus} ({EVAL_TOKENS} tokens)"),
+            &["policy", "perplexity", "KV fetched", "KV stored ratio"],
+        );
+        let mut ppls = Vec::new();
+        for (name, policy) in KvPolicy::table2() {
+            let (ppl, fetched, ratio) = eval_policy(&lm, &toks, &policy)?;
+            tab.row(&[
+                name.clone(),
+                format!("{ppl:.2}"),
+                camc::util::humanfmt::bytes(fetched),
+                format!("{ratio:.2}"),
+            ]);
+            ppls.push((name, ppl));
+        }
+        tab.print();
+        // the paper's quality ordering: full <= dynquant <= quest <= sliding
+        let full = ppls[0].1;
+        let sliding = ppls[1].1;
+        let quest = ppls[2].1;
+        let dq2 = ppls[4].1;
+        println!(
+            "ordering check: full {full:.2} <= dynquant {dq2:.2} <= quest {quest:.2} \
+             <= sliding {sliding:.2}  ->  {}\n",
+            if full <= dq2 + 0.05 && dq2 <= quest + 0.05 && quest <= sliding + 0.5 {
+                "HOLDS"
+            } else {
+                "VIOLATED (recorded in EXPERIMENTS.md)"
+            }
+        );
+    }
+
+    // -------------- headline ratios on the REAL model tensors ------------
+    // weights: every trained tensor through the controller
+    let mut mc_p = MemController::new(Layout::Proposed, Codec::Zstd);
+    let mut mc_t = MemController::new(Layout::Traditional, Codec::Zstd);
+    let mut raw = 0u64;
+    let mut stored = 0u64;
+    for (name, data, _shape) in &lm.host_params {
+        let codes: Vec<u16> = data.iter().map(|&x| BF16.encode(x) as u16).collect();
+        let n = codes.len();
+        let t = CodeTensor::new(Dtype::Bf16, codes, vec![n]);
+        let id = mc_p.store_weights(name, &t);
+        mc_t.store_weights(name, &t);
+        raw += mc_p.region(id).logical_bytes();
+        stored += mc_p.region(id).stored_bytes();
+    }
+    println!(
+        "trained tinylm weights through the controller: {} -> {} \
+         (ratio {:.3}, {:.1}% reduction; paper BF16 target ≈25%)",
+        camc::util::humanfmt::bytes(raw),
+        camc::util::humanfmt::bytes(stored),
+        raw as f64 / stored as f64,
+        (1.0 - stored as f64 / raw as f64) * 100.0
+    );
+
+    // ------------- DRAM load latency + energy, P vs T --------------------
+    let mut results = Vec::new();
+    for (label, layout) in [("P (bit-plane)", Layout::Proposed), ("T (byte-level)", Layout::Traditional)] {
+        let mut mc = MemController::new(layout, Codec::Zstd);
+        let mut ids = Vec::new();
+        for (name, data, _shape) in &lm.host_params {
+            let codes: Vec<u16> = data.iter().map(|&x| BF16.encode(x) as u16).collect();
+            let n = codes.len();
+            ids.push(mc.store_weights(name, &CodeTensor::new(Dtype::Bf16, codes, vec![n])));
+        }
+        let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
+        let mut bytes = 0u64;
+        for id in ids {
+            let (_, stats) = mc.load(id, 16, Some(&mut mem))?;
+            bytes += stats.dram_bytes;
+        }
+        let cycles = mem.drain();
+        let ns = cycles as f64 * mem.cfg.t_ck() * 1e9;
+        let e = mem.stats.energy_pj(&mem.cfg);
+        results.push((label, bytes, ns, e.read_pj + e.activation_pj));
+    }
+    let mut tab = Table::new(
+        "tinylm full-weight load on DDR5-4800 (4ch), P vs T",
+        &["layout", "DRAM bytes", "latency", "read+act energy"],
+    );
+    for (label, bytes, ns, pj) in &results {
+        tab.row(&[
+            label.to_string(),
+            camc::util::humanfmt::bytes(*bytes),
+            camc::util::humanfmt::nanos(*ns),
+            format!("{:.1} µJ", pj / 1e6),
+        ]);
+    }
+    tab.print();
+    let (lat_save, e_save) = (
+        1.0 - results[0].2 / results[1].2,
+        1.0 - results[0].3 / results[1].3,
+    );
+    println!(
+        "P vs T: latency -{:.1}%, read+activate energy -{:.1}% (paper: up to 30.0% / 29.9%)",
+        lat_save * 100.0,
+        e_save * 100.0
+    );
+    println!("\ne2e pipeline completed in {:.1}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Design-space explorer: sweep block sizes, codecs, layouts and
+//! de-correlation modes over weight- and KV-shaped data, plus the silicon
+//! cost of each configuration — the ablation study DESIGN.md calls out.
+//!
+//!     cargo run --release --example memctrl_explorer
+
+use camc::bitplane::{plane_major_ratio, value_major_ratio};
+use camc::compress::Codec;
+use camc::configs::LLAMA31_8B;
+use camc::fmt::Dtype;
+use camc::hwmodel::SiliconModel;
+use camc::kvcluster::{cluster_ratio, DecorrelateMode};
+use camc::report::Table;
+use camc::synth::{encode_checkpoint, gen_kv_layer, sample_checkpoint, CorpusProfile};
+
+fn main() {
+    let ts = sample_checkpoint(&LLAMA31_8B, 1 << 18, 42);
+    let weights = encode_checkpoint(&ts, Dtype::Bf16);
+    let (tok, ch) = (512usize, 256usize);
+    let kv = gen_kv_layer(tok, ch, CorpusProfile::Book, 0.5, 9);
+
+    // ---- block-size sweep (weights, zstd, plane-major) ----
+    let mut t = Table::new(
+        "block-size sweep — bf16 weights, zstd",
+        &["block", "value-major", "bit-plane", "gain"],
+    );
+    for block in [1024usize, 2048, 4096, 8192, 16384] {
+        let vm = value_major_ratio(Dtype::Bf16, &weights.codes, Codec::Zstd, block);
+        let pm = plane_major_ratio(Dtype::Bf16, &weights.codes, Codec::Zstd, block);
+        t.row(&[
+            format!("{block}"),
+            format!("{vm:.3}"),
+            format!("{pm:.3}"),
+            format!("{:+.1}%", (pm / vm - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+
+    // ---- codec x layout (weights) ----
+    let mut t = Table::new(
+        "codec × layout — bf16 weights, 4 KB blocks",
+        &["codec", "value-major", "bit-plane"],
+    );
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        t.row(&[
+            codec.to_string(),
+            format!("{:.3}", value_major_ratio(Dtype::Bf16, &weights.codes, codec, 4096)),
+            format!("{:.3}", plane_major_ratio(Dtype::Bf16, &weights.codes, codec, 4096)),
+        ]);
+    }
+    t.print();
+
+    // ---- de-correlation ablation (KV) ----
+    let mut t = Table::new(
+        "KV de-correlation ablation — book-profile KV, zstd, 16-token groups",
+        &["mode", "ratio", "savings"],
+    );
+    for mode in [
+        DecorrelateMode::None,
+        DecorrelateMode::ExpDelta,
+        DecorrelateMode::XorFirst,
+    ] {
+        let r = cluster_ratio(Dtype::Bf16, tok, ch, &kv, 16, mode, Codec::Zstd);
+        t.row(&[
+            mode.name().into(),
+            format!("{r:.3}"),
+            format!("{:.1}%", (1.0 - 1.0 / r) * 100.0),
+        ]);
+    }
+    // baseline without clustering at all
+    let naive = value_major_ratio(Dtype::Bf16, &kv, Codec::Zstd, 4096);
+    t.row(&[
+        "(no clustering)".into(),
+        format!("{naive:.3}"),
+        format!("{:.1}%", (1.0 - 1.0 / naive) * 100.0),
+    ]);
+    t.print();
+
+    // ---- group-size sweep (KV, expdelta) ----
+    let mut t = Table::new(
+        "KV token-group-size sweep — expdelta, zstd",
+        &["group tokens", "ratio"],
+    );
+    for g in [4usize, 8, 16, 32, 64] {
+        let r = cluster_ratio(Dtype::Bf16, tok, ch, &kv, g, DecorrelateMode::ExpDelta, Codec::Zstd);
+        t.row(&[g.to_string(), format!("{r:.3}")]);
+    }
+    t.print();
+
+    // ---- silicon cost of each candidate block size ----
+    let m = SiliconModel::calibrated();
+    let mut t = Table::new(
+        "silicon cost per engine configuration (32 lanes @ 2 GHz)",
+        &["engine", "block bits", "total mm2", "total mW", "pJ/bit"],
+    );
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        for bits in [8192u64, 16384, 32768, 65536] {
+            t.row(&[
+                codec.to_string(),
+                bits.to_string(),
+                format!("{:.3}", m.total_area_mm2(codec, bits, 32)),
+                format!("{:.1}", m.total_power_mw(codec, bits, 32)),
+                format!("{:.2}", m.pj_per_bit(codec, bits)),
+            ]);
+        }
+    }
+    t.print();
+
+    println!(
+        "note: 4 KB blocks + ZSTD is the paper's default — the sweeps above\n\
+         show the ratio/area tradeoff that motivates it."
+    );
+}

@@ -1,0 +1,89 @@
+//! Batched serving demo: several generation requests with different KV
+//! policies run concurrently (sequence-granular continuous batching) on
+//! the trained tinylm via PJRT, every KV page routed through the
+//! compression-aware memory controller.
+//!
+//!     make artifacts && cargo run --release --example serve_inference
+
+use camc::coordinator::{serve, Request, ServeMetrics};
+use camc::quant::policy::{KvPolicy, PageTier};
+use camc::report::Table;
+use camc::runtime::{read_u16_stream, TinyLm};
+
+fn main() -> anyhow::Result<()> {
+    let lm = TinyLm::load("artifacts")?;
+    let toks = read_u16_stream(std::path::Path::new("artifacts/corpus_book.bin"))?;
+    println!(
+        "tinylm loaded: {} layers, d_model {}, vocab {}, max_seq {}",
+        lm.meta.layers, lm.meta.d_model, lm.meta.vocab, lm.meta.max_seq
+    );
+
+    let policies: Vec<(&str, KvPolicy)> = vec![
+        ("full", KvPolicy::Full),
+        ("sliding-64", KvPolicy::SlidingWindow { window: 64 }),
+        ("quest-top5", KvPolicy::QuestTopK { pages: 5 }),
+        (
+            "dynquant-5bf16+5fp8",
+            KvPolicy::DynamicQuant {
+                tiers: vec![
+                    PageTier { pages: 5, dtype: camc::fmt::Dtype::Bf16 },
+                    PageTier { pages: 5, dtype: camc::fmt::Dtype::Fp8E4M3 },
+                ],
+            },
+        ),
+    ];
+
+    let requests: Vec<Request> = policies
+        .iter()
+        .enumerate()
+        .map(|(i, (_, p))| Request {
+            id: i as u64,
+            prompt: toks[i * 512..i * 512 + 96].to_vec(),
+            max_new_tokens: 48,
+            policy: p.clone(),
+        })
+        .collect();
+
+    let mut metrics = ServeMetrics::default();
+    let t0 = std::time::Instant::now();
+    let mut resp = serve(&lm, requests, 2, &mut metrics)?;
+    let wall = t0.elapsed().as_secs_f64();
+    resp.sort_by_key(|r| r.id);
+
+    let mut tab = Table::new(
+        "batched serving with per-request KV policies",
+        &["policy", "gen toks", "mean NLL", "KV fetched", "KV ratio", "latency ms"],
+    );
+    for r in &resp {
+        tab.row(&[
+            policies[r.id as usize].0.into(),
+            r.tokens.len().to_string(),
+            format!("{:.3}", r.mean_nll),
+            camc::util::humanfmt::bytes(r.kv_fetched_bytes),
+            format!("{:.2}", r.kv_ratio),
+            format!("{:.0}", r.wall_ms),
+        ]);
+    }
+    tab.print();
+    println!(
+        "aggregate: {:.1} tok/s over {} steps (p50 {:.0} ms, p99 {:.0} ms)",
+        metrics.tokens_per_sec(wall),
+        metrics.steps,
+        metrics.p50_ms(),
+        metrics.p99_ms()
+    );
+
+    // sanity: restrictive policies fetch fewer KV bytes
+    let full = resp[0].kv_fetched_bytes;
+    for r in &resp[1..] {
+        assert!(
+            r.kv_fetched_bytes <= full,
+            "{}: fetched {} > full {}",
+            policies[r.id as usize].0,
+            r.kv_fetched_bytes,
+            full
+        );
+    }
+    println!("policy traffic ordering ✓ (restrictive policies fetch less than full)");
+    Ok(())
+}

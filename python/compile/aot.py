@@ -1,0 +1,163 @@
+"""AOT lowering: jax functions -> HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format (NOT serialized HloModuleProto):
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts written (to --out, default ../artifacts):
+  prefill.hlo.txt       prefill(params..., tokens i32[PREFILL]) -> tuple
+  decode_step.hlo.txt   decode_step(params..., token, pos, k, v, page_mask)
+                        -> (logits, k, v, queries)
+  bitplane_pack.hlo.txt standalone L1 kernel: u16[8192] -> u8[16, 1024]
+  exp_delta.hlo.txt     standalone L1 kernel: u16[C, 16] -> (u16[C,16], u16[C])
+  weights.camt          (written by train.py)
+  corpus_wiki.bin / corpus_book.bin   uint16 LE token streams
+  meta.json             model config + param signature + artifact index
+
+Usage: python -m compile.aot [--out DIR]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .kernels.bitplane import bitplane_pack
+from .kernels.expdelta import exp_delta
+from .model import CFG, decode_step, param_spec, params_from_list, prefill
+
+PREFILL_LEN = 128
+EVAL_TOKENS = 24_576
+KV_CHANNELS = CFG.n_kv_heads * (CFG.d_model // CFG.n_heads)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill():
+    spec = param_spec()
+
+    def fn(*args):
+        flat = args[: len(spec)]
+        tokens = args[len(spec)]
+        params = params_from_list(list(flat))
+        logits, k, v = prefill(params, tokens)
+        return (logits, k, v)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    shapes.append(jax.ShapeDtypeStruct((PREFILL_LEN,), jnp.int32))
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+def lower_decode_step():
+    spec = param_spec()
+    s = CFG.max_seq
+    kv_shape = (CFG.layers, s, CFG.n_kv_heads, CFG.d_head)
+
+    npages = s // 16
+
+    def fn(*args):
+        flat = args[: len(spec)]
+        token, pos, k, v, page_mask = args[len(spec) :]
+        params = params_from_list(list(flat))
+        logits, k2, v2, queries = decode_step(params, token, pos, k, v, page_mask)
+        return (logits, k2, v2, queries)
+
+    shapes = [jax.ShapeDtypeStruct(s_, jnp.float32) for _, s_ in spec]
+    shapes += [
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((npages,), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+def lower_bitplane_pack(n: int = 8192):
+    def fn(x):
+        return (bitplane_pack(x),)
+
+    return to_hlo_text(
+        jax.jit(fn).lower(jax.ShapeDtypeStruct((n,), jnp.uint16))
+    )
+
+
+def lower_exp_delta(channels: int = KV_CHANNELS, tokens: int = 16):
+    def fn(x):
+        t, b = exp_delta(x)
+        return (t, b)
+
+    return to_hlo_text(
+        jax.jit(fn).lower(jax.ShapeDtypeStruct((channels, tokens), jnp.uint16))
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    def write(name, text):
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name} ({len(text) / 1e6:.2f} MB)", flush=True)
+
+    write("prefill.hlo.txt", lower_prefill())
+    write("decode_step.hlo.txt", lower_decode_step())
+    write("bitplane_pack.hlo.txt", lower_bitplane_pack())
+    write("exp_delta.hlo.txt", lower_exp_delta())
+
+    for profile in ("wiki", "book"):
+        toks = corpus.gen_corpus(profile, EVAL_TOKENS, CFG.vocab, seed=1234)
+        toks.astype("<u2").tofile(os.path.join(out, f"corpus_{profile}.bin"))
+        print(f"wrote corpus_{profile}.bin ({len(toks)} tokens)")
+
+    meta = {
+        "model": {
+            "vocab": CFG.vocab,
+            "layers": CFG.layers,
+            "d_model": CFG.d_model,
+            "n_heads": CFG.n_heads,
+            "n_kv_heads": CFG.n_kv_heads,
+            "d_ff": CFG.d_ff,
+            "max_seq": CFG.max_seq,
+            "d_head": CFG.d_head,
+            "kv_channels": KV_CHANNELS,
+        },
+        "prefill_len": PREFILL_LEN,
+        "page_tokens": 16,
+        "n_pages": CFG.max_seq // 16,
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in param_spec()
+        ],
+        "artifacts": {
+            "prefill": "prefill.hlo.txt",
+            "decode_step": "decode_step.hlo.txt",
+            "bitplane_pack": "bitplane_pack.hlo.txt",
+            "exp_delta": "exp_delta.hlo.txt",
+            "weights": "weights.camt",
+            "corpora": ["corpus_wiki.bin", "corpus_book.bin"],
+        },
+    }
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("wrote meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The .camt tensor container (safetensors substitute, see DESIGN.md).
+
+Layout (little-endian):
+  magic   b"CAMT"            4 B
+  version u32 = 1            4 B
+  count   u32                4 B
+  per tensor:
+    name_len u16, name utf-8
+    dtype    u8   (0 = f32, 1 = u16, 2 = i32, 3 = u8)
+    ndim     u8
+    dims     u32 × ndim
+    data     raw bytes, row-major LE
+"""
+
+import struct
+
+import numpy as np
+
+_DTYPES = {0: np.float32, 1: np.uint16, 2: np.int32, 3: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.uint16): 1,
+          np.dtype(np.int32): 2, np.dtype(np.uint8): 3}
+
+
+def write_camt(path: str, tensors: dict):
+    """Write an ordered dict of name -> np.ndarray."""
+    with open(path, "wb") as f:
+        f.write(b"CAMT")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_camt(path: str) -> dict:
+    """Read back a .camt file (dict preserves write order)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"CAMT", "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES[code]).newbyteorder("<")
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n * dt.itemsize), dtype=dt)
+            out[name] = data.reshape(dims)
+    return out

@@ -1,0 +1,90 @@
+"""Synthetic corpora with WikiText-like and BookSum-like redundancy.
+
+The paper contrasts KV compressibility on WikiText (encyclopedic, high
+per-token surprise) vs BookSum (long-form narrative, strong recurrence).
+These generators span the same axis (DESIGN.md "Simulation substitutions"):
+
+* ``wiki``: Zipfian unigrams + an order-1 Markov chain, short documents,
+  fresh topic tokens per document;
+* ``book``: lower-entropy chain, long documents, and *recurring entities*:
+  each document samples a handful of entity trigrams from a large space
+  and re-emits them throughout — the long-range recall structure that
+  makes distant KV pages matter (Table II) and KV caches drift slowly.
+
+Vocabulary layout (must match rust::coordinator expectations):
+  0          BOS / document separator
+  1..R       entity-component tokens (R = 127)
+  R+1..V-1   ordinary tokens (Zipfian)
+"""
+
+import numpy as np
+
+BOS = 0
+ENTITY_LO = 1
+ENTITY_HI = 128  # exclusive
+
+
+def _zipf_probs(n: int, s: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** s
+    return w / w.sum()
+
+
+def gen_corpus(profile: str, n_tokens: int, vocab: int = 256, seed: int = 0) -> np.ndarray:
+    """Generate a uint16 token stream of length `n_tokens`."""
+    assert profile in ("wiki", "book")
+    rng = np.random.default_rng(seed ^ (0xC0 if profile == "book" else 0x31))
+    ordinary = np.arange(ENTITY_HI, vocab)
+    zipf_s = 1.05 if profile == "wiki" else 1.25
+    probs = _zipf_probs(len(ordinary), zipf_s)
+
+    # order-1 Markov: each token has a small successor menu. The successor
+    # TABLE is part of the language, not of the sample — it is derived from
+    # the profile only, so differently-seeded corpora are fresh samples of
+    # the SAME distribution (train/eval must share the language; only the
+    # per-document entities are novel at eval time).
+    n_ord = len(ordinary)
+    struct_rng = np.random.default_rng(0xABCD if profile == "book" else 0xDCBA)
+    succ = struct_rng.integers(0, n_ord, size=(n_ord, 4))
+    markov_p = 0.55 if profile == "wiki" else 0.75
+
+    doc_len = 128 if profile == "wiki" else 384
+    entity_period = 48 if profile == "wiki" else 28
+
+    out = np.empty(n_tokens, dtype=np.uint16)
+    i = 0
+    while i < n_tokens:
+        # new document
+        out[i] = BOS
+        i += 1
+        n_entities = 3 if profile == "wiki" else 5
+        entities = rng.integers(ENTITY_LO, ENTITY_HI, size=(n_entities, 3))
+        prev = int(rng.choice(n_ord, p=probs))
+        until_entity = rng.integers(4, entity_period)
+        remaining = min(doc_len, n_tokens - i)
+        j = 0
+        while j < remaining:
+            if until_entity <= 0 and j + 3 <= remaining:
+                ent = entities[rng.integers(0, n_entities)]
+                out[i : i + 3] = ent
+                i += 3
+                j += 3
+                until_entity = rng.integers(entity_period // 2, entity_period * 2)
+                continue
+            if rng.random() < markov_p:
+                prev = int(succ[prev, rng.integers(0, 4)])
+            else:
+                prev = int(rng.choice(n_ord, p=probs))
+            out[i] = ordinary[prev]
+            i += 1
+            j += 1
+            until_entity -= 1
+    return out
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, seed: int = 0):
+    """Yield i32[batch, seq+1] training batches sampled at random offsets."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        offs = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[o : o + seq + 1] for o in offs]).astype(np.int32)

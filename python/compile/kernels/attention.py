@@ -1,0 +1,67 @@
+"""Pallas kernel: single-token GQA decode attention.
+
+The consumer of the memory controller's partial-precision KV fetches: the
+kernel attends one new token's queries against the (possibly reduced-
+precision) K/V cache. Grid is over KV heads; each step holds one KV head's
+full cache slice in VMEM and computes the head group's scores on the MXU
+(``q @ K^T`` and ``w @ V`` tiles).
+
+VMEM per grid step for tinylm (S=256, Dh=32): K,V 2 × 256 × 32 × 4 B =
+64 KiB + scores 2 × 256 × 4 B = 2 KiB. For a server-scale config
+(S=4096, Dh=128) the same BlockSpec tiles S into pages — the page is also
+the dynamic-quantization unit, so precision-tier dequant happens per tile
+as it streams from HBM (mirroring the ASIC's per-block decompression).
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale):
+    q = q_ref[0]            # [G, Dh] — this kv head's query group
+    k = k_ref[0]            # [S, Dh]
+    v = v_ref[0]            # [S, Dh]
+    mask = m_ref[...]       # [S]
+    scores = jnp.dot(q, k.T) * scale + mask[None, :]      # [G, S] (MXU)
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores - mx)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(w, v)                              # [G, Dh] (MXU)
+
+
+def decode_attention(q, k, v, mask):
+    """Pallas GQA decode attention.
+
+    Args:
+      q: f32[H, Dh]; k, v: f32[S, KVH, Dh]; mask: f32[S].
+
+    Returns:
+      f32[H, Dh].
+    """
+    h, dh = q.shape
+    s, kvh, _ = k.shape
+    group = h // kvh
+    scale = 1.0 / float(dh) ** 0.5
+    qg = q.reshape(kvh, group, dh)
+    # [KVH, S, Dh] layout so the grid dimension is leading
+    kt = jnp.swapaxes(k, 0, 1)
+    vt = jnp.swapaxes(v, 0, 1)
+    out = pl.pallas_call(
+        lambda q_ref, k_ref, v_ref, m_ref, o_ref: _decode_attn_kernel(
+            q_ref, k_ref, v_ref, m_ref, o_ref, scale=scale
+        ),
+        out_shape=jax.ShapeDtypeStruct((kvh, group, dh), jnp.float32),
+        grid=(kvh,),
+        in_specs=[
+            pl.BlockSpec((1, group, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, group, dh), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(qg, kt, vt, mask)
+    return out.reshape(h, dh)

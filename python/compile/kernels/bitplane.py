@@ -1,0 +1,92 @@
+"""Pallas kernel: bit-plane disaggregation (pack) and re-aggregation.
+
+This is the software model of the paper's crossbar shuffle network,
+reformulated for a TPU-like machine (DESIGN.md §Hardware-Adaptation):
+
+* the value stream is tiled into VMEM blocks of ``BLOCK`` codes;
+* each plane is a masked shift over the lane dimension (vector ALU);
+* the 8-bit packing is a dot with the constant ``[1, 2, ..., 128]``
+  vector, which maps onto the MXU.
+
+VMEM estimate per grid step (BLOCK = 2048, the paper's 4 KB block):
+input 2048 × 2 B = 4 KiB; bit matrix 16 × 2048 × 2 B = 64 KiB (fused);
+output 16 × 256 = 4 KiB — comfortably within a 16 MiB VMEM budget, leaving
+room for double-buffering the HBM↔VMEM stream.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on a real TPU the same kernel lowers to Mosaic unchanged.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+BLOCK = 2048  # codes per grid step = one 4 KB paper block of bf16
+
+
+def _pack_kernel(x_ref, o_ref, *, nbits: int):
+    x = x_ref[...].astype(jnp.uint16)  # [BLOCK]
+    n = x.shape[0]
+    # iota-generated shift planes (pallas kernels may not capture consts)
+    row = lax.broadcasted_iota(jnp.uint16, (nbits, n), 0)
+    shifts = jnp.uint16(nbits - 1) - row
+    bits = (x[None, :] >> shifts) & jnp.uint16(1)  # [nbits, BLOCK]
+    bits = bits.reshape(nbits, n // 8, 8)
+    # pack 8 plane-bits into a byte: dot with [1,2,...,128] (MXU-shaped)
+    j = lax.broadcasted_iota(jnp.uint16, (nbits, n // 8, 8), 2)
+    packed = jnp.sum(bits << j, axis=-1)
+    o_ref[...] = packed.astype(jnp.uint8)
+
+
+def bitplane_pack(codes: jnp.ndarray, nbits: int = 16) -> jnp.ndarray:
+    """Pallas bit-plane pack: uint16[N] -> uint8[nbits, N//8].
+
+    N must be a multiple of 8; the grid tiles N in ``BLOCK`` chunks (N is
+    padded up to a BLOCK multiple and trimmed afterwards).
+    """
+    n = codes.shape[0]
+    assert n % 8 == 0, "N must be a multiple of 8"
+    npad = (n + BLOCK - 1) // BLOCK * BLOCK
+    padded = jnp.pad(codes, (0, npad - n))
+    grid = npad // BLOCK
+    out = pl.pallas_call(
+        lambda x_ref, o_ref: _pack_kernel(x_ref, o_ref, nbits=nbits),
+        out_shape=jax.ShapeDtypeStruct((nbits, npad // 8), jnp.uint8),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((nbits, BLOCK // 8), lambda i: (0, i)),
+        interpret=True,
+    )(padded)
+    return out[:, : n // 8]
+
+
+def _unpack_kernel(p_ref, o_ref, *, nbits: int, kept: int):
+    p = p_ref[...].astype(jnp.uint16)  # [kept, BLOCK//8]
+    nb = p.shape[1]
+    # iota-generated index planes (pallas kernels may not capture consts)
+    j = lax.broadcasted_iota(jnp.uint16, (kept, nb, 8), 2)
+    bits = (p[:, :, None] >> j) & jnp.uint16(1)  # [kept, nb, 8]
+    bits = bits.reshape(kept, nb * 8)
+    row = lax.broadcasted_iota(jnp.uint16, (kept, nb * 8), 0)
+    shifts = jnp.uint16(nbits - 1) - row
+    o_ref[...] = jnp.sum(bits << shifts, axis=0).astype(jnp.uint16)
+
+
+def bitplane_unpack(planes: jnp.ndarray, nbits: int = 16) -> jnp.ndarray:
+    """Pallas re-aggregation: uint8[kept, N//8] -> uint16[N] (zero-filled
+    low planes) — the partial-precision read path."""
+    kept, nb = planes.shape
+    n = nb * 8
+    npad = (n + BLOCK - 1) // BLOCK * BLOCK
+    padded = jnp.pad(planes, ((0, 0), (0, (npad - n) // 8)))
+    grid = npad // BLOCK
+    out = pl.pallas_call(
+        lambda p_ref, o_ref: _unpack_kernel(p_ref, o_ref, nbits=nbits, kept=kept),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.uint16),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((kept, BLOCK // 8), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(padded)
+    return out[:n]

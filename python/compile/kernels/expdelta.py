@@ -1,0 +1,82 @@
+"""Pallas kernel: cross-token exponent delta transform (paper Eq. 6).
+
+Operates on a channel-major group ``uint16[C, T]`` of bf16 codes: per
+channel, the exponent field is rebased to the channel minimum β_j. The
+channel dimension is tiled over the grid; T (the token group, 16 in the
+paper) stays resident in VMEM.
+
+VMEM per grid step: CBLOCK × T × 2 B = 64 × 16 × 2 = 2 KiB — this kernel
+is bandwidth-bound, which is the point: it models a fixed-function stage
+the memory controller applies at line rate.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BF16_EXP_LO, BF16_EXP_MASK
+
+CBLOCK = 64  # channels per grid step
+
+
+def _fwd_kernel(x_ref, o_ref, b_ref):
+    x = x_ref[...].astype(jnp.uint16)  # [CBLOCK, T]
+    exp = (x >> BF16_EXP_LO) & jnp.uint16(BF16_EXP_MASK)
+    beta = jnp.min(exp, axis=1)
+    delta = exp - beta[:, None]
+    rest = x & jnp.uint16(~(BF16_EXP_MASK << BF16_EXP_LO) & 0xFFFF)
+    o_ref[...] = (rest | (delta << BF16_EXP_LO)).astype(jnp.uint16)
+    b_ref[...] = beta.astype(jnp.uint16)
+
+
+def exp_delta(cm_codes: jnp.ndarray):
+    """uint16[C, T] -> (uint16[C, T] transformed, uint16[C] betas)."""
+    c, t = cm_codes.shape
+    cpad = (c + CBLOCK - 1) // CBLOCK * CBLOCK
+    padded = jnp.pad(cm_codes, ((0, cpad - c), (0, 0)))
+    grid = cpad // CBLOCK
+    out, betas = pl.pallas_call(
+        _fwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((cpad, t), jnp.uint16),
+            jax.ShapeDtypeStruct((cpad,), jnp.uint16),
+        ),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((CBLOCK, t), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((CBLOCK, t), lambda i: (i, 0)),
+            pl.BlockSpec((CBLOCK,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(padded)
+    return out[:c], betas[:c]
+
+
+def _inv_kernel(x_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.uint16)
+    beta = b_ref[...].astype(jnp.uint16)
+    delta = (x >> BF16_EXP_LO) & jnp.uint16(BF16_EXP_MASK)
+    exp = delta + beta[:, None]
+    rest = x & jnp.uint16(~(BF16_EXP_MASK << BF16_EXP_LO) & 0xFFFF)
+    o_ref[...] = (rest | (exp << BF16_EXP_LO)).astype(jnp.uint16)
+
+
+def exp_delta_inverse(transformed: jnp.ndarray, betas: jnp.ndarray) -> jnp.ndarray:
+    """Inverse transform (the read path's restore stage)."""
+    c, t = transformed.shape
+    cpad = (c + CBLOCK - 1) // CBLOCK * CBLOCK
+    xp = jnp.pad(transformed, ((0, cpad - c), (0, 0)))
+    bp = jnp.pad(betas, (0, cpad - c))
+    grid = cpad // CBLOCK
+    out = pl.pallas_call(
+        _inv_kernel,
+        out_shape=jax.ShapeDtypeStruct((cpad, t), jnp.uint16),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((CBLOCK, t), lambda i: (i, 0)),
+            pl.BlockSpec((CBLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((CBLOCK, t), lambda i: (i, 0)),
+        interpret=True,
+    )(xp, bp)
+    return out[:c]

@@ -1,0 +1,112 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined *here*; the Pallas
+implementations are checked against these references by pytest/hypothesis
+at build time (the core L1 correctness signal).
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- bitplane
+
+def bitplane_pack_ref(codes: jnp.ndarray, nbits: int = 16) -> jnp.ndarray:
+    """Disaggregate uint16 codes into bit-planes.
+
+    Args:
+      codes: uint16[N], N % 8 == 0.
+      nbits: container width (planes produced).
+
+    Returns:
+      uint8[nbits, N // 8]; plane 0 is the MSB plane (bit nbits-1), matching
+      the Rust `bitplane::layout::disaggregate`. Bit j of output byte k is
+      code 8k+j's bit (LSB-first within a byte).
+    """
+    n = codes.shape[0]
+    assert n % 8 == 0
+    codes = codes.astype(jnp.uint16)
+    # [nbits, N]: bit (nbits-1-p) of each code for plane p
+    shifts = jnp.arange(nbits - 1, -1, -1, dtype=jnp.uint16)
+    bits = (codes[None, :] >> shifts[:, None]) & jnp.uint16(1)
+    bits = bits.reshape(nbits, n // 8, 8).astype(jnp.uint16)
+    weights = jnp.uint16(1) << jnp.arange(8, dtype=jnp.uint16)
+    packed = jnp.sum(bits * weights[None, None, :], axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+def bitplane_unpack_ref(planes: jnp.ndarray, nbits: int = 16) -> jnp.ndarray:
+    """Inverse of :func:`bitplane_pack_ref` (zero-fill for missing planes).
+
+    Args:
+      planes: uint8[kept, N // 8], kept <= nbits, MSB plane first.
+
+    Returns:
+      uint16[N] codes with the dropped low planes zeroed.
+    """
+    kept, nb = planes.shape
+    n = nb * 8
+    j = jnp.arange(8, dtype=jnp.uint8)
+    bits = (planes[:, :, None] >> j[None, None, :]) & jnp.uint8(1)  # [kept, nb, 8]
+    bits = bits.reshape(kept, n).astype(jnp.uint16)
+    shifts = jnp.arange(nbits - 1, nbits - 1 - kept, -1, dtype=jnp.uint16)
+    return jnp.sum(bits << shifts[:, None], axis=0).astype(jnp.uint16)
+
+
+# ---------------------------------------------------------------- expdelta
+
+BF16_EXP_LO = 7   # exponent field bits [7, 15) of a bf16 code
+BF16_EXP_MASK = 0xFF
+
+
+def exp_delta_ref(cm_codes: jnp.ndarray):
+    """Exponent delta transform over channel-major bf16 codes.
+
+    Args:
+      cm_codes: uint16[C, T] — channel-major group (Eq. 3).
+
+    Returns:
+      (transformed uint16[C, T], betas uint16[C]) where each channel's
+      exponent field is rebased to its minimum (Eq. 6).
+    """
+    cm = cm_codes.astype(jnp.uint16)
+    exp = (cm >> BF16_EXP_LO) & jnp.uint16(BF16_EXP_MASK)
+    beta = jnp.min(exp, axis=1)
+    delta = exp - beta[:, None]
+    rest = cm & jnp.uint16(~(BF16_EXP_MASK << BF16_EXP_LO) & 0xFFFF)
+    out = rest | (delta << BF16_EXP_LO)
+    return out.astype(jnp.uint16), beta.astype(jnp.uint16)
+
+
+def exp_delta_inverse_ref(transformed: jnp.ndarray, betas: jnp.ndarray):
+    """Inverse of :func:`exp_delta_ref`."""
+    tr = transformed.astype(jnp.uint16)
+    delta = (tr >> BF16_EXP_LO) & jnp.uint16(BF16_EXP_MASK)
+    exp = delta + betas[:, None].astype(jnp.uint16)
+    rest = tr & jnp.uint16(~(BF16_EXP_MASK << BF16_EXP_LO) & 0xFFFF)
+    return (rest | (exp << BF16_EXP_LO)).astype(jnp.uint16)
+
+
+# --------------------------------------------------------------- attention
+
+def decode_attention_ref(q, k, v, mask):
+    """Single-token GQA decode attention.
+
+    Args:
+      q: f32[H, Dh] — query for the new token, all heads.
+      k: f32[S, KVH, Dh] — key cache.
+      v: f32[S, KVH, Dh] — value cache.
+      mask: f32[S] — 0 for attendable positions, -inf (or very negative)
+        for masked positions.
+
+    Returns:
+      f32[H, Dh] attention output.
+    """
+    h, dh = q.shape
+    s, kvh, _ = k.shape
+    group = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qg = q.reshape(kvh, group, dh)
+    scores = jnp.einsum("kgd,skd->kgs", qg, k) * scale + mask[None, None, :]
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("kgs,skd->kgd", w, v)
+    return out.reshape(h, dh)

@@ -1,0 +1,235 @@
+"""L2: tinylm — a LLaMA-style decoder-only transformer in JAX.
+
+The build-time model whose *real* inference traffic (weights + KV cache)
+exercises the memory controller end to end. Architecture mirrors the
+paper's evaluation models at miniature scale: RMSNorm, RoPE, GQA
+attention, SwiGLU FFN, tied embeddings. The decode path calls the L1
+Pallas kernel (`kernels.attention.decode_attention`), so the attention
+hot-spot lowers into the AOT'd HLO.
+
+All entry points have static shapes (required for AOT export):
+``MAX_SEQ`` bounds the KV cache; positions are dynamic scalars.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention
+
+# ------------------------------------------------------------------ config
+
+@dataclass(frozen=True)
+class TinyLmConfig:
+    vocab: int = 256
+    layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 344
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CFG = TinyLmConfig()
+
+# ------------------------------------------------------------------ params
+
+def param_spec(cfg: TinyLmConfig = CFG):
+    """Ordered (name, shape) list — the canonical flattening used by the
+    .camt container and the AOT input signature."""
+    spec = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.n_heads * cfg.d_head)),
+            (p + "wk", (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+            (p + "wv", (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+            (p + "wo", (cfg.n_heads * cfg.d_head, cfg.d_model)),
+            (p + "ffn_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ff)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec.append(("final_norm", (cfg.d_model,)))
+    return spec
+
+
+def init_params(key, cfg: TinyLmConfig = CFG):
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def params_to_list(params, cfg: TinyLmConfig = CFG):
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def params_from_list(flat, cfg: TinyLmConfig = CFG):
+    return {name: x for (name, _), x in zip(param_spec(cfg), flat)}
+
+
+# ------------------------------------------------------------------- layers
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [T, H, Dh]; positions: i32[T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# ------------------------------------------------------------------ prefill
+
+def prefill(params, tokens, cfg: TinyLmConfig = CFG):
+    """Process a full prompt.
+
+    Args:
+      params: dict of weights.
+      tokens: i32[T] prompt (T <= max_seq, static).
+
+    Returns:
+      (logits f32[T, vocab],
+       k_cache f32[L, max_seq, KVH, Dh], v_cache likewise — zero padded)
+    """
+    t = tokens.shape[0]
+    s = cfg.max_seq
+    x = params["embed"][tokens]  # [T, D]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    mask = jnp.where(causal > 0, 0.0, -1e9)
+
+    k_cache = jnp.zeros((cfg.layers, s, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+
+    for l in range(cfg.layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        q = (h @ params[p + "wq"]).reshape(t, cfg.n_heads, cfg.d_head)
+        k = (h @ params[p + "wk"]).reshape(t, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ params[p + "wv"]).reshape(t, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_cache = k_cache.at[l, :t].set(k)
+        v_cache = v_cache.at[l, :t].set(v)
+        # full causal attention (training/prefill path, plain jnp)
+        group = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(t, cfg.n_kv_heads, group, cfg.d_head)
+        scores = jnp.einsum("tkgd,ukd->kgtu", qg, k) / jnp.sqrt(
+            jnp.asarray(cfg.d_head, jnp.float32)
+        )
+        scores = scores + mask[None, None, :, :]
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("kgtu,ukd->tkgd", w, v).reshape(t, cfg.n_heads * cfg.d_head)
+        x = x + attn @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ffn_norm"])
+        x = x + swiglu(h, params[p + "w_gate"], params[p + "w_up"], params[p + "w_down"])
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T
+    return logits, k_cache, v_cache
+
+
+# -------------------------------------------------------------- decode step
+
+PAGE_TOKENS = 16  # Quest / paper page size; must match rust quant::policy
+
+
+def decode_step(params, token, pos, k_cache, v_cache, page_mask=None,
+                cfg: TinyLmConfig = CFG):
+    """Generate-path single-token step using the Pallas attention kernel.
+
+    Args:
+      token: i32[] current token id.
+      pos: i32[] its position (number of tokens already in the cache).
+      k_cache, v_cache: f32[L, max_seq, KVH, Dh].
+      page_mask: f32[max_seq // PAGE_TOKENS] additive page mask (0 = attend,
+        -1e9 = skip) — the L3 coordinator's KV retention policy. None = all.
+
+    Returns:
+      (logits f32[vocab], new k_cache, new v_cache,
+       queries f32[L, H, Dh] — this step's per-layer queries, used by the
+       coordinator's Quest-style page scoring for the *next* step)
+    """
+    s = cfg.max_seq
+    x = params["embed"][token]  # [D]
+    posv = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    # attendable: positions <= pos, minus policy-skipped pages
+    idx = jnp.arange(s, dtype=jnp.int32)
+    mask = jnp.where(idx <= pos, 0.0, -1e9).astype(jnp.float32)
+    if page_mask is None:
+        page_mask = jnp.zeros((s // PAGE_TOKENS,), jnp.float32)
+    mask = mask + jnp.repeat(page_mask, PAGE_TOKENS)
+    # the current token's page is always attendable
+    cur_page_lo = (pos // PAGE_TOKENS) * PAGE_TOKENS
+    in_cur_page = (idx >= cur_page_lo) & (idx <= pos)
+    mask = jnp.where(in_cur_page, 0.0, mask)
+    queries = []
+
+    for l in range(cfg.layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        q = (h @ params[p + "wq"]).reshape(1, cfg.n_heads, cfg.d_head)
+        k = (h @ params[p + "wk"]).reshape(1, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ params[p + "wv"]).reshape(1, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, posv, cfg.rope_theta)[0]
+        k = rope(k, posv, cfg.rope_theta)[0]
+        queries.append(q)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, None], (l, pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[0][None, None], (l, pos, 0, 0)
+        )
+        attn = decode_attention(q, k_cache[l], v_cache[l], mask)
+        x = x + attn.reshape(cfg.n_heads * cfg.d_head) @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ffn_norm"])
+        x = x + swiglu(h, params[p + "w_gate"], params[p + "w_up"], params[p + "w_down"])
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T
+    return logits, k_cache, v_cache, jnp.stack(queries)
+
+
+# ---------------------------------------------------------------- training
+
+def lm_loss(params, batch, cfg: TinyLmConfig = CFG):
+    """Mean next-token cross-entropy. batch: i32[B, T+1]."""
+    inputs = batch[:, :-1]
+    targets = batch[:, 1:]
+
+    def one(seq):
+        logits, _, _ = prefill(params, seq, cfg)
+        return logits
+
+    logits = jax.vmap(one)(inputs)  # [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,86 @@
+"""Build-time training of tinylm on the synthetic corpora.
+
+Runs once (from `make artifacts`), never at inference time. Trains with
+Adam on a mix of the wiki and book corpora, logs the loss curve, and
+saves weights to artifacts/weights.camt. The loss curve is part of the
+end-to-end validation record (EXPERIMENTS.md).
+
+Usage: python -m compile.train [--steps N] [--out DIR]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .camt import write_camt
+from .model import CFG, init_params, lm_loss, param_spec
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(steps: int = 400, batch: int = 8, seq: int = 128, seed: int = 0,
+          log_every: int = 20):
+    """Train tinylm; returns (params, loss_log)."""
+    wiki = corpus.gen_corpus("wiki", 200_000, CFG.vocab, seed=seed)
+    book = corpus.gen_corpus("book", 200_000, CFG.vocab, seed=seed + 1)
+    mixed = np.concatenate([wiki, book])
+    it = corpus.batches(mixed, batch, seq, seed=seed + 2)
+
+    params = init_params(jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    loss_grad = jax.jit(jax.value_and_grad(lm_loss))
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        b = jnp.asarray(next(it))
+        loss, grads = loss_grad(params, b)
+        params, opt = adam_step(params, grads, opt)
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss),
+                        "elapsed_s": round(time.time() - t0, 1)})
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return params, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    params, log = train(args.steps, args.batch, args.seq)
+    os.makedirs(args.out, exist_ok=True)
+    ordered = {name: np.asarray(params[name]) for name, _ in param_spec()}
+    write_camt(os.path.join(args.out, "weights.camt"), ordered)
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump({"config": CFG.__dict__, "loss_curve": log}, f, indent=1)
+    first, last = log[0]["loss"], log[-1]["loss"]
+    print(f"saved weights.camt; loss {first:.3f} -> {last:.3f}")
+    assert last < first - 0.5, "training failed to reduce loss meaningfully"
+
+
+if __name__ == "__main__":
+    main()

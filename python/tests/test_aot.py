@@ -1,0 +1,42 @@
+"""AOT lowering sanity: HLO text artifacts parse-ready for the Rust side."""
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize(
+    "lower",
+    [aot.lower_bitplane_pack, aot.lower_exp_delta],
+    ids=["bitplane_pack", "exp_delta"],
+)
+def test_kernel_hlo_text(lower):
+    text = lower()
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # interpret=True must not leave Mosaic custom-calls behind
+    assert "mosaic" not in text.lower()
+
+
+def test_decode_step_hlo_text():
+    text = aot.lower_decode_step()
+    assert "ENTRY" in text and "HloModule" in text
+    assert "mosaic" not in text.lower()
+    # returns a 3-tuple (logits, k, v)
+    assert "tuple(" in text.replace(" ", "") or "tuple" in text
+
+
+def test_prefill_hlo_text():
+    text = aot.lower_prefill()
+    assert "ENTRY" in text and "HloModule" in text
+    assert "mosaic" not in text.lower()
+
+
+def test_param_signature_count():
+    from compile.model import CFG, param_spec
+
+    n = len(param_spec())
+    assert n == 2 + 9 * CFG.layers
+    # decode_step inputs = params + token + pos + k + v
+    text = aot.lower_decode_step()
+    assert text.count("parameter(") >= n + 4

@@ -1,0 +1,90 @@
+"""Corpus statistics + .camt container roundtrip."""
+
+import os
+import tempfile
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+from compile.camt import read_camt, write_camt
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def test_corpus_in_vocab_and_deterministic():
+    a = corpus.gen_corpus("wiki", 5000, 256, seed=1)
+    b = corpus.gen_corpus("wiki", 5000, 256, seed=1)
+    c = corpus.gen_corpus("wiki", 5000, 256, seed=2)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.max() < 256 and a.dtype == np.uint16
+
+
+def test_book_has_more_entity_recurrence_than_wiki():
+    wiki = corpus.gen_corpus("wiki", 40000, 256, seed=3)
+    book = corpus.gen_corpus("book", 40000, 256, seed=3)
+    ent = lambda t: np.mean((t >= corpus.ENTITY_LO) & (t < corpus.ENTITY_HI))
+    assert ent(book) > ent(wiki), (ent(book), ent(wiki))
+
+
+def test_book_lower_bigram_entropy():
+    def h2(tokens):
+        # conditional entropy proxy via bigram counts
+        t = tokens.astype(np.int64)
+        pair = t[:-1] * 256 + t[1:]
+        _, counts = np.unique(pair, return_counts=True)
+        p = counts / counts.sum()
+        joint = -(p * np.log2(p)).sum()
+        _, uc = np.unique(t[:-1], return_counts=True)
+        pu = uc / uc.sum()
+        marg = -(pu * np.log2(pu)).sum()
+        return joint - marg
+
+    wiki = corpus.gen_corpus("wiki", 60000, 256, seed=5)
+    book = corpus.gen_corpus("book", 60000, 256, seed=5)
+    assert h2(book) < h2(wiki)
+
+
+def test_documents_are_bos_separated():
+    t = corpus.gen_corpus("book", 20000, 256, seed=7)
+    n_docs = int((t == corpus.BOS).sum())
+    assert n_docs >= 20000 // 400 - 1
+
+
+def test_batches_shape_and_range():
+    t = corpus.gen_corpus("wiki", 10000, 256, seed=9)
+    it = corpus.batches(t, batch=4, seq=32, seed=0)
+    b = next(it)
+    assert b.shape == (4, 33) and b.dtype == np.int32
+    assert b.min() >= 0 and b.max() < 256
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.integers(min_value=0, max_value=5),
+)
+def test_camt_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for i in range(n):
+        kind = rng.integers(0, 4)
+        shape = tuple(rng.integers(1, 8, size=rng.integers(0, 3)))
+        if kind == 0:
+            arr = rng.standard_normal(shape).astype(np.float32)
+        elif kind == 1:
+            arr = rng.integers(0, 65536, size=shape).astype(np.uint16)
+        elif kind == 2:
+            arr = rng.integers(-100, 100, size=shape).astype(np.int32)
+        else:
+            arr = rng.integers(0, 256, size=shape).astype(np.uint8)
+        tensors[f"t{i}"] = arr
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.camt")
+        write_camt(path, tensors)
+        back = read_camt(path)
+    assert list(back.keys()) == list(tensors.keys())
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype

@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references (hypothesis sweeps
+shapes and bit-patterns; assert_allclose / exact equality against ref.py)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, bitplane, expdelta, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------- bitplane
+
+@given(
+    n8=st.integers(min_value=1, max_value=600),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pack_matches_ref(n8, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 65536, size=n8 * 8, dtype=np.uint16)
+    got = np.asarray(bitplane.bitplane_pack(jnp.asarray(codes)))
+    want = np.asarray(ref.bitplane_pack_ref(jnp.asarray(codes)))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    n8=st.integers(min_value=1, max_value=600),
+    kept=st.integers(min_value=0, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pack_unpack_roundtrip_with_truncation(n8, kept, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 65536, size=n8 * 8, dtype=np.uint16)
+    planes = bitplane.bitplane_pack(jnp.asarray(codes))
+    if kept == 0:
+        return
+    back = np.asarray(bitplane.bitplane_unpack(planes[:kept]))
+    drop = 16 - kept
+    want = (codes >> drop) << drop
+    np.testing.assert_array_equal(back, want)
+
+
+def test_pack_known_pattern():
+    # code 0x8000 -> only the MSB plane has bits; code 1 -> only LSB plane
+    codes = np.array([0x8000] * 8 + [0x0001] * 8, np.uint16)
+    p = np.asarray(bitplane.bitplane_pack(jnp.asarray(codes)))
+    assert p.shape == (16, 2)
+    assert p[0, 0] == 0xFF and p[0, 1] == 0x00  # MSB plane
+    assert p[15, 0] == 0x00 and p[15, 1] == 0xFF  # LSB plane
+    assert np.all(p[1:15] == 0)
+
+
+# ---------------------------------------------------------------- expdelta
+
+@given(
+    c=st.integers(min_value=1, max_value=200),
+    t=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_exp_delta_matches_ref_and_inverts(c, t, seed):
+    rng = np.random.default_rng(seed)
+    cm = rng.integers(0, 65536, size=(c, t), dtype=np.uint16)
+    got_t, got_b = expdelta.exp_delta(jnp.asarray(cm))
+    want_t, want_b = ref.exp_delta_ref(jnp.asarray(cm))
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+    inv = expdelta.exp_delta_inverse(got_t, got_b)
+    np.testing.assert_array_equal(np.asarray(inv), cm)
+
+
+def test_exp_delta_preserves_sign_and_mantissa():
+    rng = np.random.default_rng(7)
+    cm = rng.integers(0, 65536, size=(64, 16), dtype=np.uint16)
+    got_t, _ = expdelta.exp_delta(jnp.asarray(cm))
+    got = np.asarray(got_t)
+    np.testing.assert_array_equal(got & 0x807F, cm & 0x807F)
+
+
+def test_exp_delta_coherent_channel_collapses():
+    # identical exponents across tokens -> delta field all zero
+    base = np.uint16(0x3F80)  # 1.0 bf16
+    cm = np.full((8, 16), base, np.uint16)
+    got_t, got_b = expdelta.exp_delta(jnp.asarray(cm))
+    assert np.all((np.asarray(got_t) >> 7) & 0xFF == 0)
+    assert np.all(np.asarray(got_b) == 0x7F)
+
+
+# --------------------------------------------------------------- attention
+
+@given(
+    kvh=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 64, 256]),
+    dh=st.sampled_from([8, 32]),
+    valid=st.integers(min_value=1, max_value=256),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_decode_attention_matches_ref(kvh, group, s, dh, valid, seed):
+    rng = np.random.default_rng(seed)
+    h = kvh * group
+    valid = min(valid, s)
+    q = rng.standard_normal((h, dh)).astype(np.float32)
+    k = rng.standard_normal((s, kvh, dh)).astype(np.float32)
+    v = rng.standard_normal((s, kvh, dh)).astype(np.float32)
+    mask = np.where(np.arange(s) < valid, 0.0, -1e9).astype(np.float32)
+    got = np.asarray(
+        attention.decode_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask)
+        )
+    )
+    want = np.asarray(
+        ref.decode_attention_ref(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask)
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_ignores_masked_positions():
+    rng = np.random.default_rng(3)
+    s, kvh, dh = 32, 2, 16
+    q = rng.standard_normal((4, dh)).astype(np.float32)
+    k = rng.standard_normal((s, kvh, dh)).astype(np.float32)
+    v = rng.standard_normal((s, kvh, dh)).astype(np.float32)
+    mask = np.where(np.arange(s) < 10, 0.0, -1e9).astype(np.float32)
+    out1 = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask)))
+    # scrambling masked K/V must not change the output
+    k2, v2 = k.copy(), v.copy()
+    k2[10:] = rng.standard_normal(k2[10:].shape)
+    v2[10:] = 1e6
+    out2 = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), jnp.asarray(mask)))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_single_valid_position_returns_its_value():
+    s, kvh, dh = 16, 1, 8
+    q = np.ones((2, dh), np.float32)
+    k = np.zeros((s, kvh, dh), np.float32)
+    v = np.zeros((s, kvh, dh), np.float32)
+    v[0, 0] = np.arange(dh)
+    mask = np.where(np.arange(s) < 1, 0.0, -1e9).astype(np.float32)
+    out = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask)))
+    np.testing.assert_allclose(out, np.tile(np.arange(dh, dtype=np.float32), (2, 1)))

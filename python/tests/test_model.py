@@ -1,0 +1,101 @@
+"""L2 correctness: tinylm shapes, causality, prefill/decode agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CFG,
+    decode_step,
+    init_params,
+    lm_loss,
+    param_spec,
+    params_from_list,
+    params_to_list,
+    prefill,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0))
+
+
+def test_param_spec_roundtrip(params):
+    flat = params_to_list(params)
+    back = params_from_list(flat)
+    assert set(back.keys()) == set(params.keys())
+    for k in params:
+        assert params[k].shape == back[k].shape
+    # canonical order is stable
+    names = [n for n, _ in param_spec()]
+    assert names[0] == "embed" and names[-1] == "final_norm"
+    assert len(names) == 2 + 9 * CFG.layers
+
+
+def test_prefill_shapes(params):
+    toks = jnp.arange(12, dtype=jnp.int32) % CFG.vocab
+    logits, k, v = prefill(params, toks)
+    assert logits.shape == (12, CFG.vocab)
+    assert k.shape == (CFG.layers, CFG.max_seq, CFG.n_kv_heads, CFG.d_head)
+    assert v.shape == k.shape
+    # cache is zero past the prompt
+    assert np.all(np.asarray(k)[:, 12:] == 0)
+
+
+def test_prefill_is_causal(params):
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, CFG.vocab, size=16).astype(np.int32)
+    logits1, _, _ = prefill(params, jnp.asarray(toks))
+    toks2 = toks.copy()
+    toks2[10:] = rng.integers(0, CFG.vocab, size=6)
+    logits2, _, _ = prefill(params, jnp.asarray(toks2))
+    # positions before the edit are unaffected
+    np.testing.assert_allclose(
+        np.asarray(logits1)[:10], np.asarray(logits2)[:10], rtol=1e-5, atol=1e-5
+    )
+    # and the edited tail differs
+    assert not np.allclose(np.asarray(logits1)[10:], np.asarray(logits2)[10:])
+
+
+def test_decode_matches_prefill(params):
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, CFG.vocab, size=14).astype(np.int32)
+    logits, _, _ = jax.jit(prefill)(params, jnp.asarray(toks))
+    k = jnp.zeros((CFG.layers, CFG.max_seq, CFG.n_kv_heads, CFG.d_head))
+    v = jnp.zeros_like(k)
+    step = jax.jit(decode_step)
+    outs = []
+    for i, t in enumerate(toks):
+        lg, k, v, _q = step(params, jnp.int32(t), jnp.int32(i), k, v)
+        outs.append(np.asarray(lg))
+    np.testing.assert_allclose(
+        np.stack(outs), np.asarray(logits), rtol=3e-4, atol=3e-4
+    )
+
+
+def test_decode_step_updates_cache_in_place(params):
+    k = jnp.zeros((CFG.layers, CFG.max_seq, CFG.n_kv_heads, CFG.d_head))
+    v = jnp.zeros_like(k)
+    _, k2, v2, _q = decode_step(params, jnp.int32(5), jnp.int32(3), k, v)
+    kn = np.asarray(k2)
+    assert np.all(kn[:, :3] == 0) and np.all(kn[:, 4:] == 0)
+    assert np.any(kn[:, 3] != 0)
+    assert np.any(np.asarray(v2)[:, 3] != 0)
+
+
+def test_loss_decreases_with_one_sgd_step(params):
+    rng = np.random.default_rng(3)
+    batch = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 33)).astype(np.int32))
+    loss0, grads = jax.value_and_grad(lm_loss)(params, batch)
+    stepped = {k: params[k] - 0.05 * grads[k] for k in params}
+    loss1 = lm_loss(stepped, batch)
+    assert float(loss1) < float(loss0)
+
+
+def test_loss_is_near_uniform_at_init(params):
+    rng = np.random.default_rng(4)
+    batch = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 65)).astype(np.int32))
+    loss = float(lm_loss(params, batch))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0, loss

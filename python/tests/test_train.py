@@ -1,0 +1,9 @@
+"""Short-horizon training smoke test: loss must drop on the synthetic mix."""
+
+from compile.train import train
+
+
+def test_short_training_reduces_loss():
+    _, log = train(steps=30, batch=4, seq=64, seed=7, log_every=29)
+    first, last = log[0]["loss"], log[-1]["loss"]
+    assert last < first - 0.3, (first, last)

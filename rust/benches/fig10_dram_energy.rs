@@ -1,0 +1,65 @@
+//! Fig 10: DRAM read+activation energy per weight, proposed bit-plane (P)
+//! vs traditional byte-level (T), for 12 (model, base) configs under the
+//! Fig 9 precision distributions, on the DDR5-4800 4-channel simulator.
+//!
+//! Traffic is simulated at a sampled scale (64 MB of weight reads per
+//! config) and energy reported per weight — energy is linear in traffic,
+//! so sampling preserves ratios exactly (DESIGN.md substitutions).
+//!
+//!     cargo bench --bench fig10_dram_energy
+
+use camc::compress::Codec;
+use camc::configs::ddr5::DDR5_4800_PAPER;
+use camc::configs::SWEEP_MODELS;
+use camc::dram::MemorySystem;
+use camc::fmt::Dtype;
+use camc::quant::mode::RouterSim;
+use camc::quant::traffic::WeightTraffic;
+use camc::report::Table;
+use camc::synth::{encode_checkpoint, sample_checkpoint};
+
+const SAMPLE_WEIGHTS: u64 = 32_000_000; // weights simulated per config
+
+fn energy_per_weight(bits_per_weight: f64) -> (f64, f64) {
+    // stream the equivalent bytes through the DRAM sim, report
+    // (pJ/weight, utilized-BW fraction)
+    let bytes = (SAMPLE_WEIGHTS as f64 * bits_per_weight / 8.0) as u64;
+    let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
+    let cycles = mem.run_stream_read(0, bytes);
+    let e = mem.stats.energy_pj(&mem.cfg);
+    let pj = (e.read_pj + e.activation_pj) / SAMPLE_WEIGHTS as f64;
+    let bw = bytes as f64 / (cycles as f64 * mem.cfg.t_ck())
+        / (mem.cfg.peak_bw_per_channel() * mem.cfg.channels as f64);
+    (pj, bw)
+}
+
+fn main() {
+    let mut tab = Table::new(
+        "Fig 10 — DRAM read+activation energy per weight (DDR5-4800 4ch)",
+        &["model", "base", "P pJ/w", "T pJ/w", "savings"],
+    );
+    for cfg in SWEEP_MODELS {
+        for base in [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Int4] {
+            let ts = sample_checkpoint(cfg, 1 << 17, 42);
+            let t = encode_checkpoint(&ts, base);
+            let tr = WeightTraffic::measure(base, &t.codes, Codec::Zstd);
+            let dist = RouterSim::paper_default(cfg.name).simulate(base, 1200, 64, 7);
+            let (pb, tb) = tr.avg_bits(&dist);
+            let (p_pj, _) = energy_per_weight(pb);
+            let (t_pj, _) = energy_per_weight(tb);
+            tab.row(&[
+                cfg.name.into(),
+                base.to_string(),
+                format!("{p_pj:.1}"),
+                format!("{t_pj:.1}"),
+                format!("{:.1}%", (1.0 - p_pj / t_pj) * 100.0),
+            ]);
+        }
+    }
+    tab.print();
+    println!(
+        "paper: BF16 savings 25.9-29.9%, shrinking with base precision\n\
+         (FP8 ~19.6%, INT4 ~17.9% on Mixtral). shape: savings(BF16) >\n\
+         savings(FP8) > savings(INT4) > 0 per model."
+    );
+}

@@ -1,0 +1,62 @@
+//! Fig 11: average model load latency, P vs T, for 12 (model, base)
+//! configs under dynamic quantization on DDR5-4800.
+//!
+//! The full per-token weight working set is simulated at a sampled scale
+//! and scaled analytically to the model's true active-parameter count
+//! (latency of a streaming load is linear in bytes at fixed efficiency —
+//! the sim measures the efficiency, the scale-up is exact arithmetic).
+//!
+//!     cargo bench --bench fig11_load_latency
+
+use camc::compress::Codec;
+use camc::configs::ddr5::DDR5_4800_PAPER;
+use camc::configs::SWEEP_MODELS;
+use camc::dram::MemorySystem;
+use camc::fmt::Dtype;
+use camc::quant::mode::RouterSim;
+use camc::quant::traffic::WeightTraffic;
+use camc::report::Table;
+use camc::synth::{encode_checkpoint, sample_checkpoint};
+
+const SAMPLE_BYTES: u64 = 64 << 20;
+
+fn load_ms(total_bits: f64) -> f64 {
+    let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
+    let cycles = mem.run_stream_read(0, SAMPLE_BYTES);
+    let secs = cycles as f64 * mem.cfg.t_ck();
+    let bw = SAMPLE_BYTES as f64 / secs; // measured effective bandwidth
+    total_bits / 8.0 / bw * 1e3
+}
+
+fn main() {
+    let mut tab = Table::new(
+        "Fig 11 — model load latency (active params), P vs T",
+        &["model", "base", "P ms", "T ms", "savings"],
+    );
+    for cfg in SWEEP_MODELS {
+        for base in [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Int4] {
+            let ts = sample_checkpoint(cfg, 1 << 17, 42);
+            let t = encode_checkpoint(&ts, base);
+            let tr = WeightTraffic::measure(base, &t.codes, Codec::Zstd);
+            let dist = RouterSim::paper_default(cfg.name).simulate(base, 1200, 64, 7);
+            let (pb, tb) = tr.avg_bits(&dist);
+            let n = cfg.active_params_per_token() as f64;
+            let p_ms = load_ms(n * pb);
+            let t_ms = load_ms(n * tb);
+            tab.row(&[
+                cfg.name.into(),
+                base.to_string(),
+                format!("{p_ms:.1}"),
+                format!("{t_ms:.1}"),
+                format!("{:.1}%", (1.0 - p_ms / t_ms) * 100.0),
+            ]);
+        }
+    }
+    tab.print();
+    println!(
+        "paper: Mixtral BF16 705.90 -> 495.06 ms (-30.0%); LLaMA-70B BF16\n\
+         910.58 -> 674.73 ms (-25.9%); FP8/INT4 savings smaller.\n\
+         shape: P < T everywhere; savings shrink with base precision;\n\
+         latency ordered by active model size."
+    );
+}

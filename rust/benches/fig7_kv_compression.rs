@@ -1,0 +1,96 @@
+//! Fig 7: per-layer KV-cache compression ratios, proposed (cluster +
+//! expdelta + bit-plane) vs baseline (bit-plane only), LZ4 + ZSTD, on
+//! both corpus profiles — measured on the REAL tinylm KV caches when
+//! artifacts exist, plus the synthetic 32-layer LLaMA-8B analog.
+//!
+//!     cargo bench --bench fig7_kv_compression
+
+use camc::bitplane::plane_major_ratio;
+use camc::compress::Codec;
+use camc::fmt::minifloat::BF16;
+use camc::fmt::Dtype;
+use camc::kvcluster::{cluster_ratio, DecorrelateMode};
+use camc::report::Table;
+use camc::runtime::model::KvState;
+use camc::runtime::{read_u16_stream, TinyLm};
+use camc::synth::{gen_kv_layer, CorpusProfile};
+
+fn main() {
+    // ---- synthetic 32-layer LLaMA 3.1 8B analog ----
+    for profile in [CorpusProfile::Wiki, CorpusProfile::Book] {
+        let mut tab = Table::new(
+            &format!("Fig 7 analog — synthetic LLaMA-8B KV, {}", profile.name()),
+            &["layer", "base LZ4", "base ZSTD", "ours LZ4", "ours ZSTD"],
+        );
+        let (tok, ch) = (256usize, 1024usize);
+        let mut totals = [0.0f64; 4];
+        let layers = 8; // sampled layers of 32 (ratio varies smoothly)
+        for l in 0..layers {
+            let frac = l as f64 / (layers - 1) as f64;
+            let kv = gen_kv_layer(tok, ch, profile, frac, 100 + l as u64);
+            let base_l = plane_major_ratio(Dtype::Bf16, &kv, Codec::Lz4, 4096);
+            let base_z = plane_major_ratio(Dtype::Bf16, &kv, Codec::Zstd, 4096);
+            let ours_l = cluster_ratio(Dtype::Bf16, tok, ch, &kv, 16, DecorrelateMode::ExpDelta, Codec::Lz4);
+            let ours_z = cluster_ratio(Dtype::Bf16, tok, ch, &kv, 16, DecorrelateMode::ExpDelta, Codec::Zstd);
+            for (t, v) in totals.iter_mut().zip([base_l, base_z, ours_l, ours_z]) {
+                *t += v / layers as f64;
+            }
+            tab.row(&[
+                format!("{}", l * 4),
+                format!("{base_l:.2}"),
+                format!("{base_z:.2}"),
+                format!("{ours_l:.2}"),
+                format!("{ours_z:.2}"),
+            ]);
+        }
+        tab.row(&[
+            "MEAN".into(),
+            format!("{:.2}", totals[0]),
+            format!("{:.2}", totals[1]),
+            format!("{:.2}", totals[2]),
+            format!("{:.2}", totals[3]),
+        ]);
+        tab.print();
+    }
+
+    // ---- real tinylm KV caches (if artifacts are built) ----
+    if std::path::Path::new("artifacts/weights.camt").exists() {
+        let lm = TinyLm::load("artifacts").expect("tinylm");
+        let mut tab = Table::new(
+            "Fig 7 (real tinylm KV via PJRT decode)",
+            &["corpus", "layer", "baseline ZSTD", "ours ZSTD", "gain"],
+        );
+        for corpus in ["wiki", "book"] {
+            let toks = read_u16_stream(std::path::Path::new(&format!("artifacts/corpus_{corpus}.bin"))).unwrap();
+            let mut kv = KvState::new(&lm.meta);
+            let mask = vec![0.0f32; lm.meta.n_pages];
+            for &t in toks.iter().take(lm.meta.max_seq) {
+                lm.decode_step(&mut kv, t, &mask).unwrap();
+            }
+            let row = lm.meta.n_kv_heads * lm.meta.d_head;
+            for l in 0..lm.meta.layers {
+                let mut codes = Vec::new();
+                for t in 0..lm.meta.max_seq {
+                    let off = (l * lm.meta.max_seq + t) * row;
+                    codes.extend(kv.k[off..off + row].iter().map(|&x| BF16.encode(x) as u16));
+                }
+                let base = plane_major_ratio(Dtype::Bf16, &codes, Codec::Zstd, 4096);
+                let ours = cluster_ratio(Dtype::Bf16, lm.meta.max_seq, row, &codes, 16, DecorrelateMode::ExpDelta, Codec::Zstd);
+                tab.row(&[
+                    corpus.into(),
+                    l.to_string(),
+                    format!("{base:.2}"),
+                    format!("{ours:.2}"),
+                    format!("{:+.1}%", (ours / base - 1.0) * 100.0),
+                ]);
+            }
+        }
+        tab.print();
+    }
+    println!(
+        "paper: overall ratios — baseline ZSTD 1.21 (wiki) / 1.33 (book);\n\
+         ours 1.81 (wiki) / 1.88 (book); improvement 50.3% / 41.7%.\n\
+         shape: ours > baseline on every layer, larger gains where channel\n\
+         coherence is higher."
+    );
+}

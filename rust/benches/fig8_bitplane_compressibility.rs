@@ -1,0 +1,68 @@
+//! Fig 8: per-bit-plane compressibility (ZSTD, 4 KB blocks) for BF16 /
+//! FP8 / INT4 weights and BF16 KV caches on both corpora.
+//!
+//!     cargo bench --bench fig8_bitplane_compressibility
+
+use camc::bitplane::per_plane_ratios;
+use camc::compress::entropy::bit_entropy;
+use camc::compress::Codec;
+use camc::configs::LLAMA31_8B;
+use camc::fmt::Dtype;
+use camc::kvcluster::{decorrelate, DecorrelateMode, KvGroup};
+use camc::report::Table;
+use camc::synth::{encode_checkpoint, gen_kv_layer, sample_checkpoint, CorpusProfile};
+
+fn plane_table(title: &str, dtype: Dtype, codes: &[u16]) {
+    let ratios = per_plane_ratios(dtype, codes, Codec::Zstd, 4096);
+    let pb = camc::bitplane::disaggregate(dtype, codes);
+    let mut tab = Table::new(title, &["plane (msb=0)", "field", "bit H", "zstd ratio"]);
+    let (elo, ehi) = dtype.exponent_planes();
+    let n = dtype.bits();
+    for (p, r) in ratios.iter().enumerate() {
+        let bit = n - 1 - p as u32;
+        let field = if bit == n - 1 {
+            "sign"
+        } else if bit >= elo && bit < ehi {
+            "exponent"
+        } else {
+            "mantissa"
+        };
+        tab.row(&[
+            p.to_string(),
+            field.into(),
+            format!("{:.3}", bit_entropy(&pb.planes[p])),
+            format!("{r:.2}"),
+        ]);
+    }
+    tab.print();
+}
+
+fn main() {
+    let ts = sample_checkpoint(&LLAMA31_8B, 1 << 18, 42);
+    for dtype in [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Int4] {
+        let t = encode_checkpoint(&ts, dtype);
+        plane_table(
+            &format!("Fig 8 — LLaMA-8B weights @ {dtype}, per-plane ZSTD"),
+            dtype,
+            &t.codes,
+        );
+    }
+    for profile in [CorpusProfile::Wiki, CorpusProfile::Book] {
+        let (tok, ch) = (256usize, 1024usize);
+        let kv = gen_kv_layer(tok, ch, profile, 0.5, 5);
+        // the paper's KV planes are measured after cluster + delta
+        let g = KvGroup::new(Dtype::Bf16, tok, ch, kv);
+        let cm = g.channel_major();
+        let (tr, _) = decorrelate(Dtype::Bf16, tok, ch, &cm, DecorrelateMode::ExpDelta);
+        plane_table(
+            &format!("Fig 8 — KV cache (clustered+delta) @ bf16, {}", profile.name()),
+            Dtype::Bf16,
+            &tr,
+        );
+    }
+    println!(
+        "paper shape: exponent planes dominate compressibility for BF16;\n\
+         FP8/INT4 planes are near-incompressible; KV exponent planes\n\
+         compress even harder than weights'."
+    );
+}

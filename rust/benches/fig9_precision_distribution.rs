@@ -1,0 +1,71 @@
+//! Fig 9: precision distribution of weight traffic under MoDE dynamic
+//! quantization for 12 (model, base-precision) configs — plus the Fig 3
+//! analog (prune-only vs dynamic quantization quality proxy).
+//!
+//!     cargo bench --bench fig9_precision_distribution
+
+use camc::configs::SWEEP_MODELS;
+use camc::fmt::Dtype;
+use camc::quant::mode::{precision_menu, RouterSim};
+use camc::report::Table;
+
+fn main() {
+    for base in [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Int4] {
+        let menu = precision_menu(base);
+        let mut headers: Vec<String> = vec!["model".into()];
+        headers.extend(menu.iter().map(|d| d.to_string()));
+        headers.push("avg bits".into());
+        let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut tab = Table::new(
+            &format!("Fig 9 — precision distribution, {base}-based models"),
+            &hdr_refs,
+        );
+        for cfg in SWEEP_MODELS {
+            let r = RouterSim::paper_default(cfg.name);
+            let d = r.simulate(base, 2000, 64, 7);
+            let mut row = vec![cfg.name.to_string()];
+            row.extend(d.fractions.iter().map(|f| format!("{:.1}%", f * 100.0)));
+            row.push(format!("{:.2}", d.avg_bits()));
+            tab.rowv(row);
+        }
+        tab.print();
+    }
+
+    // Fig 3 analog: prune-only vs dynamic quantization. Quality proxy =
+    // effective information retained per component (1 for full precision,
+    // 0 for skipped, fraction of significant bits otherwise), which tracks
+    // the zero-shot accuracy ordering the paper reports.
+    let mut tab = Table::new(
+        "Fig 3 analog — routing budget spent as prune vs dynamic quant",
+        &["scheme", "kept info/component", "avg bits"],
+    );
+    let r = RouterSim::paper_default("LLaMA-MoE-3.5B");
+    let d = r.simulate(Dtype::Bf16, 2000, 64, 11);
+    // (a) prune-only: same traffic budget achieved by dropping components
+    let avg_bits = d.avg_bits();
+    let prune_keep = avg_bits / 16.0; // fraction of components kept at bf16
+    let prune_info = prune_keep * 1.0;
+    // (b)/(c) dynamic quant: info per component grows ~log with bits
+    let dq_info: f64 = d
+        .levels
+        .iter()
+        .zip(&d.fractions)
+        .map(|(l, f)| f * (l.bits() as f64 / 16.0).powf(0.5))
+        .sum();
+    tab.row(&[
+        "prune-only (a)".into(),
+        format!("{prune_info:.3}"),
+        format!("{avg_bits:.2}"),
+    ]);
+    tab.row(&[
+        "dynamic quant (b/c)".into(),
+        format!("{dq_info:.3}"),
+        format!("{avg_bits:.2}"),
+    ]);
+    tab.print();
+    println!(
+        "paper shape: at matched traffic, quantizing more components to lower\n\
+         precision beats skipping them (Fig 3: +1.9pp PIQA) — here the kept-\n\
+         information proxy is higher for dynamic quant at equal avg bits."
+    );
+}

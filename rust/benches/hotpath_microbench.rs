@@ -1,0 +1,112 @@
+//! Hot-path microbenchmarks (the §Perf harness): bit-plane shuffle,
+//! LZ4/zstd-class compress+decompress, DRAM-sim command rate, KV cluster
+//! pipeline. Prints throughput per path; EXPERIMENTS.md §Perf records the
+//! before/after across optimization iterations.
+//!
+//!     cargo bench --bench hotpath_microbench
+
+use std::time::Instant;
+
+use camc::bitplane::layout::{disaggregate, reaggregate};
+use camc::compress::Codec;
+use camc::configs::ddr5::DDR5_4800_PAPER;
+use camc::dram::MemorySystem;
+use camc::fmt::minifloat::BF16;
+use camc::fmt::Dtype;
+use camc::kvcluster::{ClusteredBlock, DecorrelateMode, KvGroup};
+use camc::report::Table;
+use camc::synth::{gen_kv_layer, CorpusProfile};
+use camc::util::humanfmt;
+use camc::util::rng::Xoshiro256;
+
+fn time<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let mut tab = Table::new("hot paths", &["path", "unit", "time", "throughput"]);
+    let mut r = Xoshiro256::new(1);
+
+    // weight-like bf16 codes, 1 MiB
+    let n = 512 * 1024;
+    let codes: Vec<u16> = (0..n)
+        .map(|_| BF16.encode((r.normal() * 0.02) as f32) as u16)
+        .collect();
+    let bytes = (n * 2) as f64;
+
+    let dis = time(|| { std::hint::black_box(disaggregate(Dtype::Bf16, &codes)); }, 8);
+    tab.row(&[
+        "bitplane disaggregate".into(),
+        humanfmt::bytes(bytes as u64),
+        humanfmt::nanos(dis * 1e9),
+        humanfmt::rate(bytes / dis),
+    ]);
+
+    let pb = disaggregate(Dtype::Bf16, &codes);
+    let rea = time(|| { std::hint::black_box(reaggregate(Dtype::Bf16, n, &pb.planes)); }, 8);
+    tab.row(&[
+        "bitplane reaggregate".into(),
+        humanfmt::bytes(bytes as u64),
+        humanfmt::nanos(rea * 1e9),
+        humanfmt::rate(bytes / rea),
+    ]);
+
+    // compressors over the concatenated planes (the real input shape)
+    let plane_stream: Vec<u8> = pb.planes.concat();
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        let c = time(|| { std::hint::black_box(codec.compress(&plane_stream)); }, 4);
+        tab.row(&[
+            format!("{codec} compress (planes)"),
+            humanfmt::bytes(plane_stream.len() as u64),
+            humanfmt::nanos(c * 1e9),
+            humanfmt::rate(plane_stream.len() as f64 / c),
+        ]);
+        let comp = codec.compress(&plane_stream);
+        let d = time(
+            || { std::hint::black_box(codec.decompress(&comp, plane_stream.len()).unwrap()); },
+            4,
+        );
+        tab.row(&[
+            format!("{codec} decompress"),
+            humanfmt::bytes(plane_stream.len() as u64),
+            humanfmt::nanos(d * 1e9),
+            humanfmt::rate(plane_stream.len() as f64 / d),
+        ]);
+    }
+
+    // KV cluster pipeline (compress one 16-token x 1024-ch group)
+    let kv_codes = gen_kv_layer(16, 1024, CorpusProfile::Book, 0.5, 3);
+    let kv = KvGroup::new(Dtype::Bf16, 16, 1024, kv_codes);
+    let kc = time(
+        || { std::hint::black_box(ClusteredBlock::compress(&kv, DecorrelateMode::ExpDelta, Codec::Zstd)); },
+        16,
+    );
+    let kv_bytes = (16 * 1024 * 2) as f64;
+    tab.row(&[
+        "kv cluster+delta+zstd".into(),
+        humanfmt::bytes(kv_bytes as u64),
+        humanfmt::nanos(kc * 1e9),
+        humanfmt::rate(kv_bytes / kc),
+    ]);
+
+    // DRAM sim command rate
+    let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
+    let t0 = Instant::now();
+    let sim_bytes = 32u64 << 20;
+    let cycles = mem.run_stream_read(0, sim_bytes);
+    let wall = t0.elapsed().as_secs_f64();
+    tab.row(&[
+        "dram sim (streaming)".into(),
+        format!("{cycles} cyc"),
+        humanfmt::nanos(wall * 1e9),
+        format!("{:.1} Mcyc/s", cycles as f64 / wall / 1e6),
+    ]);
+
+    tab.print();
+}

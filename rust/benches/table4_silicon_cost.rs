@@ -1,0 +1,41 @@
+//! Table IV: silicon cost of the compression subsystem at 2 GHz x 32
+//! lanes, LZ4 + ZSTD engines, three block sizes — from the ASAP7-
+//! calibrated component model (validated against all six published
+//! points in unit tests).
+//!
+//!     cargo bench --bench table4_silicon_cost
+
+use camc::compress::Codec;
+use camc::hwmodel::{SiliconModel, TABLE4_POINTS};
+use camc::report::Table;
+
+fn main() {
+    let m = SiliconModel::calibrated();
+    let mut tab = Table::new(
+        "Table IV — silicon cost @ 2 GHz, 32 lanes (ASAP7 7 nm)",
+        &["engine", "block bits", "SL area mm2", "SL power mW", "tot area mm2", "tot power mW", "SL Gbps"],
+    );
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        for bits in [16384u64, 32768, 65536] {
+            tab.row(&[
+                codec.to_string().to_uppercase(),
+                bits.to_string(),
+                format!("{:.5}", m.sl_area_mm2(codec, bits)),
+                format!("{:.3}", m.sl_power_mw(codec, bits)),
+                format!("{:.5}", m.total_area_mm2(codec, bits, 32)),
+                format!("{:.3}", m.total_power_mw(codec, bits, 32)),
+                "512".into(),
+            ]);
+        }
+    }
+    tab.print();
+
+    // deltas vs the published table
+    let mut dev = 0.0f64;
+    for p in TABLE4_POINTS {
+        dev = dev.max((m.sl_area_mm2(p.engine, p.block_bits) - p.sl_area_mm2).abs());
+        dev = dev.max(((m.sl_power_mw(p.engine, p.block_bits) - p.sl_power_mw) / p.sl_power_mw).abs());
+    }
+    println!("max deviation from the paper's six published points: {dev:.2e}");
+    println!("aggregate throughput: {} Gbps = 2 TB/s", m.total_gbps(32));
+}

@@ -1,0 +1,321 @@
+//! Bit-plane disaggregation (§III-A of the paper).
+//!
+//! Given a block of `m` n-bit codes, plane `P_i` collects bit `i` of every
+//! code (Eq. 2). Planes are stored MSB-plane-first — plane `n-1` (sign)
+//! first, then exponent planes, then mantissa — so a *prefix* of the
+//! plane-major byte stream is exactly a partial-precision fetch
+//! ("read only bit-planes 8..15 of FP16" in the paper's Fig 5).
+//!
+//! The hot path is a word-parallel bit-matrix transpose: 16 codes are
+//! viewed as a 16×16 bit matrix in four u64 words and transposed with the
+//! classic Hacker's-Delight mask-shift network, then planes of 8 codes are
+//! emitted as bytes. This is the software model of the paper's crossbar
+//! shuffle network.
+
+use crate::fmt::Dtype;
+
+/// Plane-major layout of one block of codes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneBlock {
+    pub dtype: Dtype,
+    /// Number of codes in the block.
+    pub m: usize,
+    /// Plane payloads, `planes[0]` = MSB plane (sign), each
+    /// `ceil(m/8)` bytes, bit j of byte k = code `8k+j`'s bit.
+    pub planes: Vec<Vec<u8>>,
+}
+
+impl PlaneBlock {
+    /// Bytes per plane.
+    pub fn plane_bytes(&self) -> usize {
+        self.m.div_ceil(8)
+    }
+
+    /// Concatenate the top `keep` planes (a partial fetch payload).
+    pub fn prefix_bytes(&self, keep: u32) -> Vec<u8> {
+        let keep = keep.min(self.dtype.bits()) as usize;
+        let mut out = Vec::with_capacity(keep * self.plane_bytes());
+        for p in &self.planes[..keep] {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Concatenate all planes.
+    pub fn all_bytes(&self) -> Vec<u8> {
+        self.prefix_bytes(self.dtype.bits())
+    }
+}
+
+/// Disaggregate codes into planes (MSB plane first).
+pub fn disaggregate(dtype: Dtype, codes: &[u16]) -> PlaneBlock {
+    let n = dtype.bits() as usize;
+    let m = codes.len();
+    let pb = m.div_ceil(8);
+    let mut planes = vec![vec![0u8; pb]; n];
+
+    // Process 16 codes at a time with a 16x16 bit transpose.
+    let chunks = m / 16;
+    for c in 0..chunks {
+        let base = c * 16;
+        let mut w = [0u64; 4];
+        // pack 16 codes (16 bits each) into 4 u64 words, row-major:
+        // word j holds codes 4j..4j+4
+        for j in 0..4 {
+            let mut v = 0u64;
+            for k in 0..4 {
+                v |= (codes[base + 4 * j + k] as u64) << (16 * k);
+            }
+            w[j] = v;
+        }
+        let t = transpose16(w);
+        // after transpose: row i (bit i of all 16 codes) lives at
+        // t[i/4] >> (16*(i%4)), 16 bits wide. Row i = plane i (LSB first).
+        for i in 0..n {
+            let row = ((t[i / 4] >> (16 * (i % 4))) & 0xFFFF) as u16;
+            let plane = n - 1 - i; // planes are MSB-first
+            let byte0 = base / 8;
+            planes[plane][byte0] = (row & 0xFF) as u8;
+            planes[plane][byte0 + 1] = (row >> 8) as u8;
+        }
+    }
+    // tail: scalar path
+    for idx in chunks * 16..m {
+        let code = codes[idx];
+        for i in 0..n {
+            if (code >> i) & 1 == 1 {
+                let plane = n - 1 - i;
+                planes[plane][idx / 8] |= 1 << (idx % 8);
+            }
+        }
+    }
+    PlaneBlock { dtype, m, planes }
+}
+
+/// Reaggregate planes back into codes. `keep` planes may be fewer than the
+/// dtype's width — missing low planes are zero-filled (partial-precision
+/// read). `planes` must each have `ceil(m/8)` bytes.
+pub fn reaggregate(dtype: Dtype, m: usize, planes: &[Vec<u8>]) -> Vec<u16> {
+    let n = dtype.bits() as usize;
+    let keep = planes.len().min(n);
+    let mut codes = vec![0u16; m];
+    let chunks = m / 16;
+    for c in 0..chunks {
+        let base = c * 16;
+        // build rows: row i = bits for plane index (n-1-i)
+        let mut w = [0u64; 4];
+        for (p, plane) in planes.iter().enumerate().take(keep) {
+            let i = n - 1 - p; // bit index
+            let row = (plane[base / 8] as u64) | ((plane[base / 8 + 1] as u64) << 8);
+            w[i / 4] |= row << (16 * (i % 4));
+        }
+        let t = transpose16(w);
+        for j in 0..4 {
+            for k in 0..4 {
+                codes[base + 4 * j + k] = ((t[j] >> (16 * k)) & 0xFFFF) as u16;
+            }
+        }
+    }
+    for idx in chunks * 16..m {
+        let mut code = 0u16;
+        for (p, plane) in planes.iter().enumerate().take(keep) {
+            let i = n - 1 - p;
+            if (plane[idx / 8] >> (idx % 8)) & 1 == 1 {
+                code |= 1 << i;
+            }
+        }
+        codes[idx] = code;
+    }
+    codes
+}
+
+/// Transpose a 16×16 bit matrix held in 4 u64 words.
+///
+/// Layout: word j, bits [16k, 16k+16) = row 4j+k; bit b of a row = column b.
+/// Returns the same layout with rows/columns swapped.
+#[inline]
+pub fn transpose16(w: [u64; 4]) -> [u64; 4] {
+    // Word-parallel masked-swap network (Hacker's-Delight style), ~24 ops.
+    // Each step exchanges the off-diagonal delta×delta blocks: row pair
+    // (r, r+delta), a's high-delta columns with b's low-delta columns.
+    let [mut w0, mut w1, mut w2, mut w3] = w;
+
+    // delta = 8: row pairs (r, r+8) → word pairs (w0,w2), (w1,w3),
+    // lane-aligned. t = ((a >> 8) ^ b) & 0x00FF…; b ^= t; a ^= t << 8.
+    const M8: u64 = 0x00FF_00FF_00FF_00FF;
+    let t = ((w0 >> 8) ^ w2) & M8;
+    w2 ^= t;
+    w0 ^= t << 8;
+    let t = ((w1 >> 8) ^ w3) & M8;
+    w3 ^= t;
+    w1 ^= t << 8;
+
+    // delta = 4: row pairs (r, r+4) → word pairs (w0,w1), (w2,w3).
+    const M4: u64 = 0x0F0F_0F0F_0F0F_0F0F;
+    let t = ((w0 >> 4) ^ w1) & M4;
+    w1 ^= t;
+    w0 ^= t << 4;
+    let t = ((w2 >> 4) ^ w3) & M4;
+    w3 ^= t;
+    w2 ^= t << 4;
+
+    // delta = 2: within each word, rows (lane0,lane1)↔… wait — row pairs
+    // (4j, 4j+2) and (4j+1, 4j+3): b sits 32 bits above a. a-lanes = 0,1.
+    const M2: u64 = 0x0000_0000_3333_3333;
+    for wi in [&mut w0, &mut w1, &mut w2, &mut w3] {
+        let t = ((*wi >> 2) ^ (*wi >> 32)) & M2;
+        *wi ^= (t << 2) ^ (t << 32);
+    }
+
+    // delta = 1: row pairs (4j, 4j+1) and (4j+2, 4j+3): b sits 16 bits
+    // above a. a-lanes = 0, 2.
+    const M1: u64 = 0x0000_5555_0000_5555;
+    for wi in [&mut w0, &mut w1, &mut w2, &mut w3] {
+        let t = ((*wi >> 1) ^ (*wi >> 16)) & M1;
+        *wi ^= (t << 1) ^ (t << 16);
+    }
+
+    [w0, w1, w2, w3]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn naive_disaggregate(dtype: Dtype, codes: &[u16]) -> PlaneBlock {
+        let n = dtype.bits() as usize;
+        let m = codes.len();
+        let mut planes = vec![vec![0u8; m.div_ceil(8)]; n];
+        for (idx, &code) in codes.iter().enumerate() {
+            for i in 0..n {
+                if (code >> i) & 1 == 1 {
+                    planes[n - 1 - i][idx / 8] |= 1 << (idx % 8);
+                }
+            }
+        }
+        PlaneBlock { dtype, m, planes }
+    }
+
+    #[test]
+    fn transpose16_involution_property() {
+        check("transpose16_involution", 200, |g| {
+            let w = [
+                g.rng.next_u64(),
+                g.rng.next_u64(),
+                g.rng.next_u64(),
+                g.rng.next_u64(),
+            ];
+            let t = transpose16(transpose16(w));
+            if t != w {
+                return Err(format!("{w:?} -> {t:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose16_single_bit() {
+        // bit at (row 3, col 11) must land at (row 11, col 3)
+        let mut w = [0u64; 4];
+        w[3 / 4] |= 1u64 << (16 * (3 % 4) + 11);
+        let t = transpose16(w);
+        let mut want = [0u64; 4];
+        want[11 / 4] |= 1u64 << (16 * (11 % 4) + 3);
+        assert_eq!(t, want);
+    }
+
+    #[test]
+    fn fast_matches_naive_property() {
+        check("disaggregate_fast_vs_naive", 200, |g| {
+            let dts = [Dtype::Bf16, Dtype::Fp12, Dtype::Fp8E4M3, Dtype::Fp4];
+            let d = dts[g.rng.index(dts.len())];
+            let mask = ((1u32 << d.bits()) - 1) as u16;
+            let n = g.usize_in(0, 400);
+            let codes: Vec<u16> = (0..n).map(|_| g.rng.next_u64() as u16 & mask).collect();
+            let fast = disaggregate(d, &codes);
+            let naive = naive_disaggregate(d, &codes);
+            if fast != naive {
+                return Err(format!("mismatch d={d:?} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("plane_roundtrip", 200, |g| {
+            let dts = [
+                Dtype::Bf16,
+                Dtype::Fp16,
+                Dtype::Fp12,
+                Dtype::Fp8E4M3,
+                Dtype::Fp6,
+                Dtype::Fp4,
+                Dtype::Int4,
+                Dtype::Int2,
+            ];
+            let d = dts[g.rng.index(dts.len())];
+            let mask = ((1u32 << d.bits()) - 1) as u16;
+            let codes: Vec<u16> = g.u16s(600).iter().map(|&c| c & mask).collect();
+            let pb = disaggregate(d, &codes);
+            let back = reaggregate(d, codes.len(), &pb.planes);
+            if back != codes {
+                return Err(format!("roundtrip d={d:?} n={}", codes.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partial_read_equals_truncation_property() {
+        // Reaggregating only the top-k planes == truncate_to_planes(code,k).
+        check("partial_read_truncation", 200, |g| {
+            let d = Dtype::Bf16;
+            let codes: Vec<u16> = g.u16s(300);
+            let pb = disaggregate(d, &codes);
+            let keep = g.usize_in(0, 16);
+            let back = reaggregate(d, codes.len(), &pb.planes[..keep]);
+            for (i, (&c, &b)) in codes.iter().zip(&back).enumerate() {
+                let want = crate::fmt::truncate_to_planes(c, d, keep as u32);
+                if b != want {
+                    return Err(format!("i={i} keep={keep} want={want:#06x} got={b:#06x}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plane_sizes() {
+        let codes = vec![0u16; 100];
+        let pb = disaggregate(Dtype::Bf16, &codes);
+        assert_eq!(pb.planes.len(), 16);
+        assert_eq!(pb.plane_bytes(), 13);
+        assert_eq!(pb.all_bytes().len(), 16 * 13);
+        assert_eq!(pb.prefix_bytes(8).len(), 8 * 13);
+        assert_eq!(pb.prefix_bytes(99).len(), 16 * 13);
+    }
+
+    #[test]
+    fn exponent_concentration_increases_plane_redundancy() {
+        // Weight-like bf16 data: exponents cluster => exponent planes are
+        // mostly constant while mantissa planes are ~random. This is the
+        // paper's core observation — assert it holds mechanically.
+        use crate::compress::entropy::bit_entropy;
+        use crate::fmt::minifloat::BF16;
+        let mut r = crate::util::rng::Xoshiro256::new(99);
+        let codes: Vec<u16> = (0..4096)
+            .map(|_| BF16.encode((r.normal() * 0.02) as f32) as u16)
+            .collect();
+        let pb = disaggregate(Dtype::Bf16, &codes);
+        // planes[1..=4] are the top exponent bits (below sign)
+        let h_exp: f64 = (1..=4).map(|p| bit_entropy(&pb.planes[p])).sum::<f64>() / 4.0;
+        // planes[12..16] are low mantissa bits
+        let h_man: f64 = (12..16).map(|p| bit_entropy(&pb.planes[p])).sum::<f64>() / 4.0;
+        assert!(
+            h_exp < 0.5 && h_man > 0.9,
+            "exponent planes H={h_exp:.3}, mantissa planes H={h_man:.3}"
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Bit-plane disaggregation (paper §III-A): the in-memory column-store
+//! layout that exposes exponent redundancy to block compressors and makes
+//! partial-precision fetches possible.
+pub mod block;
+pub mod layout;
+
+pub use block::{per_plane_ratios, plane_major_ratio, value_major_ratio, CompressedBlock};
+pub use layout::{disaggregate, reaggregate, transpose16, PlaneBlock};

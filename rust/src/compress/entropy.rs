@@ -1,0 +1,123 @@
+//! Entropy measurement helpers used by Fig 8 (per-plane compressibility)
+//! and the calibration tests for the synthetic data generators.
+
+/// Shannon entropy of the byte distribution, in bits per byte (0..=8).
+pub fn byte_entropy(data: &[u8]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let mut freqs = [0u64; 256];
+    for &b in data {
+        freqs[b as usize] += 1;
+    }
+    let n = data.len() as f64;
+    freqs
+        .iter()
+        .filter(|&&f| f > 0)
+        .map(|&f| {
+            let p = f as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Bit-level entropy: fraction of ones p, H = -p log p - (1-p) log(1-p).
+/// In bits per bit (0..=1).
+pub fn bit_entropy(data: &[u8]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let ones = crate::util::bits::popcount(data) as f64;
+    let total = (data.len() * 8) as f64;
+    let p = ones / total;
+    if p == 0.0 || p == 1.0 {
+        return 0.0;
+    }
+    -p * p.log2() - (1.0 - p) * (1.0 - p).log2()
+}
+
+/// Order-1 (conditional) byte entropy H(X_{i+1} | X_i) — a proxy for how
+/// much an LZ/entropy pipeline can exploit sequential correlation.
+pub fn byte_entropy_o1(data: &[u8]) -> f64 {
+    if data.len() < 2 {
+        return byte_entropy(data);
+    }
+    // joint counts ctx -> next
+    let mut joint = vec![0u32; 256 * 256];
+    let mut ctx_count = [0u64; 256];
+    for w in data.windows(2) {
+        joint[(w[0] as usize) * 256 + w[1] as usize] += 1;
+        ctx_count[w[0] as usize] += 1;
+    }
+    let n = (data.len() - 1) as f64;
+    let mut h = 0.0;
+    for c in 0..256 {
+        if ctx_count[c] == 0 {
+            continue;
+        }
+        let pc = ctx_count[c] as f64 / n;
+        let mut hc = 0.0;
+        for x in 0..256 {
+            let f = joint[c * 256 + x];
+            if f > 0 {
+                let p = f as f64 / ctx_count[c] as f64;
+                hc -= p * p.log2();
+            }
+        }
+        h += pc * hc;
+    }
+    h
+}
+
+/// Per-plane statistics for a disaggregated block (Fig 8's x-axis).
+#[derive(Debug, Clone)]
+pub struct PlaneStats {
+    pub plane: u32,
+    pub ones_fraction: f64,
+    pub bit_entropy: f64,
+    pub byte_entropy: f64,
+    /// Compression ratio achieved by the given codec on this plane alone.
+    pub comp_ratio: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_bytes_have_high_entropy() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(65536).collect();
+        let h = byte_entropy(&data);
+        assert!((h - 8.0).abs() < 1e-9, "h={h}");
+    }
+
+    #[test]
+    fn constant_bytes_zero_entropy() {
+        let data = vec![7u8; 1024];
+        assert_eq!(byte_entropy(&data), 0.0);
+        assert_eq!(bit_entropy(&vec![0u8; 128]), 0.0);
+        assert_eq!(bit_entropy(&vec![0xFFu8; 128]), 0.0);
+    }
+
+    #[test]
+    fn bit_entropy_half_ones_is_one() {
+        let data = vec![0b1010_1010u8; 512];
+        assert!((bit_entropy(&data) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn o1_entropy_below_o0_for_markov_data() {
+        // alternating pattern: H0 = 1 byte-symbol entropy, H1 ~ 0
+        let data: Vec<u8> = (0..4096).map(|i| if i % 2 == 0 { 3 } else { 9 }).collect();
+        let h0 = byte_entropy(&data);
+        let h1 = byte_entropy_o1(&data);
+        assert!(h0 > 0.99 && h1 < 0.01, "h0={h0} h1={h1}");
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(byte_entropy(&[]), 0.0);
+        assert_eq!(bit_entropy(&[]), 0.0);
+        assert_eq!(byte_entropy_o1(&[]), 0.0);
+    }
+}

@@ -1,0 +1,508 @@
+//! Canonical Huffman coding — the entropy stage of the zstd-class codec.
+//!
+//! Code lengths are limited to [`MAX_CODE_LEN`] bits (like zstd's FSE/Huf
+//! table-log limit) via the standard length-limiting fixup, and only the
+//! length table is transmitted (canonical codes are reconstructed on the
+//! decoder side), matching how real formats keep header cost low.
+
+use crate::util::bits::{BitReader, BitWriter};
+
+pub const MAX_CODE_LEN: u32 = 12;
+const NUM_SYMBOLS: usize = 256;
+
+/// Build length-limited Huffman code lengths from symbol frequencies.
+/// Returns `lens[s] == 0` for absent symbols. Works for any count of
+/// present symbols (1 present symbol gets length 1).
+pub fn build_lengths(freqs: &[u64; NUM_SYMBOLS]) -> [u8; NUM_SYMBOLS] {
+    let mut lens = [0u8; NUM_SYMBOLS];
+    let present: Vec<usize> = (0..NUM_SYMBOLS).filter(|&s| freqs[s] > 0).collect();
+    match present.len() {
+        0 => return lens,
+        1 => {
+            lens[present[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+
+    // Build the Huffman tree with a two-queue O(n log n) method.
+    #[derive(Clone, Copy)]
+    struct Node {
+        /// Kept for debuggability; ordering lives in the heap keys.
+        #[allow(dead_code)]
+        freq: u64,
+        left: i32, // -1-symbol for leaves, index for internal
+        right: i32,
+    }
+    let mut nodes: Vec<Node> = Vec::with_capacity(present.len() * 2);
+    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
+        std::collections::BinaryHeap::new();
+    for &s in &present {
+        nodes.push(Node {
+            freq: freqs[s],
+            left: -1 - (s as i32),
+            right: -1 - (s as i32),
+        });
+        heap.push(std::cmp::Reverse((freqs[s], nodes.len() - 1)));
+    }
+    while heap.len() > 1 {
+        let std::cmp::Reverse((fa, a)) = heap.pop().unwrap();
+        let std::cmp::Reverse((fb, b)) = heap.pop().unwrap();
+        nodes.push(Node {
+            freq: fa + fb,
+            left: a as i32,
+            right: b as i32,
+        });
+        heap.push(std::cmp::Reverse((fa + fb, nodes.len() - 1)));
+    }
+    // DFS to assign depths
+    let root = nodes.len() - 1;
+    let mut stack = vec![(root, 0u32)];
+    while let Some((idx, depth)) = stack.pop() {
+        let n = nodes[idx];
+        if n.left < 0 {
+            let sym = (-(n.left) - 1) as usize;
+            lens[sym] = depth.max(1) as u8;
+        } else {
+            stack.push((n.left as usize, depth + 1));
+            stack.push((n.right as usize, depth + 1));
+        }
+    }
+
+    // Length-limit to MAX_CODE_LEN (Kraft fixup).
+    limit_lengths(&mut lens);
+    lens
+}
+
+/// Enforce max code length while keeping the Kraft sum exactly 1.
+fn limit_lengths(lens: &mut [u8; NUM_SYMBOLS]) {
+    let max = MAX_CODE_LEN as u8;
+    let mut overflow = false;
+    for l in lens.iter_mut() {
+        if *l > max {
+            *l = max;
+            overflow = true;
+        }
+    }
+    if !overflow {
+        return;
+    }
+    // Kraft sum in units of 2^-max
+    let unit = 1u64 << max;
+    let mut kraft: u64 = lens
+        .iter()
+        .filter(|&&l| l > 0)
+        .map(|&l| unit >> l)
+        .sum();
+    // While over-subscribed, lengthen the shortest-excess symbols.
+    // Standard approach: repeatedly take a symbol with len < max and
+    // increment it (cost halves its kraft share).
+    while kraft > unit {
+        // find symbol with the largest length < max (cheapest to demote)
+        let mut best: Option<usize> = None;
+        for s in 0..NUM_SYMBOLS {
+            if lens[s] > 0 && lens[s] < max {
+                match best {
+                    None => best = Some(s),
+                    Some(b) if lens[s] > lens[b] => best = Some(s),
+                    _ => {}
+                }
+            }
+        }
+        let s = best.expect("kraft fixup: no demotable symbol");
+        kraft -= unit >> lens[s];
+        lens[s] += 1;
+        kraft += unit >> lens[s];
+    }
+    // If under-subscribed, shorten symbols greedily (improves ratio).
+    loop {
+        let mut changed = false;
+        for s in 0..NUM_SYMBOLS {
+            if lens[s] > 1 {
+                let gain = (unit >> (lens[s] - 1)) - (unit >> lens[s]);
+                if kraft + gain <= unit {
+                    lens[s] -= 1;
+                    kraft += gain;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// Canonical codes from lengths: symbols sorted by (length, symbol).
+/// Returns (code, len) pairs; code bits are stored MSB-first conceptually
+/// but we emit them LSB-first reversed for the LSB-first bit IO.
+pub fn canonical_codes(lens: &[u8; NUM_SYMBOLS]) -> [(u16, u8); NUM_SYMBOLS] {
+    let mut codes = [(0u16, 0u8); NUM_SYMBOLS];
+    let mut by_len: Vec<(u8, usize)> = (0..NUM_SYMBOLS)
+        .filter(|&s| lens[s] > 0)
+        .map(|s| (lens[s], s))
+        .collect();
+    by_len.sort_unstable();
+    let mut code = 0u16;
+    let mut prev_len = 0u8;
+    for &(l, s) in &by_len {
+        code <<= l - prev_len;
+        codes[s] = (code, l);
+        code += 1;
+        prev_len = l;
+    }
+    codes
+}
+
+/// Reverse the low `n` bits of `v` (canonical codes are MSB-first; our bit
+/// IO is LSB-first).
+#[inline]
+fn rev_bits(v: u16, n: u8) -> u16 {
+    v.reverse_bits() >> (16 - n)
+}
+
+/// One-shot encoder. The table is serialized in whichever of three modes
+/// is smallest (zstd keeps its headers small the same way — FSE-compressed
+/// weights or direct — we use dense / sparse-list / raw):
+///
+/// * mode 0 *dense*: 256 × 4-bit lengths (128 B) — many distinct symbols;
+/// * mode 1 *sparse*: 9-bit count + (symbol:8, len:4) per present symbol —
+///   small alphabets (the length/offset code streams are ≤ ~32 symbols);
+/// * mode 2 *raw*: no table, symbols are emitted as plain 8-bit — when
+///   entropy coding wouldn't pay for its own header.
+pub struct Encoder {
+    codes: [(u16, u8); NUM_SYMBOLS],
+    pub lens: [u8; NUM_SYMBOLS],
+    pub raw: bool,
+}
+
+impl Encoder {
+    pub fn from_data(data: &[u8]) -> Self {
+        let mut freqs = [0u64; NUM_SYMBOLS];
+        for &b in data {
+            freqs[b as usize] += 1;
+        }
+        let lens = build_lengths(&freqs);
+        let codes = canonical_codes(&lens);
+        let payload: usize = data.iter().map(|&b| codes[b as usize].1 as usize).sum();
+        let table = Self::table_bits(&lens);
+        // raw if entropy coding + header loses to 8 bits/symbol
+        let raw = table + payload >= 8 * data.len();
+        Self { codes, lens, raw }
+    }
+
+    fn table_bits(lens: &[u8; NUM_SYMBOLS]) -> usize {
+        let present = lens.iter().filter(|&&l| l > 0).count();
+        let sparse = 9 + present * 12;
+        let dense = NUM_SYMBOLS * 4;
+        2 + sparse.min(dense)
+    }
+
+    /// Exact payload bit count for `data` under this table.
+    pub fn payload_bits(&self, data: &[u8]) -> usize {
+        if self.raw {
+            return 8 * data.len();
+        }
+        data.iter().map(|&b| self.codes[b as usize].1 as usize).sum()
+    }
+
+    pub fn encode_into(&self, data: &[u8], w: &mut BitWriter) {
+        if self.raw {
+            for &b in data {
+                w.put(b as u64, 8);
+            }
+            return;
+        }
+        for &b in data {
+            let (code, len) = self.codes[b as usize];
+            w.put(rev_bits(code, len) as u64, len as u32);
+        }
+    }
+
+    /// Serialize the table header (mode selector + table body).
+    pub fn write_table(&self, w: &mut BitWriter) {
+        if self.raw {
+            w.put(2, 2);
+            return;
+        }
+        let present: Vec<usize> = (0..NUM_SYMBOLS).filter(|&s| self.lens[s] > 0).collect();
+        let sparse_bits = 9 + present.len() * 12;
+        if sparse_bits < NUM_SYMBOLS * 4 {
+            w.put(1, 2);
+            w.put(present.len() as u64, 9);
+            for &s in &present {
+                w.put(s as u64, 8);
+                w.put(self.lens[s] as u64, 4);
+            }
+        } else {
+            w.put(0, 2);
+            for &l in &self.lens {
+                w.put(l as u64, 4);
+            }
+        }
+    }
+}
+
+/// Table-driven decoder (single-level lookup, 2^MAX_CODE_LEN entries).
+pub struct Decoder {
+    /// lookup[bits] = (symbol, code_len); index by next MAX_CODE_LEN bits
+    /// (LSB-first).
+    lookup: Vec<(u8, u8)>,
+    /// Raw mode: symbols are plain 8-bit values, no table.
+    raw: bool,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct HufError(pub &'static str);
+
+impl std::fmt::Display for HufError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "huffman: {}", self.0)
+    }
+}
+impl std::error::Error for HufError {}
+
+impl Decoder {
+    pub fn read_table(r: &mut BitReader) -> Result<Self, HufError> {
+        let mode = r.get(2).ok_or(HufError("truncated table mode"))?;
+        let mut lens = [0u8; NUM_SYMBOLS];
+        match mode {
+            0 => {
+                for l in lens.iter_mut() {
+                    *l = r.get(4).ok_or(HufError("truncated table"))? as u8;
+                    if *l as u32 > MAX_CODE_LEN {
+                        return Err(HufError("code length too large"));
+                    }
+                }
+            }
+            1 => {
+                let count = r.get(9).ok_or(HufError("truncated table"))? as usize;
+                if count > NUM_SYMBOLS {
+                    return Err(HufError("bad symbol count"));
+                }
+                for _ in 0..count {
+                    let s = r.get(8).ok_or(HufError("truncated table"))? as usize;
+                    let l = r.get(4).ok_or(HufError("truncated table"))? as u8;
+                    if l as u32 > MAX_CODE_LEN || l == 0 {
+                        return Err(HufError("bad code length"));
+                    }
+                    if lens[s] != 0 {
+                        return Err(HufError("duplicate symbol"));
+                    }
+                    lens[s] = l;
+                }
+            }
+            2 => {
+                return Ok(Self {
+                    lookup: Vec::new(),
+                    raw: true,
+                })
+            }
+            _ => return Err(HufError("unknown table mode")),
+        }
+        Self::from_lengths(&lens)
+    }
+
+    pub fn from_lengths(lens: &[u8; NUM_SYMBOLS]) -> Result<Self, HufError> {
+        // validate Kraft
+        let unit = 1u64 << MAX_CODE_LEN;
+        let kraft: u64 = lens.iter().filter(|&&l| l > 0).map(|&l| unit >> l).sum();
+        let present = lens.iter().filter(|&&l| l > 0).count();
+        if present == 0 {
+            return Ok(Self {
+                lookup: Vec::new(),
+                raw: false,
+            });
+        }
+        if present == 1 {
+            // single symbol, len 1 (kraft = 1/2) — allowed special case
+        } else if kraft != unit {
+            return Err(HufError("invalid kraft sum"));
+        }
+        let codes = canonical_codes(lens);
+        let mut lookup = vec![(0u8, 0u8); 1 << MAX_CODE_LEN];
+        for s in 0..NUM_SYMBOLS {
+            let (code, len) = codes[s];
+            if len == 0 {
+                continue;
+            }
+            let rc = rev_bits(code, len) as usize;
+            let step = 1usize << len;
+            let mut idx = rc;
+            while idx < lookup.len() {
+                lookup[idx] = (s as u8, len);
+                idx += step;
+            }
+        }
+        Ok(Self { lookup, raw: false })
+    }
+
+    pub fn decode_into(
+        &self,
+        r: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), HufError> {
+        if self.raw {
+            for _ in 0..n {
+                out.push(r.get(8).ok_or(HufError("truncated raw payload"))? as u8);
+            }
+            return Ok(());
+        }
+        if self.lookup.is_empty() {
+            return if n == 0 { Ok(()) } else { Err(HufError("empty table")) };
+        }
+        for _ in 0..n {
+            // Single-probe decode: peek MAX_CODE_LEN bits (zero-padded at
+            // stream end), look up (symbol, length), consume length bits.
+            let idx = r.peek(MAX_CODE_LEN) as usize;
+            let (sym, len) = self.lookup[idx];
+            if len == 0 {
+                return Err(HufError("bad code"));
+            }
+            if !r.consume(len as u32) {
+                return Err(HufError("truncated payload"));
+            }
+            out.push(sym);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn roundtrip(data: &[u8]) -> Result<(), String> {
+        let enc = Encoder::from_data(data);
+        let mut w = BitWriter::new();
+        enc.write_table(&mut w);
+        enc.encode_into(data, &mut w);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        let dec = Decoder::read_table(&mut r).map_err(|e| e.to_string())?;
+        let mut out = Vec::with_capacity(data.len());
+        dec.decode_into(&mut r, data.len(), &mut out)
+            .map_err(|e| e.to_string())?;
+        if out != data {
+            return Err("mismatch".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn empty() {
+        roundtrip(&[]).unwrap();
+    }
+
+    #[test]
+    fn single_symbol() {
+        roundtrip(&[42u8; 1000]).unwrap();
+    }
+
+    #[test]
+    fn two_symbols() {
+        let data: Vec<u8> = (0..1000).map(|i| if i % 3 == 0 { 1 } else { 2 }).collect();
+        roundtrip(&data).unwrap();
+    }
+
+    #[test]
+    fn all_bytes_uniform() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        roundtrip(&data).unwrap();
+    }
+
+    #[test]
+    fn skewed_distribution_beats_raw() {
+        // Highly skewed data must compress well below 8 bits/symbol.
+        let mut data = Vec::new();
+        for i in 0..4096usize {
+            data.push(if i % 16 == 0 { (i % 256) as u8 } else { 0 });
+        }
+        let enc = Encoder::from_data(&data);
+        let bits = enc.payload_bits(&data);
+        assert!(
+            bits < data.len() * 3,
+            "{} bits for {} symbols",
+            bits,
+            data.len()
+        );
+        roundtrip(&data).unwrap();
+    }
+
+    #[test]
+    fn lengths_are_kraft_valid() {
+        check("huffman_kraft", 150, |g| {
+            let data = g.compressible_bytes(4096);
+            if data.is_empty() {
+                return Ok(());
+            }
+            let enc = Encoder::from_data(&data);
+            let present = enc.lens.iter().filter(|&&l| l > 0).count();
+            if present <= 1 {
+                return Ok(());
+            }
+            let unit = 1u64 << MAX_CODE_LEN;
+            let kraft: u64 = enc.lens.iter().filter(|&&l| l > 0).map(|&l| unit >> l).sum();
+            if kraft != unit {
+                return Err(format!("kraft {kraft} != {unit}"));
+            }
+            if enc.lens.iter().any(|&l| l as u32 > MAX_CODE_LEN) {
+                return Err("length over limit".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("huffman_roundtrip", 200, |g| {
+            let data = if g.rng.next_f64() < 0.5 {
+                g.bytes(4096)
+            } else {
+                g.compressible_bytes(4096)
+            };
+            roundtrip(&data)
+        });
+    }
+
+    #[test]
+    fn payload_bits_le_entropy_plus_one() {
+        // Huffman is within 1 bit/symbol of entropy.
+        check("huffman_near_entropy", 40, |g| {
+            let data = g.compressible_bytes(8192);
+            if data.len() < 256 {
+                return Ok(());
+            }
+            let mut freqs = [0u64; 256];
+            for &b in &data {
+                freqs[b as usize] += 1;
+            }
+            let n = data.len() as f64;
+            let h: f64 = freqs
+                .iter()
+                .filter(|&&f| f > 0)
+                .map(|&f| {
+                    let p = f as f64 / n;
+                    -p * p.log2()
+                })
+                .sum();
+            let enc = Encoder::from_data(&data);
+            let bps = enc.payload_bits(&data) as f64 / n;
+            if bps > h + 1.0 + 1e-9 {
+                return Err(format!("bps={bps:.3} entropy={h:.3}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decoder_rejects_invalid_table() {
+        let mut lens = [0u8; 256];
+        lens[0] = 1;
+        lens[1] = 1;
+        lens[2] = 1; // kraft > 1
+        assert!(Decoder::from_lengths(&lens).is_err());
+    }
+}

@@ -1,0 +1,376 @@
+//! LZ4 block-format codec, implemented from scratch.
+//!
+//! This is the real LZ4 *block* format (as in `LZ4_compress_default` /
+//! `LZ4_decompress_safe`): token = (literal_len:4 | match_len-4:4), 15 in a
+//! nibble extends with 255-bytes, little-endian 16-bit offsets, and the
+//! end-of-block rules (last sequence is literals-only, last 5 bytes are
+//! literals, no match starts within the last 12 bytes). A stream produced
+//! here decompresses with reference lz4 and vice versa.
+//!
+//! The compressor is the classic single-probe hash-table greedy matcher
+//! (the same structure as `LZ4_compress_fast` at acceleration 1), which is
+//! also what the paper's hardware lane implements — one hash probe per
+//! position is what fits a 2 GHz pipeline.
+
+const MIN_MATCH: usize = 4;
+const LAST_LITERALS: usize = 5;
+const MFLIMIT: usize = 12;
+const MAX_OFFSET: usize = 65535;
+const HASH_LOG: u32 = 13;
+
+#[inline]
+fn hash4(v: u32) -> usize {
+    (v.wrapping_mul(2654435761) >> (32 - HASH_LOG)) as usize
+}
+
+#[inline]
+fn read_u32(data: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(data[i..i + 4].try_into().unwrap())
+}
+
+/// Compress `src` into LZ4 block format. Always succeeds (worst case
+/// expands by ~0.4% + 16 bytes, like the reference `LZ4_compressBound`).
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let n = src.len();
+    let mut dst = Vec::with_capacity(n + n / 255 + 16);
+    if n == 0 {
+        // empty input: single token 0x00 (zero literals, no match)
+        dst.push(0);
+        return dst;
+    }
+    if n < MFLIMIT + 1 {
+        emit_last_literals(&mut dst, src);
+        return dst;
+    }
+
+    let mut table = vec![0u32; 1 << HASH_LOG]; // position+1; 0 = empty
+    let match_limit = n - MFLIMIT; // no match may start at/after this
+    let mut anchor = 0usize;
+    let mut i = 0usize;
+
+    while i < match_limit {
+        // find a match at i
+        let h = hash4(read_u32(src, i));
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        let found = cand > 0 && {
+            let c = cand - 1;
+            i - c <= MAX_OFFSET && read_u32(src, c) == read_u32(src, i)
+        };
+        if !found {
+            i += 1;
+            continue;
+        }
+        let cand = cand - 1;
+
+        // extend match forward
+        let mut mlen = MIN_MATCH;
+        let max_len = n - LAST_LITERALS - i;
+        while mlen < max_len && src[cand + mlen] == src[i + mlen] {
+            mlen += 1;
+        }
+        // extend match backward into pending literals
+        let mut back = 0usize;
+        while i - back > anchor && cand > back && src[cand - back - 1] == src[i - back - 1] {
+            back += 1;
+        }
+        let mstart = i - back;
+        let mcand = cand - back;
+        let mlen = mlen + back;
+
+        // emit sequence: literals [anchor, mstart) + match (offset, mlen)
+        let lit_len = mstart - anchor;
+        let offset = mstart - mcand;
+        emit_sequence(&mut dst, &src[anchor..mstart], offset, mlen);
+        let _ = lit_len;
+
+        i = mstart + mlen;
+        anchor = i;
+        if i < match_limit {
+            // refresh table around the end of the match (improves ratio on
+            // repetitive data, same as the reference implementation)
+            if i >= 2 {
+                let p = i - 2;
+                table[hash4(read_u32(src, p))] = (p + 1) as u32;
+            }
+        }
+    }
+
+    emit_last_literals(&mut dst, &src[anchor..]);
+    dst
+}
+
+fn emit_len_extension(dst: &mut Vec<u8>, mut rem: usize) {
+    while rem >= 255 {
+        dst.push(255);
+        rem -= 255;
+    }
+    dst.push(rem as u8);
+}
+
+fn emit_sequence(dst: &mut Vec<u8>, literals: &[u8], offset: usize, mlen: usize) {
+    debug_assert!(mlen >= MIN_MATCH);
+    debug_assert!((1..=MAX_OFFSET).contains(&offset));
+    let ll = literals.len();
+    let ml = mlen - MIN_MATCH;
+    let tok_ll = ll.min(15) as u8;
+    let tok_ml = ml.min(15) as u8;
+    dst.push((tok_ll << 4) | tok_ml);
+    if ll >= 15 {
+        emit_len_extension(dst, ll - 15);
+    }
+    dst.extend_from_slice(literals);
+    dst.extend_from_slice(&(offset as u16).to_le_bytes());
+    if ml >= 15 {
+        emit_len_extension(dst, ml - 15);
+    }
+}
+
+fn emit_last_literals(dst: &mut Vec<u8>, literals: &[u8]) {
+    let ll = literals.len();
+    let tok_ll = ll.min(15) as u8;
+    dst.push(tok_ll << 4);
+    if ll >= 15 {
+        emit_len_extension(dst, ll - 15);
+    }
+    dst.extend_from_slice(literals);
+}
+
+/// Errors from [`decompress`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Lz4Error {
+    Truncated,
+    BadOffset,
+    OutputOverrun,
+}
+
+impl std::fmt::Display for Lz4Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Lz4Error::Truncated => write!(f, "lz4: truncated input"),
+            Lz4Error::BadOffset => write!(f, "lz4: match offset out of range"),
+            Lz4Error::OutputOverrun => write!(f, "lz4: output exceeds expected size"),
+        }
+    }
+}
+
+impl std::error::Error for Lz4Error {}
+
+/// Decompress an LZ4 block. `expected` is the exact decompressed size
+/// (LZ4 block format does not self-describe its size — the controller's
+/// frame header carries it, as does every real container format).
+pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, Lz4Error> {
+    let mut out = Vec::with_capacity(expected);
+    let mut i = 0usize;
+    let n = src.len();
+    loop {
+        if i >= n {
+            return Err(Lz4Error::Truncated);
+        }
+        let token = src[i];
+        i += 1;
+        // literals
+        let mut ll = (token >> 4) as usize;
+        if ll == 15 {
+            loop {
+                if i >= n {
+                    return Err(Lz4Error::Truncated);
+                }
+                let b = src[i];
+                i += 1;
+                ll += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        if i + ll > n {
+            return Err(Lz4Error::Truncated);
+        }
+        out.extend_from_slice(&src[i..i + ll]);
+        i += ll;
+        if out.len() > expected {
+            return Err(Lz4Error::OutputOverrun);
+        }
+        if i == n {
+            // end of block (last sequence is literals-only)
+            if out.len() != expected {
+                return Err(Lz4Error::Truncated);
+            }
+            return Ok(out);
+        }
+        // match
+        if i + 2 > n {
+            return Err(Lz4Error::Truncated);
+        }
+        let offset = u16::from_le_bytes([src[i], src[i + 1]]) as usize;
+        i += 2;
+        if offset == 0 || offset > out.len() {
+            return Err(Lz4Error::BadOffset);
+        }
+        let mut ml = (token & 0xF) as usize;
+        if ml == 15 {
+            loop {
+                if i >= n {
+                    return Err(Lz4Error::Truncated);
+                }
+                let b = src[i];
+                i += 1;
+                ml += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        let ml = ml + MIN_MATCH;
+        if out.len() + ml > expected {
+            return Err(Lz4Error::OutputOverrun);
+        }
+        // overlapping copy, byte by byte when offset < ml
+        let start = out.len() - offset;
+        if offset >= ml {
+            out.extend_from_within(start..start + ml);
+        } else {
+            for k in 0..ml {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn empty_roundtrip() {
+        let c = compress(&[]);
+        assert_eq!(decompress(&c, 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn tiny_inputs_are_literal_only() {
+        for n in 1..=12usize {
+            let data: Vec<u8> = (0..n as u8).collect();
+            let c = compress(&data);
+            assert_eq!(decompress(&c, n).unwrap(), data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn highly_repetitive_compresses_well() {
+        let data = vec![0xABu8; 4096];
+        let c = compress(&data);
+        assert!(c.len() < 64, "4096 repeated bytes -> {} bytes", c.len());
+        assert_eq!(decompress(&c, 4096).unwrap(), data);
+    }
+
+    #[test]
+    fn text_like_data_compresses() {
+        let data: Vec<u8> = b"the quick brown fox jumps over the lazy dog. "
+            .iter()
+            .copied()
+            .cycle()
+            .take(8192)
+            .collect();
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 4, "compressed {} of {}", c.len(), data.len());
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_data_expands_bounded() {
+        let mut r = crate::util::rng::Xoshiro256::new(3);
+        let mut data = vec![0u8; 4096];
+        r.fill_bytes(&mut data);
+        let c = compress(&data);
+        assert!(c.len() <= data.len() + data.len() / 255 + 16);
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn overlapping_match_rle() {
+        // "aaaaa..." forces offset-1 overlapping copies
+        let data = vec![b'a'; 1000];
+        let c = compress(&data);
+        assert_eq!(decompress(&c, 1000).unwrap(), data);
+    }
+
+    #[test]
+    fn long_literal_and_match_extensions() {
+        // >15 literals followed by >15+4 match length
+        let mut data: Vec<u8> = (0..200u8).collect(); // 200 unique literals
+        data.extend(std::iter::repeat(7u8).take(600)); // long run
+        let c = compress(&data);
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn decompress_rejects_truncation() {
+        let data: Vec<u8> = b"hello hello hello hello hello hello"
+            .iter()
+            .copied()
+            .cycle()
+            .take(512)
+            .collect();
+        let c = compress(&data);
+        for cut in [0, 1, c.len() / 2, c.len() - 1] {
+            assert!(
+                decompress(&c[..cut], data.len()).is_err(),
+                "cut={cut} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn decompress_rejects_bad_offset() {
+        // token: 0 literals + match, offset 5 but output empty
+        let bad = [0x04u8, 5, 0, 0x00];
+        assert_eq!(decompress(&bad, 16), Err(Lz4Error::BadOffset));
+    }
+
+    #[test]
+    fn roundtrip_property_random() {
+        check("lz4_roundtrip_random", 300, |g| {
+            let data = g.bytes(8192);
+            let c = compress(&data);
+            match decompress(&c, data.len()) {
+                Ok(d) if d == data => Ok(()),
+                Ok(_) => Err("data mismatch".into()),
+                Err(e) => Err(format!("{e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn roundtrip_property_compressible() {
+        check("lz4_roundtrip_compressible", 300, |g| {
+            let data = g.compressible_bytes(16384);
+            let c = compress(&data);
+            match decompress(&c, data.len()) {
+                Ok(d) if d == data => Ok(()),
+                Ok(_) => Err("data mismatch".into()),
+                Err(e) => Err(format!("{e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn compressible_data_actually_shrinks() {
+        check("lz4_shrinks", 50, |g| {
+            let mut data = g.compressible_bytes(16384);
+            while data.len() < 2048 {
+                let d2 = data.clone();
+                data.extend_from_slice(&d2);
+                data.push(0);
+            }
+            let c = compress(&data);
+            if c.len() >= data.len() {
+                return Err(format!("no shrink: {} -> {}", data.len(), c.len()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Lossless compression substrate, built from scratch (the offline build
+//! has no compression crates — and the paper's premise is a *hardware*
+//! engine, so we model the algorithms the lanes would implement).
+//!
+//! * [`lz4`] — the real LZ4 block format (interoperable).
+//! * [`zstdlike`] — zstd-class: windowed LZ77 + canonical-Huffman entropy
+//!   stage over literal/length/offset streams.
+//! * [`huffman`] — the entropy stage.
+//! * [`codec`] — engine selection + the paper's 4 KB-block ratio metric.
+//! * [`entropy`] — measurement helpers for Fig 8.
+pub mod codec;
+pub mod entropy;
+pub mod huffman;
+pub mod lz4;
+pub mod zstdlike;
+
+pub use codec::{block_compression_ratio, footprint_reduction, Codec, PAPER_BLOCK};

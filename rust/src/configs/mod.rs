@@ -1,0 +1,298 @@
+//! Model zoo + DDR5 device configurations.
+//!
+//! Shape configs for every model the paper evaluates (Table I, Table III,
+//! Figs 7–11). We cannot ship the checkpoints; the shapes drive both the
+//! calibrated synthetic generators (`synth`) and the footprint / traffic
+//! accounting (Fig 1, Figs 10–11).
+
+pub mod ddr5;
+
+/// Transformer architecture descriptor (decoder-only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (GQA); == n_heads for MHA models.
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Experts per MoE layer (1 = dense).
+    pub experts: usize,
+    /// Experts activated per token.
+    pub active_experts: usize,
+    /// True if FFN layers alternate dense/MoE (LLaMA-MoE style puts MoE
+    /// everywhere; Mixtral too). Kept for MoDE ablations.
+    pub tie_embeddings: bool,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// KV cache bytes per token at `bits` precision (both K and V, all
+    /// layers).
+    pub fn kv_bytes_per_token(&self, bits: u32) -> u64 {
+        let per_layer = 2 * self.n_kv_heads * self.d_head(); // K + V
+        (self.layers as u64 * per_layer as u64 * bits as u64).div_ceil(8)
+    }
+
+    /// Total parameter count (weights only, ignoring norms' negligible
+    /// share is NOT acceptable for footprint accounting — they are
+    /// included).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dh = self.d_head() as u64;
+        let heads = self.n_heads as u64;
+        let kvh = self.n_kv_heads as u64;
+        let ff = self.d_ff as u64;
+        let v = self.vocab as u64;
+        let l = self.layers as u64;
+        // attention: q (d*d), k,v (d * kvh*dh), o (d*d)
+        let attn = d * (heads * dh) + 2 * d * (kvh * dh) + (heads * dh) * d;
+        // SwiGLU ffn: gate, up (d*ff), down (ff*d) — per expert
+        let ffn = 3 * d * ff * self.experts as u64;
+        // router
+        let router = if self.experts > 1 { d * self.experts as u64 } else { 0 };
+        // norms: 2 per layer + final
+        let norms = l * 2 * d + d;
+        let emb = v * d * if self.tie_embeddings { 1 } else { 2 };
+        l * (attn + ffn + router) + norms + emb
+    }
+
+    /// Weight bytes at `bits` precision (ignores the INT-quant scale
+    /// overhead; callers that need it add `param_count / group * 16`).
+    pub fn weight_bytes(&self, bits: u32) -> u64 {
+        (self.param_count() * bits as u64).div_ceil(8)
+    }
+
+    /// Weights touched per generated token (active experts only) — the
+    /// per-token DRAM read traffic for Figs 10/11.
+    pub fn active_params_per_token(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dh = self.d_head() as u64;
+        let heads = self.n_heads as u64;
+        let kvh = self.n_kv_heads as u64;
+        let ff = self.d_ff as u64;
+        let v = self.vocab as u64;
+        let l = self.layers as u64;
+        let attn = d * (heads * dh) + 2 * d * (kvh * dh) + (heads * dh) * d;
+        let ffn = 3 * d * ff * self.active_experts as u64;
+        let router = if self.experts > 1 { d * self.experts as u64 } else { 0 };
+        let norms = l * 2 * d + d;
+        l * (attn + ffn + router) + norms + v * d
+    }
+}
+
+/// LLaMA 3.1 8B.
+pub const LLAMA31_8B: ModelConfig = ModelConfig {
+    name: "LLaMA 3.1 8B",
+    layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 8,
+    d_ff: 14336,
+    vocab: 128256,
+    experts: 1,
+    active_experts: 1,
+    tie_embeddings: false,
+};
+
+/// LLaMA 3.1 70B.
+pub const LLAMA31_70B: ModelConfig = ModelConfig {
+    name: "LLaMA 3.1 70B",
+    layers: 80,
+    d_model: 8192,
+    n_heads: 64,
+    n_kv_heads: 8,
+    d_ff: 28672,
+    vocab: 128256,
+    experts: 1,
+    active_experts: 1,
+    tie_embeddings: false,
+};
+
+/// Mixtral 8×7B (MoE, top-2 routing).
+pub const MIXTRAL_8X7B: ModelConfig = ModelConfig {
+    name: "Mixtral 8x7B",
+    layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 8,
+    d_ff: 14336,
+    vocab: 32000,
+    experts: 8,
+    active_experts: 2,
+    tie_embeddings: false,
+};
+
+/// LLaMA-MoE-3.5B (16 experts split from LLaMA-2-7B FFNs, top-4).
+pub const LLAMA_MOE_35B: ModelConfig = ModelConfig {
+    name: "LLaMA-MoE-3.5B",
+    layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 32,
+    d_ff: 688, // 11008 / 16 per expert
+    vocab: 32000,
+    experts: 16,
+    active_experts: 4,
+    tie_embeddings: false,
+};
+
+/// Gemma 2 2B.
+pub const GEMMA2_2B: ModelConfig = ModelConfig {
+    name: "Gemma 2 2B",
+    layers: 26,
+    d_model: 2304,
+    n_heads: 8,
+    n_kv_heads: 4,
+    d_ff: 9216,
+    vocab: 256128,
+    experts: 1,
+    active_experts: 1,
+    tie_embeddings: true,
+};
+
+/// Mistral 7B.
+pub const MISTRAL_7B: ModelConfig = ModelConfig {
+    name: "Mistral 7B",
+    layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 8,
+    d_ff: 14336,
+    vocab: 32000,
+    experts: 1,
+    active_experts: 1,
+    tie_embeddings: false,
+};
+
+/// OPT 13B (MHA, ReLU FFN — we keep the 3-matrix accounting but with
+/// d_ff = 4*d and experts=1; footprint error vs the true 2-matrix FFN is
+/// corrected by the ffn_matrices field… OPT uses 2 matrices).
+pub const OPT_13B: ModelConfig = ModelConfig {
+    name: "OPT 13B",
+    layers: 40,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 40,
+    d_ff: 13653, // 2/3 * 4*5120 * (2 matrices folded into 3-matrix accounting)
+    vocab: 50272,
+    experts: 1,
+    active_experts: 1,
+    tie_embeddings: true,
+};
+
+/// The tiny trained LM used for end-to-end runs (matches python/compile/model.py).
+pub const TINYLM: ModelConfig = ModelConfig {
+    name: "tinylm",
+    layers: 4,
+    d_model: 128,
+    n_heads: 4,
+    n_kv_heads: 2,
+    d_ff: 344,
+    vocab: 256,
+    experts: 1,
+    active_experts: 1,
+    tie_embeddings: true,
+};
+
+/// Table I's five models.
+pub const TABLE1_MODELS: [&ModelConfig; 5] = [
+    &LLAMA31_8B,
+    &GEMMA2_2B,
+    &MISTRAL_7B,
+    &OPT_13B,
+    &MIXTRAL_8X7B,
+];
+
+/// Table III / Figs 9–11's four models.
+pub const SWEEP_MODELS: [&ModelConfig; 4] = [
+    &LLAMA31_8B,
+    &LLAMA31_70B,
+    &MIXTRAL_8X7B,
+    &LLAMA_MOE_35B,
+];
+
+pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+    [
+        &LLAMA31_8B,
+        &LLAMA31_70B,
+        &MIXTRAL_8X7B,
+        &LLAMA_MOE_35B,
+        &GEMMA2_2B,
+        &MISTRAL_7B,
+        &OPT_13B,
+        &TINYLM,
+    ]
+    .into_iter()
+    .find(|m| m.name.eq_ignore_ascii_case(name) || slug(m.name) == slug(name))
+}
+
+fn slug(s: &str) -> String {
+    s.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .collect::<String>()
+        .to_ascii_lowercase()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // within 6% of the published totals
+        let cases = [
+            (&LLAMA31_8B, 8.0e9),
+            (&LLAMA31_70B, 70.6e9),
+            (&MIXTRAL_8X7B, 46.7e9),
+            (&MISTRAL_7B, 7.2e9),
+            (&GEMMA2_2B, 2.6e9),
+            (&OPT_13B, 13.0e9),
+        ];
+        for (m, want) in cases {
+            let got = m.param_count() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.06, "{}: {got:.3e} vs {want:.3e} ({rel:.3})", m.name);
+        }
+    }
+
+    #[test]
+    fn llama_moe_is_about_6_7b_total() {
+        // LLaMA-MoE-3.5B has ~6.7B total params, 3.5B active
+        let total = LLAMA_MOE_35B.param_count() as f64;
+        assert!((5.5e9..8.0e9).contains(&total), "total={total:.3e}");
+        let active = LLAMA_MOE_35B.active_params_per_token() as f64;
+        assert!((3.0e9..4.2e9).contains(&active), "active={active:.3e}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama8b() {
+        // LLaMA 3.1 8B: 32 layers * 2 * 8 kv-heads * 128 dims * 2 B = 131072 B
+        assert_eq!(LLAMA31_8B.kv_bytes_per_token(16), 131072);
+        assert_eq!(LLAMA31_8B.kv_bytes_per_token(8), 65536);
+    }
+
+    #[test]
+    fn active_weights_less_than_total_for_moe() {
+        assert!(MIXTRAL_8X7B.active_params_per_token() < MIXTRAL_8X7B.param_count());
+        assert_eq!(LLAMA31_8B.active_params_per_token(), {
+            // dense: active == total minus the unused non-tied input emb? —
+            // per-token generation reads the full output embedding once and
+            // the input row is negligible; our accounting uses v*d once.
+            LLAMA31_8B.param_count() - LLAMA31_8B.vocab as u64 * LLAMA31_8B.d_model as u64
+        });
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("LLaMA 3.1 8B").unwrap().name, "LLaMA 3.1 8B");
+        assert_eq!(by_name("llama318b").unwrap().name, "LLaMA 3.1 8B");
+        assert_eq!(by_name("tinylm").unwrap().name, "tinylm");
+        assert!(by_name("gpt-5").is_none());
+    }
+}

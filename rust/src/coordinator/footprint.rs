@@ -1,0 +1,64 @@
+//! Fig 1 analytics: KV-cache vs model-weights share of the total memory
+//! footprint as sequence length grows.
+
+use crate::configs::ModelConfig;
+
+/// One point of the Fig 1 curve.
+#[derive(Debug, Clone, Copy)]
+pub struct FootprintPoint {
+    pub seq_len: u64,
+    pub weight_bytes: u64,
+    pub kv_bytes: u64,
+}
+
+impl FootprintPoint {
+    pub fn kv_fraction(&self) -> f64 {
+        self.kv_bytes as f64 / (self.kv_bytes + self.weight_bytes) as f64
+    }
+}
+
+/// Compute the curve for a model at `bits` precision (weights and KV),
+/// batch size `batch`.
+pub fn footprint_curve(
+    cfg: &ModelConfig,
+    bits: u32,
+    batch: u64,
+    seq_lens: &[u64],
+) -> Vec<FootprintPoint> {
+    let weight_bytes = cfg.weight_bytes(bits);
+    seq_lens
+        .iter()
+        .map(|&s| FootprintPoint {
+            seq_len: s,
+            weight_bytes,
+            kv_bytes: cfg.kv_bytes_per_token(bits) * s * batch,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configs::LLAMA31_8B;
+
+    #[test]
+    fn kv_overtakes_weights_at_long_context() {
+        // Paper Fig 1: beyond a few thousand tokens the KV cache exceeds
+        // 90% of the footprint for LLaMA 3.1 8B (batched serving).
+        let pts = footprint_curve(&LLAMA31_8B, 16, 32, &[128, 1024, 8192, 65536, 131072]);
+        assert!(pts[0].kv_fraction() < 0.20, "{}", pts[0].kv_fraction());
+        let last = pts.last().unwrap();
+        assert!(last.kv_fraction() > 0.90, "{}", last.kv_fraction());
+        // monotone growth
+        for w in pts.windows(2) {
+            assert!(w[1].kv_fraction() > w[0].kv_fraction());
+        }
+    }
+
+    #[test]
+    fn single_sequence_crossover_is_later() {
+        let b1 = footprint_curve(&LLAMA31_8B, 16, 1, &[8192]);
+        let b32 = footprint_curve(&LLAMA31_8B, 16, 32, &[8192]);
+        assert!(b32[0].kv_fraction() > b1[0].kv_fraction());
+    }
+}

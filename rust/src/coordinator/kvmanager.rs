@@ -1,0 +1,281 @@
+//! KV-cache policy engine: Quest-style page scoring, tiered precision
+//! degradation, and page masks — the L3 half of the paper's dynamic
+//! quantization story (§II-C, Table II).
+//!
+//! Scoring uses the model's *actual* queries from the previous decode step
+//! (`KvState::queries`); consecutive decode queries select highly
+//! overlapping page sets, which is the temporal locality Quest-class
+//! systems rely on. Precision reduction is bit-plane truncation of the
+//! BF16 codes — exactly what a partial-plane fetch through the memory
+//! controller returns to the fabric.
+
+use crate::fmt::minifloat::BF16;
+use crate::fmt::{truncate_to_planes, Dtype};
+use crate::quant::policy::{ranks_from_scores, KvPolicy, PAGE_TOKENS};
+use crate::runtime::model::{KvState, ModelMeta};
+
+/// The per-step plan produced by [`PolicyEngine::plan`].
+pub struct PolicyPlan {
+    /// Additive page mask for the decode step (0 attend, -1e9 skip).
+    pub mask: Vec<f32>,
+    /// Bit-planes kept per active page (0 = skipped).
+    pub page_bits: Vec<u32>,
+    /// Degraded K/V copies to feed the attention (same layout as KvState).
+    pub degraded_k: Vec<f32>,
+    pub degraded_v: Vec<f32>,
+    /// Ideal fetched KV bits under this plan (bandwidth proxy; the
+    /// compressed accounting lives in `pagestore`).
+    pub fetched_bits: u64,
+}
+
+/// Policy engine for one sequence.
+pub struct PolicyEngine {
+    pub policy: KvPolicy,
+}
+
+impl PolicyEngine {
+    pub fn new(policy: KvPolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Quest scores per active page: sum over layers of
+    /// Σ_ch max(q̄_ch · min_p,ch, q̄_ch · max_p,ch), with q̄ the group-mean
+    /// query per KV head channel from the previous step.
+    pub fn page_scores(&self, kv: &KvState, meta: &ModelMeta) -> Vec<f64> {
+        let npages = kv.pos.div_ceil(PAGE_TOKENS);
+        let row = meta.n_kv_heads * meta.d_head; // channels per token
+        let group = meta.n_heads / meta.n_kv_heads;
+        let mut scores = vec![0.0f64; npages.max(1)];
+        // group-mean query per layer -> [L][row]
+        for l in 0..meta.layers {
+            let qbase = l * meta.n_heads * meta.d_head;
+            let mut qbar = vec![0.0f32; row];
+            for h in 0..meta.n_heads {
+                let kvh = h / group;
+                for d in 0..meta.d_head {
+                    qbar[kvh * meta.d_head + d] +=
+                        kv.queries[qbase + h * meta.d_head + d] / group as f32;
+                }
+            }
+            for (p, score) in scores.iter_mut().enumerate() {
+                let t0 = p * PAGE_TOKENS;
+                let t1 = ((p + 1) * PAGE_TOKENS).min(kv.pos);
+                for ch in 0..row {
+                    let mut mn = f32::INFINITY;
+                    let mut mx = f32::NEG_INFINITY;
+                    for t in t0..t1 {
+                        let x = kv.k[(l * meta.max_seq + t) * row + ch];
+                        mn = mn.min(x);
+                        mx = mx.max(x);
+                    }
+                    let q = qbar[ch];
+                    *score += (q * mn).max(q * mx) as f64;
+                }
+            }
+        }
+        scores
+    }
+
+    /// Build this step's plan from the true cache.
+    pub fn plan(&self, kv: &KvState, meta: &ModelMeta) -> PolicyPlan {
+        let npages_active = kv.pos.div_ceil(PAGE_TOKENS).max(1);
+        let scores = if matches!(self.policy, KvPolicy::Full | KvPolicy::SlidingWindow { .. }) {
+            // rank-free policies
+            vec![0.0; npages_active]
+        } else {
+            self.page_scores(kv, meta)
+        };
+        let ranks = ranks_from_scores(&scores);
+        let bits = self
+            .policy
+            .page_precisions(npages_active, Dtype::Bf16, &ranks);
+
+        let mut mask = vec![0.0f32; meta.n_pages];
+        for (p, &b) in bits.iter().enumerate() {
+            if b == 0 {
+                mask[p] = -1e9;
+            }
+        }
+
+        // degraded copies: quantize each kept page to its tier
+        let mut dk = kv.k.clone();
+        let mut dv = kv.v.clone();
+        let row = meta.n_kv_heads * meta.d_head;
+        let mut fetched_bits = 0u64;
+        for (p, &b) in bits.iter().enumerate() {
+            let t0 = p * PAGE_TOKENS;
+            let t1 = ((p + 1) * PAGE_TOKENS).min(kv.pos);
+            if b == 0 {
+                continue;
+            }
+            fetched_bits += ((t1 - t0) * row * 2) as u64 * b as u64 * meta.layers as u64;
+            if b >= 16 {
+                continue; // full precision, nothing to degrade
+            }
+            for l in 0..meta.layers {
+                for t in t0..t1 {
+                    let off = (l * meta.max_seq + t) * row;
+                    for x in dk[off..off + row].iter_mut() {
+                        *x = degrade_f32(*x, b);
+                    }
+                    for x in dv[off..off + row].iter_mut() {
+                        *x = degrade_f32(*x, b);
+                    }
+                }
+            }
+        }
+        PolicyPlan {
+            mask,
+            page_bits: bits,
+            degraded_k: dk,
+            degraded_v: dv,
+            fetched_bits,
+        }
+    }
+}
+
+/// Reduce an f32 to what a top-`keep`-planes BF16 fetch reconstructs.
+#[inline]
+pub fn degrade_f32(x: f32, keep: u32) -> f32 {
+    let code = BF16.encode(x) as u16;
+    let t = truncate_to_planes(code, Dtype::Bf16, keep);
+    BF16.decode(t as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::policy::PageTier;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 256,
+            layers: 2,
+            d_model: 32,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            max_seq: 64,
+            kv_channels: 16,
+            prefill_len: 32,
+            page_tokens: 16,
+            n_pages: 4,
+            param_names: vec![],
+        }
+    }
+
+    fn kv_with(meta: &ModelMeta, pos: usize, seed: u64) -> KvState {
+        let mut kv = KvState {
+            k: vec![0.0; meta.layers * meta.max_seq * meta.n_kv_heads * meta.d_head],
+            v: vec![0.0; meta.layers * meta.max_seq * meta.n_kv_heads * meta.d_head],
+            queries: vec![0.0; meta.layers * meta.n_heads * meta.d_head],
+            pos,
+        };
+        let mut r = crate::util::rng::Xoshiro256::new(seed);
+        let row = meta.n_kv_heads * meta.d_head;
+        for l in 0..meta.layers {
+            for t in 0..pos {
+                for c in 0..row {
+                    kv.k[(l * meta.max_seq + t) * row + c] = (r.normal() * 0.5) as f32;
+                    kv.v[(l * meta.max_seq + t) * row + c] = (r.normal() * 0.5) as f32;
+                }
+            }
+        }
+        for q in kv.queries.iter_mut() {
+            *q = (r.normal()) as f32;
+        }
+        kv
+    }
+
+    #[test]
+    fn full_policy_plan_is_identity() {
+        let m = meta();
+        let kv = kv_with(&m, 40, 1);
+        let plan = PolicyEngine::new(KvPolicy::Full).plan(&kv, &m);
+        assert_eq!(plan.degraded_k, kv.k);
+        assert!(plan.mask.iter().all(|&x| x == 0.0));
+        assert!(plan.page_bits.iter().all(|&b| b == 16));
+    }
+
+    #[test]
+    fn sliding_window_masks_old_pages() {
+        let m = meta();
+        let kv = kv_with(&m, 64, 2);
+        let plan = PolicyEngine::new(KvPolicy::SlidingWindow { window: 16 })
+            .plan(&kv, &m);
+        // 4 active pages, window 16 = 1 page kept (the last)
+        assert_eq!(plan.page_bits, vec![0, 0, 0, 16]);
+        assert_eq!(plan.mask[0], -1e9);
+        assert_eq!(plan.mask[3], 0.0);
+    }
+
+    #[test]
+    fn dynamic_quant_degrades_low_tiers() {
+        let m = meta();
+        let kv = kv_with(&m, 64, 3);
+        let policy = KvPolicy::DynamicQuant {
+            tiers: vec![
+                PageTier { pages: 1, dtype: Dtype::Bf16 },
+                PageTier { pages: 2, dtype: Dtype::Fp8E4M3 },
+            ],
+        };
+        let plan = PolicyEngine::new(policy).plan(&kv, &m);
+        // exactly one page at 16 bits + the current page forced to 16
+        let full = plan.page_bits.iter().filter(|&&b| b == 16).count();
+        assert!(full >= 1 && full <= 2, "{:?}", plan.page_bits);
+        assert!(plan.page_bits.iter().any(|&b| b == 8));
+        // degraded copy differs from the true cache somewhere
+        assert_ne!(plan.degraded_k, kv.k);
+        // and degradation is magnitude-shrinking truncation
+        for (d, t) in plan.degraded_k.iter().zip(&kv.k) {
+            assert!(d.abs() <= t.abs() + 1e-3);
+        }
+    }
+
+    #[test]
+    fn scores_prefer_aligned_pages() {
+        let m = meta();
+        let mut kv = kv_with(&m, 48, 4);
+        // make page 1's keys strongly aligned with the query
+        let row = m.n_kv_heads * m.d_head;
+        for q in kv.queries.iter_mut() {
+            *q = 1.0;
+        }
+        for l in 0..m.layers {
+            for t in 16..32 {
+                for c in 0..row {
+                    kv.k[(l * m.max_seq + t) * row + c] = 5.0;
+                }
+            }
+        }
+        let eng = PolicyEngine::new(KvPolicy::QuestTopK { pages: 1 });
+        let scores = eng.page_scores(&kv, &m);
+        assert_eq!(scores.len(), 3);
+        assert!(scores[1] > scores[0] && scores[1] > scores[2], "{scores:?}");
+        let plan = eng.plan(&kv, &m);
+        assert_eq!(plan.page_bits[1], 16);
+        assert_eq!(plan.page_bits[0], 0);
+    }
+
+    #[test]
+    fn degrade_f32_matches_plane_semantics() {
+        // keep=16 is identity on bf16-representable values
+        let x = BF16.decode(BF16.encode(0.7243));
+        assert_eq!(degrade_f32(x, 16), x);
+        assert_eq!(degrade_f32(x, 0), 0.0);
+        // keep=9 keeps sign+exponent: result is a power of two with x's sign
+        let d = degrade_f32(-3.7, 9);
+        assert_eq!(d, -2.0);
+    }
+
+    #[test]
+    fn fetched_bits_scale_with_policy() {
+        let m = meta();
+        let kv = kv_with(&m, 64, 5);
+        let full = PolicyEngine::new(KvPolicy::Full).plan(&kv, &m).fetched_bits;
+        let quest = PolicyEngine::new(KvPolicy::QuestTopK { pages: 1 })
+            .plan(&kv, &m)
+            .fetched_bits;
+        assert!(quest < full / 2 + full / 4, "quest={quest} full={full}");
+    }
+}

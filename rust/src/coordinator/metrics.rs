@@ -1,0 +1,77 @@
+//! Serving metrics: step counts, request latencies, percentile summary.
+
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub steps: u64,
+    pub requests: u64,
+    pub tokens_out: u64,
+    latencies_ms: Vec<f64>,
+}
+
+impl ServeMetrics {
+    pub fn record_request(&mut self, tokens: usize, wall_ms: f64) {
+        self.requests += 1;
+        self.tokens_out += tokens as u64;
+        self.latencies_ms.push(wall_ms);
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.50)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.99)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            0.0
+        } else {
+            self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len() as f64
+        }
+    }
+
+    /// Aggregate decode throughput over the measured wall time.
+    pub fn tokens_per_sec(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / wall_s
+        }
+    }
+}
+
+fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = ServeMetrics::default();
+        for i in 1..=100 {
+            m.record_request(1, i as f64);
+        }
+        assert_eq!(m.requests, 100);
+        assert!((m.p50_ms() - 50.0).abs() <= 1.0);
+        assert!((m.p99_ms() - 99.0).abs() <= 1.0);
+        assert!((m.mean_ms() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.p50_ms(), 0.0);
+        assert_eq!(m.mean_ms(), 0.0);
+        assert_eq!(m.tokens_per_sec(1.0), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the serving loop that ties the runtime (PJRT model),
+//! the KV policy engine (dynamic quantization), and the memory controller
+//! together — plus the Fig 1 footprint analytics.
+pub mod footprint;
+pub mod kvmanager;
+pub mod metrics;
+pub mod pagestore;
+pub mod server;
+
+pub use footprint::{footprint_curve, FootprintPoint};
+pub use kvmanager::{degrade_f32, PolicyEngine, PolicyPlan};
+pub use metrics::ServeMetrics;
+pub use pagestore::KvPageStore;
+pub use server::{serve, spawn, Request, Response};

@@ -1,0 +1,212 @@
+//! Routes completed KV pages through the memory controller and accounts
+//! for stored/fetched bytes — the glue between the model runtime and the
+//! controller that the end-to-end example exercises.
+
+use crate::fmt::minifloat::BF16;
+use crate::fmt::Dtype;
+use crate::memctrl::{Layout, MemController, RegionId};
+use crate::quant::policy::PAGE_TOKENS;
+use crate::runtime::model::{KvState, ModelMeta};
+
+/// Per-sequence store of compressed KV pages.
+pub struct KvPageStore {
+    pub mc: MemController,
+    /// One region per completed page (all layers concatenated token-major).
+    pages: Vec<RegionId>,
+    /// Raw bytes per completed page (all layers).
+    pub page_raw_bytes: usize,
+    channels: usize,
+    layers: usize,
+}
+
+impl KvPageStore {
+    pub fn new(meta: &ModelMeta, layout: Layout, codec: crate::compress::Codec) -> Self {
+        let channels = meta.n_kv_heads * meta.d_head;
+        Self {
+            mc: MemController::new(layout, codec),
+            pages: Vec::new(),
+            page_raw_bytes: meta.layers * PAGE_TOKENS * channels * 2 * 2, // K+V bf16
+            channels,
+            layers: meta.layers,
+        }
+    }
+
+    /// Number of stored (completed) pages.
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    /// Ingest pages completed by the sequence reaching `kv.pos`.
+    pub fn sync(&mut self, kv: &KvState, meta: &ModelMeta) {
+        let complete = kv.pos / PAGE_TOKENS;
+        while self.pages.len() < complete {
+            let p = self.pages.len();
+            let codes = self.page_codes(kv, meta, p);
+            let id = self.mc.store_kv(
+                &format!("page{p}"),
+                Dtype::Bf16,
+                PAGE_TOKENS * 2 * self.layers, // K and V rows for each layer
+                self.channels,
+                &codes,
+            );
+            self.pages.push(id);
+        }
+    }
+
+    /// BF16 codes of page `p` (token-major rows: for each layer, K tokens
+    /// then V tokens — keeps channel alignment for the clustering path).
+    fn page_codes(&self, kv: &KvState, meta: &ModelMeta, p: usize) -> Vec<u16> {
+        let row = self.channels;
+        let t0 = p * PAGE_TOKENS;
+        let mut codes = Vec::with_capacity(self.layers * PAGE_TOKENS * 2 * row);
+        for l in 0..self.layers {
+            for src in [&kv.k, &kv.v] {
+                for t in t0..t0 + PAGE_TOKENS {
+                    let off = (l * meta.max_seq + t) * row;
+                    codes.extend(src[off..off + row].iter().map(|&x| BF16.encode(x) as u16));
+                }
+            }
+        }
+        codes
+    }
+
+    /// Stored bytes across all pages (compressed footprint).
+    pub fn stored_bytes(&self) -> u64 {
+        self.pages.iter().map(|&id| self.mc.region(id).stored_bytes()).sum()
+    }
+
+    /// Raw bytes across all pages.
+    pub fn raw_bytes(&self) -> u64 {
+        (self.pages.len() * self.page_raw_bytes) as u64
+    }
+
+    /// Overall compression ratio of the stored KV cache.
+    pub fn ratio(&self) -> f64 {
+        if self.pages.is_empty() {
+            1.0
+        } else {
+            self.raw_bytes() as f64 / self.stored_bytes().max(1) as f64
+        }
+    }
+
+    /// Bytes a step must fetch from DRAM given per-page kept bit-planes
+    /// (pages beyond the stored set — i.e. the current partial page — are
+    /// counted raw).
+    pub fn fetch_bytes(&mut self, page_bits: &[u32]) -> u64 {
+        let mut total = 0u64;
+        for (p, &bits) in page_bits.iter().enumerate() {
+            if bits == 0 {
+                continue;
+            }
+            if p < self.pages.len() {
+                let id = self.pages[p];
+                // partial-plane fetch through the controller
+                let (_, stats) = self
+                    .mc
+                    .load(id, bits, None)
+                    .expect("page load");
+                total += stats.dram_bytes;
+            } else {
+                // current partial page: raw on-chip, full precision
+                total += (self.page_raw_bytes / 2) as u64;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 256,
+            layers: 2,
+            d_model: 32,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            max_seq: 64,
+            kv_channels: 16,
+            prefill_len: 32,
+            page_tokens: 16,
+            n_pages: 4,
+            param_names: vec![],
+        }
+    }
+
+    fn kv_filled(meta: &ModelMeta, pos: usize) -> KvState {
+        let row = meta.n_kv_heads * meta.d_head;
+        let mut kv = KvState {
+            k: vec![0.0; meta.layers * meta.max_seq * row],
+            v: vec![0.0; meta.layers * meta.max_seq * row],
+            queries: vec![0.0; meta.layers * meta.n_heads * meta.d_head],
+            pos,
+        };
+        let mut r = crate::util::rng::Xoshiro256::new(1);
+        let scales: Vec<f32> = (0..row).map(|_| 2f32.powf(r.normal() as f32)).collect();
+        for l in 0..meta.layers {
+            for t in 0..pos {
+                for c in 0..row {
+                    kv.k[(l * meta.max_seq + t) * row + c] =
+                        scales[c] * (1.0 + 0.05 * r.normal() as f32);
+                    kv.v[(l * meta.max_seq + t) * row + c] =
+                        scales[c] * (1.0 + 0.05 * r.normal() as f32);
+                }
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn sync_stores_completed_pages_only() {
+        let m = meta();
+        let kv = kv_filled(&m, 40); // 2 complete pages + 8 tokens
+        let mut ps = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &m);
+        assert_eq!(ps.len(), 2);
+        // idempotent
+        ps.sync(&kv, &m);
+        assert_eq!(ps.len(), 2);
+    }
+
+    #[test]
+    fn channel_coherent_kv_compresses() {
+        let m = meta();
+        let kv = kv_filled(&m, 64);
+        let mut ps = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &m);
+        assert!(ps.ratio() > 1.3, "kv page ratio {}", ps.ratio());
+    }
+
+    #[test]
+    fn fetch_scales_with_bits() {
+        let m = meta();
+        let kv = kv_filled(&m, 64);
+        let mut ps = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &m);
+        let full = ps.fetch_bytes(&[16, 16, 16, 16]);
+        let half = ps.fetch_bytes(&[8, 8, 8, 8]);
+        let skip = ps.fetch_bytes(&[0, 0, 0, 16]);
+        assert!(half < full, "half={half} full={full}");
+        assert!(skip < half, "skip={skip}");
+    }
+
+    #[test]
+    fn page_roundtrip_through_controller() {
+        let m = meta();
+        let kv = kv_filled(&m, 16);
+        let mut ps = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &m);
+        let id = ps.pages[0];
+        let (codes, _) = ps.mc.load(id, 16, None).unwrap();
+        let want = ps.page_codes(&kv, &m, 0);
+        assert_eq!(codes, want);
+    }
+}

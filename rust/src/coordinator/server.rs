@@ -1,0 +1,161 @@
+//! Request-serving loop: a thread-owned model worker consuming a request
+//! queue, decoding multiple sequences round-robin (sequence-granular
+//! continuous batching), with every KV page routed through the memory
+//! controller and per-request latency metrics.
+//!
+//! The PJRT client is not `Sync`, so the worker owns the model; clients
+//! talk to it over std mpsc channels (tokio is unavailable offline — see
+//! DESIGN.md substrate table).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+use super::kvmanager::PolicyEngine;
+use super::metrics::ServeMetrics;
+use super::pagestore::KvPageStore;
+use crate::compress::Codec;
+use crate::memctrl::Layout;
+use crate::quant::policy::KvPolicy;
+use crate::runtime::model::{KvState, TinyLm};
+
+/// A generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    pub policy: KvPolicy,
+}
+
+/// A finished generation.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    /// Mean per-step NLL of the generated tokens (quality proxy).
+    pub mean_nll: f64,
+    /// KV bytes fetched through the controller over the request.
+    pub kv_fetched_bytes: u64,
+    /// KV compression ratio of this request's stored pages.
+    pub kv_ratio: f64,
+    pub wall_ms: f64,
+}
+
+struct Active {
+    req: Request,
+    kv: KvState,
+    engine: PolicyEngine,
+    store: KvPageStore,
+    produced: Vec<u16>,
+    nll_sum: f64,
+    fetched: u64,
+    fed: usize,
+    started: std::time::Instant,
+}
+
+/// Serve a batch of requests to completion. Returns responses in
+/// completion order. `slots` bounds concurrent sequences (the batcher's
+/// admission control).
+pub fn serve(
+    lm: &TinyLm,
+    requests: Vec<Request>,
+    slots: usize,
+    metrics: &mut ServeMetrics,
+) -> anyhow::Result<Vec<Response>> {
+    let mut pending: VecDeque<Request> = requests.into();
+    let mut active: Vec<Active> = Vec::new();
+    let mut done = Vec::new();
+
+    while !pending.is_empty() || !active.is_empty() {
+        // admit
+        while active.len() < slots {
+            let Some(req) = pending.pop_front() else { break };
+            active.push(Active {
+                kv: KvState::new(&lm.meta),
+                engine: PolicyEngine::new(req.policy.clone()),
+                store: KvPageStore::new(&lm.meta, Layout::Proposed, Codec::Zstd),
+                produced: Vec::new(),
+                nll_sum: 0.0,
+                fetched: 0,
+                fed: 0,
+                started: std::time::Instant::now(),
+                req,
+            });
+        }
+        // one decode step per active sequence (round-robin batching)
+        let mut i = 0;
+        while i < active.len() {
+            let a = &mut active[i];
+            let next_input = if a.fed < a.req.prompt.len() {
+                a.req.prompt[a.fed]
+            } else {
+                *a.produced.last().expect("produced")
+            };
+            let plan = a.engine.plan(&a.kv, &lm.meta);
+            let logits = lm.decode_step_degraded(
+                &mut a.kv,
+                &plan.degraded_k,
+                &plan.degraded_v,
+                next_input,
+                &plan.mask,
+            )?;
+            a.store.sync(&a.kv, &lm.meta);
+            a.fetched += a.store.fetch_bytes(&plan.page_bits);
+            a.fed += 1;
+            if a.fed >= a.req.prompt.len() {
+                let tok = TinyLm::argmax(&logits);
+                a.nll_sum += TinyLm::nll(&logits, tok);
+                a.produced.push(tok);
+            }
+            metrics.steps += 1;
+
+            let finished = a.produced.len() >= a.req.max_new_tokens
+                || a.kv.pos >= lm.meta.max_seq;
+            if finished {
+                let a = active.swap_remove(i);
+                let wall = a.started.elapsed().as_secs_f64() * 1e3;
+                metrics.record_request(a.produced.len(), wall);
+                done.push(Response {
+                    id: a.req.id,
+                    mean_nll: a.nll_sum / a.produced.len().max(1) as f64,
+                    tokens: a.produced,
+                    kv_fetched_bytes: a.fetched,
+                    kv_ratio: a.store.ratio(),
+                    wall_ms: wall,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+    Ok(done)
+}
+
+/// Spawn a worker thread owning the model; returns a handle for async use
+/// from examples (request submission + response collection).
+pub struct ServerHandle {
+    pub tx: mpsc::Sender<Request>,
+    pub rx: mpsc::Receiver<Response>,
+    pub join: std::thread::JoinHandle<anyhow::Result<ServeMetrics>>,
+}
+
+/// Start a server that drains `n_expected` requests then exits.
+pub fn spawn(artifacts_dir: std::path::PathBuf, n_expected: usize, slots: usize) -> ServerHandle {
+    let (tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, rx) = mpsc::channel::<Response>();
+    let join = std::thread::spawn(move || -> anyhow::Result<ServeMetrics> {
+        let lm = TinyLm::load(&artifacts_dir)?;
+        let mut metrics = ServeMetrics::default();
+        let mut batch = Vec::new();
+        for _ in 0..n_expected {
+            match req_rx.recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        for resp in serve(&lm, batch, slots, &mut metrics)? {
+            let _ = resp_tx.send(resp);
+        }
+        Ok(metrics)
+    });
+    ServerHandle { tx, rx, join }
+}

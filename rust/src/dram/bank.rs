@@ -1,0 +1,218 @@
+//! Per-bank / per-rank timing state machines.
+//!
+//! Each bank tracks its open row and the earliest cycle at which each
+//! command class may issue; rank-level constraints (tFAW, tRRD, tCCD)
+//! are tracked in [`RankTiming`].
+
+use crate::configs::ddr5::Ddr5Config;
+
+/// Commands the controller can issue to a bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmd {
+    Activate,
+    Precharge,
+    Read,
+    Write,
+    Refresh,
+}
+
+/// One bank's state.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    pub open_row: Option<usize>,
+    /// Earliest cycle an ACT may issue.
+    pub next_act: u64,
+    /// Earliest cycle a PRE may issue.
+    pub next_pre: u64,
+    /// Earliest cycle a RD/WR may issue.
+    pub next_rdwr: u64,
+    /// Row-buffer statistics.
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Self {
+            open_row: None,
+            next_act: 0,
+            next_pre: 0,
+            next_rdwr: 0,
+            row_hits: 0,
+            row_misses: 0,
+            row_conflicts: 0,
+        }
+    }
+}
+
+/// Rank-level timing: tFAW (rolling four-ACT window), same/diff bank-group
+/// tRRD/tCCD, and read/write bus turnaround.
+#[derive(Debug, Clone)]
+pub struct RankTiming {
+    /// Cycles of the last four ACTs (for tFAW).
+    act_times: [u64; 4],
+    act_idx: usize,
+    /// Last ACT cycle per bank group (tRRD_L) and overall (tRRD_S).
+    last_act_any: u64,
+    last_act_bg: Vec<u64>,
+    /// Last RD/WR burst start per bank group and overall (tCCD).
+    last_col_any: u64,
+    last_col_bg: Vec<u64>,
+    /// Earliest cycle the data bus is free.
+    pub bus_free: u64,
+    /// Last column op was a write (for turnaround).
+    last_was_write: bool,
+}
+
+impl RankTiming {
+    pub fn new(bankgroups: usize) -> Self {
+        Self {
+            act_times: [0; 4],
+            act_idx: 0,
+            last_act_any: u64::MAX, // MAX = never
+            last_act_bg: vec![u64::MAX; bankgroups],
+            last_col_any: u64::MAX,
+            last_col_bg: vec![u64::MAX; bankgroups],
+            bus_free: 0,
+            last_was_write: false,
+        }
+    }
+
+    /// Earliest cycle an ACT to `bg` may issue under rank constraints.
+    pub fn act_ready(&self, cfg: &Ddr5Config, bg: usize) -> u64 {
+        let mut t = 0u64;
+        // tFAW: fifth ACT waits for the oldest of the last four + tFAW
+        let oldest = self.act_times[self.act_idx];
+        if oldest > 0 || self.act_times.iter().all(|&x| x > 0) {
+            t = t.max(oldest + cfg.t_faw);
+        }
+        if self.last_act_any != u64::MAX {
+            t = t.max(self.last_act_any + cfg.t_rrd_s);
+        }
+        if self.last_act_bg[bg] != u64::MAX {
+            t = t.max(self.last_act_bg[bg] + cfg.t_rrd_l);
+        }
+        t
+    }
+
+    pub fn record_act(&mut self, bg: usize, cycle: u64) {
+        self.act_times[self.act_idx] = cycle;
+        self.act_idx = (self.act_idx + 1) % 4;
+        self.last_act_any = cycle;
+        self.last_act_bg[bg] = cycle;
+    }
+
+    /// Earliest cycle a RD/WR to `bg` may issue under tCCD + bus turnaround.
+    /// NB: `bus_free` (when the previous burst's *data* finishes) is not a
+    /// blocker — column commands pipeline under CL/CWL; back-to-back bursts
+    /// are seamless because tCCD_S == BL/2.
+    pub fn col_ready(&self, cfg: &Ddr5Config, bg: usize, is_write: bool) -> u64 {
+        let mut t = 0u64;
+        if self.last_col_any != u64::MAX {
+            t = t.max(self.last_col_any + cfg.t_ccd_s);
+        }
+        if self.last_col_bg[bg] != u64::MAX {
+            t = t.max(self.last_col_bg[bg] + cfg.t_ccd_l);
+        }
+        // read->write / write->read turnaround (simplified: tWTR on W->R)
+        if self.last_was_write && !is_write && self.last_col_any != u64::MAX {
+            t = t.max(self.last_col_any + cfg.cwl + cfg.burst_len as u64 / 2 + cfg.t_wtr_l);
+        }
+        t
+    }
+
+    /// Lower bound on the issue cycle of any COLUMN command under the
+    /// rank-wide tCCD_S constraint.
+    #[inline]
+    pub fn col_floor(&self, cfg: &Ddr5Config) -> u64 {
+        if self.last_col_any == u64::MAX {
+            0
+        } else {
+            self.last_col_any + cfg.t_ccd_s
+        }
+    }
+
+    /// Lower bound on the issue cycle of ANY command (to any bank group)
+    /// under rank-level constraints alone — used by the scheduler's scan
+    /// suppression to avoid rescanning on every enqueue.
+    pub fn issue_floor(&self, cfg: &Ddr5Config) -> u64 {
+        let col = if self.last_col_any == u64::MAX {
+            0
+        } else {
+            self.last_col_any + cfg.t_ccd_s
+        };
+        let mut act = if self.last_act_any == u64::MAX {
+            0
+        } else {
+            self.last_act_any + cfg.t_rrd_s
+        };
+        let oldest = self.act_times[self.act_idx];
+        if self.act_times.iter().all(|&x| x > 0) {
+            act = act.max(oldest + cfg.t_faw);
+        }
+        col.min(act)
+    }
+
+    pub fn record_col(&mut self, cfg: &Ddr5Config, bg: usize, cycle: u64, is_write: bool) {
+        self.last_col_any = cycle;
+        self.last_col_bg[bg] = cycle;
+        self.last_was_write = is_write;
+        // data occupies the bus for BL/2 cycles after CL/CWL
+        let lat = if is_write { cfg.cwl } else { cfg.cl };
+        self.bus_free = cycle + lat + cfg.burst_len as u64 / 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configs::ddr5::DDR5_4800_PAPER;
+
+    #[test]
+    fn faw_limits_four_acts() {
+        let cfg = &DDR5_4800_PAPER;
+        let mut rt = RankTiming::new(cfg.bankgroups);
+        // Issue 4 ACTs at the min spacing
+        let mut cycle = 10u64;
+        for i in 0..4 {
+            let ready = rt.act_ready(cfg, i % cfg.bankgroups);
+            cycle = cycle.max(ready);
+            rt.record_act(i % cfg.bankgroups, cycle);
+            cycle += cfg.t_rrd_s;
+        }
+        // 5th ACT must wait for first + tFAW
+        let ready5 = rt.act_ready(cfg, 4 % cfg.bankgroups);
+        assert!(ready5 >= 10 + cfg.t_faw, "ready5={ready5}");
+    }
+
+    #[test]
+    fn same_bankgroup_acts_use_long_rrd() {
+        let cfg = &DDR5_4800_PAPER;
+        let mut rt = RankTiming::new(cfg.bankgroups);
+        rt.record_act(2, 100);
+        assert_eq!(rt.act_ready(cfg, 2).max(100), 100 + cfg.t_rrd_l);
+        assert_eq!(rt.act_ready(cfg, 3).max(100), 100 + cfg.t_rrd_s);
+    }
+
+    #[test]
+    fn column_bus_occupancy_serializes_bursts() {
+        let cfg = &DDR5_4800_PAPER;
+        let mut rt = RankTiming::new(cfg.bankgroups);
+        rt.record_col(cfg, 0, 100, false);
+        // next read on another bank group waits at least tCCD_S
+        let r = rt.col_ready(cfg, 1, false);
+        assert!(r >= 100 + cfg.t_ccd_s);
+        // and the bus itself is busy until CL + BL/2
+        assert!(rt.bus_free == 100 + cfg.cl + cfg.burst_len as u64 / 2);
+    }
+
+    #[test]
+    fn write_to_read_turnaround() {
+        let cfg = &DDR5_4800_PAPER;
+        let mut rt = RankTiming::new(cfg.bankgroups);
+        rt.record_col(cfg, 0, 100, true);
+        let r = rt.col_ready(cfg, 0, false);
+        assert!(r >= 100 + cfg.cwl + cfg.burst_len as u64 / 2 + cfg.t_wtr_l);
+    }
+}

@@ -1,0 +1,10 @@
+//! DDR5 memory-system simulator (DRAMSim3 substitute): cycle-level bank /
+//! bank-group / rank timing, FR-FCFS scheduling, address interleaving, and
+//! an IDD-based energy model. Configured as the paper's testbed: 4 channels
+//! of DDR5-4800 with 10 ×4 devices each (`configs::ddr5::DDR5_4800_PAPER`).
+pub mod addrmap;
+pub mod bank;
+pub mod sim;
+
+pub use addrmap::{AddrMap, Address};
+pub use sim::{Completion, EnergyBreakdown, MemorySystem, Request, SimStats};

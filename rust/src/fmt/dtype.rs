@@ -1,0 +1,317 @@
+//! Data-type descriptors for everything the memory controller stores.
+//!
+//! The controller is *semantics-aware but value-agnostic*: it needs to know
+//! the container width (how many bit-planes a block has) and the field
+//! split (sign / exponent / mantissa — which planes are exponent planes for
+//! the delta transform), nothing else.
+
+use super::minifloat::{MiniFloat, BF16, FP12, FP16, FP4, FP6, FP8_E4M3, FP8_E5M2};
+
+/// Every storage data type used by the paper's sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    Bf16,
+    Fp16,
+    Fp12,
+    Fp8E4M3,
+    Fp8E5M2,
+    Fp6,
+    Fp4,
+    Int4,
+    Int2,
+}
+
+impl Dtype {
+    /// Container width in bits (= number of bit-planes).
+    pub const fn bits(self) -> u32 {
+        match self {
+            Dtype::Bf16 | Dtype::Fp16 => 16,
+            Dtype::Fp12 => 12,
+            Dtype::Fp8E4M3 | Dtype::Fp8E5M2 => 8,
+            Dtype::Fp6 => 6,
+            Dtype::Fp4 | Dtype::Int4 => 4,
+            Dtype::Int2 => 2,
+        }
+    }
+
+    /// The minifloat descriptor, if this is a float format.
+    pub const fn float(self) -> Option<MiniFloat> {
+        match self {
+            Dtype::Bf16 => Some(BF16),
+            Dtype::Fp16 => Some(FP16),
+            Dtype::Fp12 => Some(FP12),
+            Dtype::Fp8E4M3 => Some(FP8_E4M3),
+            Dtype::Fp8E5M2 => Some(FP8_E5M2),
+            Dtype::Fp6 => Some(FP6),
+            Dtype::Fp4 => Some(FP4),
+            Dtype::Int4 | Dtype::Int2 => None,
+        }
+    }
+
+    /// Bit index range `[lo, hi)` of the exponent field, counting from the
+    /// LSB (plane 0). E.g. BF16: mantissa planes 0..7, exponent 7..15,
+    /// sign 15.
+    pub const fn exponent_planes(self) -> (u32, u32) {
+        match self {
+            Dtype::Bf16 => (7, 15),
+            Dtype::Fp16 => (10, 15),
+            Dtype::Fp12 => (6, 11),
+            Dtype::Fp8E4M3 => (3, 7),
+            Dtype::Fp8E5M2 => (2, 7),
+            Dtype::Fp6 => (2, 5),
+            Dtype::Fp4 => (1, 3),
+            Dtype::Int4 | Dtype::Int2 => (0, 0),
+        }
+    }
+
+    pub const fn is_float(self) -> bool {
+        self.float().is_some()
+    }
+
+    /// Parse from the names used in configs and the CLI.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        Some(match s {
+            "bf16" => Dtype::Bf16,
+            "fp16" | "f16" => Dtype::Fp16,
+            "fp12" => Dtype::Fp12,
+            "fp8" | "fp8_e4m3" | "e4m3" => Dtype::Fp8E4M3,
+            "fp8_e5m2" | "e5m2" => Dtype::Fp8E5M2,
+            "fp6" => Dtype::Fp6,
+            "fp4" | "e2m1" => Dtype::Fp4,
+            "int4" | "i4" => Dtype::Int4,
+            "int2" | "i2" => Dtype::Int2,
+            _ => return None,
+        })
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Dtype::Bf16 => "bf16",
+            Dtype::Fp16 => "fp16",
+            Dtype::Fp12 => "fp12",
+            Dtype::Fp8E4M3 => "fp8",
+            Dtype::Fp8E5M2 => "fp8_e5m2",
+            Dtype::Fp6 => "fp6",
+            Dtype::Fp4 => "fp4",
+            Dtype::Int4 => "int4",
+            Dtype::Int2 => "int2",
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A tensor of fixed-width codes. Codes are stored one per `u16` slot
+/// (uncompressed working representation; the *packed* in-memory layouts are
+/// produced by `bitplane::layout`). Keeping codes unpacked in u16 makes
+/// the transform paths simple and fast; the memory-footprint accounting
+/// always uses `dtype.bits()`, never the working representation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodeTensor {
+    pub dtype: Dtype,
+    pub codes: Vec<u16>,
+    /// Logical shape (row-major); product == codes.len().
+    pub shape: Vec<usize>,
+}
+
+impl CodeTensor {
+    pub fn new(dtype: Dtype, codes: Vec<u16>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), codes.len());
+        Self { dtype, codes, shape }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Logical in-memory size in bytes at this dtype's true width.
+    pub fn logical_bytes(&self) -> usize {
+        (self.codes.len() * self.dtype.bits() as usize).div_ceil(8)
+    }
+
+    /// Encode a float slice into a CodeTensor (float formats only).
+    pub fn encode_f32(dtype: Dtype, xs: &[f32], shape: Vec<usize>) -> Self {
+        let mf = dtype.float().expect("encode_f32 requires a float dtype");
+        let codes = xs.iter().map(|&x| mf.encode(x) as u16).collect();
+        Self::new(dtype, codes, shape)
+    }
+
+    /// Decode back to f32 (float formats only).
+    pub fn decode_f32(&self) -> Vec<f32> {
+        let mf = self.dtype.float().expect("decode_f32 requires a float dtype");
+        self.codes.iter().map(|&c| mf.decode(c as u32)).collect()
+    }
+
+    /// Pack codes into a contiguous little-endian bitstream at the true
+    /// width — the *traditional byte/value-major layout* ("T" in the
+    /// paper's Figs 10/11).
+    pub fn pack_value_major(&self) -> Vec<u8> {
+        let w = self.dtype.bits();
+        let mut bw = crate::util::bits::BitWriter::new();
+        for &c in &self.codes {
+            bw.put(c as u64, w);
+        }
+        bw.finish()
+    }
+
+    /// Inverse of [`pack_value_major`].
+    pub fn unpack_value_major(dtype: Dtype, data: &[u8], n: usize, shape: Vec<usize>) -> Self {
+        let w = dtype.bits();
+        let mut br = crate::util::bits::BitReader::new(data);
+        let codes = (0..n)
+            .map(|_| br.get(w).expect("short value-major stream") as u16)
+            .collect();
+        Self::new(dtype, codes, shape)
+    }
+}
+
+/// Truncate a float code to its top `keep` bit-planes (sign+exponent+high
+/// mantissa), zero-filling the dropped low planes. This is exactly what a
+/// partial-plane fetch returns to the compute fabric: e.g. BF16 read at
+/// `keep=8` yields sign + 7 exponent bits, i.e. "FP8-from-BF16".
+#[inline]
+pub fn truncate_to_planes(code: u16, dtype: Dtype, keep: u32) -> u16 {
+    let w = dtype.bits();
+    debug_assert!(keep <= w);
+    if keep == 0 {
+        return 0;
+    }
+    let drop = w - keep;
+    (code >> drop) << drop
+}
+
+/// Effective bits fetched for a dtype at a quantization level: the paper's
+/// proportional-bandwidth property. Full precision = dtype.bits().
+pub fn effective_bits(dtype: Dtype, level: Dtype) -> u32 {
+    dtype.bits().min(level.bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn bits_and_planes_consistent() {
+        for d in [
+            Dtype::Bf16,
+            Dtype::Fp16,
+            Dtype::Fp12,
+            Dtype::Fp8E4M3,
+            Dtype::Fp8E5M2,
+            Dtype::Fp6,
+            Dtype::Fp4,
+        ] {
+            let (lo, hi) = d.exponent_planes();
+            let mf = d.float().unwrap();
+            assert_eq!(hi - lo, mf.exp_bits, "{d:?} exponent width");
+            assert_eq!(lo, mf.man_bits, "{d:?} mantissa width below exponent");
+            assert_eq!(hi, d.bits() - 1, "{d:?} sign above exponent");
+        }
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for d in [
+            Dtype::Bf16,
+            Dtype::Fp16,
+            Dtype::Fp12,
+            Dtype::Fp8E4M3,
+            Dtype::Fp6,
+            Dtype::Fp4,
+            Dtype::Int4,
+            Dtype::Int2,
+        ] {
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dtype::parse("nope"), None);
+    }
+
+    #[test]
+    fn value_major_pack_roundtrip() {
+        check("pack_value_major_roundtrip", 200, |g| {
+            let dts = [
+                Dtype::Bf16,
+                Dtype::Fp12,
+                Dtype::Fp8E4M3,
+                Dtype::Fp6,
+                Dtype::Fp4,
+                Dtype::Int2,
+            ];
+            let d = dts[g.rng.index(dts.len())];
+            let n = g.usize_in(0, 300);
+            let mask = ((1u32 << d.bits()) - 1) as u16;
+            let codes: Vec<u16> = (0..n).map(|_| g.rng.next_u64() as u16 & mask).collect();
+            let t = CodeTensor::new(d, codes.clone(), vec![n]);
+            let packed = t.pack_value_major();
+            if packed.len() != (n * d.bits() as usize).div_ceil(8) {
+                return Err(format!("packed len {} for n={n} d={d:?}", packed.len()));
+            }
+            let t2 = CodeTensor::unpack_value_major(d, &packed, n, vec![n]);
+            if t2.codes != codes {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncate_keeps_top_planes() {
+        // BF16 1.0 = 0x3F80; keeping 9 planes (sign+exp) preserves it exactly
+        let one = 0x3F80u16;
+        assert_eq!(truncate_to_planes(one, Dtype::Bf16, 9), one);
+        // dropping all mantissa from 1.5 (0x3FC0) at keep=9 loses the .5
+        let x = 0x3FC0u16;
+        let t = truncate_to_planes(x, Dtype::Bf16, 9);
+        assert_eq!(t, 0x3F80);
+        assert_eq!(truncate_to_planes(x, Dtype::Bf16, 16), x);
+        assert_eq!(truncate_to_planes(x, Dtype::Bf16, 0), 0);
+    }
+
+    #[test]
+    fn truncation_error_bounded_property() {
+        check("truncate_error_bound", 200, |g| {
+            let x = (g.rng.normal() * 2.0) as f32;
+            let mf = super::super::minifloat::BF16;
+            let code = mf.encode(x) as u16;
+            let full = mf.decode(code as u32);
+            for keep in 9..=16u32 {
+                let t = truncate_to_planes(code, Dtype::Bf16, keep);
+                let approx = mf.decode(t as u32);
+                if !full.is_finite() {
+                    continue;
+                }
+                // truncation only shrinks magnitude
+                if approx.abs() > full.abs() + f32::EPSILON {
+                    return Err(format!("keep={keep}: |{approx}| > |{full}|"));
+                }
+                // relative error < 2^-(mantissa bits kept)
+                let man_kept = keep as i32 - 9; // bits of mantissa kept
+                if full != 0.0 && man_kept >= 0 {
+                    let rel = ((full - approx) / full).abs();
+                    let bound = 2f32.powi(-man_kept);
+                    if rel > bound {
+                        return Err(format!("keep={keep}: rel={rel} > {bound}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn effective_bits_min() {
+        assert_eq!(effective_bits(Dtype::Bf16, Dtype::Fp8E4M3), 8);
+        assert_eq!(effective_bits(Dtype::Fp8E4M3, Dtype::Bf16), 8);
+        assert_eq!(effective_bits(Dtype::Bf16, Dtype::Bf16), 16);
+        assert_eq!(effective_bits(Dtype::Int4, Dtype::Int2), 2);
+    }
+}

@@ -1,0 +1,126 @@
+//! Integer (INT4/INT2) group quantization — the GPTQ-style lossy stage the
+//! paper composes with ("Total Savings" column of Table III).
+//!
+//! We implement symmetric per-group round-to-nearest quantization with a
+//! BF16 scale per group (group size 128, GPTQ's default). The lossless
+//! pipeline then operates on the *integer codes* + scales, exactly like a
+//! GPTQ checkpoint laid out in memory.
+
+use crate::fmt::dtype::{CodeTensor, Dtype};
+use crate::fmt::minifloat::BF16;
+
+/// Result of group quantization: packed signed codes + per-group scales.
+#[derive(Debug, Clone)]
+pub struct GroupQuant {
+    pub tensor: CodeTensor,
+    /// BF16 codes of per-group scales (amax / qmax).
+    pub scales: Vec<u16>,
+    pub group_size: usize,
+}
+
+/// Quantize `xs` to `dtype` (Int4 or Int2), symmetric per-group.
+pub fn quantize_int(xs: &[f32], dtype: Dtype, group_size: usize, shape: Vec<usize>) -> GroupQuant {
+    let bits = dtype.bits();
+    assert!(matches!(dtype, Dtype::Int4 | Dtype::Int2), "int dtypes only");
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32; // 7 for int4, 1 for int2
+    let mut codes = Vec::with_capacity(xs.len());
+    let mut scales = Vec::with_capacity(xs.len().div_ceil(group_size));
+    for group in xs.chunks(group_size) {
+        let amax = group.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / qmax };
+        // store scale as bf16 (what real checkpoints do)
+        let scode = BF16.encode(scale) as u16;
+        let scale = BF16.decode(scode as u32);
+        scales.push(scode);
+        for &x in group {
+            let q = (x / scale).round().clamp(-qmax - 1.0, qmax) as i32;
+            // two's complement in `bits` bits
+            codes.push((q & ((1 << bits) - 1)) as u16);
+        }
+    }
+    GroupQuant {
+        tensor: CodeTensor::new(dtype, codes, shape),
+        scales,
+        group_size,
+    }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize_int(q: &GroupQuant) -> Vec<f32> {
+    let bits = q.tensor.dtype.bits();
+    let sign_bit = 1u16 << (bits - 1);
+    let ext = !0u16 << bits;
+    q.tensor
+        .codes
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            let raw = if c & sign_bit != 0 { (c | ext) as i16 } else { c as i16 };
+            let scale = BF16.decode(q.scales[i / q.group_size] as u32);
+            raw as f32 * scale
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn int4_roundtrip_error_bounded() {
+        check("int4_quant_error", 150, |g| {
+            let n = g.usize_in(1, 512);
+            let xs: Vec<f32> = (0..n).map(|_| (g.rng.normal() * 0.1) as f32).collect();
+            let q = quantize_int(&xs, Dtype::Int4, 128, vec![n]);
+            let back = dequantize_int(&q);
+            for (i, (&x, &y)) in xs.iter().zip(&back).enumerate() {
+                let group = &xs[(i / 128) * 128..((i / 128) * 128 + 128).min(n)];
+                let amax = group.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                let step = amax / 7.0 + 1e-12;
+                // RTN error <= step/2 (+ bf16 scale rounding slack)
+                if (x - y).abs() > step * 0.51 + amax * 0.01 {
+                    return Err(format!("i={i} x={x} y={y} step={step}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int2_codes_in_range() {
+        check("int2_codes", 100, |g| {
+            let xs = g.f32s(256);
+            if xs.is_empty() {
+                return Ok(());
+            }
+            let q = quantize_int(&xs, Dtype::Int2, 64, vec![xs.len()]);
+            for &c in &q.tensor.codes {
+                if c > 3 {
+                    return Err(format!("int2 code {c} out of range"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zeros_quantize_to_zero() {
+        let xs = vec![0.0f32; 64];
+        let q = quantize_int(&xs, Dtype::Int4, 32, vec![64]);
+        assert!(q.tensor.codes.iter().all(|&c| c == 0));
+        assert!(dequantize_int(&q).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn negative_values_use_twos_complement() {
+        let xs = vec![-0.7f32, 0.7];
+        let q = quantize_int(&xs, Dtype::Int4, 2, vec![2]);
+        // -0.7/(0.7/7) = -7 -> 0b1001 = 9; +7 -> 7
+        assert_eq!(q.tensor.codes[0], 9);
+        assert_eq!(q.tensor.codes[1], 7);
+        let back = dequantize_int(&q);
+        assert!((back[0] + 0.7).abs() < 0.02, "{back:?}");
+        assert!((back[1] - 0.7).abs() < 0.02, "{back:?}");
+    }
+}

@@ -1,0 +1,314 @@
+//! Generic minifloat encode/decode.
+//!
+//! One parametric implementation covers every floating-point container the
+//! paper sweeps (BF16, FP16, FP12, FP8-E4M3, FP8-E5M2, FP6, FP4): a format
+//! is `1 + E + M` bits with IEEE-style bias `2^(E-1) - 1`, subnormals, and
+//! round-to-nearest-even. Out-of-range values saturate to the largest
+//! finite magnitude (the OCP FP8 convention, which the paper's dynamic
+//! quantization path assumes — an Inf produced by down-quantization would
+//! poison attention scores).
+
+/// A minifloat format descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MiniFloat {
+    /// Exponent field width in bits (>= 1).
+    pub exp_bits: u32,
+    /// Mantissa (fraction) field width in bits (>= 0).
+    pub man_bits: u32,
+}
+
+impl MiniFloat {
+    pub const fn new(exp_bits: u32, man_bits: u32) -> Self {
+        Self { exp_bits, man_bits }
+    }
+
+    /// Total container width including the sign bit.
+    pub const fn bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Maximum finite value representable (all-ones exponent is reserved
+    /// for Inf/NaN when exp_bits > 1; for E4M3 we follow OCP and use the
+    /// all-ones exponent for finite values except mantissa all-ones = NaN.
+    /// For simplicity and losslessness of the *pipeline* we use the IEEE
+    /// convention uniformly: max exponent = 2^E - 2).
+    pub fn max_finite(&self) -> f64 {
+        let max_exp = (1i32 << self.exp_bits) - 2 - self.bias();
+        let man_max = 1.0 + ((1u64 << self.man_bits) - 1) as f64 / (1u64 << self.man_bits) as f64;
+        man_max * 2f64.powi(max_exp)
+    }
+
+    /// Encode an f32 into the low `bits()` bits of a u32, RNE rounding,
+    /// saturating overflow, preserving signed zero. NaN encodes to the
+    /// canonical quiet NaN pattern (all-ones exponent, MSB mantissa).
+    pub fn encode(&self, x: f32) -> u32 {
+        let e_bits = self.exp_bits;
+        let m_bits = self.man_bits;
+        let sign = (x.is_sign_negative()) as u32;
+        let abs = x.abs() as f64;
+
+        if x.is_nan() {
+            let exp_all = (1u32 << e_bits) - 1;
+            let man_msb = if m_bits > 0 { 1u32 << (m_bits - 1) } else { 0 };
+            return (sign << (e_bits + m_bits)) | (exp_all << m_bits) | man_msb;
+        }
+        if x.is_infinite() || abs > self.max_finite() {
+            // saturate to max finite
+            let exp = (1u32 << e_bits) - 2;
+            let man = (1u32 << m_bits) - 1;
+            // exception: if the format has no finite headroom (e.g. E1),
+            // this still yields the largest finite code.
+            if x.is_infinite() {
+                // represent as Inf if the format can, else saturate
+                let exp_all = (1u32 << e_bits) - 1;
+                return (sign << (e_bits + m_bits)) | (exp_all << m_bits);
+            }
+            return (sign << (e_bits + m_bits)) | (exp << m_bits) | man;
+        }
+        if abs == 0.0 {
+            return sign << (e_bits + m_bits);
+        }
+
+        let bias = self.bias();
+        // frexp-style decomposition: abs = f * 2^e with f in [1, 2)
+        let e_unb = abs.log2().floor() as i32;
+        // guard against boundary rounding of log2
+        let mut e_unb = e_unb;
+        if abs / 2f64.powi(e_unb) >= 2.0 {
+            e_unb += 1;
+        } else if abs / 2f64.powi(e_unb) < 1.0 {
+            e_unb -= 1;
+        }
+
+        let min_norm_exp = 1 - bias;
+        if e_unb >= min_norm_exp {
+            // normal number
+            let frac = abs / 2f64.powi(e_unb) - 1.0; // [0,1)
+            let scaled = frac * (1u64 << m_bits) as f64;
+            let mut man = rne(scaled);
+            let mut e_field = e_unb + bias;
+            if man == (1u64 << m_bits) {
+                man = 0;
+                e_field += 1;
+            }
+            if e_field >= (1 << e_bits) - 1 {
+                // rounded up past max finite: saturate
+                let exp = (1u32 << e_bits) - 2;
+                let manx = (1u32 << m_bits) - 1;
+                return (sign << (e_bits + m_bits)) | (exp << m_bits) | manx;
+            }
+            (sign << (e_bits + m_bits)) | ((e_field as u32) << m_bits) | man as u32
+        } else {
+            // subnormal: value = man / 2^m_bits * 2^min_norm_exp
+            let scaled = abs / 2f64.powi(min_norm_exp) * (1u64 << m_bits) as f64;
+            let man = rne(scaled);
+            if man >= (1u64 << m_bits) {
+                // rounded up to the smallest normal
+                return (sign << (e_bits + m_bits)) | (1u32 << m_bits);
+            }
+            (sign << (e_bits + m_bits)) | man as u32
+        }
+    }
+
+    /// Decode the low `bits()` bits of `code` back to f32.
+    pub fn decode(&self, code: u32) -> f32 {
+        let e_bits = self.exp_bits;
+        let m_bits = self.man_bits;
+        let code = code & ((1u64 << self.bits()) - 1) as u32;
+        let sign = if (code >> (e_bits + m_bits)) & 1 == 1 { -1.0f64 } else { 1.0 };
+        let e_field = ((code >> m_bits) & ((1 << e_bits) - 1)) as i32;
+        let man = (code & ((1u32 << m_bits).wrapping_sub(1))) as u64;
+        let bias = self.bias();
+
+        if e_field == (1 << e_bits) - 1 {
+            return if man != 0 {
+                f32::NAN
+            } else if sign < 0.0 {
+                f32::NEG_INFINITY
+            } else {
+                f32::INFINITY
+            };
+        }
+        let v = if e_field == 0 {
+            // subnormal
+            (man as f64 / (1u64 << m_bits) as f64) * 2f64.powi(1 - bias)
+        } else {
+            (1.0 + man as f64 / (1u64 << m_bits) as f64) * 2f64.powi(e_field - bias)
+        };
+        (sign * v) as f32
+    }
+}
+
+/// Round-to-nearest-even for non-negative f64.
+fn rne(x: f64) -> u64 {
+    let floor = x.floor();
+    let frac = x - floor;
+    let f = floor as u64;
+    if frac > 0.5 {
+        f + 1
+    } else if frac < 0.5 {
+        f
+    } else if f % 2 == 0 {
+        f
+    } else {
+        f + 1
+    }
+}
+
+/// BF16 (1,8,7).
+pub const BF16: MiniFloat = MiniFloat::new(8, 7);
+/// IEEE FP16 (1,5,10).
+pub const FP16: MiniFloat = MiniFloat::new(5, 10);
+/// FP12 (1,5,6) — the paper's intermediate dynamic-quantization step.
+pub const FP12: MiniFloat = MiniFloat::new(5, 6);
+/// OCP FP8 E4M3 (1,4,3).
+pub const FP8_E4M3: MiniFloat = MiniFloat::new(4, 3);
+/// OCP FP8 E5M2 (1,5,2).
+pub const FP8_E5M2: MiniFloat = MiniFloat::new(5, 2);
+/// FP6 E3M2 (1,3,2).
+pub const FP6: MiniFloat = MiniFloat::new(3, 2);
+/// FP4 E2M1 (1,2,1).
+pub const FP4: MiniFloat = MiniFloat::new(2, 1);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn bf16_matches_truncation_semantics() {
+        // BF16 encode must equal round-to-nearest of the top 16 bits of f32.
+        let mut r = Xoshiro256::new(1);
+        for _ in 0..10_000 {
+            let x = f32::from_bits(r.next_u32());
+            if !x.is_finite() {
+                continue;
+            }
+            let code = BF16.encode(x);
+            let back = BF16.decode(code);
+            // Reference: f32 -> bf16 via the standard add-rounding-bias
+            // trick (round-to-nearest-even on bit 16).
+            let ref_back = {
+                let b = x.to_bits();
+                let rounding_bias = 0x7FFFu32 + ((b >> 16) & 1);
+                let rb = b.wrapping_add(rounding_bias) >> 16;
+                f32::from_bits(rb << 16)
+            };
+            if ref_back.is_finite() {
+                assert_eq!(
+                    back.to_bits(),
+                    ref_back.to_bits(),
+                    "x={x:?} code={code:#06x} back={back:?} ref={ref_back:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_known_values() {
+        assert_eq!(FP16.encode(1.0), 0x3C00);
+        assert_eq!(FP16.encode(-2.0), 0xC000);
+        assert_eq!(FP16.encode(0.5), 0x3800);
+        assert_eq!(FP16.decode(0x3C00), 1.0);
+        assert_eq!(FP16.decode(0x7BFF), 65504.0); // max half
+        assert_eq!(FP16.encode(65504.0), 0x7BFF);
+        // overflow saturates
+        assert_eq!(FP16.encode(1e6), 0x7BFF);
+        // subnormal: smallest positive half = 2^-24
+        assert_eq!(FP16.decode(0x0001), 2f32.powi(-24));
+        assert_eq!(FP16.encode(2f32.powi(-24)), 0x0001);
+    }
+
+    #[test]
+    fn fp8_e4m3_range() {
+        // IEEE-convention E4M3: max finite = 1.875 * 2^7 = 240
+        assert_eq!(FP8_E4M3.max_finite(), 240.0);
+        assert_eq!(FP8_E4M3.decode(FP8_E4M3.encode(240.0)), 240.0);
+        assert_eq!(FP8_E4M3.decode(FP8_E4M3.encode(1e9)), 240.0);
+        assert_eq!(FP8_E4M3.decode(FP8_E4M3.encode(-1e9)), -240.0);
+    }
+
+    #[test]
+    fn fp4_all_codes_roundtrip() {
+        // FP4 E2M1 has 16 codes; encode(decode(c)) == c for all finite c.
+        for c in 0u32..16 {
+            let v = FP4.decode(c);
+            if v.is_finite() {
+                assert_eq!(FP4.encode(v), c, "code {c} -> {v} -> {}", FP4.encode(v));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_signed_zero() {
+        for f in [BF16, FP16, FP12, FP8_E4M3, FP8_E5M2, FP6, FP4] {
+            assert_eq!(f.decode(f.encode(0.0)), 0.0);
+            let nz = f.encode(-0.0);
+            assert_eq!(nz >> (f.bits() - 1), 1, "sign bit set for -0 in {f:?}");
+        }
+    }
+
+    #[test]
+    fn nan_roundtrips_as_nan() {
+        for f in [BF16, FP16, FP12, FP8_E4M3, FP8_E5M2, FP6, FP4] {
+            assert!(f.decode(f.encode(f32::NAN)).is_nan(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_idempotent_property() {
+        // For every format: decode(encode(x)) is a fixed point of the
+        // format (re-encoding doesn't change the code), and the error is
+        // within half a ULP of the format at x's scale.
+        check("minifloat_idempotent", 300, |g| {
+            let fmts = [BF16, FP16, FP12, FP8_E4M3, FP8_E5M2, FP6, FP4];
+            let f = fmts[g.rng.index(fmts.len())];
+            let x = (g.rng.normal() * 10f64.powi(g.rng.index(7) as i32 - 3)) as f32;
+            let c = f.encode(x);
+            let y = f.decode(c);
+            if !y.is_finite() {
+                return Ok(());
+            }
+            let c2 = f.encode(y);
+            if c2 != c {
+                return Err(format!("{f:?}: x={x} c={c:#x} y={y} c2={c2:#x}"));
+            }
+            // error bound (only when not saturated)
+            if y.abs() < f.max_finite() as f32 * 0.99 && x.abs() <= f.max_finite() as f32 {
+                let ulp = if x == 0.0 {
+                    2f64.powi(1 - f.bias() - f.man_bits as i32)
+                } else {
+                    let e = (x.abs() as f64).log2().floor() as i32;
+                    2f64.powi(e - f.man_bits as i32).max(2f64.powi(1 - f.bias() - f.man_bits as i32))
+                };
+                let err = (x as f64 - y as f64).abs();
+                if err > 0.5001 * ulp {
+                    return Err(format!("{f:?}: x={x} y={y} err={err} ulp={ulp}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_encode_property() {
+        // Encoding preserves order on positive finite values.
+        check("minifloat_monotone", 200, |g| {
+            let fmts = [BF16, FP16, FP12, FP8_E4M3, FP8_E5M2, FP6, FP4];
+            let f = fmts[g.rng.index(fmts.len())];
+            let a = (g.rng.next_f64() * 100.0) as f32;
+            let b = (g.rng.next_f64() * 100.0) as f32;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let (cl, ch) = (f.encode(lo), f.encode(hi));
+            if cl > ch {
+                return Err(format!("{f:?}: {lo}->{cl:#x} > {hi}->{ch:#x}"));
+            }
+            Ok(())
+        });
+    }
+}

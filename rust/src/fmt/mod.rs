@@ -1,0 +1,13 @@
+//! Floating-point and integer storage formats.
+//!
+//! Everything the memory controller stores is a [`dtype::CodeTensor`]: a
+//! vector of fixed-width codes plus a [`dtype::Dtype`] describing the
+//! container width and field split. [`minifloat`] provides the parametric
+//! encode/decode used for BF16/FP16/FP12/FP8/FP6/FP4; [`intquant`] the
+//! GPTQ-style group quantization for INT4/INT2.
+pub mod dtype;
+pub mod intquant;
+pub mod minifloat;
+
+pub use dtype::{effective_bits, truncate_to_planes, CodeTensor, Dtype};
+pub use minifloat::{MiniFloat, BF16, FP12, FP16, FP4, FP6, FP8_E4M3, FP8_E5M2};

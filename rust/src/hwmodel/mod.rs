@@ -1,0 +1,5 @@
+//! ASAP7-calibrated silicon cost model for the compression subsystem
+//! (Table IV substitute — see `silicon` for the component model).
+pub mod silicon;
+
+pub use silicon::{DesignPoint, SiliconModel, LANE_ACTIVITY, TABLE4_POINTS};

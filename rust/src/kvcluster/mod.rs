@@ -1,0 +1,23 @@
+//! Cross-token KV-cache clustering and de-correlation (paper §III-B).
+//!
+//! Three steps, exactly as in Fig 6:
+//!
+//! 1. **Channel-wise grouping** — within a group of `n` tokens, entries at
+//!    the same channel `j` (head × embedding dim) are laid out
+//!    contiguously: `G_j = { k_{t,j} | t = 0..n-1 }` (Eq. 3).
+//! 2. **Exponent delta transform** — per channel, a base exponent `β_j`
+//!    (the group minimum) is subtracted from every entry's exponent field
+//!    (Eq. 6). Channel-coherent exponents collapse to near-zero deltas.
+//! 3. **Bit-plane disaggregation + concatenation** — the transformed codes
+//!    are disaggregated and planes concatenated across channels (Eq. 5),
+//!    then block-compressed.
+//!
+//! Everything is exactly invertible: `β_j` values ride in the block header
+//! (one byte per channel, matching the paper's "one base exponent per
+//! channel" metadata budget).
+
+pub mod group;
+
+pub use group::{
+    cluster_ratio, decorrelate, recorrelate, ClusteredBlock, DecorrelateMode, KvGroup,
+};

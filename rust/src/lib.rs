@@ -1,0 +1,20 @@
+//! # camc — Compression-Aware Memory Controller for LLM inference
+//!
+//! Reproduction of "Reimagining Memory Access for LLM Inference:
+//! Compression-Aware Memory Controller Design" (cs.AR 2025).
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+pub mod util;
+pub mod fmt;
+pub mod compress;
+pub mod bitplane;
+pub mod kvcluster;
+pub mod configs;
+pub mod synth;
+pub mod dram;
+pub mod memctrl;
+pub mod hwmodel;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod coordinator;

@@ -1,0 +1,216 @@
+//! `camc` — CLI for the compression-aware memory controller library.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!   compress   — weight compression ratios for a model config
+//!   footprint  — Fig 1 KV-vs-weights footprint curve
+//!   simulate   — P-vs-T per-weight traffic under dynamic quantization
+//!   serve      — batched token serving on the trained tinylm
+//!   silicon    — Table IV silicon cost of the engine
+
+use camc::compress::Codec;
+use camc::configs;
+use camc::coordinator::footprint_curve;
+use camc::fmt::Dtype;
+use camc::hwmodel::SiliconModel;
+use camc::quant::mode::RouterSim;
+use camc::quant::traffic::WeightTraffic;
+use camc::report::Table;
+use camc::synth::{encode_checkpoint, sample_checkpoint};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("compress") => cmd_compress(&args[1..]),
+        Some("footprint") => cmd_footprint(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("silicon") => cmd_silicon(&args[1..]),
+        Some("-h") | Some("--help") | None => {
+            usage();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "camc — compression-aware memory controller for LLM inference\n\
+         \n\
+         USAGE: camc <subcommand> [flags]\n\
+         \n\
+         SUBCOMMANDS\n\
+           compress  [--model NAME] [--dtype D] [--codec C]  compression ratios\n\
+           footprint [--model NAME] [--batch N]              Fig 1 curve\n\
+           simulate  [--model NAME]                          P-vs-T traffic\n\
+           serve     [--requests N] [--slots N]              serve tinylm requests\n\
+           silicon   [--lanes N]                             Table IV cost model\n\
+         \n\
+         Models: {}",
+        [
+            "llama318b",
+            "llama3170b",
+            "mixtral8x7b",
+            "llamamoe35b",
+            "gemma22b",
+            "mistral7b",
+            "opt13b"
+        ]
+        .join(", ")
+    );
+}
+
+fn flag(args: &[String], name: &str, default: &str) -> String {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn model_cfg(args: &[String]) -> anyhow::Result<&'static configs::ModelConfig> {
+    let name = flag(args, "--model", "llama318b");
+    configs::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))
+}
+
+fn cmd_compress(args: &[String]) -> anyhow::Result<()> {
+    let cfg = model_cfg(args)?;
+    let dtype = Dtype::parse(&flag(args, "--dtype", "bf16"))
+        .ok_or_else(|| anyhow::anyhow!("bad dtype"))?;
+    let codec = Codec::parse(&flag(args, "--codec", "zstd"))
+        .ok_or_else(|| anyhow::anyhow!("bad codec"))?;
+    let ts = sample_checkpoint(cfg, 1 << 19, 42);
+    let t = encode_checkpoint(&ts, dtype);
+    let vm = camc::bitplane::value_major_ratio(dtype, &t.codes, codec, 4096);
+    let pm = camc::bitplane::plane_major_ratio(dtype, &t.codes, codec, 4096);
+    let mut tab = Table::new(
+        &format!("{} weights @ {dtype} / {codec} (4 KB blocks)", cfg.name),
+        &["layout", "ratio", "savings"],
+    );
+    tab.row(&[
+        "value-major (naive)".into(),
+        format!("{vm:.3}"),
+        format!("{:.1}%", (1.0 - 1.0 / vm) * 100.0),
+    ]);
+    tab.row(&[
+        "bit-plane (proposed)".into(),
+        format!("{pm:.3}"),
+        format!("{:.1}%", (1.0 - 1.0 / pm) * 100.0),
+    ]);
+    tab.print();
+    Ok(())
+}
+
+fn cmd_footprint(args: &[String]) -> anyhow::Result<()> {
+    let cfg = model_cfg(args)?;
+    let batch: u64 = flag(args, "--batch", "32").parse()?;
+    let pts = footprint_curve(cfg, 16, batch, &[128, 512, 2048, 8192, 32768, 131072]);
+    let mut tab = Table::new(
+        &format!("{} footprint vs sequence length (batch {batch})", cfg.name),
+        &["seq", "weights", "kv", "kv %"],
+    );
+    for p in pts {
+        tab.row(&[
+            p.seq_len.to_string(),
+            camc::util::humanfmt::bytes(p.weight_bytes),
+            camc::util::humanfmt::bytes(p.kv_bytes),
+            format!("{:.1}%", p.kv_fraction() * 100.0),
+        ]);
+    }
+    tab.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+    let cfg = model_cfg(args)?;
+    let mut tab = Table::new(
+        &format!("{} P-vs-T per-weight traffic under dynamic quantization", cfg.name),
+        &["base", "P bits/w", "T bits/w", "savings"],
+    );
+    for base in [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Int4] {
+        let ts = sample_checkpoint(cfg, 1 << 18, 42);
+        let t = encode_checkpoint(&ts, base);
+        let tr = WeightTraffic::measure(base, &t.codes, Codec::Zstd);
+        let r = RouterSim::paper_default(cfg.name);
+        let d = r.simulate(base, 1500, 64, 7);
+        let (p, tt) = tr.avg_bits(&d);
+        tab.row(&[
+            base.to_string(),
+            format!("{p:.2}"),
+            format!("{tt:.2}"),
+            format!("{:.1}%", (1.0 - p / tt) * 100.0),
+        ]);
+    }
+    tab.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let n: usize = flag(args, "--requests", "4").parse()?;
+    let slots: usize = flag(args, "--slots", "2").parse()?;
+    let lm = camc::runtime::TinyLm::load("artifacts")?;
+    let toks =
+        camc::runtime::read_u16_stream(std::path::Path::new("artifacts/corpus_book.bin"))?;
+    let mut metrics = camc::coordinator::ServeMetrics::default();
+    let reqs: Vec<camc::coordinator::Request> = (0..n)
+        .map(|i| camc::coordinator::Request {
+            id: i as u64,
+            prompt: toks[i * 64..i * 64 + 48].to_vec(),
+            max_new_tokens: 32,
+            policy: camc::quant::policy::KvPolicy::Full,
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let resp = camc::coordinator::serve(&lm, reqs, slots, &mut metrics)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut tab = Table::new("serve results", &["req", "tokens", "mean NLL", "kv ratio", "ms"]);
+    for r in &resp {
+        tab.row(&[
+            r.id.to_string(),
+            r.tokens.len().to_string(),
+            format!("{:.3}", r.mean_nll),
+            format!("{:.2}", r.kv_ratio),
+            format!("{:.0}", r.wall_ms),
+        ]);
+    }
+    tab.print();
+    println!(
+        "throughput: {:.1} tok/s  p50 {:.0} ms  p99 {:.0} ms",
+        metrics.tokens_per_sec(wall),
+        metrics.p50_ms(),
+        metrics.p99_ms()
+    );
+    Ok(())
+}
+
+fn cmd_silicon(args: &[String]) -> anyhow::Result<()> {
+    let lanes: usize = flag(args, "--lanes", "32").parse()?;
+    let m = SiliconModel::calibrated();
+    let mut tab = Table::new(
+        &format!("silicon cost @ 2 GHz, {lanes} lanes (ASAP7-calibrated)"),
+        &["engine", "block", "SL mm2", "SL mW", "tot mm2", "tot mW", "Gbps"],
+    );
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        for bits in [16384u64, 32768, 65536] {
+            tab.row(&[
+                codec.to_string(),
+                bits.to_string(),
+                format!("{:.5}", m.sl_area_mm2(codec, bits)),
+                format!("{:.1}", m.sl_power_mw(codec, bits)),
+                format!("{:.3}", m.total_area_mm2(codec, bits, lanes)),
+                format!("{:.1}", m.total_power_mw(codec, bits, lanes)),
+                format!("{:.0}", m.total_gbps(lanes)),
+            ]);
+        }
+    }
+    tab.print();
+    Ok(())
+}

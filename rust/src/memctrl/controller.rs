@@ -1,0 +1,586 @@
+//! The compression-aware memory controller (paper Fig 4) — functional
+//! model + timing/energy accounting.
+//!
+//! The controller sits between the compute fabric (which sees plain
+//! value-major code tensors) and DRAM (simulated by [`crate::dram`]). On
+//! writes it applies the semantic-aware pipeline (KV: channel clustering +
+//! exponent delta; both: bit-plane disaggregation + per-plane block
+//! compression) and stores self-describing frames. On reads it fetches the
+//! frame *prefix* needed for the requested precision, decompresses, and
+//! reconstitutes standard layout — the compute fabric never knows.
+
+use super::frame::{decode_header, encode_header, FrameHeader, FrameKind};
+use crate::bitplane::layout::{disaggregate, reaggregate};
+use crate::compress::Codec;
+use crate::dram::MemorySystem;
+use crate::fmt::{CodeTensor, Dtype};
+use crate::kvcluster::{decorrelate, recorrelate, DecorrelateMode};
+
+/// In-memory placement policy — the paper's P (proposed) vs T (traditional).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// Bit-plane disaggregated, compressed frames (the paper's design).
+    Proposed,
+    /// Value-major raw bytes (the straightforward baseline).
+    Traditional,
+}
+
+/// Compression/decompression engine timing model (Table IV hardware:
+/// 2 GHz, 32 lanes, 512 Gbps per lane).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineModel {
+    pub clock_ghz: f64,
+    pub lanes: usize,
+    /// Per-lane throughput in Gbps.
+    pub lane_gbps: f64,
+    /// Fixed pipeline latency per block, ns.
+    pub pipeline_ns: f64,
+}
+
+impl Default for EngineModel {
+    fn default() -> Self {
+        Self {
+            clock_ghz: 2.0,
+            lanes: 32,
+            lane_gbps: 512.0,
+            pipeline_ns: 60.0,
+        }
+    }
+}
+
+impl EngineModel {
+    /// Time to (de)compress `bytes` across the lanes, ns.
+    pub fn process_ns(&self, bytes: usize) -> f64 {
+        let gbps = self.lane_gbps * self.lanes as f64;
+        self.pipeline_ns + (bytes as f64 * 8.0) / gbps
+    }
+
+    /// Aggregate throughput, bytes/sec.
+    pub fn throughput_bps(&self) -> f64 {
+        self.lane_gbps * self.lanes as f64 * 1e9 / 8.0
+    }
+}
+
+/// Per-read accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReadStats {
+    /// Bytes the fabric logically asked for (at requested precision).
+    pub logical_bytes: u64,
+    /// Bytes actually moved from DRAM.
+    pub dram_bytes: u64,
+    /// DRAM cycles for this read (drain time).
+    pub dram_cycles: u64,
+    /// Engine decompression time, ns.
+    pub engine_ns: f64,
+    /// Number of frames touched.
+    pub frames: u64,
+}
+
+impl ReadStats {
+    /// End-to-end load latency in ns given the DRAM clock: DRAM time and
+    /// engine time overlap (the engine streams blocks as they arrive), so
+    /// the total is max(dram, engine) + one pipeline fill.
+    pub fn latency_ns(&self, t_ck: f64) -> f64 {
+        let dram_ns = self.dram_cycles as f64 * t_ck * 1e9;
+        dram_ns.max(self.engine_ns) + 60.0
+    }
+}
+
+/// A stored region (one tensor) — directory of frames.
+#[derive(Debug)]
+pub struct Region {
+    pub name: String,
+    pub kind: FrameKind,
+    pub dtype: Dtype,
+    pub layout: Layout,
+    pub codec: Codec,
+    /// Total codes stored.
+    pub n: usize,
+    /// KV channels (codes per token) for KV regions.
+    pub channels: usize,
+    pub mode: DecorrelateMode,
+    /// Frame byte offsets (within the controller's address space) and the
+    /// serialized frames.
+    frames: Vec<(u64, Vec<u8>)>,
+    /// Codes per frame.
+    pub frame_codes: usize,
+}
+
+impl Region {
+    /// Total stored bytes.
+    pub fn stored_bytes(&self) -> u64 {
+        self.frames.iter().map(|(_, f)| f.len() as u64).sum()
+    }
+
+    /// Logical bytes at full precision.
+    pub fn logical_bytes(&self) -> u64 {
+        (self.n as u64 * self.dtype.bits() as u64).div_ceil(8)
+    }
+
+    /// The paper's compression ratio for this region.
+    pub fn ratio(&self) -> f64 {
+        self.logical_bytes() as f64 / self.stored_bytes().max(1) as f64
+    }
+}
+
+/// Handle to a stored region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RegionId(pub usize);
+
+/// Default logical block: 4 KB of codes (the paper's compression block).
+pub const BLOCK_BYTES: usize = 4096;
+
+/// The controller.
+pub struct MemController {
+    pub engine: EngineModel,
+    pub layout: Layout,
+    pub codec: Codec,
+    /// KV token-group size (paper: a page of 16 tokens).
+    pub kv_group_tokens: usize,
+    pub mode: DecorrelateMode,
+    regions: Vec<Region>,
+    /// Next free DRAM byte address (bump allocator, 64 B aligned).
+    next_addr: u64,
+    /// Cumulative read accounting.
+    pub total: ReadStats,
+}
+
+impl MemController {
+    pub fn new(layout: Layout, codec: Codec) -> Self {
+        Self {
+            engine: EngineModel::default(),
+            layout,
+            codec,
+            kv_group_tokens: 16,
+            mode: DecorrelateMode::ExpDelta,
+            regions: Vec::new(),
+            next_addr: 0,
+            total: ReadStats::default(),
+        }
+    }
+
+    pub fn region(&self, id: RegionId) -> &Region {
+        &self.regions[id.0]
+    }
+
+    fn alloc(&mut self, bytes: usize) -> u64 {
+        let a = self.next_addr;
+        self.next_addr += (bytes as u64).div_ceil(64) * 64;
+        a
+    }
+
+    /// Store a weight tensor. Splits into 4 KB-logical blocks.
+    pub fn store_weights(&mut self, name: &str, t: &CodeTensor) -> RegionId {
+        let codes_per_block = BLOCK_BYTES * 8 / t.dtype.bits() as usize;
+        let mut frames = Vec::new();
+        for chunk in t.codes.chunks(codes_per_block) {
+            let frame = match self.layout {
+                Layout::Proposed => {
+                    build_frame(FrameKind::Weights, t.dtype, self.codec, chunk, 0, &[], 0)
+                }
+                Layout::Traditional => {
+                    // raw value-major bytes, no header needed beyond 12 B
+                    let tt = CodeTensor::new(t.dtype, chunk.to_vec(), vec![chunk.len()]);
+                    let mut f = encode_header(
+                        &FrameHeader {
+                            kind: FrameKind::Weights,
+                            dtype: t.dtype,
+                            codec: Codec::Store,
+                            m: chunk.len(),
+                            channels: 0,
+                            mode: 0,
+                            plane_len: vec![],
+                        },
+                        &[],
+                    );
+                    // traditional header carries no plane dir; fix length
+                    f.truncate(12);
+                    f.extend_from_slice(&tt.pack_value_major());
+                    f
+                }
+            };
+            let addr = self.alloc(frame.len());
+            frames.push((addr, frame));
+        }
+        self.regions.push(Region {
+            name: name.to_string(),
+            kind: FrameKind::Weights,
+            dtype: t.dtype,
+            layout: self.layout,
+            codec: self.codec,
+            n: t.codes.len(),
+            channels: 0,
+            mode: DecorrelateMode::None,
+            frames,
+            frame_codes: codes_per_block,
+        });
+        RegionId(self.regions.len() - 1)
+    }
+
+    /// Store a KV tensor (token-major, `tokens × channels`). Groups of
+    /// `kv_group_tokens` tokens form one frame (the paper's Fig 6 pipeline).
+    pub fn store_kv(&mut self, name: &str, dtype: Dtype, tokens: usize, channels: usize, codes: &[u16]) -> RegionId {
+        assert_eq!(codes.len(), tokens * channels);
+        let mut frames = Vec::new();
+        let gt = self.kv_group_tokens;
+        let mut t0 = 0;
+        while t0 < tokens {
+            let nt = gt.min(tokens - t0);
+            let chunk = &codes[t0 * channels..(t0 + nt) * channels];
+            let frame = match self.layout {
+                Layout::Proposed => {
+                    // channel-major + delta + planes
+                    let kv = crate::kvcluster::KvGroup::new(dtype, nt, channels, chunk.to_vec());
+                    let cm = kv.channel_major();
+                    let (tr, betas) = decorrelate(dtype, nt, channels, &cm, self.mode);
+                    build_frame(
+                        FrameKind::KvCache,
+                        dtype,
+                        self.codec,
+                        &tr,
+                        channels,
+                        &betas,
+                        mode_code(self.mode),
+                    )
+                }
+                Layout::Traditional => {
+                    let tt = CodeTensor::new(dtype, chunk.to_vec(), vec![chunk.len()]);
+                    let mut f = encode_header(
+                        &FrameHeader {
+                            kind: FrameKind::KvCache,
+                            dtype,
+                            codec: Codec::Store,
+                            m: chunk.len(),
+                            channels: 0,
+                            mode: 0,
+                            plane_len: vec![],
+                        },
+                        &[],
+                    );
+                    f.truncate(12);
+                    f.extend_from_slice(&tt.pack_value_major());
+                    f
+                }
+            };
+            let addr = self.alloc(frame.len());
+            frames.push((addr, frame));
+            t0 += nt;
+        }
+        self.regions.push(Region {
+            name: name.to_string(),
+            kind: FrameKind::KvCache,
+            dtype,
+            layout: self.layout,
+            codec: self.codec,
+            n: codes.len(),
+            channels,
+            mode: self.mode,
+            frames,
+            frame_codes: gt * channels,
+        });
+        RegionId(self.regions.len() - 1)
+    }
+
+    /// Read a whole region at an effective precision of `keep_bits`
+    /// bit-planes (== dtype.bits() for full precision). Returns the codes
+    /// (low planes zeroed when partial) and per-read stats. If `mem` is
+    /// given, the fetch is timed on the DRAM simulator.
+    pub fn load(
+        &mut self,
+        id: RegionId,
+        keep_bits: u32,
+        mut mem: Option<&mut MemorySystem>,
+    ) -> anyhow::Result<(Vec<u16>, ReadStats)> {
+        let region = &self.regions[id.0];
+        let keep = keep_bits.min(region.dtype.bits());
+        let mut out = Vec::with_capacity(region.n);
+        let mut stats = ReadStats::default();
+        for (addr, frame) in &region.frames {
+            let fetch_bytes = match region.layout {
+                Layout::Proposed => {
+                    let (h, _) = decode_header(frame)?;
+                    h.prefix_bytes(keep)
+                }
+                Layout::Traditional => frame.len(),
+            };
+            stats.frames += 1;
+            stats.dram_bytes += fetch_bytes as u64;
+            stats.engine_ns += match region.layout {
+                Layout::Proposed => self.engine.process_ns(fetch_bytes),
+                Layout::Traditional => 0.0,
+            };
+            if let Some(m) = mem.as_deref_mut() {
+                m.enqueue_range(*addr, fetch_bytes as u64, false, 0);
+            }
+            let codes = read_frame(frame, keep, region.layout)?;
+            out.extend_from_slice(&codes);
+            stats.logical_bytes += (codes.len() * keep as usize).div_ceil(8) as u64;
+        }
+        if let Some(m) = mem.as_deref_mut() {
+            stats.dram_cycles = m.drain();
+        }
+        self.total.dram_bytes += stats.dram_bytes;
+        self.total.logical_bytes += stats.logical_bytes;
+        self.total.engine_ns += stats.engine_ns;
+        self.total.frames += stats.frames;
+        Ok((out, stats))
+    }
+}
+
+/// Build a Proposed-layout frame from (possibly de-correlated) codes.
+fn mode_code(m: DecorrelateMode) -> u8 {
+    match m {
+        DecorrelateMode::None => 0,
+        DecorrelateMode::ExpDelta => 1,
+        DecorrelateMode::XorFirst => 2,
+    }
+}
+
+fn mode_from_code(c: u8) -> DecorrelateMode {
+    match c {
+        1 => DecorrelateMode::ExpDelta,
+        2 => DecorrelateMode::XorFirst,
+        _ => DecorrelateMode::None,
+    }
+}
+
+fn build_frame(
+    kind: FrameKind,
+    dtype: Dtype,
+    codec: Codec,
+    codes: &[u16],
+    channels: usize,
+    betas: &[u16],
+    mode: u8,
+) -> Vec<u8> {
+    let pb = disaggregate(dtype, codes);
+    let mut plane_len = Vec::with_capacity(pb.planes.len());
+    let mut payloads = Vec::with_capacity(pb.planes.len());
+    for p in &pb.planes {
+        let c = codec.compress(p);
+        if c.len() < p.len() {
+            plane_len.push((c.len() as u32, false));
+            payloads.push(c);
+        } else {
+            plane_len.push((p.len() as u32, true));
+            payloads.push(p.clone());
+        }
+    }
+    let h = FrameHeader {
+        kind,
+        dtype,
+        codec,
+        m: codes.len(),
+        channels,
+        mode,
+        plane_len,
+    };
+    let mut frame = encode_header(&h, betas);
+    for p in payloads {
+        frame.extend_from_slice(&p);
+    }
+    frame
+}
+
+/// Decode a frame's top `keep` planes back into value-major codes
+/// (including KV re-correlation and layout restore).
+fn read_frame(frame: &[u8], keep: u32, layout: Layout) -> anyhow::Result<Vec<u16>> {
+    match layout {
+        Layout::Traditional => {
+            // 12-byte mini header: kind, dtype, _, codec, m, channels
+            anyhow::ensure!(frame.len() >= 12, "truncated frame");
+            let dtype = match frame[1] {
+                0 => Dtype::Bf16,
+                1 => Dtype::Fp16,
+                2 => Dtype::Fp12,
+                3 => Dtype::Fp8E4M3,
+                4 => Dtype::Fp8E5M2,
+                5 => Dtype::Fp6,
+                6 => Dtype::Fp4,
+                7 => Dtype::Int4,
+                8 => Dtype::Int2,
+                c => anyhow::bail!("bad dtype {c}"),
+            };
+            let m = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+            let t = CodeTensor::unpack_value_major(dtype, &frame[12..], m, vec![m]);
+            Ok(t.codes)
+        }
+        Layout::Proposed => {
+            let (h, betas) = decode_header(frame)?;
+            let mut off = h.header_bytes();
+            let pbytes = h.m.div_ceil(8);
+            let keepn = (keep as usize).min(h.plane_len.len());
+            let mut planes = Vec::with_capacity(keepn);
+            for (i, &(len, raw)) in h.plane_len.iter().enumerate() {
+                if i >= keepn {
+                    break;
+                }
+                let payload = &frame[off..off + len as usize];
+                planes.push(if raw {
+                    payload.to_vec()
+                } else {
+                    h.codec.decompress(payload, pbytes)?
+                });
+                off += len as usize;
+            }
+            let codes = reaggregate(h.dtype, h.m, &planes);
+            match h.kind {
+                FrameKind::Weights => Ok(codes),
+                FrameKind::KvCache => {
+                    let tokens = h.m / h.channels.max(1);
+                    let cm = recorrelate(
+                        h.dtype,
+                        tokens,
+                        h.channels,
+                        &codes,
+                        &betas,
+                        mode_from_code(h.mode),
+                    );
+                    let kv = crate::kvcluster::KvGroup::from_channel_major(
+                        h.dtype, tokens, h.channels, &cm,
+                    );
+                    Ok(kv.codes)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configs::ddr5::DDR5_4800_PAPER;
+    use crate::fmt::minifloat::BF16;
+    use crate::util::check::check;
+    use crate::util::rng::Xoshiro256;
+
+    fn weight_tensor(n: usize, seed: u64) -> CodeTensor {
+        let mut r = Xoshiro256::new(seed);
+        let codes: Vec<u16> = (0..n)
+            .map(|_| BF16.encode((r.normal() * 0.02) as f32) as u16)
+            .collect();
+        CodeTensor::new(Dtype::Bf16, codes, vec![n])
+    }
+
+    #[test]
+    fn weights_store_load_roundtrip() {
+        check("memctrl_weights_roundtrip", 40, |g| {
+            let n = g.usize_in(1, 6000);
+            let t = weight_tensor(n, g.case_seed);
+            for layout in [Layout::Proposed, Layout::Traditional] {
+                let mut mc = MemController::new(layout, Codec::Zstd);
+                let id = mc.store_weights("w", &t);
+                let (codes, _) = mc.load(id, 16, None).map_err(|e| e.to_string())?;
+                if codes != t.codes {
+                    return Err(format!("{layout:?} n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kv_store_load_roundtrip() {
+        check("memctrl_kv_roundtrip", 30, |g| {
+            let tokens = g.usize_in(1, 70);
+            let channels = g.usize_in(1, 96);
+            let codes = crate::synth::gen_kv_layer(
+                tokens,
+                channels,
+                crate::synth::CorpusProfile::Book,
+                0.5,
+                g.case_seed,
+            );
+            for layout in [Layout::Proposed, Layout::Traditional] {
+                let mut mc = MemController::new(layout, Codec::Zstd);
+                let id = mc.store_kv("kv", Dtype::Bf16, tokens, channels, &codes);
+                let (got, _) = mc.load(id, 16, None).map_err(|e| e.to_string())?;
+                if got != codes {
+                    return Err(format!("{layout:?} t={tokens} c={channels}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partial_precision_load_truncates() {
+        let t = weight_tensor(5000, 3);
+        let mut mc = MemController::new(Layout::Proposed, Codec::Zstd);
+        let id = mc.store_weights("w", &t);
+        let (codes, stats8) = mc.load(id, 8, None).unwrap();
+        for (&c, &g) in t.codes.iter().zip(&codes) {
+            assert_eq!(g, crate::fmt::truncate_to_planes(c, Dtype::Bf16, 8));
+        }
+        let (_, stats16) = mc.load(id, 16, None).unwrap();
+        assert!(
+            stats8.dram_bytes < stats16.dram_bytes,
+            "partial fetch {} must be < full {}",
+            stats8.dram_bytes,
+            stats16.dram_bytes
+        );
+    }
+
+    #[test]
+    fn proposed_fetches_fewer_bytes_than_traditional() {
+        let t = weight_tensor(65536, 5);
+        let mut p = MemController::new(Layout::Proposed, Codec::Zstd);
+        let mut tr = MemController::new(Layout::Traditional, Codec::Zstd);
+        let ip = p.store_weights("w", &t);
+        let it = tr.store_weights("w", &t);
+        let (_, sp) = p.load(ip, 16, None).unwrap();
+        let (_, st) = tr.load(it, 16, None).unwrap();
+        assert!(
+            (sp.dram_bytes as f64) < st.dram_bytes as f64 * 0.85,
+            "proposed {} vs traditional {}",
+            sp.dram_bytes,
+            st.dram_bytes
+        );
+        // at 8-plane precision the gap widens beyond 2x
+        let (_, sp8) = p.load(ip, 8, None).unwrap();
+        assert!(
+            (sp8.dram_bytes as f64) < st.dram_bytes as f64 * 0.5,
+            "proposed@8 {} vs traditional {}",
+            sp8.dram_bytes,
+            st.dram_bytes
+        );
+    }
+
+    #[test]
+    fn dram_timing_reflects_traffic() {
+        let t = weight_tensor(65536, 7);
+        let mut p = MemController::new(Layout::Proposed, Codec::Zstd);
+        let mut tr = MemController::new(Layout::Traditional, Codec::Zstd);
+        let ip = p.store_weights("w", &t);
+        let it = tr.store_weights("w", &t);
+        let mut mp = MemorySystem::new(DDR5_4800_PAPER.clone());
+        let mut mt = MemorySystem::new(DDR5_4800_PAPER.clone());
+        let (_, sp) = p.load(ip, 16, Some(&mut mp)).unwrap();
+        let (_, st) = tr.load(it, 16, Some(&mut mt)).unwrap();
+        assert!(sp.dram_cycles > 0 && st.dram_cycles > 0);
+        assert!(
+            sp.dram_cycles < st.dram_cycles,
+            "proposed {} cycles vs traditional {}",
+            sp.dram_cycles,
+            st.dram_cycles
+        );
+    }
+
+    #[test]
+    fn region_ratio_matches_paper_band() {
+        let t = weight_tensor(1 << 17, 11);
+        let mut mc = MemController::new(Layout::Proposed, Codec::Zstd);
+        let id = mc.store_weights("w", &t);
+        let r = mc.region(id).ratio();
+        assert!((1.1..1.8).contains(&r), "ratio={r}");
+    }
+
+    #[test]
+    fn engine_model_throughput() {
+        let e = EngineModel::default();
+        // 32 lanes * 512 Gbps = 2 TB/s
+        assert!((e.throughput_bps() - 2.048e12).abs() < 1e9);
+        let ns = e.process_ns(4096);
+        assert!(ns > 60.0 && ns < 120.0, "ns={ns}");
+    }
+}

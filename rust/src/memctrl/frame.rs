@@ -1,0 +1,250 @@
+//! On-DRAM frame layout for compressed blocks.
+//!
+//! A *frame* is the stored form of one logical block (default 4 KB of
+//! codes): a compact header followed by the bit-plane payloads in
+//! MSB-plane-first order. The header is exactly what the paper budgets in
+//! §III-A — per-plane compressed sizes ("partial-plane indices") plus the
+//! per-channel base exponents for KV frames — and is what lets a partial-
+//! precision read fetch a *prefix* of the frame.
+//!
+//! ```text
+//!   [ kind:1 | dtype:1 | mode:1 | codec:1 | m:4 | channels:4 ]   12 B
+//!   [ plane_len: u16 × nplanes ]  (bit15 = raw flag)
+//!   [ betas: u8 × channels ]      (KV frames only)
+//!   [ plane 0 payload | plane 1 payload | ... ]
+//! ```
+
+use crate::compress::Codec;
+use crate::fmt::Dtype;
+
+/// Frame semantic kind — the only "data semantics" the controller needs
+/// (paper §III: "the memory controller merely needs to recognize whether
+/// data are weights or KV caches").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameKind {
+    Weights,
+    KvCache,
+}
+
+/// Parsed frame directory (the header).
+#[derive(Debug, Clone)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub dtype: Dtype,
+    pub codec: Codec,
+    /// Codes in the block.
+    pub m: usize,
+    /// KV channels (0 for weights).
+    pub channels: usize,
+    /// De-correlation mode for KV frames (0=None, 1=ExpDelta, 2=XorFirst).
+    pub mode: u8,
+    /// Per-plane stored sizes and raw flags, MSB plane first.
+    pub plane_len: Vec<(u32, bool)>,
+}
+
+impl FrameHeader {
+    /// Serialized header size in bytes.
+    pub fn header_bytes(&self) -> usize {
+        12 + self.plane_len.len() * 2 + self.channels
+    }
+
+    /// Total frame size.
+    pub fn frame_bytes(&self) -> usize {
+        self.header_bytes() + self.plane_len.iter().map(|&(l, _)| l as usize).sum::<usize>()
+    }
+
+    /// Bytes that must be fetched for a top-`keep`-planes read:
+    /// header + betas + the first `keep` plane payloads (they are stored
+    /// contiguously, so this is ONE sequential DRAM range — the property
+    /// that makes partial fetches burst-friendly).
+    pub fn prefix_bytes(&self, keep: u32) -> usize {
+        let keep = (keep as usize).min(self.plane_len.len());
+        self.header_bytes()
+            + self.plane_len[..keep]
+                .iter()
+                .map(|&(l, _)| l as usize)
+                .sum::<usize>()
+    }
+
+    /// Raw (uncompressed) logical size of the block in bytes.
+    pub fn logical_bytes(&self) -> usize {
+        (self.m * self.dtype.bits() as usize).div_ceil(8)
+    }
+}
+
+/// Serialize a header. (Payloads are appended by the write path.)
+pub fn encode_header(h: &FrameHeader, betas: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(h.header_bytes());
+    out.push(match h.kind {
+        FrameKind::Weights => 0,
+        FrameKind::KvCache => 1,
+    });
+    out.push(dtype_code(h.dtype));
+    out.push(h.mode);
+    out.push(match h.codec {
+        Codec::Store => 0,
+        Codec::Lz4 => 1,
+        Codec::Zstd => 2,
+    });
+    out.extend_from_slice(&(h.m as u32).to_le_bytes());
+    out.extend_from_slice(&(h.channels as u32).to_le_bytes());
+    for &(len, raw) in &h.plane_len {
+        debug_assert!(len < 0x8000);
+        let v = (len as u16) | if raw { 0x8000 } else { 0 };
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &b in betas {
+        out.push(b as u8);
+    }
+    out
+}
+
+/// Parse a header from the first bytes of a frame. Returns the header and
+/// the per-channel betas.
+pub fn decode_header(data: &[u8]) -> anyhow::Result<(FrameHeader, Vec<u16>)> {
+    anyhow::ensure!(data.len() >= 12, "frame header truncated");
+    let kind = match data[0] {
+        0 => FrameKind::Weights,
+        1 => FrameKind::KvCache,
+        k => anyhow::bail!("bad frame kind {k}"),
+    };
+    let dtype = dtype_from_code(data[1])?;
+    let codec = match data[3] {
+        0 => Codec::Store,
+        1 => Codec::Lz4,
+        2 => Codec::Zstd,
+        c => anyhow::bail!("bad codec {c}"),
+    };
+    let mode = data[2];
+    anyhow::ensure!(mode <= 2, "bad decorrelate mode {mode}");
+    let m = u32::from_le_bytes(data[4..8].try_into().unwrap()) as usize;
+    let channels = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+    let nplanes = dtype.bits() as usize;
+    let need = 12 + nplanes * 2 + channels;
+    anyhow::ensure!(data.len() >= need, "frame header truncated");
+    let mut plane_len = Vec::with_capacity(nplanes);
+    for i in 0..nplanes {
+        let v = u16::from_le_bytes(data[12 + 2 * i..14 + 2 * i].try_into().unwrap());
+        plane_len.push(((v & 0x7FFF) as u32, v & 0x8000 != 0));
+    }
+    let betas = data[12 + nplanes * 2..need]
+        .iter()
+        .map(|&b| b as u16)
+        .collect();
+    Ok((
+        FrameHeader {
+            kind,
+            dtype,
+            codec,
+            m,
+            channels,
+            mode,
+            plane_len,
+        },
+        betas,
+    ))
+}
+
+fn dtype_code(d: Dtype) -> u8 {
+    match d {
+        Dtype::Bf16 => 0,
+        Dtype::Fp16 => 1,
+        Dtype::Fp12 => 2,
+        Dtype::Fp8E4M3 => 3,
+        Dtype::Fp8E5M2 => 4,
+        Dtype::Fp6 => 5,
+        Dtype::Fp4 => 6,
+        Dtype::Int4 => 7,
+        Dtype::Int2 => 8,
+    }
+}
+
+fn dtype_from_code(c: u8) -> anyhow::Result<Dtype> {
+    Ok(match c {
+        0 => Dtype::Bf16,
+        1 => Dtype::Fp16,
+        2 => Dtype::Fp12,
+        3 => Dtype::Fp8E4M3,
+        4 => Dtype::Fp8E5M2,
+        5 => Dtype::Fp6,
+        6 => Dtype::Fp4,
+        7 => Dtype::Int4,
+        8 => Dtype::Int2,
+        _ => anyhow::bail!("bad dtype code {c}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_header() -> (FrameHeader, Vec<u16>) {
+        (
+            FrameHeader {
+                kind: FrameKind::KvCache,
+                dtype: Dtype::Bf16,
+                codec: Codec::Zstd,
+                m: 2048,
+                channels: 128,
+                mode: 1,
+                plane_len: (0..16).map(|i| (10 + i as u32 * 7, i % 3 == 0)).collect(),
+            },
+            (0..128u16).map(|i| i % 256).collect(),
+        )
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let (h, betas) = sample_header();
+        let enc = encode_header(&h, &betas);
+        assert_eq!(enc.len(), h.header_bytes());
+        let (h2, betas2) = decode_header(&enc).unwrap();
+        assert_eq!(h2.kind, h.kind);
+        assert_eq!(h2.dtype, h.dtype);
+        assert_eq!(h2.codec, h.codec);
+        assert_eq!(h2.m, h.m);
+        assert_eq!(h2.channels, h.channels);
+        assert_eq!(h2.plane_len, h.plane_len);
+        assert_eq!(betas2, betas);
+    }
+
+    #[test]
+    fn prefix_bytes_monotone() {
+        let (h, _) = sample_header();
+        let mut prev = 0;
+        for keep in 0..=16u32 {
+            let b = h.prefix_bytes(keep);
+            assert!(b >= prev);
+            prev = b;
+        }
+        assert_eq!(h.prefix_bytes(16), h.frame_bytes());
+        assert_eq!(h.prefix_bytes(0), h.header_bytes());
+        assert_eq!(h.prefix_bytes(99), h.frame_bytes());
+    }
+
+    #[test]
+    fn truncated_header_rejected() {
+        let (h, betas) = sample_header();
+        let enc = encode_header(&h, &betas);
+        assert!(decode_header(&enc[..8]).is_err());
+        assert!(decode_header(&enc[..20]).is_err());
+    }
+
+    #[test]
+    fn weights_frame_has_no_betas() {
+        let h = FrameHeader {
+            kind: FrameKind::Weights,
+            dtype: Dtype::Fp8E4M3,
+            codec: Codec::Lz4,
+            m: 4096,
+            channels: 0,
+            mode: 0,
+            plane_len: (0..8).map(|_| (100u32, false)).collect(),
+        };
+        let enc = encode_header(&h, &[]);
+        let (h2, betas) = decode_header(&enc).unwrap();
+        assert_eq!(h2.channels, 0);
+        assert!(betas.is_empty());
+        assert_eq!(h2.header_bytes(), 12 + 16);
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's system contribution: a compression-aware memory controller
+//! that (1) raises lossless compressibility via LLM-aware in-memory
+//! placement (bit-plane disaggregation; cross-token KV clustering +
+//! exponent delta) and (2) makes DRAM traffic proportional to dynamic
+//! quantization via partial-plane fetches.
+pub mod controller;
+pub mod frame;
+
+pub use controller::{EngineModel, Layout, MemController, ReadStats, Region, RegionId, BLOCK_BYTES};
+pub use frame::{FrameHeader, FrameKind};

@@ -1,0 +1,17 @@
+//! Dynamic quantization policies (paper §II-C, Figs 2/3/9).
+//!
+//! * [`mode`] — MoDE-style routers that assign a precision level to each
+//!   model component per token (Fig 2), producing the precision
+//!   distributions of Fig 9.
+//! * [`policy`] — KV-cache retention/precision policies compared in
+//!   Table II (full cache, sliding window, Quest-style top-k pages,
+//!   dynamic multi-tier quantization).
+//! * [`traffic`] — the P-vs-T per-weight DRAM traffic model that feeds
+//!   Figs 10 and 11.
+pub mod mode;
+pub mod policy;
+pub mod traffic;
+
+pub use mode::{precision_menu, PrecisionDist, RouterSim};
+pub use policy::{KvPolicy, PageTier};
+pub use traffic::{avg_bits_per_weight, WeightTraffic};

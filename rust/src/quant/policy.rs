@@ -1,0 +1,233 @@
+//! KV-cache retention / precision policies (Table II).
+//!
+//! A policy decides, per attention page (16 tokens, as in Quest), at which
+//! precision the page's K/V entries are fetched — or whether they are
+//! fetched at all. Page importance is the Quest criterion: an upper bound
+//! on the page's attention mass computed from per-page min/max key
+//! metadata against the current query.
+
+use crate::fmt::Dtype;
+
+/// Tokens per page (Quest's page size, also the paper's).
+pub const PAGE_TOKENS: usize = 16;
+
+/// One tier of a dynamic-quantization policy: the `pages` most important
+/// pages (after more important tiers are assigned) read at `dtype`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageTier {
+    pub pages: usize,
+    pub dtype: Dtype,
+}
+
+/// The policies compared in Table II.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KvPolicy {
+    /// Attend to the full cache at base precision.
+    Full,
+    /// Attend only to the last `window` tokens (plus attention sinks).
+    SlidingWindow { window: usize },
+    /// Quest: top-`pages` pages at base precision, others skipped.
+    QuestTopK { pages: usize },
+    /// The paper's dynamic quantization: tiered precisions by importance;
+    /// pages beyond all tiers are skipped.
+    DynamicQuant { tiers: Vec<PageTier> },
+}
+
+impl KvPolicy {
+    /// Table II's configurations.
+    pub fn table2() -> Vec<(String, KvPolicy)> {
+        vec![
+            ("Full KV Cache".into(), KvPolicy::Full),
+            (
+                "Sliding Window (64 tokens)".into(),
+                KvPolicy::SlidingWindow { window: 64 },
+            ),
+            (
+                "Quest (Top 5 pages in BF16)".into(),
+                KvPolicy::QuestTopK { pages: 5 },
+            ),
+            (
+                "Dyn. Quant (5 BF16 + 3 FP8 + 2 FP4)".into(),
+                KvPolicy::DynamicQuant {
+                    tiers: vec![
+                        PageTier { pages: 5, dtype: Dtype::Bf16 },
+                        PageTier { pages: 3, dtype: Dtype::Fp8E4M3 },
+                        PageTier { pages: 2, dtype: Dtype::Fp4 },
+                    ],
+                },
+            ),
+            (
+                "Dyn. Quant (5 BF16 + 5 FP8)".into(),
+                KvPolicy::DynamicQuant {
+                    tiers: vec![
+                        PageTier { pages: 5, dtype: Dtype::Bf16 },
+                        PageTier { pages: 5, dtype: Dtype::Fp8E4M3 },
+                    ],
+                },
+            ),
+        ]
+    }
+
+    /// Given descending-importance page ranks (0 = most important) and the
+    /// current position, return per-page effective precision in bit-planes
+    /// kept (0 = skip). `npages` includes the current partial page, which
+    /// is always read at full precision (it holds the newest tokens).
+    pub fn page_precisions(&self, npages: usize, base: Dtype, ranks: &[usize]) -> Vec<u32> {
+        assert_eq!(ranks.len(), npages);
+        let full = base.bits();
+        match self {
+            KvPolicy::Full => vec![full; npages],
+            KvPolicy::SlidingWindow { window } => {
+                let keep_pages = window.div_ceil(PAGE_TOKENS);
+                (0..npages)
+                    .map(|p| if p + keep_pages >= npages { full } else { 0 })
+                    .collect()
+            }
+            KvPolicy::QuestTopK { pages } => ranks
+                .iter()
+                .enumerate()
+                .map(|(p, &r)| {
+                    if r < *pages || p + 1 == npages {
+                        full
+                    } else {
+                        0
+                    }
+                })
+                .collect(),
+            KvPolicy::DynamicQuant { tiers } => {
+                // tier boundaries in rank space
+                let mut bounds = Vec::with_capacity(tiers.len());
+                let mut acc = 0usize;
+                for t in tiers {
+                    acc += t.pages;
+                    bounds.push((acc, t.dtype));
+                }
+                ranks
+                    .iter()
+                    .enumerate()
+                    .map(|(p, &r)| {
+                        if p + 1 == npages {
+                            return full;
+                        }
+                        for &(b, d) in &bounds {
+                            if r < b {
+                                return d.bits().min(full);
+                            }
+                        }
+                        0
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Average fetched bits per KV element for `npages` pages (assuming
+    /// uniform page sizes) — the bandwidth proxy used in examples.
+    pub fn avg_kv_bits(&self, npages: usize, base: Dtype, ranks: &[usize]) -> f64 {
+        let ps = self.page_precisions(npages, base, ranks);
+        ps.iter().map(|&b| b as f64).sum::<f64>() / npages.max(1) as f64
+    }
+}
+
+/// Quest-style page importance from per-page key metadata: for query `q`,
+/// score_p = Σ_j max(q_j · min_j(p), q_j · max_j(p)) — an upper bound on
+/// any token's dot product within the page.
+pub fn quest_scores(q: &[f32], page_min: &[Vec<f32>], page_max: &[Vec<f32>]) -> Vec<f64> {
+    page_min
+        .iter()
+        .zip(page_max)
+        .map(|(mn, mx)| {
+            q.iter()
+                .zip(mn.iter().zip(mx))
+                .map(|(&qj, (&a, &b))| (qj * a).max(qj * b) as f64)
+                .sum()
+        })
+        .collect()
+}
+
+/// Ranks (0 = highest score) from scores.
+pub fn ranks_from_scores(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut ranks = vec![0usize; scores.len()];
+    for (r, &p) in idx.iter().enumerate() {
+        ranks[p] = r;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_policy_keeps_everything() {
+        let p = KvPolicy::Full;
+        let ranks: Vec<usize> = (0..10).collect();
+        assert_eq!(p.page_precisions(10, Dtype::Bf16, &ranks), vec![16; 10]);
+    }
+
+    #[test]
+    fn sliding_window_keeps_tail() {
+        let p = KvPolicy::SlidingWindow { window: 64 }; // 4 pages
+        let ranks: Vec<usize> = (0..10).collect();
+        let ps = p.page_precisions(10, Dtype::Bf16, &ranks);
+        assert_eq!(&ps[..6], &[0; 6]);
+        assert_eq!(&ps[6..], &[16; 4]);
+    }
+
+    #[test]
+    fn quest_keeps_top_k_and_current() {
+        let p = KvPolicy::QuestTopK { pages: 2 };
+        // page 3 is most important, then page 0
+        let scores = vec![5.0, 1.0, 0.5, 9.0, 2.0];
+        let ranks = ranks_from_scores(&scores);
+        let ps = p.page_precisions(5, Dtype::Bf16, &ranks);
+        assert_eq!(ps, vec![16, 0, 0, 16, 16]); // 0 and 3 top-2; 4 = current
+    }
+
+    #[test]
+    fn dynamic_quant_tiers_descend() {
+        let p = KvPolicy::table2()[3].1.clone();
+        let scores: Vec<f64> = (0..12).map(|i| -(i as f64)).collect(); // page 0 best
+        let ranks = ranks_from_scores(&scores);
+        let ps = p.page_precisions(12, Dtype::Bf16, &ranks);
+        assert_eq!(&ps[..5], &[16; 5]);
+        assert_eq!(&ps[5..8], &[8; 3]);
+        assert_eq!(&ps[8..10], &[4; 2]);
+        assert_eq!(ps[10], 0);
+        assert_eq!(ps[11], 16); // current page
+    }
+
+    #[test]
+    fn avg_bits_ordering_matches_traffic_intuition() {
+        let scores: Vec<f64> = (0..32).map(|i| 32.0 - i as f64).collect();
+        let ranks = ranks_from_scores(&scores);
+        let table2 = KvPolicy::table2();
+        let avg = |p: &KvPolicy| p.avg_kv_bits(32, Dtype::Bf16, &ranks);
+        let full = avg(&table2[0].1);
+        let sw = avg(&table2[1].1);
+        let quest = avg(&table2[2].1);
+        let dq = avg(&table2[4].1);
+        assert!(full > dq && dq > quest && quest >= sw * 0.9, "{full} {dq} {quest} {sw}");
+    }
+
+    #[test]
+    fn quest_scores_prefer_aligned_pages() {
+        let q = vec![1.0f32, -1.0];
+        let pmin = vec![vec![0.9f32, -1.1], vec![-0.1, -0.1]];
+        let pmax = vec![vec![1.1f32, -0.9], vec![0.1, 0.1]];
+        let s = quest_scores(&q, &pmin, &pmax);
+        assert!(s[0] > s[1]);
+    }
+
+    #[test]
+    fn ranks_are_a_permutation() {
+        let scores = vec![0.3, 0.1, 0.9, 0.5];
+        let r = ranks_from_scores(&scores);
+        let mut sorted = r.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        assert_eq!(r[2], 0); // highest score
+    }
+}

@@ -1,0 +1,181 @@
+//! The P-vs-T weight-traffic model behind Figs 10 and 11.
+//!
+//! For a model with storage precision `base` running under a dynamic-
+//! quantization precision distribution (Fig 9):
+//!
+//! * **T (traditional byte-level)** stores values byte-aligned and can
+//!   fetch precision only at byte granularity: a weight read at level L
+//!   moves `ceil(bits(L)/8)` bytes.
+//! * **P (proposed bit-plane)** stores per-plane *compressed* frames and
+//!   fetches the top `bits(L)` planes: a weight read at level L moves the
+//!   measured compressed size of those planes (+ amortized header).
+//!
+//! The per-plane compressed sizes are *measured* on data (synthetic
+//! calibrated checkpoints, or real tensors), not assumed.
+
+use crate::bitplane::layout::disaggregate;
+use crate::compress::{codec::block_compressed_size, Codec};
+use crate::fmt::Dtype;
+use crate::memctrl::frame::FrameHeader;
+use crate::quant::mode::PrecisionDist;
+
+/// Measured per-plane compressed fractions for a tensor population.
+#[derive(Debug, Clone)]
+pub struct WeightTraffic {
+    pub base: Dtype,
+    /// For plane p (MSB first): compressed bytes / raw bytes of that plane.
+    pub plane_frac: Vec<f64>,
+    /// Amortized header bits per weight.
+    pub header_bits: f64,
+}
+
+impl WeightTraffic {
+    /// Measure plane compressibility of `codes` under `codec` with the
+    /// paper's 4 KB blocks.
+    pub fn measure(base: Dtype, codes: &[u16], codec: Codec) -> Self {
+        let pb = disaggregate(base, codes);
+        let plane_frac = pb
+            .planes
+            .iter()
+            .map(|p| {
+                if p.is_empty() {
+                    1.0
+                } else {
+                    block_compressed_size(codec, p, 4096) as f64 / p.len() as f64
+                }
+            })
+            .collect();
+        // header: one frame per 4 KB logical block
+        let codes_per_block = 4096 * 8 / base.bits() as usize;
+        let h = FrameHeader {
+            kind: crate::memctrl::FrameKind::Weights,
+            dtype: base,
+            codec,
+            m: codes_per_block,
+            channels: 0,
+            mode: 0,
+            plane_len: vec![(0, false); base.bits() as usize],
+        };
+        let header_bits = h.header_bytes() as f64 * 8.0 / codes_per_block as f64;
+        Self {
+            base,
+            plane_frac,
+            header_bits,
+        }
+    }
+
+    /// P: average *fetched* bits per weight when reading the top `keep`
+    /// planes.
+    pub fn p_bits(&self, keep: u32) -> f64 {
+        let keep = (keep as usize).min(self.plane_frac.len());
+        self.header_bits + self.plane_frac[..keep].iter().sum::<f64>()
+    }
+
+    /// T: byte-granular fetch for `level` bits. A byte-level layout can
+    /// slice a multi-byte container at byte boundaries (read 1 of a BF16's
+    /// 2 bytes for FP8), but a sub-byte container (INT4/INT2 packed
+    /// 2–4 per byte) cannot be sliced further — the whole container moves.
+    pub fn t_bits(&self, level: u32) -> f64 {
+        let container = self.base.bits() as f64;
+        if container <= 8.0 {
+            container.min(((level as f64 / 8.0).ceil() * 8.0).max(container))
+        } else {
+            ((level as f64 / 8.0).ceil() * 8.0).min(container)
+        }
+    }
+
+    /// Average bits per weight under a precision distribution, for both
+    /// layouts: `(p_avg, t_avg)`.
+    pub fn avg_bits(&self, dist: &PrecisionDist) -> (f64, f64) {
+        let mut p = 0.0;
+        let mut t = 0.0;
+        for (d, &f) in dist.levels.iter().zip(&dist.fractions) {
+            let eff = d.bits().min(self.base.bits());
+            p += f * self.p_bits(eff);
+            t += f * self.t_bits(eff);
+        }
+        (p, t)
+    }
+}
+
+/// Convenience: average effective (ideal, unrounded) bits for a dist.
+pub fn avg_bits_per_weight(dist: &PrecisionDist) -> f64 {
+    dist.avg_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configs::LLAMA31_8B;
+    use crate::quant::mode::RouterSim;
+    use crate::synth::{encode_checkpoint, sample_checkpoint};
+
+    fn traffic(base: Dtype) -> WeightTraffic {
+        let ts = sample_checkpoint(&LLAMA31_8B, 1 << 17, 42);
+        let t = encode_checkpoint(&ts, base);
+        WeightTraffic::measure(base, &t.codes, Codec::Zstd)
+    }
+
+    #[test]
+    fn full_precision_p_matches_region_ratio() {
+        let tr = traffic(Dtype::Bf16);
+        let p16 = tr.p_bits(16);
+        // should land near 16 / 1.34 ≈ 11.9 bits (Table III band)
+        assert!((10.5..13.5).contains(&p16), "p16={p16}");
+        assert_eq!(tr.t_bits(16), 16.0);
+    }
+
+    #[test]
+    fn p_scales_proportionally_t_staircases() {
+        let tr = traffic(Dtype::Bf16);
+        // P at 12 planes < P at 16 planes; T at 12 bits == 16 bits (2 bytes)
+        assert!(tr.p_bits(12) < tr.p_bits(16));
+        assert_eq!(tr.t_bits(12), 16.0);
+        assert_eq!(tr.t_bits(8), 8.0);
+        assert_eq!(tr.t_bits(4), 8.0); // bf16 container, byte floor
+        assert!(tr.p_bits(8) < tr.p_bits(12));
+        // exponent planes compress: top-8 fetch well under 8 bits
+        assert!(tr.p_bits(8) < 7.0, "p8={}", tr.p_bits(8));
+    }
+
+    #[test]
+    fn fig10_savings_band_bf16() {
+        // With the paper's router distribution, P should save ~25–30%
+        // over T for BF16-based models.
+        let tr = traffic(Dtype::Bf16);
+        let r = RouterSim::paper_default("LLaMA 3.1 8B");
+        let d = r.simulate(Dtype::Bf16, 2000, 64, 7);
+        let (p, t) = tr.avg_bits(&d);
+        let savings = 1.0 - p / t;
+        assert!(
+            (0.22..0.38).contains(&savings),
+            "bf16 P-vs-T savings {savings:.3} (p={p:.2} t={t:.2})"
+        );
+    }
+
+    #[test]
+    fn savings_shrink_with_base_precision() {
+        // Fig 10's trend: savings decrease from BF16 to FP8 to INT4 bases.
+        let s = |base: Dtype, name: &str| {
+            let tr = traffic(base);
+            let r = RouterSim::paper_default(name);
+            let d = r.simulate(base, 2000, 64, 11);
+            let (p, t) = tr.avg_bits(&d);
+            1.0 - p / t
+        };
+        let bf16 = s(Dtype::Bf16, "LLaMA 3.1 8B");
+        let fp8 = s(Dtype::Fp8E4M3, "LLaMA 3.1 8B");
+        let int4 = s(Dtype::Int4, "LLaMA 3.1 8B");
+        assert!(
+            bf16 > fp8 && fp8 > int4,
+            "bf16={bf16:.3} fp8={fp8:.3} int4={int4:.3}"
+        );
+        assert!(int4 >= -0.05, "int4 savings should not be very negative: {int4:.3}");
+    }
+
+    #[test]
+    fn header_overhead_is_small() {
+        let tr = traffic(Dtype::Bf16);
+        assert!(tr.header_bits < 0.5, "header bits/weight = {}", tr.header_bits);
+    }
+}

@@ -1,0 +1,7 @@
+//! Reporting utilities: a minimal JSON parser/emitter (serde_json
+//! substitute) and aligned-table rendering for the bench binaries.
+pub mod json;
+pub mod table;
+
+pub use json::Json;
+pub use table::Table;

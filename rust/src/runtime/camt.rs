@@ -1,0 +1,206 @@
+//! Reader for the `.camt` tensor container written by
+//! `python/compile/camt.py` (safetensors substitute). Format documented
+//! there; all values little-endian.
+
+use std::io::Read;
+
+/// Tensor payload variants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    U16(Vec<u16>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::U16(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A named tensor.
+#[derive(Debug, Clone)]
+pub struct CamtTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+/// Read a .camt file, preserving tensor order.
+pub fn read_camt(path: &std::path::Path) -> anyhow::Result<Vec<CamtTensor>> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_camt(&buf)
+}
+
+/// Byte cursor over the container.
+struct Cur<'a> {
+    buf: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.i + n <= self.buf.len(), "camt truncated at {}", self.i);
+        let s = &self.buf[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Parse from bytes.
+pub fn parse_camt(buf: &[u8]) -> anyhow::Result<Vec<CamtTensor>> {
+    let mut c = Cur { buf, i: 0 };
+    anyhow::ensure!(c.take(4)? == b"CAMT", "bad camt magic");
+    let version = c.u32()?;
+    anyhow::ensure!(version == 1, "unsupported camt version {version}");
+    let count = c.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = c.u16()? as usize;
+        let name = String::from_utf8(c.take(nlen)?.to_vec())?;
+        let hdr = c.take(2)?;
+        let (code, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u32()? as usize);
+        }
+        let n: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+        let data = match code {
+            0 => {
+                let raw = c.take(n * 4)?;
+                TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            1 => {
+                let raw = c.take(n * 2)?;
+                TensorData::U16(
+                    raw.chunks_exact(2)
+                        .map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            2 => {
+                let raw = c.take(n * 4)?;
+                TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            3 => TensorData::U8(c.take(n)?.to_vec()),
+            k => anyhow::bail!("bad camt dtype code {k}"),
+        };
+        out.push(CamtTensor { name, shape, data });
+    }
+    anyhow::ensure!(c.i == buf.len(), "camt trailing bytes");
+    Ok(out)
+}
+
+/// Read a raw uint16-LE token stream (corpus files).
+pub fn read_u16_stream(path: &std::path::Path) -> anyhow::Result<Vec<u16>> {
+    let buf = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    anyhow::ensure!(buf.len() % 2 == 0, "odd token file length");
+    Ok(buf
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a camt blob by hand (mirrors the python writer).
+    fn blob() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"CAMT");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "w": f32 [2,2]
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'w');
+        b.push(0); // f32
+        b.push(2); // ndim
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        for x in [1.0f32, -2.5, 3.25, 0.0] {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        // tensor "t": u16 scalar-ish [3]
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b't');
+        b.push(1); // u16
+        b.push(1);
+        b.extend_from_slice(&3u32.to_le_bytes());
+        for x in [7u16, 8, 9] {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_handwritten_blob() {
+        let ts = parse_camt(&blob()).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "w");
+        assert_eq!(ts[0].shape, vec![2, 2]);
+        assert_eq!(ts[0].data, TensorData::F32(vec![1.0, -2.5, 3.25, 0.0]));
+        assert_eq!(ts[1].name, "t");
+        assert_eq!(ts[1].data, TensorData::U16(vec![7, 8, 9]));
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let b = blob();
+        assert!(parse_camt(&b[..b.len() - 1]).is_err());
+        let mut bad = b.clone();
+        bad[0] = b'X';
+        assert!(parse_camt(&bad).is_err());
+        let mut extra = b.clone();
+        extra.push(0);
+        assert!(parse_camt(&extra).is_err());
+    }
+
+    #[test]
+    fn reads_real_weights_if_present() {
+        let p = std::path::Path::new("artifacts/weights.camt");
+        if !p.exists() {
+            return; // artifacts not built in this environment
+        }
+        let ts = read_camt(p).unwrap();
+        assert!(ts.iter().any(|t| t.name == "embed"));
+        assert!(ts.iter().all(|t| !t.data.is_empty()));
+    }
+}

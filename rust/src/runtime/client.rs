@@ -1,0 +1,200 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them on the
+//! CPU client (the `xla` crate, xla_extension 0.5.1).
+//!
+//! Python is never on this path — artifacts are produced once by
+//! `make artifacts` and the Rust binary is self-contained afterwards.
+
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT client + artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+/// A compiled executable with buffer-based I/O helpers.
+pub struct Exe {
+    inner: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Load + compile an HLO text artifact by file name.
+    pub fn load(&self, name: &str) -> anyhow::Result<Exe> {
+        let path = self.artifacts_dir.join(name);
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts`",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 path"),
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Exe {
+            inner: exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Upload a host f32 tensor to a device buffer.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e:?}"))
+    }
+
+    /// Upload a host i32 scalar.
+    pub fn buf_i32_scalar(&self, v: i32) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Upload a host u16 tensor.
+    pub fn buf_u16(&self, data: &[u16], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload u16: {e:?}"))
+    }
+}
+
+impl Exe {
+    /// Execute on device buffers and untuple the result. All our entry
+    /// points are lowered with `return_tuple=True`, so the single output
+    /// buffer holds a tuple literal; we download it once and decompose it
+    /// into per-element literals.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> anyhow::Result<Vec<xla::Literal>> {
+        let outs = self
+            .inner
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.name))?;
+        anyhow::ensure!(
+            !outs.is_empty() && !outs[0].is_empty(),
+            "{}: no replica output",
+            self.name
+        );
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: download: {e:?}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("{}: untuple: {e:?}", self.name))
+    }
+
+    /// Execute with literal inputs (slow path, used by tests).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let outs = self
+            .inner
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.name))?;
+        anyhow::ensure!(
+            !outs.is_empty() && !outs[0].is_empty(),
+            "{}: no replica output",
+            self.name
+        );
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: download: {e:?}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("{}: untuple: {e:?}", self.name))
+    }
+}
+
+/// Extract a host f32 vec from a tuple element literal.
+pub fn to_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Extract a host u16 vec from a tuple element literal.
+pub fn to_u16(lit: &xla::Literal) -> anyhow::Result<Vec<u16>> {
+    lit.to_vec::<u16>()
+        .map_err(|e| anyhow::anyhow!("to_vec u16: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Runtime> {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("bitplane_pack.hlo.txt").exists() {
+            Runtime::cpu(dir).ok()
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn bitplane_pack_artifact_matches_rust_substrate() {
+        // The AOT'd L1 Pallas kernel and the Rust bitplane substrate must
+        // agree bit-for-bit — this is the L1↔L3 interop contract.
+        let Some(rt) = artifacts() else { return };
+        let exe = rt.load("bitplane_pack.hlo.txt").unwrap();
+        let mut rng = crate::util::rng::Xoshiro256::new(42);
+        let codes: Vec<u16> = (0..8192).map(|_| rng.next_u64() as u16).collect();
+        let buf = rt.buf_u16(&codes, &[8192]).unwrap();
+        let outs = exe.run(&[&buf]).unwrap();
+        let planes_flat = outs[0].to_vec::<u8>().unwrap();
+        assert_eq!(planes_flat.len(), 16 * 1024);
+        let pb = crate::bitplane::disaggregate(crate::fmt::Dtype::Bf16, &codes);
+        for p in 0..16 {
+            assert_eq!(
+                &planes_flat[p * 1024..(p + 1) * 1024],
+                &pb.planes[p][..],
+                "plane {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_delta_artifact_matches_rust_substrate() {
+        let Some(rt) = artifacts() else { return };
+        let exe = rt.load("exp_delta.hlo.txt").unwrap();
+        // meta.json: kv_channels x 16 tokens
+        let meta = std::fs::read_to_string("artifacts/meta.json").unwrap();
+        let j = crate::report::json::Json::parse(&meta).unwrap();
+        let channels = j.get("model").unwrap().get("kv_channels").unwrap().as_usize().unwrap();
+        let tokens = 16usize;
+        let mut rng = crate::util::rng::Xoshiro256::new(7);
+        let cm: Vec<u16> = (0..channels * tokens).map(|_| rng.next_u64() as u16).collect();
+        let buf = rt.buf_u16(&cm, &[channels, tokens]).unwrap();
+        let outs = exe.run(&[&buf]).unwrap();
+        let transformed = to_u16(&outs[0]).unwrap();
+        let betas = to_u16(&outs[1]).unwrap();
+        let (want_t, want_b) = crate::kvcluster::decorrelate(
+            crate::fmt::Dtype::Bf16,
+            tokens,
+            channels,
+            &cm,
+            crate::kvcluster::DecorrelateMode::ExpDelta,
+        );
+        assert_eq!(transformed, want_t);
+        assert_eq!(betas, want_b);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let Some(rt) = artifacts() else { return };
+        let err = match rt.load("nope.hlo.txt") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("load of missing artifact succeeded"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT CPU client wrapper (loads `artifacts/*.hlo.txt`),
+//! the `.camt` tensor container reader, and the tinylm model driver.
+//! Python never runs on this path.
+pub mod camt;
+pub mod client;
+pub mod model;
+
+pub use camt::{parse_camt, read_camt, read_u16_stream, CamtTensor, TensorData};
+pub use client::{to_f32, to_u16, Exe, Runtime};
+pub use model::{ModelMeta, TinyLm};

@@ -1,0 +1,184 @@
+//! Calibrated synthetic KV-cache tensors.
+//!
+//! KV caches are activations: per-channel magnitude is *highly* persistent
+//! across tokens (RoPE'd keys keep per-dim scale; values inherit channel
+//! scales from the projection), while the sign and fine value vary
+//! per token. Known empirics the generator reproduces (KIVI, KVQuant):
+//!
+//! * grouping by channel gives much lower variance than grouping by token;
+//! * a few channels are outlier channels with 10–100× magnitude;
+//! * token-adjacent values are positively correlated (AR(1)-style drift,
+//!   stronger on "book"-like low-surprise text than "wiki"-like text).
+//!
+//! Token-major layout of such data is nearly incompressible for byte
+//! compressors (Table I: 0–6.5%); channel clustering + exponent delta
+//! unlocks 40–50% (Fig 7).
+
+use crate::fmt::minifloat::BF16;
+use crate::util::rng::Xoshiro256;
+
+/// Dataset redundancy profile (the WikiText vs BookSum axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusProfile {
+    /// Encyclopedic text: higher per-token surprise, weaker drift.
+    Wiki,
+    /// Long-form narrative: lower surprise, stronger cross-token
+    /// correlation (repeated names, phrases, motifs).
+    Book,
+}
+
+impl CorpusProfile {
+    pub fn name(self) -> &'static str {
+        match self {
+            CorpusProfile::Wiki => "wikitext",
+            CorpusProfile::Book => "booksum",
+        }
+    }
+
+    /// AR(1) coefficient for cross-token drift.
+    fn rho(self) -> f64 {
+        match self {
+            CorpusProfile::Wiki => 0.90,
+            CorpusProfile::Book => 0.96,
+        }
+    }
+
+    /// Innovation scale relative to channel scale.
+    fn innovation(self) -> f64 {
+        match self {
+            CorpusProfile::Wiki => 0.45,
+            CorpusProfile::Book => 0.30,
+        }
+    }
+}
+
+/// Per-layer KV statistics vary with depth: early layers have wider
+/// dynamic range, late layers are more concentrated (observed in KVQuant's
+/// per-layer plots). `layer_frac` in [0,1].
+pub fn gen_kv_layer(
+    tokens: usize,
+    channels: usize,
+    profile: CorpusProfile,
+    layer_frac: f64,
+    seed: u64,
+) -> Vec<u16> {
+    let mut rng = Xoshiro256::new(seed ^ 0x4B56_5345u64);
+    gen_kv_layer_impl(tokens, channels, profile, layer_frac, &mut rng)
+}
+
+fn gen_kv_layer_impl(
+    tokens: usize,
+    channels: usize,
+    profile: CorpusProfile,
+    layer_frac: f64,
+    rng: &mut Xoshiro256,
+) -> Vec<u16> {
+    // channel scale spread shrinks with depth: 1.8 -> 0.9 octaves
+    let spread = 1.8 - 0.9 * layer_frac;
+    let scales: Vec<f64> = (0..channels)
+        .map(|_| {
+            let mut s = 2f64.powf(rng.normal() * spread);
+            // outlier channels (~2%): 16–64x
+            if rng.next_f64() < 0.02 {
+                s *= 16.0 * 2f64.powf(rng.next_f64() * 2.0);
+            }
+            s
+        })
+        .collect();
+    let rho = profile.rho();
+    let innov = profile.innovation();
+    // Per-channel persistent component: KIVI/KVQuant observe that channel
+    // magnitude AND (for keys especially) sign are largely persistent
+    // across tokens — the channel mean dominates the per-token wiggle.
+    let means: Vec<f64> = (0..channels)
+        .map(|_| {
+            let sign = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+            sign * (0.8 + 0.6 * rng.next_f64())
+        })
+        .collect();
+    let mut drift: Vec<f64> = (0..channels).map(|_| rng.normal() * innov).collect();
+    let mut codes = vec![0u16; tokens * channels];
+    for t in 0..tokens {
+        for j in 0..channels {
+            drift[j] = rho * drift[j] + (1.0 - rho * rho).sqrt() * rng.normal() * innov;
+            let v = (scales[j] * (means[j] + drift[j])) as f32;
+            codes[t * channels + j] = BF16.encode(v) as u16;
+        }
+    }
+    codes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::value_major_ratio;
+    use crate::compress::Codec;
+    use crate::fmt::Dtype;
+    use crate::kvcluster::{cluster_ratio, DecorrelateMode};
+
+    const T: usize = 512;
+    const C: usize = 256;
+
+    #[test]
+    fn token_major_kv_nearly_incompressible() {
+        // Table I KV rows: naive ZSTD savings 0.9–6.5%, LZ4 0%.
+        for p in [CorpusProfile::Wiki, CorpusProfile::Book] {
+            let codes = gen_kv_layer(T, C, p, 0.5, 1);
+            let z = value_major_ratio(Dtype::Bf16, &codes, Codec::Zstd, 4096);
+            let l = value_major_ratio(Dtype::Bf16, &codes, Codec::Lz4, 4096);
+            let zs = 1.0 - 1.0 / z;
+            assert!(zs < 0.30, "{p:?}: naive zstd savings {zs:.3} too high");
+            assert!(l < 1.05, "{p:?}: naive lz4 ratio {l:.3} should be ~1");
+        }
+    }
+
+    #[test]
+    fn clustering_unlocks_large_savings() {
+        // Fig 7: cluster+delta reaches ratio ~1.8–1.9 overall.
+        for p in [CorpusProfile::Wiki, CorpusProfile::Book] {
+            let codes = gen_kv_layer(T, C, p, 0.5, 2);
+            let ours = cluster_ratio(
+                Dtype::Bf16, T, C, &codes, 16,
+                DecorrelateMode::ExpDelta, Codec::Zstd,
+            );
+            let baseline = value_major_ratio(Dtype::Bf16, &codes, Codec::Zstd, 4096);
+            let savings = 1.0 - 1.0 / ours;
+            assert!(
+                (0.30..=0.60).contains(&savings),
+                "{p:?}: clustered savings {savings:.3} outside Fig 7 band"
+            );
+            assert!(
+                ours / baseline > 1.35,
+                "{p:?}: improvement {:.3} under the paper's 41.7–50.3%",
+                ours / baseline
+            );
+        }
+    }
+
+    #[test]
+    fn book_compresses_at_least_as_well_as_wiki_per_block() {
+        // BookSum's stronger drift => higher clustered compressibility
+        // at matched scale structure (paper: 46.9% vs 44.8%).
+        let wiki = gen_kv_layer(T, C, CorpusProfile::Wiki, 0.5, 3);
+        let book = gen_kv_layer(T, C, CorpusProfile::Book, 0.5, 3);
+        let r = |codes: &[u16]| {
+            cluster_ratio(
+                Dtype::Bf16, T, C, codes, 16,
+                DecorrelateMode::ExpDelta, Codec::Zstd,
+            )
+        };
+        assert!(
+            r(&book) > r(&wiki) * 0.98,
+            "book {:.3} vs wiki {:.3}",
+            r(&book),
+            r(&wiki)
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gen_kv_layer(32, 64, CorpusProfile::Wiki, 0.25, 9);
+        let b = gen_kv_layer(32, 64, CorpusProfile::Wiki, 0.25, 9);
+        assert_eq!(a, b);
+    }
+}

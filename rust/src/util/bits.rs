@@ -1,0 +1,233 @@
+//! Bit-level helpers shared by the bit-plane and format modules.
+
+/// Read bit `i` (0 = LSB) of a little-endian packed bitstream.
+#[inline]
+pub fn get_bit(bytes: &[u8], i: usize) -> bool {
+    (bytes[i >> 3] >> (i & 7)) & 1 == 1
+}
+
+/// Set bit `i` (0 = LSB) in a little-endian packed bitstream.
+#[inline]
+pub fn set_bit(bytes: &mut [u8], i: usize, v: bool) {
+    let mask = 1u8 << (i & 7);
+    if v {
+        bytes[i >> 3] |= mask;
+    } else {
+        bytes[i >> 3] &= !mask;
+    }
+}
+
+/// Number of bytes needed to hold `n` bits.
+#[inline]
+pub const fn bytes_for_bits(n: usize) -> usize {
+    n.div_ceil(8)
+}
+
+/// Population count over a byte slice.
+pub fn popcount(bytes: &[u8]) -> usize {
+    let mut total = 0usize;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        total += u64::from_le_bytes(c.try_into().unwrap()).count_ones() as usize;
+    }
+    for &b in chunks.remainder() {
+        total += b.count_ones() as usize;
+    }
+    total
+}
+
+/// An append-only bit writer (LSB-first within each byte).
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits used in the final byte (0..8; 0 means byte-aligned).
+    nbits: u32,
+    acc: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n` bits of `v` (n <= 57).
+    #[inline]
+    pub fn put(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || v < (1u64 << n));
+        self.acc |= v << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Number of whole bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush (zero-padding the last byte) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.acc as u8);
+        }
+        self.buf
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize, // byte position
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self {
+            data,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Read `n` bits (n <= 57). Returns None if the stream is exhausted.
+    #[inline]
+    pub fn get(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 57);
+        while self.nbits < n {
+            if self.pos >= self.data.len() {
+                // allow zero-padding reads past the end only if at least
+                // one real bit remains accounted for
+                return None;
+            }
+            self.acc |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        if n == 0 {
+            return Some(0);
+        }
+        let v = self.acc & ((1u64 << n) - 1);
+        self.acc >>= n;
+        self.nbits -= n;
+        Some(v)
+    }
+
+    /// Bits consumed so far (including buffered).
+    pub fn bits_consumed(&self) -> usize {
+        self.pos * 8 - self.nbits as usize
+    }
+
+    /// Peek up to `n` bits (n <= 32) without consuming; bits beyond the
+    /// end of the stream read as zero. Used by the table-driven Huffman
+    /// decoder (a canonical decoder never *consumes* padding on valid
+    /// input, so zero-fill is safe).
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u64 {
+        while self.nbits < n && self.pos < self.data.len() {
+            self.acc |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Consume `n` bits previously peeked. Returns false if fewer than
+    /// `n` real bits remain.
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> bool {
+        if self.nbits < n {
+            // only possible at end-of-stream after peek zero-fill
+            return false;
+        }
+        self.acc >>= n;
+        self.nbits -= n;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn bit_get_set_roundtrip() {
+        let mut buf = vec![0u8; 4];
+        set_bit(&mut buf, 0, true);
+        set_bit(&mut buf, 9, true);
+        set_bit(&mut buf, 31, true);
+        assert!(get_bit(&buf, 0));
+        assert!(!get_bit(&buf, 1));
+        assert!(get_bit(&buf, 9));
+        assert!(get_bit(&buf, 31));
+        set_bit(&mut buf, 9, false);
+        assert!(!get_bit(&buf, 9));
+    }
+
+    #[test]
+    fn popcount_matches_naive() {
+        let data: Vec<u8> = (0..=255).collect();
+        let naive: usize = data.iter().map(|b| b.count_ones() as usize).sum();
+        assert_eq!(popcount(&data), naive);
+        assert_eq!(popcount(&data[..13]), data[..13].iter().map(|b| b.count_ones() as usize).sum());
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_fixed() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0xFFFF, 16);
+        w.put(0, 1);
+        w.put(0x1234_5678, 32);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3), Some(0b101));
+        assert_eq!(r.get(16), Some(0xFFFF));
+        assert_eq!(r.get(1), Some(0));
+        assert_eq!(r.get(32), Some(0x1234_5678));
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_property() {
+        check("bitio_roundtrip", 200, |g| {
+            let n = g.usize_in(0, 200);
+            let items: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let bits = 1 + g.rng.index(57) as u32;
+                    let v = g.rng.next_u64() & ((1u64 << bits) - 1).max(1).wrapping_sub(0);
+                    let v = if bits == 64 { v } else { v & ((1u64 << bits) - 1) };
+                    (v, bits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, b) in &items {
+                w.put(v, b);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for (i, &(v, b)) in items.iter().enumerate() {
+                match r.get(b) {
+                    Some(got) if got == v => {}
+                    other => return Err(format!("item {i}: want {v} ({b} bits), got {other:?}")),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bytes_for_bits_edges() {
+        assert_eq!(bytes_for_bits(0), 0);
+        assert_eq!(bytes_for_bits(1), 1);
+        assert_eq!(bytes_for_bits(8), 1);
+        assert_eq!(bytes_for_bits(9), 2);
+        assert_eq!(bytes_for_bits(16), 2);
+    }
+}

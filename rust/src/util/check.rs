@@ -1,0 +1,179 @@
+//! Minimal property-testing driver (offline substitute for `proptest`).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG + size hints). The
+//! driver runs `cases` random cases; on failure it reports the failing
+//! case's seed so the exact case can be replayed with
+//! `CAMC_CHECK_SEED=<seed> cargo test <name>`.
+//!
+//! No structural shrinking — instead every generator is parameterized by a
+//! `size` that the driver sweeps from small to large, so the *first*
+//! failure tends to be near-minimal already.
+
+use super::rng::Xoshiro256;
+
+/// Generation context handed to properties.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    /// Current size class (grows over the run, 1..=max_size).
+    pub size: usize,
+    /// Seed of this particular case (for replay).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// A vector of random bytes with length in `[0, max_len]` scaled by size.
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let cap = (max_len * self.size / 64).max(1).min(max_len);
+        let len = self.rng.index(cap + 1);
+        let mut v = vec![0u8; len];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+
+    /// Bytes with low entropy (runs + small alphabet) — exercises the
+    /// compressors' match paths much harder than uniform noise.
+    pub fn compressible_bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let cap = (max_len * self.size / 64).max(4).min(max_len);
+        let len = self.rng.index(cap + 1);
+        let alphabet = 1 + self.rng.index(8) as u8;
+        let mut v = Vec::with_capacity(len);
+        while v.len() < len {
+            let run = 1 + self.rng.index(32);
+            let byte = self.rng.index(alphabet as usize + 1) as u8;
+            for _ in 0..run.min(len - v.len()) {
+                v.push(byte);
+            }
+            // occasionally splice in a copy of earlier content (LZ matches)
+            if !v.is_empty() && self.rng.next_f64() < 0.3 {
+                let src = self.rng.index(v.len());
+                let n = self.rng.index(24).min(len - v.len());
+                for k in 0..n {
+                    let b = v[src + k % (v.len() - src)];
+                    v.push(b);
+                }
+            }
+        }
+        v
+    }
+
+    /// Random u16 vector (bit-plane payloads).
+    pub fn u16s(&mut self, max_len: usize) -> Vec<u16> {
+        let cap = (max_len * self.size / 64).max(1).min(max_len);
+        let len = self.rng.index(cap + 1);
+        (0..len).map(|_| self.rng.next_u64() as u16).collect()
+    }
+
+    /// Random f32 vector, roughly weight-like scale.
+    pub fn f32s(&mut self, max_len: usize) -> Vec<f32> {
+        let cap = (max_len * self.size / 64).max(1).min(max_len);
+        let len = self.rng.index(cap + 1);
+        (0..len)
+            .map(|_| (self.rng.normal() * 0.05) as f32)
+            .collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.index(hi - lo + 1)
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (with replay seed) on the
+/// first failing case. A property fails by panicking or returning `Err`.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    // Replay mode: run exactly one case.
+    if let Ok(s) = std::env::var("CAMC_CHECK_SEED") {
+        let seed: u64 = s.parse().expect("CAMC_CHECK_SEED must be u64");
+        let mut g = Gen {
+            rng: Xoshiro256::new(seed),
+            size: 64,
+            case_seed: seed,
+        };
+        if let Err(e) = prop(&mut g) {
+            panic!("[{name}] replay seed {seed} failed: {e}");
+        }
+        return;
+    }
+    let mut meta = Xoshiro256::new(0xCA4Cu64 ^ fnv(name.as_bytes()));
+    for i in 0..cases {
+        let case_seed = meta.next_u64();
+        let size = 1 + (i * 64) / cases.max(1); // ramp 1..=64
+        let mut g = Gen {
+            rng: Xoshiro256::new(case_seed),
+            size,
+            case_seed,
+        };
+        if let Err(e) = prop(&mut g) {
+            panic!(
+                "[{name}] case {i}/{cases} failed (replay: CAMC_CHECK_SEED={case_seed}): {e}"
+            );
+        }
+    }
+}
+
+/// FNV-1a for stable name→seed mapping.
+fn fnv(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("count", 50, |_g| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn check_reports_seed_on_failure() {
+        check("fail", 10, |g| {
+            if g.case_seed != 0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0;
+        check("ramp", 64, |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen >= 32);
+    }
+
+    #[test]
+    fn compressible_bytes_are_compressible_shaped() {
+        check("compressible", 20, |g| {
+            let v = g.compressible_bytes(4096);
+            if v.len() > 64 {
+                let distinct = {
+                    let mut seen = [false; 256];
+                    v.iter().for_each(|&b| seen[b as usize] = true);
+                    seen.iter().filter(|&&x| x).count()
+                };
+                if distinct > 64 {
+                    return Err(format!("alphabet too large: {distinct}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Human-readable number formatting for reports and benches.
+
+/// Format a byte count with binary units ("1.50 GiB").
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in nanoseconds adaptively ("1.23 ms").
+pub fn nanos(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a rate in bytes/sec ("3.2 GB/s", decimal units like the paper).
+pub fn rate(bytes_per_sec: f64) -> String {
+    const UNITS: [&str; 5] = ["B/s", "KB/s", "MB/s", "GB/s", "TB/s"];
+    let mut v = bytes_per_sec;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Percentage with one decimal ("25.2%").
+pub fn pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn nanos_units() {
+        assert_eq!(nanos(500.0), "500.0 ns");
+        assert_eq!(nanos(2_500.0), "2.50 µs");
+        assert_eq!(nanos(2_500_000.0), "2.50 ms");
+        assert_eq!(nanos(2_500_000_000.0), "2.500 s");
+    }
+
+    #[test]
+    fn rate_units() {
+        assert_eq!(rate(999.0), "999.00 B/s");
+        assert_eq!(rate(2e9), "2.00 GB/s");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.252), "25.2%");
+    }
+}

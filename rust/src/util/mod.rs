@@ -1,0 +1,7 @@
+//! Small self-contained utilities (RNG, bit I/O, property testing,
+//! human-readable formatting) — in-tree substitutes for crates that are
+//! unavailable in the offline build environment.
+pub mod bits;
+pub mod check;
+pub mod humanfmt;
+pub mod rng;

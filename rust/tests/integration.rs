@@ -1,0 +1,143 @@
+//! Cross-module integration tests: substrates composed the way the
+//! examples and benches compose them.
+
+use camc::compress::Codec;
+use camc::configs::ddr5::DDR5_4800_PAPER;
+use camc::configs::{LLAMA31_8B, TINYLM};
+use camc::dram::MemorySystem;
+use camc::fmt::Dtype;
+use camc::memctrl::{Layout, MemController};
+use camc::quant::mode::RouterSim;
+use camc::quant::traffic::WeightTraffic;
+use camc::synth::{encode_checkpoint, gen_kv_layer, sample_checkpoint, CorpusProfile};
+
+#[test]
+fn weights_synth_to_controller_to_dram() {
+    // synth checkpoint -> controller frames -> timed DRAM fetch, both
+    // layouts, partial + full precision — the Fig 10/11 inner loop.
+    let ts = sample_checkpoint(&LLAMA31_8B, 1 << 16, 9);
+    let t = encode_checkpoint(&ts, Dtype::Bf16);
+    let mut results = Vec::new();
+    for layout in [Layout::Proposed, Layout::Traditional] {
+        let mut mc = MemController::new(layout, Codec::Zstd);
+        let id = mc.store_weights("w", &t);
+        let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
+        let (codes, stats) = mc.load(id, 16, Some(&mut mem)).unwrap();
+        assert_eq!(codes, t.codes, "{layout:?} lossless");
+        results.push((stats.dram_bytes, stats.dram_cycles));
+    }
+    let (p, t_) = (results[0], results[1]);
+    assert!(p.0 < t_.0, "proposed moves fewer bytes");
+    assert!(p.1 < t_.1, "proposed finishes sooner");
+}
+
+#[test]
+fn traffic_model_matches_controller_accounting() {
+    // The analytic WeightTraffic model (Figs 10/11) must agree with the
+    // functional controller's actual fetch sizes within a few percent.
+    let ts = sample_checkpoint(&LLAMA31_8B, 1 << 16, 11);
+    let t = encode_checkpoint(&ts, Dtype::Bf16);
+    let tr = WeightTraffic::measure(Dtype::Bf16, &t.codes, Codec::Zstd);
+    let mut mc = MemController::new(Layout::Proposed, Codec::Zstd);
+    let id = mc.store_weights("w", &t);
+    for keep in [8u32, 12, 16] {
+        let (_, stats) = mc.load(id, keep, None).unwrap();
+        let model_bits = tr.p_bits(keep) * t.codes.len() as f64;
+        let actual_bits = stats.dram_bytes as f64 * 8.0;
+        let rel = (model_bits - actual_bits).abs() / actual_bits;
+        assert!(rel < 0.06, "keep={keep}: model {model_bits} vs {actual_bits} ({rel:.3})");
+    }
+}
+
+#[test]
+fn kv_pipeline_end_to_end_synthetic() {
+    // KV synth -> clustered frames -> partial read -> exact truncation.
+    let (tok, ch) = (64usize, TINYLM.n_kv_heads * TINYLM.d_head());
+    let kv = gen_kv_layer(tok, ch, CorpusProfile::Book, 0.3, 21);
+    let mut mc = MemController::new(Layout::Proposed, Codec::Zstd);
+    let id = mc.store_kv("kv", Dtype::Bf16, tok, ch, &kv);
+    let (full, fs) = mc.load(id, 16, None).unwrap();
+    assert_eq!(full, kv);
+    // Partial KV reads operate on the DELTA-TRANSFORMED planes: keeping
+    // the top 9 planes (sign + full exponent field) reconstructs the
+    // exact exponent via β + δ; the dropped mantissa floors |x| to its
+    // power of two. (Below 9 planes the δ LSB is lost too — the KV
+    // policy engine therefore quantizes from the true cache instead;
+    // see coordinator::kvmanager.)
+    let (p9, hs) = mc.load(id, 9, None).unwrap();
+    assert!(hs.dram_bytes < fs.dram_bytes);
+    for (a, b) in kv.iter().zip(&p9) {
+        // sign + exponent preserved, mantissa zeroed
+        assert_eq!(b & 0xFF80, a & 0xFF80, "sign+exp of {a:#06x} vs {b:#06x}");
+        assert_eq!(b & 0x007F, 0, "mantissa cleared");
+    }
+}
+
+#[test]
+fn router_to_dram_energy_trend() {
+    // Fig 10's trend assembled from the parts: energy(P) < energy(T),
+    // and partial-precision routing lowers both.
+    let ts = sample_checkpoint(&LLAMA31_8B, 1 << 15, 5);
+    let t = encode_checkpoint(&ts, Dtype::Bf16);
+    let tr = WeightTraffic::measure(Dtype::Bf16, &t.codes, Codec::Zstd);
+    let dist = RouterSim::paper_default("LLaMA 3.1 8B").simulate(Dtype::Bf16, 400, 32, 3);
+    let (pb, tb) = tr.avg_bits(&dist);
+    let energy = |bits_per_w: f64| {
+        let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
+        let bytes = (1_000_000.0 * bits_per_w / 8.0) as u64;
+        mem.run_stream_read(0, bytes);
+        mem.stats.energy_pj(&mem.cfg).total_pj()
+    };
+    let (pe, te) = (energy(pb), energy(tb));
+    assert!(pe < te, "P {pe} < T {te}");
+    assert!(pe < energy(16.0), "dyn quant < full-precision traffic");
+}
+
+#[test]
+fn tinylm_serving_with_policies_if_artifacts() {
+    // Full L3 serving loop over the real model (skipped when artifacts
+    // have not been built).
+    if !std::path::Path::new("artifacts/weights.camt").exists() {
+        return;
+    }
+    let lm = camc::runtime::TinyLm::load("artifacts").unwrap();
+    let toks =
+        camc::runtime::read_u16_stream(std::path::Path::new("artifacts/corpus_wiki.bin"))
+            .unwrap();
+    let reqs = vec![
+        camc::coordinator::Request {
+            id: 0,
+            prompt: toks[..32].to_vec(),
+            max_new_tokens: 8,
+            policy: camc::quant::policy::KvPolicy::Full,
+        },
+        camc::coordinator::Request {
+            id: 1,
+            prompt: toks[512..544].to_vec(),
+            max_new_tokens: 8,
+            policy: camc::quant::policy::KvPolicy::QuestTopK { pages: 2 },
+        },
+    ];
+    let mut m = camc::coordinator::ServeMetrics::default();
+    let resp = camc::coordinator::serve(&lm, reqs, 2, &mut m).unwrap();
+    assert_eq!(resp.len(), 2);
+    for r in &resp {
+        assert_eq!(r.tokens.len(), 8);
+        assert!(r.mean_nll.is_finite());
+        assert!(r.kv_ratio > 1.0, "kv pages should compress: {}", r.kv_ratio);
+    }
+    assert_eq!(m.requests, 2);
+}
+
+#[test]
+fn tinylm_config_matches_artifacts_meta() {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        return;
+    }
+    let meta = camc::runtime::model::ModelMeta::load(std::path::Path::new("artifacts")).unwrap();
+    assert_eq!(meta.layers, TINYLM.layers);
+    assert_eq!(meta.d_model, TINYLM.d_model);
+    assert_eq!(meta.n_heads, TINYLM.n_heads);
+    assert_eq!(meta.n_kv_heads, TINYLM.n_kv_heads);
+    assert_eq!(meta.vocab, TINYLM.vocab);
+}
