@@ -30,7 +30,7 @@ fn plane_table(title: &str, dtype: Dtype, codes: &[u16]) {
         tab.row(&[
             p.to_string(),
             field.into(),
-            format!("{:.3}", bit_entropy(&pb.planes[p])),
+            format!("{:.3}", bit_entropy(pb.plane(p))),
             format!("{r:.2}"),
         ]);
     }

@@ -1,19 +1,25 @@
 //! Hot-path microbenchmarks (the §Perf harness): bit-plane shuffle,
-//! LZ4/zstd-class compress+decompress, DRAM-sim command rate, KV cluster
-//! pipeline. Prints throughput per path; EXPERIMENTS.md §Perf records the
-//! before/after across optimization iterations.
+//! LZ4/zstd-class compress+decompress (one-shot vs reusable-scratch lane
+//! entry points), KV transpose (naive vs blocked), the multi-lane engine's
+//! batched-compress scaling sweep, DRAM-sim command rate, KV cluster
+//! pipeline. Prints throughput per path AND writes a machine-readable
+//! `BENCH_hotpath.json` (path → bytes/s) so future PRs can track the perf
+//! trajectory.
 //!
 //!     cargo bench --bench hotpath_microbench
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use camc::bitplane::layout::{disaggregate, reaggregate};
-use camc::compress::Codec;
+use camc::bitplane::layout::{disaggregate, reaggregate_flat};
+use camc::compress::{Codec, CodecScratch};
 use camc::configs::ddr5::DDR5_4800_PAPER;
 use camc::dram::MemorySystem;
+use camc::engine::{Lane, LaneArray};
 use camc::fmt::minifloat::BF16;
 use camc::fmt::Dtype;
 use camc::kvcluster::{ClusteredBlock, DecorrelateMode, KvGroup};
+use camc::report::json::Json;
 use camc::report::Table;
 use camc::synth::{gen_kv_layer, CorpusProfile};
 use camc::util::humanfmt;
@@ -29,11 +35,37 @@ fn time<F: FnMut()>(mut f: F, iters: usize) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
+struct Bench {
+    tab: Table,
+    json: BTreeMap<String, Json>,
+}
+
+impl Bench {
+    fn new() -> Self {
+        Self {
+            tab: Table::new("hot paths", &["path", "unit", "time", "throughput"]),
+            json: BTreeMap::new(),
+        }
+    }
+
+    /// One benchmark row: table line + JSON entry (bytes/s).
+    fn row(&mut self, path: &str, unit: String, secs: f64, bytes: f64) {
+        self.tab.row(&[
+            path.into(),
+            unit,
+            humanfmt::nanos(secs * 1e9),
+            humanfmt::rate(bytes / secs),
+        ]);
+        self.json
+            .insert(path.to_string(), Json::Num((bytes / secs).round()));
+    }
+}
+
 fn main() {
-    let mut tab = Table::new("hot paths", &["path", "unit", "time", "throughput"]);
+    let mut b = Bench::new();
     let mut r = Xoshiro256::new(1);
 
-    // weight-like bf16 codes, 1 MiB
+    // ---- bit-plane shuffle (1 MiB of weight-like bf16 codes) ----
     let n = 512 * 1024;
     let codes: Vec<u16> = (0..n)
         .map(|_| BF16.encode((r.normal() * 0.02) as f32) as u16)
@@ -41,46 +73,131 @@ fn main() {
     let bytes = (n * 2) as f64;
 
     let dis = time(|| { std::hint::black_box(disaggregate(Dtype::Bf16, &codes)); }, 8);
-    tab.row(&[
-        "bitplane disaggregate".into(),
-        humanfmt::bytes(bytes as u64),
-        humanfmt::nanos(dis * 1e9),
-        humanfmt::rate(bytes / dis),
-    ]);
+    b.row("bitplane disaggregate", humanfmt::bytes(bytes as u64), dis, bytes);
 
     let pb = disaggregate(Dtype::Bf16, &codes);
-    let rea = time(|| { std::hint::black_box(reaggregate(Dtype::Bf16, n, &pb.planes)); }, 8);
-    tab.row(&[
-        "bitplane reaggregate".into(),
-        humanfmt::bytes(bytes as u64),
-        humanfmt::nanos(rea * 1e9),
-        humanfmt::rate(bytes / rea),
-    ]);
+    let rea = time(
+        || { std::hint::black_box(reaggregate_flat(Dtype::Bf16, n, pb.all_bytes(), 16)); },
+        8,
+    );
+    b.row("bitplane reaggregate", humanfmt::bytes(bytes as u64), rea, bytes);
 
-    // compressors over the concatenated planes (the real input shape)
-    let plane_stream: Vec<u8> = pb.planes.concat();
+    // ---- codecs over the concatenated planes (the real input shape) ----
+    let plane_stream: Vec<u8> = pb.all_bytes().to_vec();
     for codec in [Codec::Lz4, Codec::Zstd] {
         let c = time(|| { std::hint::black_box(codec.compress(&plane_stream)); }, 4);
-        tab.row(&[
-            format!("{codec} compress (planes)"),
+        b.row(
+            &format!("{codec} compress (planes)"),
             humanfmt::bytes(plane_stream.len() as u64),
-            humanfmt::nanos(c * 1e9),
-            humanfmt::rate(plane_stream.len() as f64 / c),
-        ]);
+            c,
+            plane_stream.len() as f64,
+        );
         let comp = codec.compress(&plane_stream);
         let d = time(
             || { std::hint::black_box(codec.decompress(&comp, plane_stream.len()).unwrap()); },
             4,
         );
-        tab.row(&[
-            format!("{codec} decompress"),
+        b.row(
+            &format!("{codec} decompress"),
             humanfmt::bytes(plane_stream.len() as u64),
-            humanfmt::nanos(d * 1e9),
-            humanfmt::rate(plane_stream.len() as f64 / d),
-        ]);
+            d,
+            plane_stream.len() as f64,
+        );
     }
 
-    // KV cluster pipeline (compress one 16-token x 1024-ch group)
+    // ---- single block, seed-style one-shot vs lane scratch path ----
+    // One 4 KB-logical block (2048 bf16 codes): the seed compressed each
+    // plane with a fresh hash table + output Vec; a lane reuses both.
+    let block_codes: Vec<u16> = codes[..2048].to_vec();
+    let block_pb = disaggregate(Dtype::Bf16, &block_codes);
+    let block_bytes = (block_codes.len() * 2) as f64;
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        let before = time(
+            || {
+                for p in block_pb.planes() {
+                    std::hint::black_box(codec.compress(p));
+                }
+            },
+            64,
+        );
+        b.row(
+            &format!("block compress one-shot ({codec})"),
+            humanfmt::bytes(block_bytes as u64),
+            before,
+            block_bytes,
+        );
+        let mut lane = Lane::new(0);
+        let mut payload = Vec::new();
+        let after = time(
+            || {
+                payload.clear();
+                std::hint::black_box(lane.compress_planes(&block_pb, codec, &mut payload));
+            },
+            64,
+        );
+        b.row(
+            &format!("block compress lane-scratch ({codec})"),
+            humanfmt::bytes(block_bytes as u64),
+            after,
+            block_bytes,
+        );
+    }
+    // scratch decompress of one block
+    {
+        let mut scratch = CodecScratch::new();
+        let mut comp = Vec::new();
+        Codec::Zstd.compress_into(&plane_stream, &mut scratch, &mut comp);
+        let mut out = Vec::new();
+        let d = time(
+            || {
+                out.clear();
+                Codec::Zstd
+                    .decompress_append(&comp, plane_stream.len(), &mut out)
+                    .unwrap();
+                std::hint::black_box(&out);
+            },
+            4,
+        );
+        b.row(
+            "zstd decompress append (reused buf)",
+            humanfmt::bytes(plane_stream.len() as u64),
+            d,
+            plane_stream.len() as f64,
+        );
+    }
+
+    // ---- KV transpose: naive scatter vs blocked tiles ----
+    let (tok, ch) = (512, 1024);
+    let kv_big = gen_kv_layer(tok, ch, CorpusProfile::Book, 0.5, 5);
+    let kv_bytes_big = (tok * ch * 2) as f64;
+    let naive = time(
+        || {
+            let mut out = vec![0u16; kv_big.len()];
+            for t in 0..tok {
+                for j in 0..ch {
+                    out[j * tok + t] = kv_big[t * ch + j];
+                }
+            }
+            std::hint::black_box(out);
+        },
+        16,
+    );
+    b.row(
+        "kv transpose naive (512x1024)",
+        humanfmt::bytes(kv_bytes_big as u64),
+        naive,
+        kv_bytes_big,
+    );
+    let kvg_big = KvGroup::new(Dtype::Bf16, tok, ch, kv_big.clone());
+    let blocked = time(|| { std::hint::black_box(kvg_big.channel_major()); }, 16);
+    b.row(
+        "kv transpose blocked (512x1024)",
+        humanfmt::bytes(kv_bytes_big as u64),
+        blocked,
+        kv_bytes_big,
+    );
+
+    // ---- KV cluster pipeline (compress one 16-token x 1024-ch group) ----
     let kv_codes = gen_kv_layer(16, 1024, CorpusProfile::Book, 0.5, 3);
     let kv = KvGroup::new(Dtype::Bf16, 16, 1024, kv_codes);
     let kc = time(
@@ -88,25 +205,122 @@ fn main() {
         16,
     );
     let kv_bytes = (16 * 1024 * 2) as f64;
-    tab.row(&[
-        "kv cluster+delta+zstd".into(),
-        humanfmt::bytes(kv_bytes as u64),
-        humanfmt::nanos(kc * 1e9),
-        humanfmt::rate(kv_bytes / kc),
-    ]);
+    b.row("kv cluster+delta+zstd", humanfmt::bytes(kv_bytes as u64), kc, kv_bytes);
 
-    // DRAM sim command rate
+    // ---- batched compress path: serial seed-style vs lane sweep ----
+    // 64 weight blocks of 2048 bf16 codes (4 KB logical each) — the
+    // store_weights inner loop. The serial baseline reproduces the seed's
+    // allocation-heavy path (fresh tables + fresh Vec per plane).
+    let nblocks = 64usize;
+    let blocks: Vec<Vec<u16>> = (0..nblocks)
+        .map(|i| codes[i * 2048..(i + 1) * 2048].to_vec())
+        .collect();
+    let batch_bytes = (nblocks * 2048 * 2) as f64;
+    let codec = Codec::Zstd;
+    let serial_seed = time(
+        || {
+            for bc in &blocks {
+                let pb = disaggregate(Dtype::Bf16, bc);
+                for p in pb.planes() {
+                    let c = codec.compress(p);
+                    std::hint::black_box(if c.len() < p.len() { c } else { p.to_vec() });
+                }
+            }
+        },
+        3,
+    );
+    b.row(
+        "batch compress serial seed-style",
+        humanfmt::bytes(batch_bytes as u64),
+        serial_seed,
+        batch_bytes,
+    );
+    let mut lane_rates: Vec<(usize, f64)> = Vec::new();
+    for lanes in [1usize, 2, 4, 8, 16, 32] {
+        let la = LaneArray::new(lanes);
+        let t = time(
+            || {
+                let out = la.run(&blocks, |lane, bc| {
+                    let pb = disaggregate(Dtype::Bf16, bc);
+                    let mut payload = Vec::new();
+                    let dir = lane.compress_planes(&pb, codec, &mut payload);
+                    (dir, payload)
+                });
+                std::hint::black_box(out);
+            },
+            3,
+        );
+        b.row(
+            &format!("batch compress {lanes} lane(s)"),
+            humanfmt::bytes(batch_bytes as u64),
+            t,
+            batch_bytes,
+        );
+        lane_rates.push((lanes, batch_bytes / t));
+    }
+    // decode sweep over the same blocks
+    let stored: Vec<(Vec<(u32, bool)>, Vec<u8>)> = {
+        let la = LaneArray::new(1);
+        la.run(&blocks, |lane, bc| {
+            let pb = disaggregate(Dtype::Bf16, bc);
+            let mut payload = Vec::new();
+            let dir = lane.compress_planes(&pb, codec, &mut payload);
+            (dir, payload)
+        })
+    };
+    for lanes in [1usize, 8, 32] {
+        let la = LaneArray::new(lanes);
+        let t = time(
+            || {
+                let out = la.run(&stored, |lane, (dir, payload)| {
+                    lane.decode_planes(Dtype::Bf16, 2048, codec, dir, payload, 16)
+                        .unwrap()
+                });
+                std::hint::black_box(out);
+            },
+            3,
+        );
+        b.row(
+            &format!("batch decompress {lanes} lane(s)"),
+            humanfmt::bytes(batch_bytes as u64),
+            t,
+            batch_bytes,
+        );
+    }
+
+    // ---- DRAM sim command rate ----
     let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
     let t0 = Instant::now();
     let sim_bytes = 32u64 << 20;
     let cycles = mem.run_stream_read(0, sim_bytes);
     let wall = t0.elapsed().as_secs_f64();
-    tab.row(&[
+    b.tab.row(&[
         "dram sim (streaming)".into(),
         format!("{cycles} cyc"),
         humanfmt::nanos(wall * 1e9),
         format!("{:.1} Mcyc/s", cycles as f64 / wall / 1e6),
     ]);
+    b.json.insert(
+        "dram_sim_streaming_cycles_per_sec".into(),
+        Json::Num((cycles as f64 / wall).round()),
+    );
 
-    tab.print();
+    b.tab.print();
+
+    // lane-scaling summary (the acceptance metric: >=2x at 8 lanes)
+    let serial_rate = batch_bytes / serial_seed;
+    println!("\n== lane scaling (batched zstd compress, vs serial seed-style) ==");
+    for &(lanes, rate) in &lane_rates {
+        println!(
+            "  {lanes:>2} lanes: {}  ({:.2}x serial)",
+            humanfmt::rate(rate),
+            rate / serial_rate
+        );
+    }
+
+    let npaths = b.json.len();
+    let json = Json::Obj(b.json);
+    std::fs::write("BENCH_hotpath.json", json.to_string() + "\n")
+        .expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json ({npaths} paths)");
 }

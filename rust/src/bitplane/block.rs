@@ -40,15 +40,14 @@ impl CompressedBlock {
     pub fn compress(dtype: Dtype, codes: &[u16], codec: Codec) -> Self {
         let pb = disaggregate(dtype, codes);
         let planes = pb
-            .planes
-            .iter()
+            .planes()
             .map(|p| {
                 let c = codec.compress(p);
                 if c.len() < p.len() {
                     StoredPlane { payload: c, raw: false }
                 } else {
                     StoredPlane {
-                        payload: p.clone(),
+                        payload: p.to_vec(),
                         raw: true,
                     }
                 }
@@ -112,7 +111,7 @@ pub fn per_plane_ratios(dtype: Dtype, codes: &[u16], codec: Codec, block: usize)
     // build full planes over the whole tensor, then compress blockwise
     let pb = disaggregate(dtype, codes);
     for p in 0..n {
-        let data = &pb.planes[p];
+        let data = pb.plane(p);
         let comp = crate::compress::codec::block_compressed_size(codec, data, block);
         ratios.push(data.len() as f64 / comp.max(1) as f64);
     }
@@ -133,8 +132,7 @@ pub fn plane_major_ratio(dtype: Dtype, codes: &[u16], codec: Codec, block: usize
     let pb: PlaneBlock = disaggregate(dtype, codes);
     let orig: usize = (codes.len() * dtype.bits() as usize).div_ceil(8);
     let comp: usize = pb
-        .planes
-        .iter()
+        .planes()
         .map(|p| crate::compress::codec::block_compressed_size(codec, p, block))
         .sum();
     orig as f64 / comp.max(1) as f64

@@ -6,6 +6,12 @@
 //! plane-major byte stream is exactly a partial-precision fetch
 //! ("read only bit-planes 8..15 of FP16" in the paper's Fig 5).
 //!
+//! The planes live in ONE contiguous plane-major buffer (`num_planes ×
+//! plane_bytes` bytes) — the same layout the frame stores on DRAM — so
+//! [`PlaneBlock::prefix_bytes`] and [`PlaneBlock::all_bytes`] are
+//! zero-copy slices and a compression lane can stream planes without
+//! per-plane allocations.
+//!
 //! The hot path is a word-parallel bit-matrix transpose: 16 codes are
 //! viewed as a 16×16 bit matrix in four u64 words and transposed with the
 //! classic Hacker's-Delight mask-shift network, then planes of 8 codes are
@@ -20,30 +26,56 @@ pub struct PlaneBlock {
     pub dtype: Dtype,
     /// Number of codes in the block.
     pub m: usize,
-    /// Plane payloads, `planes[0]` = MSB plane (sign), each
-    /// `ceil(m/8)` bytes, bit j of byte k = code `8k+j`'s bit.
-    pub planes: Vec<Vec<u8>>,
+    /// Plane payloads as one contiguous buffer: plane 0 (MSB/sign) first,
+    /// each plane `ceil(m/8)` bytes, bit j of byte k = code `8k+j`'s bit.
+    data: Vec<u8>,
+    plane_bytes: usize,
 }
 
 impl PlaneBlock {
+    /// Build from an already plane-major flat buffer
+    /// (`dtype.bits() * ceil(m/8)` bytes, MSB plane first).
+    pub fn from_flat(dtype: Dtype, m: usize, data: Vec<u8>) -> Self {
+        let pb = m.div_ceil(8);
+        assert_eq!(data.len(), dtype.bits() as usize * pb, "flat plane size");
+        Self {
+            dtype,
+            m,
+            data,
+            plane_bytes: pb,
+        }
+    }
+
+    /// Number of planes (== `dtype.bits()`).
+    pub fn num_planes(&self) -> usize {
+        self.dtype.bits() as usize
+    }
+
     /// Bytes per plane.
     pub fn plane_bytes(&self) -> usize {
-        self.m.div_ceil(8)
+        self.plane_bytes
     }
 
-    /// Concatenate the top `keep` planes (a partial fetch payload).
-    pub fn prefix_bytes(&self, keep: u32) -> Vec<u8> {
+    /// One plane's payload (plane 0 = MSB/sign).
+    pub fn plane(&self, p: usize) -> &[u8] {
+        &self.data[p * self.plane_bytes..(p + 1) * self.plane_bytes]
+    }
+
+    /// Iterate planes MSB-first.
+    pub fn planes(&self) -> impl Iterator<Item = &[u8]> + '_ {
+        (0..self.num_planes()).map(move |p| self.plane(p))
+    }
+
+    /// The top `keep` planes as one contiguous slice (a partial fetch
+    /// payload) — zero-copy.
+    pub fn prefix_bytes(&self, keep: u32) -> &[u8] {
         let keep = keep.min(self.dtype.bits()) as usize;
-        let mut out = Vec::with_capacity(keep * self.plane_bytes());
-        for p in &self.planes[..keep] {
-            out.extend_from_slice(p);
-        }
-        out
+        &self.data[..keep * self.plane_bytes]
     }
 
-    /// Concatenate all planes.
-    pub fn all_bytes(&self) -> Vec<u8> {
-        self.prefix_bytes(self.dtype.bits())
+    /// All planes as one contiguous slice — zero-copy.
+    pub fn all_bytes(&self) -> &[u8] {
+        &self.data
     }
 }
 
@@ -52,7 +84,7 @@ pub fn disaggregate(dtype: Dtype, codes: &[u16]) -> PlaneBlock {
     let n = dtype.bits() as usize;
     let m = codes.len();
     let pb = m.div_ceil(8);
-    let mut planes = vec![vec![0u8; pb]; n];
+    let mut data = vec![0u8; n * pb];
 
     // Process 16 codes at a time with a 16x16 bit transpose.
     let chunks = m / 16;
@@ -74,9 +106,9 @@ pub fn disaggregate(dtype: Dtype, codes: &[u16]) -> PlaneBlock {
         for i in 0..n {
             let row = ((t[i / 4] >> (16 * (i % 4))) & 0xFFFF) as u16;
             let plane = n - 1 - i; // planes are MSB-first
-            let byte0 = base / 8;
-            planes[plane][byte0] = (row & 0xFF) as u8;
-            planes[plane][byte0 + 1] = (row >> 8) as u8;
+            let o = plane * pb + base / 8;
+            data[o] = (row & 0xFF) as u8;
+            data[o + 1] = (row >> 8) as u8;
         }
     }
     // tail: scalar path
@@ -85,17 +117,23 @@ pub fn disaggregate(dtype: Dtype, codes: &[u16]) -> PlaneBlock {
         for i in 0..n {
             if (code >> i) & 1 == 1 {
                 let plane = n - 1 - i;
-                planes[plane][idx / 8] |= 1 << (idx % 8);
+                data[plane * pb + idx / 8] |= 1 << (idx % 8);
             }
         }
     }
-    PlaneBlock { dtype, m, planes }
+    PlaneBlock {
+        dtype,
+        m,
+        data,
+        plane_bytes: pb,
+    }
 }
 
 /// Reaggregate planes back into codes. `keep` planes may be fewer than the
 /// dtype's width — missing low planes are zero-filled (partial-precision
-/// read). `planes` must each have `ceil(m/8)` bytes.
-pub fn reaggregate(dtype: Dtype, m: usize, planes: &[Vec<u8>]) -> Vec<u16> {
+/// read). Each plane must have `ceil(m/8)` bytes. Accepts any slice of
+/// byte-slice-like planes (`&[Vec<u8>]`, `&[&[u8]]`, ...).
+pub fn reaggregate<P: AsRef<[u8]>>(dtype: Dtype, m: usize, planes: &[P]) -> Vec<u16> {
     let n = dtype.bits() as usize;
     let keep = planes.len().min(n);
     let mut codes = vec![0u16; m];
@@ -105,6 +143,7 @@ pub fn reaggregate(dtype: Dtype, m: usize, planes: &[Vec<u8>]) -> Vec<u16> {
         // build rows: row i = bits for plane index (n-1-i)
         let mut w = [0u64; 4];
         for (p, plane) in planes.iter().enumerate().take(keep) {
+            let plane = plane.as_ref();
             let i = n - 1 - p; // bit index
             let row = (plane[base / 8] as u64) | ((plane[base / 8 + 1] as u64) << 8);
             w[i / 4] |= row << (16 * (i % 4));
@@ -119,6 +158,7 @@ pub fn reaggregate(dtype: Dtype, m: usize, planes: &[Vec<u8>]) -> Vec<u16> {
     for idx in chunks * 16..m {
         let mut code = 0u16;
         for (p, plane) in planes.iter().enumerate().take(keep) {
+            let plane = plane.as_ref();
             let i = n - 1 - p;
             if (plane[idx / 8] >> (idx % 8)) & 1 == 1 {
                 code |= 1 << i;
@@ -127,6 +167,20 @@ pub fn reaggregate(dtype: Dtype, m: usize, planes: &[Vec<u8>]) -> Vec<u16> {
         codes[idx] = code;
     }
     codes
+}
+
+/// Reaggregate directly from a contiguous plane-major buffer holding (at
+/// least) the top `keep` planes of `ceil(m/8)` bytes each — the zero-copy
+/// counterpart of [`reaggregate`] for [`PlaneBlock::prefix_bytes`] /
+/// engine-lane staging buffers.
+pub fn reaggregate_flat(dtype: Dtype, m: usize, flat: &[u8], keep: usize) -> Vec<u16> {
+    let pb = m.div_ceil(8);
+    let keep = keep.min(dtype.bits() as usize);
+    if pb == 0 || keep == 0 {
+        return vec![0u16; m];
+    }
+    let views: Vec<&[u8]> = flat[..keep * pb].chunks_exact(pb).collect();
+    reaggregate(dtype, m, &views)
 }
 
 /// Transpose a 16×16 bit matrix held in 4 u64 words.
@@ -186,15 +240,16 @@ mod tests {
     fn naive_disaggregate(dtype: Dtype, codes: &[u16]) -> PlaneBlock {
         let n = dtype.bits() as usize;
         let m = codes.len();
-        let mut planes = vec![vec![0u8; m.div_ceil(8)]; n];
+        let pb = m.div_ceil(8);
+        let mut data = vec![0u8; n * pb];
         for (idx, &code) in codes.iter().enumerate() {
             for i in 0..n {
                 if (code >> i) & 1 == 1 {
-                    planes[n - 1 - i][idx / 8] |= 1 << (idx % 8);
+                    data[(n - 1 - i) * pb + idx / 8] |= 1 << (idx % 8);
                 }
             }
         }
-        PlaneBlock { dtype, m, planes }
+        PlaneBlock::from_flat(dtype, m, data)
     }
 
     #[test]
@@ -259,9 +314,14 @@ mod tests {
             let mask = ((1u32 << d.bits()) - 1) as u16;
             let codes: Vec<u16> = g.u16s(600).iter().map(|&c| c & mask).collect();
             let pb = disaggregate(d, &codes);
-            let back = reaggregate(d, codes.len(), &pb.planes);
+            let back = reaggregate_flat(d, codes.len(), pb.all_bytes(), pb.num_planes());
             if back != codes {
                 return Err(format!("roundtrip d={d:?} n={}", codes.len()));
+            }
+            // slice-of-planes path must agree with the flat path
+            let views: Vec<&[u8]> = pb.planes().collect();
+            if reaggregate(d, codes.len(), &views) != back {
+                return Err(format!("flat vs views d={d:?}"));
             }
             Ok(())
         });
@@ -275,7 +335,7 @@ mod tests {
             let codes: Vec<u16> = g.u16s(300);
             let pb = disaggregate(d, &codes);
             let keep = g.usize_in(0, 16);
-            let back = reaggregate(d, codes.len(), &pb.planes[..keep]);
+            let back = reaggregate_flat(d, codes.len(), pb.prefix_bytes(keep as u32), keep);
             for (i, (&c, &b)) in codes.iter().zip(&back).enumerate() {
                 let want = crate::fmt::truncate_to_planes(c, d, keep as u32);
                 if b != want {
@@ -290,11 +350,27 @@ mod tests {
     fn plane_sizes() {
         let codes = vec![0u16; 100];
         let pb = disaggregate(Dtype::Bf16, &codes);
-        assert_eq!(pb.planes.len(), 16);
+        assert_eq!(pb.num_planes(), 16);
         assert_eq!(pb.plane_bytes(), 13);
         assert_eq!(pb.all_bytes().len(), 16 * 13);
         assert_eq!(pb.prefix_bytes(8).len(), 8 * 13);
         assert_eq!(pb.prefix_bytes(99).len(), 16 * 13);
+        assert_eq!(pb.plane(3).len(), 13);
+        assert_eq!(pb.planes().count(), 16);
+    }
+
+    #[test]
+    fn prefix_is_a_view_of_all_bytes() {
+        // the zero-copy contract: prefix planes are literally the head of
+        // the flat buffer, concatenated in MSB-first order
+        let codes: Vec<u16> = (0..333).map(|i| (i * 2654435761u32) as u16).collect();
+        let pb = disaggregate(Dtype::Bf16, &codes);
+        let mut manual = Vec::new();
+        for p in 0..5 {
+            manual.extend_from_slice(pb.plane(p));
+        }
+        assert_eq!(pb.prefix_bytes(5), &manual[..]);
+        assert_eq!(&pb.all_bytes()[..manual.len()], &manual[..]);
     }
 
     #[test]
@@ -310,9 +386,9 @@ mod tests {
             .collect();
         let pb = disaggregate(Dtype::Bf16, &codes);
         // planes[1..=4] are the top exponent bits (below sign)
-        let h_exp: f64 = (1..=4).map(|p| bit_entropy(&pb.planes[p])).sum::<f64>() / 4.0;
+        let h_exp: f64 = (1..=4).map(|p| bit_entropy(pb.plane(p))).sum::<f64>() / 4.0;
         // planes[12..16] are low mantissa bits
-        let h_man: f64 = (12..16).map(|p| bit_entropy(&pb.planes[p])).sum::<f64>() / 4.0;
+        let h_man: f64 = (12..16).map(|p| bit_entropy(pb.plane(p))).sum::<f64>() / 4.0;
         assert!(
             h_exp < 0.5 && h_man > 0.9,
             "exponent planes H={h_exp:.3}, mantissa planes H={h_man:.3}"

@@ -5,4 +5,4 @@ pub mod block;
 pub mod layout;
 
 pub use block::{per_plane_ratios, plane_major_ratio, value_major_ratio, CompressedBlock};
-pub use layout::{disaggregate, reaggregate, transpose16, PlaneBlock};
+pub use layout::{disaggregate, reaggregate, reaggregate_flat, transpose16, PlaneBlock};

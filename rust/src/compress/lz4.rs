@@ -28,22 +28,67 @@ fn read_u32(data: &[u8], i: usize) -> u32 {
     u32::from_le_bytes(data[i..i + 4].try_into().unwrap())
 }
 
+/// Reusable compressor state: the hash table survives across calls, so a
+/// hot loop (an engine lane) performs no per-block allocation — and no
+/// per-block table clear either: entries are epoch-tagged (high 32 bits),
+/// so stale entries from earlier blocks read as empty. Candidate
+/// visibility is identical to a freshly zeroed table, so output is
+/// byte-identical to the one-shot [`compress`].
+#[derive(Debug, Default)]
+pub struct Lz4Scratch {
+    /// entry = (epoch << 32) | (position + 1); wrong-epoch or zero = empty.
+    table: Vec<u64>,
+    epoch: u32,
+}
+
+const EPOCH_HI: u64 = 0xFFFF_FFFF_0000_0000;
+
+impl Lz4Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance the epoch (clearing only on alloc or epoch wrap) and return
+    /// the table plus this block's epoch tag.
+    fn reset(&mut self) -> (&mut [u64], u64) {
+        if self.table.len() != 1 << HASH_LOG {
+            self.table = vec![0u64; 1 << HASH_LOG];
+            self.epoch = 0;
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.table.fill(0);
+            self.epoch = 1;
+        }
+        ((self.table.as_mut_slice()), (self.epoch as u64) << 32)
+    }
+}
+
 /// Compress `src` into LZ4 block format. Always succeeds (worst case
 /// expands by ~0.4% + 16 bytes, like the reference `LZ4_compressBound`).
 pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut dst = Vec::new();
+    compress_into(src, &mut Lz4Scratch::new(), &mut dst);
+    dst
+}
+
+/// Compress into a caller-provided buffer (cleared first) with reusable
+/// scratch. Byte-identical to [`compress`].
+pub fn compress_into(src: &[u8], scratch: &mut Lz4Scratch, dst: &mut Vec<u8>) {
+    dst.clear();
     let n = src.len();
-    let mut dst = Vec::with_capacity(n + n / 255 + 16);
+    dst.reserve(n + n / 255 + 16);
     if n == 0 {
         // empty input: single token 0x00 (zero literals, no match)
         dst.push(0);
-        return dst;
+        return;
     }
     if n < MFLIMIT + 1 {
-        emit_last_literals(&mut dst, src);
-        return dst;
+        emit_last_literals(dst, src);
+        return;
     }
 
-    let mut table = vec![0u32; 1 << HASH_LOG]; // position+1; 0 = empty
+    let (table, epoch) = scratch.reset();
     let match_limit = n - MFLIMIT; // no match may start at/after this
     let mut anchor = 0usize;
     let mut i = 0usize;
@@ -51,8 +96,9 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
     while i < match_limit {
         // find a match at i
         let h = hash4(read_u32(src, i));
-        let cand = table[h] as usize;
-        table[h] = (i + 1) as u32;
+        let e = table[h];
+        let cand = if e & EPOCH_HI == epoch { e as u32 as usize } else { 0 };
+        table[h] = epoch | (i + 1) as u64;
         let found = cand > 0 && {
             let c = cand - 1;
             i - c <= MAX_OFFSET && read_u32(src, c) == read_u32(src, i)
@@ -81,7 +127,7 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
         // emit sequence: literals [anchor, mstart) + match (offset, mlen)
         let lit_len = mstart - anchor;
         let offset = mstart - mcand;
-        emit_sequence(&mut dst, &src[anchor..mstart], offset, mlen);
+        emit_sequence(dst, &src[anchor..mstart], offset, mlen);
         let _ = lit_len;
 
         i = mstart + mlen;
@@ -91,13 +137,12 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
             // repetitive data, same as the reference implementation)
             if i >= 2 {
                 let p = i - 2;
-                table[hash4(read_u32(src, p))] = (p + 1) as u32;
+                table[hash4(read_u32(src, p))] = epoch | (p + 1) as u64;
             }
         }
     }
 
-    emit_last_literals(&mut dst, &src[anchor..]);
-    dst
+    emit_last_literals(dst, &src[anchor..]);
 }
 
 fn emit_len_extension(dst: &mut Vec<u8>, mut rem: usize) {
@@ -161,6 +206,18 @@ impl std::error::Error for Lz4Error {}
 /// frame header carries it, as does every real container format).
 pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, Lz4Error> {
     let mut out = Vec::with_capacity(expected);
+    decompress_append(src, expected, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress an LZ4 block, APPENDING exactly `expected` bytes to `out`
+/// (an engine lane stages consecutive planes in one flat buffer this way).
+/// Match offsets are resolved within the appended region only — prior
+/// contents of `out` are never referenced. On error `out` may hold a
+/// partial block; callers should treat the buffer as poisoned.
+pub fn decompress_append(src: &[u8], expected: usize, out: &mut Vec<u8>) -> Result<(), Lz4Error> {
+    let base = out.len();
+    out.reserve(expected);
     let mut i = 0usize;
     let n = src.len();
     loop {
@@ -189,15 +246,15 @@ pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, Lz4Error> {
         }
         out.extend_from_slice(&src[i..i + ll]);
         i += ll;
-        if out.len() > expected {
+        if out.len() - base > expected {
             return Err(Lz4Error::OutputOverrun);
         }
         if i == n {
             // end of block (last sequence is literals-only)
-            if out.len() != expected {
+            if out.len() - base != expected {
                 return Err(Lz4Error::Truncated);
             }
-            return Ok(out);
+            return Ok(());
         }
         // match
         if i + 2 > n {
@@ -205,7 +262,7 @@ pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, Lz4Error> {
         }
         let offset = u16::from_le_bytes([src[i], src[i + 1]]) as usize;
         i += 2;
-        if offset == 0 || offset > out.len() {
+        if offset == 0 || offset > out.len() - base {
             return Err(Lz4Error::BadOffset);
         }
         let mut ml = (token & 0xF) as usize;
@@ -223,7 +280,7 @@ pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, Lz4Error> {
             }
         }
         let ml = ml + MIN_MATCH;
-        if out.len() + ml > expected {
+        if out.len() - base + ml > expected {
             return Err(Lz4Error::OutputOverrun);
         }
         // overlapping copy, byte by byte when offset < ml
@@ -354,6 +411,43 @@ mod tests {
                 Ok(_) => Err("data mismatch".into()),
                 Err(e) => Err(format!("{e}")),
             }
+        });
+    }
+
+    #[test]
+    fn scratch_path_is_byte_identical_property() {
+        // One Lz4Scratch reused across many different inputs must produce
+        // exactly the one-shot stream every time — the engine-lane parity
+        // contract.
+        let mut scratch = Lz4Scratch::new();
+        let mut buf = Vec::new();
+        check("lz4_scratch_identical", 200, |g| {
+            let data = if g.rng.next_f64() < 0.5 {
+                g.bytes(8192)
+            } else {
+                g.compressible_bytes(16384)
+            };
+            compress_into(&data, &mut scratch, &mut buf);
+            if buf != compress(&data) {
+                return Err(format!("stream diverged at len {}", data.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decompress_append_is_offset_safe() {
+        // Appending onto a non-empty buffer must neither read prior bytes
+        // nor misplace the block.
+        check("lz4_decompress_append", 150, |g| {
+            let data = g.compressible_bytes(8192);
+            let c = compress(&data);
+            let mut out = b"prefix-bytes".to_vec();
+            decompress_append(&c, data.len(), &mut out).map_err(|e| e.to_string())?;
+            if &out[..12] != b"prefix-bytes" || &out[12..] != &data[..] {
+                return Err("append corrupted buffer".into());
+            }
+            Ok(())
         });
     }
 

@@ -14,4 +14,4 @@ pub mod huffman;
 pub mod lz4;
 pub mod zstdlike;
 
-pub use codec::{block_compression_ratio, footprint_reduction, Codec, PAPER_BLOCK};
+pub use codec::{block_compression_ratio, footprint_reduction, Codec, CodecScratch, PAPER_BLOCK};

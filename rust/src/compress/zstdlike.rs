@@ -64,7 +64,28 @@ fn to_code(v: u32) -> (u8, u32, u32) {
     (code as u8, v - (1 << code), code)
 }
 
-fn lz_parse(data: &[u8]) -> (Vec<Seq>, Vec<u8>) {
+/// Reusable match-finder state: the hash-head table and position chain
+/// survive across calls, with head entries epoch-tagged (high 32 bits) so
+/// stale entries from earlier blocks read as empty without a per-block
+/// table clear. Candidate visibility — and therefore output — is
+/// byte-identical to the one-shot path.
+#[derive(Debug, Default)]
+pub struct ZstdScratch {
+    /// entry = (epoch << 32) | position; wrong-epoch = empty.
+    head: Vec<u64>,
+    chain: Vec<u32>,
+    epoch: u32,
+}
+
+const EPOCH_HI: u64 = 0xFFFF_FFFF_0000_0000;
+
+impl ZstdScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+fn lz_parse(data: &[u8], scratch: &mut ZstdScratch) -> (Vec<Seq>, Vec<u8>) {
     let n = data.len();
     let mut seqs = Vec::new();
     let mut literals = Vec::with_capacity(n / 2);
@@ -75,16 +96,47 @@ fn lz_parse(data: &[u8]) -> (Vec<Seq>, Vec<u8>) {
         }
         return (seqs, literals);
     }
-    let mut head = vec![u32::MAX; 1 << HASH_LOG];
-    let mut chain = vec![u32::MAX; n];
+    if scratch.head.len() != 1 << HASH_LOG {
+        scratch.head = vec![0u64; 1 << HASH_LOG];
+        scratch.epoch = 0;
+    }
+    scratch.epoch = scratch.epoch.wrapping_add(1);
+    if scratch.epoch == 0 {
+        scratch.head.fill(0);
+        scratch.epoch = 1;
+    }
+    let epoch: u64 = (scratch.epoch as u64) << 32;
+    // the chain is position-indexed and fully re-initialized (O(n), not
+    // O(table)) per block
+    scratch.chain.clear();
+    scratch.chain.resize(n, u32::MAX);
+    let head: &mut [u64] = &mut scratch.head;
+    let chain: &mut [u32] = &mut scratch.chain;
     let mut anchor = 0usize;
     let mut i = 0usize;
     let limit = n - MIN_MATCH;
 
-    let find = |head: &[u32], chain: &[u32], i: usize| -> Option<(usize, usize)> {
+    #[inline]
+    fn head_get(head: &[u64], epoch: u64, h: usize) -> u32 {
+        let e = head[h];
+        if e & EPOCH_HI == epoch {
+            e as u32
+        } else {
+            u32::MAX
+        }
+    }
+
+    fn find(
+        data: &[u8],
+        head: &[u64],
+        chain: &[u32],
+        epoch: u64,
+        i: usize,
+    ) -> Option<(usize, usize)> {
+        let n = data.len();
         let mut best_len = MIN_MATCH - 1;
         let mut best_off = 0usize;
-        let mut cand = head[hash3(data, i)];
+        let mut cand = head_get(head, epoch, hash3(data, i));
         let mut tries = MAX_CHAIN;
         let max_len = n - i;
         while cand != u32::MAX && tries > 0 {
@@ -130,18 +182,19 @@ fn lz_parse(data: &[u8]) -> (Vec<Seq>, Vec<u8>) {
         } else {
             None
         }
-    };
+    }
+
+    fn insert(data: &[u8], head: &mut [u64], chain: &mut [u32], epoch: u64, p: usize) {
+        let h = hash3(data, p);
+        chain[p] = head_get(head, epoch, h);
+        head[h] = epoch | p as u64;
+    }
 
     while i <= limit {
-        let m = find(&head, &chain, i);
-        let insert = |head: &mut [u32], chain: &mut [u32], p: usize| {
-            let h = hash3(data, p);
-            chain[p] = head[h];
-            head[h] = p as u32;
-        };
+        let m = find(data, head, chain, epoch, i);
         match m {
             None => {
-                insert(&mut head, &mut chain, i);
+                insert(data, head, chain, epoch, i);
                 i += 1;
             }
             Some((mut mlen, moff)) => {
@@ -150,9 +203,9 @@ fn lz_parse(data: &[u8]) -> (Vec<Seq>, Vec<u8>) {
                 // for already-long matches (§Perf: halves the search work,
                 // no measurable ratio cost at >=16).
                 if i + 1 <= limit {
-                    insert(&mut head, &mut chain, i);
+                    insert(data, head, chain, epoch, i);
                     if mlen < 16 {
-                        if let Some((l2, _)) = find(&head, &chain, i + 1) {
+                        if let Some((l2, _)) = find(data, head, chain, epoch, i + 1) {
                             if l2 > mlen + 1 {
                                 i += 1;
                                 continue;
@@ -161,7 +214,7 @@ fn lz_parse(data: &[u8]) -> (Vec<Seq>, Vec<u8>) {
                     }
                     // note: i was inserted already
                 } else {
-                    insert(&mut head, &mut chain, i);
+                    insert(data, head, chain, epoch, i);
                 }
                 mlen = mlen.min(n - i);
                 let lit_len = (i - anchor) as u32;
@@ -175,7 +228,7 @@ fn lz_parse(data: &[u8]) -> (Vec<Seq>, Vec<u8>) {
                 let end = (i + mlen).min(limit + 1);
                 let mut p = i + 1;
                 while p < end {
-                    insert(&mut head, &mut chain, p);
+                    insert(data, head, chain, epoch, p);
                     p += 2;
                 }
                 i += mlen;
@@ -197,11 +250,21 @@ fn lz_parse(data: &[u8]) -> (Vec<Seq>, Vec<u8>) {
 /// Compress. Falls back to raw/rle framing when LZ+entropy doesn't help,
 /// so output is never more than `src.len() + 16` bytes.
 pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    compress_into(src, &mut ZstdScratch::new(), &mut out);
+    out
+}
+
+/// Compress into a caller-provided buffer (cleared first) with reusable
+/// match-finder scratch. Byte-identical to [`compress`].
+pub fn compress_into(src: &[u8], scratch: &mut ZstdScratch, out: &mut Vec<u8>) {
+    out.clear();
     // RLE fast path
     if !src.is_empty() && src.iter().all(|&b| b == src[0]) {
-        return vec![0xCA, 0x5D, 0x01, src[0]];
+        out.extend_from_slice(&[0xCA, 0x5D, 0x01, src[0]]);
+        return;
     }
-    let (seqs, literals) = lz_parse(src);
+    let (seqs, literals) = lz_parse(src, scratch);
 
     // Build the three auxiliary byte streams for entropy coding.
     let mut ll_codes = Vec::with_capacity(seqs.len()); // literal-length codes
@@ -242,35 +305,46 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
 
     if payload.len() + 3 >= src.len() + 3 {
         // raw fallback
-        let mut out = Vec::with_capacity(src.len() + 3);
+        out.reserve(src.len() + 3);
         out.extend_from_slice(&[0xCA, 0x5D, 0x00]);
         out.extend_from_slice(src);
-        return out;
+        return;
     }
-    let mut out = Vec::with_capacity(payload.len() + 3);
+    out.reserve(payload.len() + 3);
     out.extend_from_slice(&[0xCA, 0x5D, 0x02]);
     out.extend_from_slice(&payload);
-    out
 }
 
 /// Decompress a frame produced by [`compress`]. `expected` = original size.
 pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, ZstdError> {
+    let mut out = Vec::with_capacity(expected);
+    decompress_append(src, expected, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress a frame, APPENDING exactly `expected` bytes to `out`. Match
+/// offsets resolve within the appended region only. On error `out` may
+/// hold a partial block.
+pub fn decompress_append(src: &[u8], expected: usize, out: &mut Vec<u8>) -> Result<(), ZstdError> {
     if src.len() < 3 || src[0] != 0xCA || src[1] != 0x5D {
         return Err(ZstdError("bad magic"));
     }
+    let base = out.len();
     match src[2] {
         0x00 => {
             let body = &src[3..];
             if body.len() != expected {
                 return Err(ZstdError("raw size mismatch"));
             }
-            Ok(body.to_vec())
+            out.extend_from_slice(body);
+            Ok(())
         }
         0x01 => {
             if src.len() != 4 {
                 return Err(ZstdError("bad rle frame"));
             }
-            Ok(vec![src[3]; expected])
+            out.resize(base + expected, src[3]);
+            Ok(())
         }
         0x02 => {
             let mut r = BitReader::new(&src[3..]);
@@ -288,7 +362,7 @@ pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, ZstdError> {
                 .decode_into(&mut r, nlit, &mut literals)
                 .map_err(|_| ZstdError("literal stream"))?;
 
-            let mut out = Vec::with_capacity(expected);
+            out.reserve(expected);
             let mut lit_pos = 0usize;
             let mut tmp = Vec::with_capacity(1);
             for _ in 0..nseq {
@@ -316,10 +390,10 @@ pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, ZstdError> {
                 out.extend_from_slice(&literals[lit_pos..lit_pos + lit_len]);
                 lit_pos += lit_len;
                 if match_len > 0 {
-                    if offset == 0 || offset > out.len() {
+                    if offset == 0 || offset > out.len() - base {
                         return Err(ZstdError("bad offset"));
                     }
-                    if out.len() + match_len > expected {
+                    if out.len() - base + match_len > expected {
                         return Err(ZstdError("output overrun"));
                     }
                     let start = out.len() - offset;
@@ -333,10 +407,10 @@ pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>, ZstdError> {
                     }
                 }
             }
-            if out.len() != expected || lit_pos != literals.len() {
+            if out.len() - base != expected || lit_pos != literals.len() {
                 return Err(ZstdError("size mismatch"));
             }
-            Ok(out)
+            Ok(())
         }
         _ => Err(ZstdError("unknown mode")),
     }
@@ -453,6 +527,40 @@ mod tests {
         check("zstdlike_roundtrip_compressible", 200, |g| {
             let data = g.compressible_bytes(16384);
             rt(&data)
+        });
+    }
+
+    #[test]
+    fn scratch_path_is_byte_identical_property() {
+        // One ZstdScratch reused across many different inputs must produce
+        // exactly the one-shot frame every time.
+        let mut scratch = ZstdScratch::new();
+        let mut buf = Vec::new();
+        check("zstd_scratch_identical", 150, |g| {
+            let data = if g.rng.next_f64() < 0.5 {
+                g.bytes(8192)
+            } else {
+                g.compressible_bytes(16384)
+            };
+            compress_into(&data, &mut scratch, &mut buf);
+            if buf != compress(&data) {
+                return Err(format!("frame diverged at len {}", data.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decompress_append_is_offset_safe() {
+        check("zstd_decompress_append", 100, |g| {
+            let data = g.compressible_bytes(8192);
+            let c = compress(&data);
+            let mut out = vec![0xEEu8; 7];
+            decompress_append(&c, data.len(), &mut out).map_err(|e| e.to_string())?;
+            if out[..7] != [0xEE; 7] || &out[7..] != &data[..] {
+                return Err("append corrupted buffer".into());
+            }
+            Ok(())
         });
     }
 

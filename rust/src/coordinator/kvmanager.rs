@@ -9,6 +9,7 @@
 //! BF16 codes — exactly what a partial-plane fetch through the memory
 //! controller returns to the fabric.
 
+use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::fmt::{truncate_to_planes, Dtype};
 use crate::quant::policy::{ranks_from_scores, KvPolicy, PAGE_TOKENS};
@@ -31,11 +32,22 @@ pub struct PolicyPlan {
 /// Policy engine for one sequence.
 pub struct PolicyEngine {
     pub policy: KvPolicy,
+    /// Lane array the per-step degradation sweep is sharded across
+    /// (one work item per layer — disjoint cache slices).
+    pub lanes: LaneArray,
 }
 
 impl PolicyEngine {
     pub fn new(policy: KvPolicy) -> Self {
-        Self { policy }
+        Self::with_lanes(policy, crate::engine::default_lanes())
+    }
+
+    /// A policy engine with an explicit lane count (`1` = serial).
+    pub fn with_lanes(policy: KvPolicy, lanes: usize) -> Self {
+        Self {
+            policy,
+            lanes: LaneArray::new(lanes),
+        }
     }
 
     /// Quest scores per active page: sum over layers of
@@ -109,20 +121,38 @@ impl PolicyEngine {
                 continue;
             }
             fetched_bits += ((t1 - t0) * row * 2) as u64 * b as u64 * meta.layers as u64;
-            if b >= 16 {
-                continue; // full precision, nothing to degrade
-            }
-            for l in 0..meta.layers {
-                for t in t0..t1 {
-                    let off = (l * meta.max_seq + t) * row;
-                    for x in dk[off..off + row].iter_mut() {
-                        *x = degrade_f32(*x, b);
+        }
+        // The degradation sweep (BF16 encode → truncate → decode per
+        // element) is the per-step batch hot path; shard it across the
+        // lane array, one disjoint layer slice per work item. Values are
+        // element-wise pure, so the result is identical to the serial
+        // sweep.
+        let layer_elems = meta.max_seq * row;
+        let pos = kv.pos;
+        if layer_elems > 0 && bits.iter().any(|&b| b > 0 && b < 16) {
+            let items: Vec<(&mut [f32], &mut [f32])> = dk
+                .chunks_mut(layer_elems)
+                .zip(dv.chunks_mut(layer_elems))
+                .collect();
+            let bits_ref = &bits;
+            self.lanes.run_mut(items, move |_lane, (kl, vl)| {
+                for (p, &b) in bits_ref.iter().enumerate() {
+                    if b == 0 || b >= 16 {
+                        continue; // skipped page / full precision
                     }
-                    for x in dv[off..off + row].iter_mut() {
-                        *x = degrade_f32(*x, b);
+                    let t0 = p * PAGE_TOKENS;
+                    let t1 = ((p + 1) * PAGE_TOKENS).min(pos);
+                    for t in t0..t1 {
+                        let off = t * row;
+                        for x in kl[off..off + row].iter_mut() {
+                            *x = degrade_f32(*x, b);
+                        }
+                        for x in vl[off..off + row].iter_mut() {
+                            *x = degrade_f32(*x, b);
+                        }
                     }
                 }
-            }
+            });
         }
         PolicyPlan {
             mask,
@@ -255,6 +285,27 @@ mod tests {
         let plan = eng.plan(&kv, &m);
         assert_eq!(plan.page_bits[1], 16);
         assert_eq!(plan.page_bits[0], 0);
+    }
+
+    #[test]
+    fn lane_parallel_degrade_matches_serial() {
+        // Sharding the degradation sweep across lanes must not change a
+        // single value versus the serial sweep.
+        let m = meta();
+        let kv = kv_with(&m, 64, 9);
+        let policy = || KvPolicy::DynamicQuant {
+            tiers: vec![
+                PageTier { pages: 1, dtype: Dtype::Bf16 },
+                PageTier { pages: 2, dtype: Dtype::Fp8E4M3 },
+            ],
+        };
+        let serial = PolicyEngine::with_lanes(policy(), 1).plan(&kv, &m);
+        for lanes in [2usize, 4, 8] {
+            let par = PolicyEngine::with_lanes(policy(), lanes).plan(&kv, &m);
+            assert_eq!(par.degraded_k, serial.degraded_k, "{lanes} lanes k");
+            assert_eq!(par.degraded_v, serial.degraded_v, "{lanes} lanes v");
+            assert_eq!(par.page_bits, serial.page_bits, "{lanes} lanes bits");
+        }
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! The lane array: shards a batch of blocks across N OS threads.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::lane::{Lane, LaneStats};
+
+/// The paper's hardware lane count (Table IV: 32 lanes @ 512 Gbps).
+pub const PAPER_LANES: usize = 32;
+
+/// The paper's lane count capped at this host's available parallelism.
+pub fn default_lanes() -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    PAPER_LANES.min(hw)
+}
+
+/// An array of [`Lane`]s plus a work-sharing scheduler.
+///
+/// `run`/`run_mut` map a function over a batch of items: items are pulled
+/// from a shared cursor by whichever lane is free (dynamic load balance,
+/// like the hardware's block scheduler), results are returned in item
+/// order. Because lanes are data-pure, the output is byte-identical to a
+/// serial map — parallelism changes *where* a block runs, never what it
+/// produces. With one lane (or one item) everything runs inline on the
+/// caller thread, so a `LaneArray::new(1)` is the serial reference path.
+pub struct LaneArray {
+    lanes: Vec<Mutex<Lane>>,
+}
+
+impl LaneArray {
+    pub fn new(n: usize) -> Self {
+        Self {
+            lanes: (0..n.max(1)).map(|i| Mutex::new(Lane::new(i))).collect(),
+        }
+    }
+
+    /// `default_lanes()` lanes.
+    pub fn with_default_lanes() -> Self {
+        Self::new(default_lanes())
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Per-lane stats snapshot (index = lane id).
+    pub fn lane_stats(&self) -> Vec<LaneStats> {
+        self.lanes
+            .iter()
+            .map(|l| l.lock().expect("lane poisoned").stats)
+            .collect()
+    }
+
+    /// All lanes' stats merged.
+    pub fn total_stats(&self) -> LaneStats {
+        let mut t = LaneStats::default();
+        for s in self.lane_stats() {
+            t.merge(&s);
+        }
+        t
+    }
+
+    pub fn reset_stats(&self) {
+        for l in &self.lanes {
+            l.lock().expect("lane poisoned").stats = LaneStats::default();
+        }
+    }
+
+    /// Map `f` over `items` across the lanes; results keep item order.
+    pub fn run<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&mut Lane, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.lanes.len() == 1 || n <= 1 {
+            let mut lane = self.lanes[0].lock().expect("lane poisoned");
+            return items.iter().map(|it| f(&mut lane, it)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let nworkers = self.lanes.len().min(n);
+        let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self.lanes[..nworkers]
+                .iter()
+                .map(|lm| {
+                    let next = &next;
+                    let f = &f;
+                    s.spawn(move || {
+                        let mut lane = lm.lock().expect("lane poisoned");
+                        let mut local = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= items.len() {
+                                break;
+                            }
+                            local.push((i, f(&mut lane, &items[i])));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("lane worker panicked"))
+                .collect()
+        });
+        merge_ordered(n, parts)
+    }
+
+    /// Like [`LaneArray::run`] but consumes the items — for work that owns
+    /// mutable state (e.g. disjoint `&mut` slices of one tensor).
+    pub fn run_mut<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&mut Lane, T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.lanes.len() == 1 || n <= 1 {
+            let mut lane = self.lanes[0].lock().expect("lane poisoned");
+            return items.into_iter().map(|it| f(&mut lane, it)).collect();
+        }
+        let nworkers = self.lanes.len().min(n);
+        let queue: Mutex<VecDeque<(usize, T)>> =
+            Mutex::new(items.into_iter().enumerate().collect());
+        let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self.lanes[..nworkers]
+                .iter()
+                .map(|lm| {
+                    let queue = &queue;
+                    let f = &f;
+                    s.spawn(move || {
+                        let mut lane = lm.lock().expect("lane poisoned");
+                        let mut local = Vec::new();
+                        while let Some((i, it)) = {
+                            let mut q = queue.lock().expect("queue poisoned");
+                            q.pop_front()
+                        } {
+                            local.push((i, f(&mut lane, it)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("lane worker panicked"))
+                .collect()
+        });
+        merge_ordered(n, parts)
+    }
+}
+
+fn merge_ordered<R>(n: usize, parts: Vec<Vec<(usize, R)>>) -> Vec<R> {
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for part in parts {
+        for (i, r) in part {
+            slots[i] = Some(r);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|o| o.expect("missing lane result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::layout::disaggregate;
+    use crate::compress::Codec;
+    use crate::fmt::Dtype;
+    use crate::util::check::check;
+
+    #[test]
+    fn run_preserves_order_and_values() {
+        let la = LaneArray::new(4);
+        let items: Vec<usize> = (0..257).collect();
+        let got = la.run(&items, |_lane, &i| i * 3 + 1);
+        let want: Vec<usize> = items.iter().map(|&i| i * 3 + 1).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn run_mut_consumes_in_order() {
+        let la = LaneArray::new(3);
+        let items: Vec<String> = (0..100).map(|i| format!("s{i}")).collect();
+        let got = la.run_mut(items.clone(), |_lane, s| s + "!");
+        let want: Vec<String> = items.into_iter().map(|s| s + "!").collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn any_lane_count_is_byte_identical_property() {
+        // The core engine contract: compressing a batch of blocks through
+        // 2/3/8-lane arrays yields exactly the serial (1-lane) payloads.
+        check("lane_array_parity", 25, |g| {
+            let nblocks = g.usize_in(1, 12);
+            let blocks: Vec<Vec<u16>> = (0..nblocks)
+                .map(|_| g.u16s(600))
+                .collect();
+            let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+            let work = |lane: &mut Lane, codes: &Vec<u16>| {
+                let pb = disaggregate(Dtype::Bf16, codes);
+                let mut payload = Vec::new();
+                let dir = lane.compress_planes(&pb, codec, &mut payload);
+                (dir, payload)
+            };
+            let serial = LaneArray::new(1).run(&blocks, work);
+            for lanes in [2usize, 3, 8] {
+                let par = LaneArray::new(lanes).run(&blocks, work);
+                if par != serial {
+                    return Err(format!("{lanes} lanes diverged ({codec})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_accumulate_across_lanes() {
+        let la = LaneArray::new(2);
+        let blocks: Vec<Vec<u16>> = (0..8).map(|i| vec![i as u16; 512]).collect();
+        la.run(&blocks, |lane, codes| {
+            let pb = disaggregate(Dtype::Bf16, codes);
+            let mut payload = Vec::new();
+            lane.compress_planes(&pb, Codec::Lz4, &mut payload);
+        });
+        let total = la.total_stats();
+        assert_eq!(total.blocks, 8);
+        assert!(total.bytes_in > 0 && total.bytes_out > 0);
+        la.reset_stats();
+        assert_eq!(la.total_stats(), LaneStats::default());
+    }
+
+    #[test]
+    fn default_lanes_respects_caps() {
+        let d = default_lanes();
+        assert!(d >= 1 && d <= PAPER_LANES);
+    }
+}

@@ -1,0 +1,204 @@
+//! One (de)compression lane: reusable scratch + block entry points.
+
+use std::time::Instant;
+
+use crate::bitplane::layout::{reaggregate_flat, PlaneBlock};
+use crate::compress::codec::CodecScratch;
+use crate::compress::Codec;
+use crate::fmt::Dtype;
+
+/// Per-lane traffic accounting (mirrors the per-lane counters the paper's
+/// Table IV hardware exposes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LaneStats {
+    /// Blocks processed (compress + decode).
+    pub blocks: u64,
+    /// Raw plane bytes consumed (compress) / produced (decode).
+    pub bytes_in: u64,
+    /// Stored bytes produced (compress) / consumed (decode).
+    pub bytes_out: u64,
+    /// Wall time spent inside lane entry points, ns.
+    pub busy_ns: u64,
+}
+
+impl LaneStats {
+    pub fn merge(&mut self, o: &LaneStats) {
+        self.blocks += o.blocks;
+        self.bytes_in += o.bytes_in;
+        self.bytes_out += o.bytes_out;
+        self.busy_ns += o.busy_ns;
+    }
+
+    /// Raw-side throughput while busy, bytes/sec.
+    pub fn throughput_bps(&self) -> f64 {
+        if self.busy_ns == 0 {
+            0.0
+        } else {
+            self.bytes_in as f64 / (self.busy_ns as f64 * 1e-9)
+        }
+    }
+}
+
+/// A software model of one of the paper's 32 pipeline lanes: it owns every
+/// buffer the block path needs (LZ4 hash table, zstd match-finder tables,
+/// compressed-plane staging, decompressed-plane staging) so the steady
+/// state allocates nothing but the output frames themselves. Lanes are
+/// *pure* with respect to data: scratch reuse never changes a single
+/// output byte versus the one-shot serial path.
+#[derive(Debug, Default)]
+pub struct Lane {
+    pub id: usize,
+    scratch: CodecScratch,
+    /// Staging for one compressed plane.
+    comp_buf: Vec<u8>,
+    /// Flat plane-major staging for decoded planes.
+    plane_buf: Vec<u8>,
+    pub stats: LaneStats,
+}
+
+impl Lane {
+    pub fn new(id: usize) -> Self {
+        Self {
+            id,
+            ..Self::default()
+        }
+    }
+
+    /// Compress every plane of `pb`, appending the chosen payloads
+    /// (compressed, or raw when compression does not help) to `payload`.
+    /// Returns the per-plane `(stored_len, raw)` directory — exactly the
+    /// frame header's plane directory. Byte-identical to compressing each
+    /// plane with [`Codec::compress`].
+    pub fn compress_planes(
+        &mut self,
+        pb: &PlaneBlock,
+        codec: Codec,
+        payload: &mut Vec<u8>,
+    ) -> Vec<(u32, bool)> {
+        let t0 = Instant::now();
+        let start = payload.len();
+        let mut dir = Vec::with_capacity(pb.num_planes());
+        for p in pb.planes() {
+            codec.compress_into(p, &mut self.scratch, &mut self.comp_buf);
+            if self.comp_buf.len() < p.len() {
+                dir.push((self.comp_buf.len() as u32, false));
+                payload.extend_from_slice(&self.comp_buf);
+            } else {
+                dir.push((p.len() as u32, true));
+                payload.extend_from_slice(p);
+            }
+        }
+        self.stats.blocks += 1;
+        self.stats.bytes_in += (pb.num_planes() * pb.plane_bytes()) as u64;
+        self.stats.bytes_out += (payload.len() - start) as u64;
+        self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
+        dir
+    }
+
+    /// Decode the top `keep` planes of a stored block (per-plane `dir` over
+    /// the concatenated `payload`) back into codes, staging decompressed
+    /// planes in the lane's flat buffer (low planes zero-filled).
+    pub fn decode_planes(
+        &mut self,
+        dtype: Dtype,
+        m: usize,
+        codec: Codec,
+        dir: &[(u32, bool)],
+        payload: &[u8],
+        keep: usize,
+    ) -> anyhow::Result<Vec<u16>> {
+        let t0 = Instant::now();
+        let pbytes = m.div_ceil(8);
+        let keep = keep.min(dir.len());
+        self.plane_buf.clear();
+        let mut off = 0usize;
+        let mut stored = 0usize;
+        for (i, &(len, raw)) in dir.iter().enumerate() {
+            if i >= keep {
+                break;
+            }
+            let len = len as usize;
+            let src = payload
+                .get(off..off + len)
+                .ok_or_else(|| anyhow::anyhow!("plane {i} payload truncated"))?;
+            if raw {
+                anyhow::ensure!(src.len() == pbytes, "raw plane size");
+                self.plane_buf.extend_from_slice(src);
+            } else {
+                codec.decompress_append(src, pbytes, &mut self.plane_buf)?;
+            }
+            off += len;
+            stored += len;
+        }
+        let codes = reaggregate_flat(dtype, m, &self.plane_buf, keep);
+        self.stats.blocks += 1;
+        self.stats.bytes_in += self.plane_buf.len() as u64;
+        self.stats.bytes_out += stored as u64;
+        self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
+        Ok(codes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::layout::disaggregate;
+    use crate::util::check::check;
+
+    #[test]
+    fn lane_roundtrip_and_parity_property() {
+        // A reused lane must (a) reproduce the serial per-plane streams
+        // byte-for-byte and (b) round-trip through decode_planes at any
+        // keep depth.
+        let mut lane = Lane::new(0);
+        check("lane_roundtrip", 120, |g| {
+            let dts = [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Int4];
+            let d = dts[g.rng.index(dts.len())];
+            let mask = ((1u32 << d.bits()) - 1) as u16;
+            let codes: Vec<u16> = g.u16s(800).iter().map(|&c| c & mask).collect();
+            let pb = disaggregate(d, &codes);
+            for codec in [Codec::Lz4, Codec::Zstd] {
+                let mut payload = Vec::new();
+                let dir = lane.compress_planes(&pb, codec, &mut payload);
+                // serial reference
+                let mut want = Vec::new();
+                for p in pb.planes() {
+                    let c = codec.compress(p);
+                    if c.len() < p.len() {
+                        want.extend_from_slice(&c);
+                    } else {
+                        want.extend_from_slice(p);
+                    }
+                }
+                if payload != want {
+                    return Err(format!("{codec} {d:?}: payload diverged"));
+                }
+                let keep = g.usize_in(0, d.bits() as usize);
+                let got = lane
+                    .decode_planes(d, codes.len(), codec, &dir, &payload, keep)
+                    .map_err(|e| e.to_string())?;
+                for (i, (&c, &b)) in codes.iter().zip(&got).enumerate() {
+                    let want = crate::fmt::truncate_to_planes(c, d, keep as u32);
+                    if b != want {
+                        return Err(format!("{codec} {d:?} i={i} keep={keep}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+        assert!(lane.stats.blocks > 0 && lane.stats.busy_ns > 0);
+    }
+
+    #[test]
+    fn decode_rejects_truncated_payload() {
+        let mut lane = Lane::new(0);
+        let codes: Vec<u16> = (0..512).map(|i| (i * 7) as u16).collect();
+        let pb = disaggregate(Dtype::Bf16, &codes);
+        let mut payload = Vec::new();
+        let dir = lane.compress_planes(&pb, Codec::Zstd, &mut payload);
+        payload.truncate(payload.len() / 2);
+        assert!(lane
+            .decode_planes(Dtype::Bf16, 512, Codec::Zstd, &dir, &payload, 16)
+            .is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! # The multi-lane compression engine (paper Table IV, §III-C)
+//!
+//! The paper's controller reaches 8 TB/s because (de)compression is not
+//! one unit but **32 parallel lanes**, each a fixed-function pipeline fed
+//! bit-plane blocks by a scheduler sitting between the SRAM staging banks
+//! and the DRAM channels. This module is the software analog, and every
+//! batch of block traffic in the model flows through it:
+//!
+//! * weight/KV stores in [`crate::memctrl::MemController`],
+//! * frame decode on partial-precision loads,
+//! * KV group batches in [`crate::kvcluster`],
+//! * page degradation sweeps in [`crate::coordinator::kvmanager`].
+//!
+//! ## Lane model
+//!
+//! A [`Lane`] is one worker pinned to one OS thread for the duration of a
+//! batch. [`LaneArray::run`] shards a batch over the lanes with a shared
+//! atomic cursor (dynamic load balance — a lane that draws an
+//! incompressible block simply pulls fewer items), and reassembles results
+//! in item order. The default lane count is the paper's 32, capped at the
+//! host's available parallelism ([`default_lanes`]).
+//!
+//! ## Scratch reuse
+//!
+//! Each lane owns every buffer the block path needs — the LZ4 hash table,
+//! the zstd-class hash-head/chain tables, a compressed-plane staging
+//! buffer, and a flat decompressed-plane staging buffer. Hash tables are
+//! neither re-allocated *nor cleared* between blocks: entries carry an
+//! epoch tag in their high bits, so stale entries from earlier blocks
+//! read as empty (see `compress/lz4.rs`, `compress/zstdlike.rs`). The
+//! steady state allocates only the output frames. This is the software
+//! stand-in for the per-lane SRAM the paper budgets in Table IV.
+//!
+//! ## Flat plane layout
+//!
+//! Lanes consume [`crate::bitplane::PlaneBlock`]s, whose planes live in
+//! one contiguous plane-major buffer. A partial-precision payload is then
+//! a *prefix slice* of that buffer (zero-copy), and the decode path stages
+//! planes back into a single flat buffer before the bit-transpose
+//! reaggregation — no per-plane `Vec`s anywhere on the hot path.
+//!
+//! ## Determinism contract
+//!
+//! Lanes are pure functions of their input block: scratch reuse and lane
+//! scheduling never change a single output byte versus the serial path.
+//! `LaneArray::new(1)` *is* the serial reference, and the property tests
+//! in this module and `tests/engine_parity.rs` pin byte-identity for
+//! every lane count.
+
+pub mod array;
+pub mod lane;
+
+pub use array::{default_lanes, LaneArray, PAPER_LANES};
+pub use lane::{Lane, LaneStats};

@@ -1,9 +1,17 @@
 //! Channel-wise grouping, exponent-delta de-correlation, and the clustered
 //! block container.
 
-use crate::bitplane::layout::{disaggregate, reaggregate};
+use crate::bitplane::layout::disaggregate;
 use crate::compress::Codec;
+use crate::engine::{Lane, LaneArray};
 use crate::fmt::Dtype;
+
+/// Tile edge for the blocked token↔channel transpose. 32×32 u16 tiles =
+/// 2 KiB working set per tile — both the read and the write side stay in
+/// L1 while a tile is processed, instead of striding the whole matrix per
+/// element (§Perf: the scattered transpose was a top profile entry on the
+/// KV path).
+const TRANSPOSE_TILE: usize = 32;
 
 /// A group of `tokens` KV vectors of `channels` entries each, stored
 /// token-major (`kv[t * channels + j]`) — the layout the attention kernel
@@ -29,13 +37,11 @@ impl KvGroup {
     }
 
     /// Channel-major reordering (Eq. 3): output[j * tokens + t].
+    /// Blocked (tile-wise) transpose — identical output to the naive
+    /// element-wise walk.
     pub fn channel_major(&self) -> Vec<u16> {
         let mut out = vec![0u16; self.codes.len()];
-        for t in 0..self.tokens {
-            for j in 0..self.channels {
-                out[j * self.tokens + t] = self.codes[t * self.channels + j];
-            }
-        }
+        transpose_tiled(&self.codes, &mut out, self.tokens, self.channels);
         out
     }
 
@@ -47,12 +53,31 @@ impl KvGroup {
         cm: &[u16],
     ) -> Self {
         let mut codes = vec![0u16; tokens * channels];
-        for t in 0..tokens {
-            for j in 0..channels {
-                codes[t * channels + j] = cm[j * tokens + t];
-            }
-        }
+        transpose_tiled(cm, &mut codes, channels, tokens);
         Self::new(dtype, tokens, channels, codes)
+    }
+}
+
+/// `dst[c * rows + r] = src[r * cols + c]`, processed in
+/// [`TRANSPOSE_TILE`]² tiles so both sides stay cache-resident.
+fn transpose_tiled(src: &[u16], dst: &mut [u16], rows: usize, cols: usize) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + TRANSPOSE_TILE).min(rows);
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + TRANSPOSE_TILE).min(cols);
+            for r in r0..r1 {
+                let row = &src[r * cols..(r + 1) * cols];
+                for c in c0..c1 {
+                    dst[c * rows + r] = row[c];
+                }
+            }
+            c0 = c1;
+        }
+        r0 = r1;
     }
 }
 
@@ -176,8 +201,9 @@ pub fn recorrelate(
 }
 
 /// A fully processed KV block: channel-grouped, de-correlated, bit-plane
-/// disaggregated, per-plane block-compressed.
-#[derive(Debug, Clone)]
+/// disaggregated, per-plane block-compressed. Payloads live in one flat
+/// buffer (the stored frame shape) with a per-plane directory.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusteredBlock {
     pub dtype: Dtype,
     pub tokens: usize,
@@ -186,29 +212,30 @@ pub struct ClusteredBlock {
     pub codec: Codec,
     /// Per-channel metadata (β_j or first codes), stored raw.
     pub meta: Vec<u16>,
-    /// Per-plane compressed payloads (MSB plane first).
-    pub planes: Vec<Vec<u8>>,
-    /// Per-plane raw flags.
-    pub raw: Vec<bool>,
+    /// Concatenated per-plane payloads (MSB plane first).
+    pub payload: Vec<u8>,
+    /// Per-plane `(stored_len, raw)` directory.
+    pub plane_dir: Vec<(u32, bool)>,
 }
 
 impl ClusteredBlock {
     pub fn compress(kv: &KvGroup, mode: DecorrelateMode, codec: Codec) -> Self {
+        Self::compress_with(&mut Lane::new(0), kv, mode, codec)
+    }
+
+    /// Compress on an engine lane (reusable scratch; byte-identical to
+    /// [`ClusteredBlock::compress`]).
+    pub fn compress_with(
+        lane: &mut Lane,
+        kv: &KvGroup,
+        mode: DecorrelateMode,
+        codec: Codec,
+    ) -> Self {
         let cm = kv.channel_major();
         let (transformed, meta) = decorrelate(kv.dtype, kv.tokens, kv.channels, &cm, mode);
         let pb = disaggregate(kv.dtype, &transformed);
-        let mut planes = Vec::with_capacity(pb.planes.len());
-        let mut raw = Vec::with_capacity(pb.planes.len());
-        for p in &pb.planes {
-            let c = codec.compress(p);
-            if c.len() < p.len() {
-                planes.push(c);
-                raw.push(false);
-            } else {
-                planes.push(p.clone());
-                raw.push(true);
-            }
-        }
+        let mut payload = Vec::new();
+        let plane_dir = lane.compress_planes(&pb, codec, &mut payload);
         Self {
             dtype: kv.dtype,
             tokens: kv.tokens,
@@ -216,8 +243,8 @@ impl ClusteredBlock {
             mode,
             codec,
             meta,
-            planes,
-            raw,
+            payload,
+            plane_dir,
         }
     }
 
@@ -229,24 +256,26 @@ impl ClusteredBlock {
             DecorrelateMode::ExpDelta => self.meta.len(),
             DecorrelateMode::XorFirst => self.meta.len() * 2,
         };
-        crate::bitplane::block::header_bytes(self.planes.len())
-            + meta_bytes
-            + self.planes.iter().map(|p| p.len()).sum::<usize>()
+        crate::bitplane::block::header_bytes(self.plane_dir.len()) + meta_bytes + self.payload.len()
     }
 
     /// Decompress back to the original token-major group.
     pub fn decompress(&self) -> anyhow::Result<KvGroup> {
+        self.decompress_with(&mut Lane::new(0))
+    }
+
+    /// Decompress on an engine lane (flat plane staging, no per-plane
+    /// allocation).
+    pub fn decompress_with(&self, lane: &mut Lane) -> anyhow::Result<KvGroup> {
         let m = self.tokens * self.channels;
-        let pbytes = m.div_ceil(8);
-        let mut planes = Vec::with_capacity(self.planes.len());
-        for (p, &israw) in self.planes.iter().zip(&self.raw) {
-            if israw {
-                planes.push(p.clone());
-            } else {
-                planes.push(self.codec.decompress(p, pbytes)?);
-            }
-        }
-        let transformed = reaggregate(self.dtype, m, &planes);
+        let transformed = lane.decode_planes(
+            self.dtype,
+            m,
+            self.codec,
+            &self.plane_dir,
+            &self.payload,
+            self.plane_dir.len(),
+        )?;
         let cm = recorrelate(
             self.dtype,
             self.tokens,
@@ -267,6 +296,31 @@ impl ClusteredBlock {
         let orig = (self.tokens * self.channels * self.dtype.bits() as usize).div_ceil(8);
         orig as f64 / self.stored_bytes() as f64
     }
+}
+
+/// Compress a batch of KV groups across the lane array. Output is
+/// byte-identical to mapping [`ClusteredBlock::compress`] serially over
+/// the slice.
+pub fn compress_groups(
+    groups: &[KvGroup],
+    mode: DecorrelateMode,
+    codec: Codec,
+    lanes: &LaneArray,
+) -> Vec<ClusteredBlock> {
+    lanes.run(groups, |lane, kv| {
+        ClusteredBlock::compress_with(lane, kv, mode, codec)
+    })
+}
+
+/// Decompress a batch of clustered blocks across the lane array.
+pub fn decompress_groups(
+    blocks: &[ClusteredBlock],
+    lanes: &LaneArray,
+) -> anyhow::Result<Vec<KvGroup>> {
+    lanes
+        .run(blocks, |lane, cb| cb.decompress_with(lane))
+        .into_iter()
+        .collect()
 }
 
 /// End-to-end ratio of the full §III-B pipeline over a token-major KV
@@ -321,6 +375,66 @@ mod tests {
             }
         }
         codes
+    }
+
+    #[test]
+    fn blocked_transpose_matches_naive_property() {
+        // The tiled transpose is a pure layout optimization — identical
+        // output to the scattered element walk, including ragged edges.
+        check("kv_transpose_blocked_vs_naive", 150, |g| {
+            let tokens = g.usize_in(1, 100);
+            let channels = g.usize_in(1, 100);
+            let codes: Vec<u16> = (0..tokens * channels)
+                .map(|_| g.rng.next_u64() as u16)
+                .collect();
+            let kv = KvGroup::new(Dtype::Bf16, tokens, channels, codes.clone());
+            let cm = kv.channel_major();
+            let mut naive = vec![0u16; codes.len()];
+            for t in 0..tokens {
+                for j in 0..channels {
+                    naive[j * tokens + t] = codes[t * channels + j];
+                }
+            }
+            if cm != naive {
+                return Err(format!("t={tokens} c={channels}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compress_groups_matches_serial_property() {
+        // Any lane count must produce byte-identical ClusteredBlocks to
+        // the serial map, and decompress_groups must invert them.
+        check("kv_compress_groups_parity", 15, |g| {
+            let ngroups = g.usize_in(1, 10);
+            let groups: Vec<KvGroup> = (0..ngroups)
+                .map(|k| {
+                    let tokens = g.usize_in(1, 20);
+                    let channels = g.usize_in(1, 40);
+                    let codes = kv_like(tokens, channels, g.case_seed ^ k as u64);
+                    KvGroup::new(Dtype::Bf16, tokens, channels, codes)
+                })
+                .collect();
+            let serial: Vec<ClusteredBlock> = groups
+                .iter()
+                .map(|kv| ClusteredBlock::compress(kv, DecorrelateMode::ExpDelta, Codec::Zstd))
+                .collect();
+            for lanes in [1usize, 2, 4, 8] {
+                let la = crate::engine::LaneArray::new(lanes);
+                let par = compress_groups(&groups, DecorrelateMode::ExpDelta, Codec::Zstd, &la);
+                if par != serial {
+                    return Err(format!("{lanes} lanes diverged"));
+                }
+                let back = decompress_groups(&par, &la).map_err(|e| e.to_string())?;
+                for (kv, b) in groups.iter().zip(&back) {
+                    if b.codes != kv.codes {
+                        return Err(format!("{lanes} lanes roundtrip"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -19,5 +19,6 @@
 pub mod group;
 
 pub use group::{
-    cluster_ratio, decorrelate, recorrelate, ClusteredBlock, DecorrelateMode, KvGroup,
+    cluster_ratio, compress_groups, decompress_groups, decorrelate, recorrelate, ClusteredBlock,
+    DecorrelateMode, KvGroup,
 };

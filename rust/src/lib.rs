@@ -8,6 +8,7 @@ pub mod util;
 pub mod fmt;
 pub mod compress;
 pub mod bitplane;
+pub mod engine;
 pub mod kvcluster;
 pub mod configs;
 pub mod synth;

@@ -10,9 +10,10 @@
 //! reconstitutes standard layout — the compute fabric never knows.
 
 use super::frame::{decode_header, encode_header, FrameHeader, FrameKind};
-use crate::bitplane::layout::{disaggregate, reaggregate};
+use crate::bitplane::layout::disaggregate;
 use crate::compress::Codec;
 use crate::dram::MemorySystem;
+use crate::engine::{Lane, LaneArray};
 use crate::fmt::{CodeTensor, Dtype};
 use crate::kvcluster::{decorrelate, recorrelate, DecorrelateMode};
 
@@ -112,6 +113,12 @@ impl Region {
         self.frames.iter().map(|(_, f)| f.len() as u64).sum()
     }
 
+    /// The stored frames as `(addr, bytes)` — lets tests pin byte-identity
+    /// of the lane-parallel write path against the serial one.
+    pub fn frames(&self) -> impl Iterator<Item = (u64, &[u8])> + '_ {
+        self.frames.iter().map(|(a, f)| (*a, f.as_slice()))
+    }
+
     /// Logical bytes at full precision.
     pub fn logical_bytes(&self) -> u64 {
         (self.n as u64 * self.dtype.bits() as u64).div_ceil(8)
@@ -138,6 +145,9 @@ pub struct MemController {
     /// KV token-group size (paper: a page of 16 tokens).
     pub kv_group_tokens: usize,
     pub mode: DecorrelateMode,
+    /// The multi-lane (de)compression engine every store/load batch runs
+    /// through (paper: 32 lanes; here capped at host parallelism).
+    pub lanes: LaneArray,
     regions: Vec<Region>,
     /// Next free DRAM byte address (bump allocator, 64 B aligned).
     next_addr: u64,
@@ -147,12 +157,18 @@ pub struct MemController {
 
 impl MemController {
     pub fn new(layout: Layout, codec: Codec) -> Self {
+        Self::with_lanes(layout, codec, crate::engine::default_lanes())
+    }
+
+    /// A controller with an explicit lane count (`1` = serial reference).
+    pub fn with_lanes(layout: Layout, codec: Codec, lanes: usize) -> Self {
         Self {
             engine: EngineModel::default(),
             layout,
             codec,
             kv_group_tokens: 16,
             mode: DecorrelateMode::ExpDelta,
+            lanes: LaneArray::new(lanes),
             regions: Vec::new(),
             next_addr: 0,
             total: ReadStats::default(),
@@ -169,36 +185,20 @@ impl MemController {
         a
     }
 
-    /// Store a weight tensor. Splits into 4 KB-logical blocks.
+    /// Store a weight tensor. Splits into 4 KB-logical blocks compressed
+    /// across the lane array.
     pub fn store_weights(&mut self, name: &str, t: &CodeTensor) -> RegionId {
         let codes_per_block = BLOCK_BYTES * 8 / t.dtype.bits() as usize;
-        let mut frames = Vec::new();
-        for chunk in t.codes.chunks(codes_per_block) {
-            let frame = match self.layout {
-                Layout::Proposed => {
-                    build_frame(FrameKind::Weights, t.dtype, self.codec, chunk, 0, &[], 0)
-                }
-                Layout::Traditional => {
-                    // raw value-major bytes, no header needed beyond 12 B
-                    let tt = CodeTensor::new(t.dtype, chunk.to_vec(), vec![chunk.len()]);
-                    let mut f = encode_header(
-                        &FrameHeader {
-                            kind: FrameKind::Weights,
-                            dtype: t.dtype,
-                            codec: Codec::Store,
-                            m: chunk.len(),
-                            channels: 0,
-                            mode: 0,
-                            plane_len: vec![],
-                        },
-                        &[],
-                    );
-                    // traditional header carries no plane dir; fix length
-                    f.truncate(12);
-                    f.extend_from_slice(&tt.pack_value_major());
-                    f
-                }
-            };
+        let (layout, codec, dtype) = (self.layout, self.codec, t.dtype);
+        let chunks: Vec<&[u16]> = t.codes.chunks(codes_per_block).collect();
+        let built: Vec<Vec<u8>> = self.lanes.run(&chunks, |lane, chunk| match layout {
+            Layout::Proposed => {
+                build_frame_with(lane, FrameKind::Weights, dtype, codec, chunk, 0, &[], 0)
+            }
+            Layout::Traditional => build_traditional_frame(FrameKind::Weights, dtype, chunk),
+        });
+        let mut frames = Vec::with_capacity(built.len());
+        for frame in built {
             let addr = self.alloc(frame.len());
             frames.push((addr, frame));
         }
@@ -218,53 +218,42 @@ impl MemController {
     }
 
     /// Store a KV tensor (token-major, `tokens × channels`). Groups of
-    /// `kv_group_tokens` tokens form one frame (the paper's Fig 6 pipeline).
+    /// `kv_group_tokens` tokens form one frame (the paper's Fig 6
+    /// pipeline), built in parallel across the lane array.
     pub fn store_kv(&mut self, name: &str, dtype: Dtype, tokens: usize, channels: usize, codes: &[u16]) -> RegionId {
         assert_eq!(codes.len(), tokens * channels);
-        let mut frames = Vec::new();
         let gt = self.kv_group_tokens;
+        let (layout, codec, mode) = (self.layout, self.codec, self.mode);
+        let mut chunks: Vec<(usize, &[u16])> = Vec::new();
         let mut t0 = 0;
         while t0 < tokens {
             let nt = gt.min(tokens - t0);
-            let chunk = &codes[t0 * channels..(t0 + nt) * channels];
-            let frame = match self.layout {
-                Layout::Proposed => {
-                    // channel-major + delta + planes
-                    let kv = crate::kvcluster::KvGroup::new(dtype, nt, channels, chunk.to_vec());
-                    let cm = kv.channel_major();
-                    let (tr, betas) = decorrelate(dtype, nt, channels, &cm, self.mode);
-                    build_frame(
-                        FrameKind::KvCache,
-                        dtype,
-                        self.codec,
-                        &tr,
-                        channels,
-                        &betas,
-                        mode_code(self.mode),
-                    )
-                }
-                Layout::Traditional => {
-                    let tt = CodeTensor::new(dtype, chunk.to_vec(), vec![chunk.len()]);
-                    let mut f = encode_header(
-                        &FrameHeader {
-                            kind: FrameKind::KvCache,
-                            dtype,
-                            codec: Codec::Store,
-                            m: chunk.len(),
-                            channels: 0,
-                            mode: 0,
-                            plane_len: vec![],
-                        },
-                        &[],
-                    );
-                    f.truncate(12);
-                    f.extend_from_slice(&tt.pack_value_major());
-                    f
-                }
-            };
+            chunks.push((nt, &codes[t0 * channels..(t0 + nt) * channels]));
+            t0 += nt;
+        }
+        let built: Vec<Vec<u8>> = self.lanes.run(&chunks, |lane, &(nt, chunk)| match layout {
+            Layout::Proposed => {
+                // channel-major + delta + planes
+                let kv = crate::kvcluster::KvGroup::new(dtype, nt, channels, chunk.to_vec());
+                let cm = kv.channel_major();
+                let (tr, betas) = decorrelate(dtype, nt, channels, &cm, mode);
+                build_frame_with(
+                    lane,
+                    FrameKind::KvCache,
+                    dtype,
+                    codec,
+                    &tr,
+                    channels,
+                    &betas,
+                    mode_code(mode),
+                )
+            }
+            Layout::Traditional => build_traditional_frame(FrameKind::KvCache, dtype, chunk),
+        });
+        let mut frames = Vec::with_capacity(built.len());
+        for frame in built {
             let addr = self.alloc(frame.len());
             frames.push((addr, frame));
-            t0 += nt;
         }
         self.regions.push(Region {
             name: name.to_string(),
@@ -284,7 +273,8 @@ impl MemController {
     /// Read a whole region at an effective precision of `keep_bits`
     /// bit-planes (== dtype.bits() for full precision). Returns the codes
     /// (low planes zeroed when partial) and per-read stats. If `mem` is
-    /// given, the fetch is timed on the DRAM simulator.
+    /// given, the fetch is timed on the DRAM simulator. Frame decode runs
+    /// across the lane array (the DRAM command stream stays in order).
     pub fn load(
         &mut self,
         id: RegionId,
@@ -293,10 +283,10 @@ impl MemController {
     ) -> anyhow::Result<(Vec<u16>, ReadStats)> {
         let region = &self.regions[id.0];
         let keep = keep_bits.min(region.dtype.bits());
-        let mut out = Vec::with_capacity(region.n);
+        let layout = region.layout;
         let mut stats = ReadStats::default();
         for (addr, frame) in &region.frames {
-            let fetch_bytes = match region.layout {
+            let fetch_bytes = match layout {
                 Layout::Proposed => {
                     let (h, _) = decode_header(frame)?;
                     h.prefix_bytes(keep)
@@ -305,16 +295,23 @@ impl MemController {
             };
             stats.frames += 1;
             stats.dram_bytes += fetch_bytes as u64;
-            stats.engine_ns += match region.layout {
+            stats.engine_ns += match layout {
                 Layout::Proposed => self.engine.process_ns(fetch_bytes),
                 Layout::Traditional => 0.0,
             };
             if let Some(m) = mem.as_deref_mut() {
                 m.enqueue_range(*addr, fetch_bytes as u64, false, 0);
             }
-            let codes = read_frame(frame, keep, region.layout)?;
-            out.extend_from_slice(&codes);
+        }
+        let frames: Vec<&[u8]> = region.frames.iter().map(|(_, f)| f.as_slice()).collect();
+        let decoded = self
+            .lanes
+            .run(&frames, |lane, frame| read_frame_with(lane, frame, keep, layout));
+        let mut out = Vec::with_capacity(region.n);
+        for codes in decoded {
+            let codes = codes?;
             stats.logical_bytes += (codes.len() * keep as usize).div_ceil(8) as u64;
+            out.extend_from_slice(&codes);
         }
         if let Some(m) = mem.as_deref_mut() {
             stats.dram_cycles = m.drain();
@@ -344,7 +341,11 @@ fn mode_from_code(c: u8) -> DecorrelateMode {
     }
 }
 
-fn build_frame(
+/// Build a Proposed-layout frame on an engine lane (zero per-plane
+/// allocation; byte-identical to the serial per-plane path).
+#[allow(clippy::too_many_arguments)]
+fn build_frame_with(
+    lane: &mut Lane,
     kind: FrameKind,
     dtype: Dtype,
     codec: Codec,
@@ -354,18 +355,8 @@ fn build_frame(
     mode: u8,
 ) -> Vec<u8> {
     let pb = disaggregate(dtype, codes);
-    let mut plane_len = Vec::with_capacity(pb.planes.len());
-    let mut payloads = Vec::with_capacity(pb.planes.len());
-    for p in &pb.planes {
-        let c = codec.compress(p);
-        if c.len() < p.len() {
-            plane_len.push((c.len() as u32, false));
-            payloads.push(c);
-        } else {
-            plane_len.push((p.len() as u32, true));
-            payloads.push(p.clone());
-        }
-    }
+    let mut payload = Vec::new();
+    let plane_len = lane.compress_planes(&pb, codec, &mut payload);
     let h = FrameHeader {
         kind,
         dtype,
@@ -376,15 +367,39 @@ fn build_frame(
         plane_len,
     };
     let mut frame = encode_header(&h, betas);
-    for p in payloads {
-        frame.extend_from_slice(&p);
-    }
+    frame.extend_from_slice(&payload);
     frame
 }
 
+/// Traditional layout: raw value-major bytes after a 12 B mini header.
+fn build_traditional_frame(kind: FrameKind, dtype: Dtype, chunk: &[u16]) -> Vec<u8> {
+    let tt = CodeTensor::new(dtype, chunk.to_vec(), vec![chunk.len()]);
+    let mut f = encode_header(
+        &FrameHeader {
+            kind,
+            dtype,
+            codec: Codec::Store,
+            m: chunk.len(),
+            channels: 0,
+            mode: 0,
+            plane_len: vec![],
+        },
+        &[],
+    );
+    // traditional header carries no plane dir; fix length
+    f.truncate(12);
+    f.extend_from_slice(&tt.pack_value_major());
+    f
+}
+
 /// Decode a frame's top `keep` planes back into value-major codes
-/// (including KV re-correlation and layout restore).
-fn read_frame(frame: &[u8], keep: u32, layout: Layout) -> anyhow::Result<Vec<u16>> {
+/// (including KV re-correlation and layout restore) on an engine lane.
+fn read_frame_with(
+    lane: &mut Lane,
+    frame: &[u8],
+    keep: u32,
+    layout: Layout,
+) -> anyhow::Result<Vec<u16>> {
     match layout {
         Layout::Traditional => {
             // 12-byte mini header: kind, dtype, _, codec, m, channels
@@ -407,23 +422,11 @@ fn read_frame(frame: &[u8], keep: u32, layout: Layout) -> anyhow::Result<Vec<u16
         }
         Layout::Proposed => {
             let (h, betas) = decode_header(frame)?;
-            let mut off = h.header_bytes();
-            let pbytes = h.m.div_ceil(8);
-            let keepn = (keep as usize).min(h.plane_len.len());
-            let mut planes = Vec::with_capacity(keepn);
-            for (i, &(len, raw)) in h.plane_len.iter().enumerate() {
-                if i >= keepn {
-                    break;
-                }
-                let payload = &frame[off..off + len as usize];
-                planes.push(if raw {
-                    payload.to_vec()
-                } else {
-                    h.codec.decompress(payload, pbytes)?
-                });
-                off += len as usize;
-            }
-            let codes = reaggregate(h.dtype, h.m, &planes);
+            let payload = frame
+                .get(h.header_bytes()..)
+                .ok_or_else(|| anyhow::anyhow!("frame shorter than header"))?;
+            let codes =
+                lane.decode_planes(h.dtype, h.m, h.codec, &h.plane_len, payload, keep as usize)?;
             match h.kind {
                 FrameKind::Weights => Ok(codes),
                 FrameKind::KvCache => {
@@ -497,6 +500,48 @@ mod tests {
                 let (got, _) = mc.load(id, 16, None).map_err(|e| e.to_string())?;
                 if got != codes {
                     return Err(format!("{layout:?} t={tokens} c={channels}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_parallel_store_load_is_byte_identical_property() {
+        // Parallelism must not change any compressed stream: frames built
+        // by 2/4/8-lane controllers are byte-identical to the 1-lane
+        // (serial) controller's, and loads agree at any precision.
+        check("memctrl_lane_parity", 15, |g| {
+            let t = weight_tensor(g.usize_in(1, 12000), g.case_seed);
+            let tokens = g.usize_in(1, 60);
+            let channels = g.usize_in(1, 64);
+            let kv_codes: Vec<u16> = (0..tokens * channels)
+                .map(|_| g.rng.next_u64() as u16)
+                .collect();
+            let mut serial = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+            let ws = serial.store_weights("w", &t);
+            let ks = serial.store_kv("kv", Dtype::Bf16, tokens, channels, &kv_codes);
+            let keep = g.usize_in(0, 16) as u32;
+            let (sw, _) = serial.load(ws, keep, None).map_err(|e| e.to_string())?;
+            let (sk, _) = serial.load(ks, 16, None).map_err(|e| e.to_string())?;
+            for lanes in [2usize, 4, 8] {
+                let mut par = MemController::with_lanes(Layout::Proposed, Codec::Zstd, lanes);
+                let wp = par.store_weights("w", &t);
+                let kp = par.store_kv("kv", Dtype::Bf16, tokens, channels, &kv_codes);
+                let sf: Vec<_> = serial.region(ws).frames().collect();
+                let pf: Vec<_> = par.region(wp).frames().collect();
+                if sf != pf {
+                    return Err(format!("{lanes} lanes: weight frames diverged"));
+                }
+                let sf: Vec<_> = serial.region(ks).frames().collect();
+                let pf: Vec<_> = par.region(kp).frames().collect();
+                if sf != pf {
+                    return Err(format!("{lanes} lanes: kv frames diverged"));
+                }
+                let (pw, _) = par.load(wp, keep, None).map_err(|e| e.to_string())?;
+                let (pk, _) = par.load(kp, 16, None).map_err(|e| e.to_string())?;
+                if pw != sw || pk != sk {
+                    return Err(format!("{lanes} lanes: load diverged"));
                 }
             }
             Ok(())

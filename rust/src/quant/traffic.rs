@@ -35,8 +35,7 @@ impl WeightTraffic {
     pub fn measure(base: Dtype, codes: &[u16], codec: Codec) -> Self {
         let pb = disaggregate(base, codes);
         let plane_frac = pb
-            .planes
-            .iter()
+            .planes()
             .map(|p| {
                 if p.is_empty() {
                     1.0

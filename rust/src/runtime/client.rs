@@ -156,7 +156,7 @@ mod tests {
         for p in 0..16 {
             assert_eq!(
                 &planes_flat[p * 1024..(p + 1) * 1024],
-                &pb.planes[p][..],
+                pb.plane(p),
                 "plane {p}"
             );
         }

@@ -1,0 +1,130 @@
+//! Engine determinism contract, end to end: the lane-parallel paths must
+//! be byte-identical to the serial ones for every lane count, and the
+//! reusable-scratch codec entry points must agree with the one-shot API.
+//! Parallelism may change *where* a block runs, never what it produces.
+
+use camc::compress::{Codec, CodecScratch};
+use camc::engine::{LaneArray, PAPER_LANES};
+use camc::fmt::minifloat::BF16;
+use camc::fmt::{CodeTensor, Dtype};
+use camc::kvcluster::{compress_groups, decompress_groups, DecorrelateMode, KvGroup};
+use camc::memctrl::{Layout, MemController};
+use camc::synth::{gen_kv_layer, CorpusProfile};
+use camc::util::rng::Xoshiro256;
+
+fn weight_tensor(n: usize, seed: u64) -> CodeTensor {
+    let mut r = Xoshiro256::new(seed);
+    let codes: Vec<u16> = (0..n)
+        .map(|_| BF16.encode((r.normal() * 0.02) as f32) as u16)
+        .collect();
+    CodeTensor::new(Dtype::Bf16, codes, vec![n])
+}
+
+#[test]
+fn weight_regions_are_lane_count_invariant() {
+    let t = weight_tensor(100_000, 3);
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        let mut serial = MemController::with_lanes(Layout::Proposed, codec, 1);
+        let sid = serial.store_weights("w", &t);
+        let serial_frames: Vec<(u64, Vec<u8>)> = serial
+            .region(sid)
+            .frames()
+            .map(|(a, f)| (a, f.to_vec()))
+            .collect();
+        let (serial_codes, serial_stats) = serial.load(sid, 11, None).unwrap();
+        for lanes in [2usize, 4, 8, PAPER_LANES] {
+            let mut par = MemController::with_lanes(Layout::Proposed, codec, lanes);
+            let pid = par.store_weights("w", &t);
+            let par_frames: Vec<(u64, Vec<u8>)> = par
+                .region(pid)
+                .frames()
+                .map(|(a, f)| (a, f.to_vec()))
+                .collect();
+            assert_eq!(par_frames, serial_frames, "{codec} {lanes} lanes: frames");
+            assert_eq!(
+                par.region(pid).stored_bytes(),
+                serial.region(sid).stored_bytes()
+            );
+            let (par_codes, par_stats) = par.load(pid, 11, None).unwrap();
+            assert_eq!(par_codes, serial_codes, "{codec} {lanes} lanes: load");
+            assert_eq!(par_stats.dram_bytes, serial_stats.dram_bytes);
+        }
+    }
+}
+
+#[test]
+fn kv_regions_are_lane_count_invariant() {
+    let tokens = 300;
+    let channels = 96;
+    let codes = gen_kv_layer(tokens, channels, CorpusProfile::Book, 0.5, 17);
+    let mut serial = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+    let sid = serial.store_kv("kv", Dtype::Bf16, tokens, channels, &codes);
+    let serial_frames: Vec<(u64, Vec<u8>)> = serial
+        .region(sid)
+        .frames()
+        .map(|(a, f)| (a, f.to_vec()))
+        .collect();
+    let (serial_codes, _) = serial.load(sid, 16, None).unwrap();
+    assert_eq!(serial_codes, codes, "serial roundtrip");
+    for lanes in [2usize, 7, 32] {
+        let mut par = MemController::with_lanes(Layout::Proposed, Codec::Zstd, lanes);
+        let pid = par.store_kv("kv", Dtype::Bf16, tokens, channels, &codes);
+        let par_frames: Vec<(u64, Vec<u8>)> = par
+            .region(pid)
+            .frames()
+            .map(|(a, f)| (a, f.to_vec()))
+            .collect();
+        assert_eq!(par_frames, serial_frames, "{lanes} lanes: frames");
+        let (par_codes, _) = par.load(pid, 16, None).unwrap();
+        assert_eq!(par_codes, codes, "{lanes} lanes: roundtrip");
+    }
+}
+
+#[test]
+fn kv_group_batches_are_lane_count_invariant() {
+    let groups: Vec<KvGroup> = (0..24)
+        .map(|i| {
+            let tokens = 16;
+            let channels = 64 + (i % 5) * 16;
+            let codes = gen_kv_layer(tokens, channels, CorpusProfile::Book, 0.5, 100 + i as u64);
+            KvGroup::new(Dtype::Bf16, tokens, channels, codes)
+        })
+        .collect();
+    for mode in [DecorrelateMode::ExpDelta, DecorrelateMode::XorFirst] {
+        let serial = compress_groups(&groups, mode, Codec::Zstd, &LaneArray::new(1));
+        for lanes in [2usize, 4, 16] {
+            let la = LaneArray::new(lanes);
+            let par = compress_groups(&groups, mode, Codec::Zstd, &la);
+            assert_eq!(par, serial, "{mode:?} {lanes} lanes");
+            let back = decompress_groups(&par, &la).unwrap();
+            for (kv, b) in groups.iter().zip(&back) {
+                assert_eq!(b.codes, kv.codes, "{mode:?} {lanes} lanes roundtrip");
+            }
+        }
+    }
+}
+
+#[test]
+fn scratch_entry_points_match_oneshot_across_blocks() {
+    // One scratch reused across a realistic mixed diet of plane payloads.
+    let mut scratch = CodecScratch::new();
+    let mut buf = Vec::new();
+    let mut r = Xoshiro256::new(9);
+    for trial in 0..40 {
+        let n = 512 + (trial * 97) % 4096;
+        let data: Vec<u8> = match trial % 3 {
+            0 => vec![0u8; n],                                  // constant plane
+            1 => (0..n).map(|_| r.next_u64() as u8).collect(),  // noise plane
+            _ => (0..n)
+                .map(|_| if r.next_f64() < 0.9 { 0 } else { (r.next_u64() % 16) as u8 })
+                .collect(), // skewed plane
+        };
+        for codec in [Codec::Lz4, Codec::Zstd] {
+            codec.compress_into(&data, &mut scratch, &mut buf);
+            assert_eq!(buf, codec.compress(&data), "{codec} trial {trial}");
+            let mut out = Vec::new();
+            codec.decompress_append(&buf, data.len(), &mut out).unwrap();
+            assert_eq!(out, data, "{codec} trial {trial} roundtrip");
+        }
+    }
+}

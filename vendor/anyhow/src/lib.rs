@@ -1,0 +1,148 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored path dependency provides exactly the surface the repo uses:
+//! [`Error`], [`Result`], the `anyhow!` / `bail!` / `ensure!` macros, and
+//! `?`-conversion from any `std::error::Error`. Dropping in the real
+//! `anyhow` later is a one-line Cargo.toml change — no call site relies on
+//! anything beyond the shared subset.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed dynamic error. Like the real `anyhow::Error`, this type
+/// deliberately does NOT implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` below cannot overlap the identity
+/// `From<Error> for Error`.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Build an error from a printable message (what `anyhow!` expands to).
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// The underlying boxed error.
+    pub fn as_dyn(&self) -> &(dyn StdError + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:?}` on an anyhow error prints the message (the common use is
+        // `fn main() -> anyhow::Result<()>` termination output)
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error(Box::new(e))
+    }
+}
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    fn fails_ensure(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        Ok(x)
+    }
+
+    fn fails_bail() -> Result<()> {
+        bail!("nope: {}", 7);
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert!(fails_io().is_err());
+        assert_eq!(fails_io().unwrap_err().to_string(), "disk on fire");
+        assert_eq!(fails_ensure(3).unwrap(), 3);
+        assert_eq!(
+            fails_ensure(-1).unwrap_err().to_string(),
+            "x must be positive, got -1"
+        );
+        assert_eq!(fails_bail().unwrap_err().to_string(), "nope: 7");
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(format!("{e}"), "plain message");
+        assert_eq!(format!("{e:?}"), "plain message");
+    }
+
+    #[test]
+    fn error_propagates_through_question_mark() {
+        fn inner() -> Result<()> {
+            fails_bail()?; // Error -> Error via identity From
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}
