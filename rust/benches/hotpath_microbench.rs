@@ -1,14 +1,20 @@
 //! Hot-path microbenchmarks (the §Perf harness): bit-plane shuffle,
 //! LZ4/zstd-class compress+decompress (one-shot vs reusable-scratch lane
 //! entry points), KV transpose (naive vs blocked), the multi-lane engine's
-//! batched-compress scaling sweep, DRAM-sim command rate, KV cluster
-//! pipeline. Prints throughput per path AND writes a machine-readable
-//! `BENCH_hotpath.json` (path → bytes/s) so future PRs can track the perf
-//! trajectory.
+//! batched-compress scaling sweep, small-batch dispatch (pooled vs the
+//! spawn/join reference vs serial), a serve()-shaped end-to-end step loop,
+//! DRAM-sim command rate, KV cluster pipeline. Prints throughput per path
+//! AND writes a machine-readable `BENCH_hotpath.json` (path → bytes/s) so
+//! future PRs can track the perf trajectory.
 //!
-//!     cargo bench --bench hotpath_microbench
+//!     cargo bench --bench hotpath_microbench [-- --fast] [-- --check]
+//!
+//! `--fast` trims iteration counts/sizes for CI smoke runs; `--check`
+//! exits non-zero if the pooled small-batch dispatch is slower than the
+//! serial path (the regression CI gates on).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use camc::bitplane::layout::{disaggregate, reaggregate_flat};
@@ -62,6 +68,9 @@ impl Bench {
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let check = args.iter().any(|a| a == "--check");
     let mut b = Bench::new();
     let mut r = Xoshiro256::new(1);
 
@@ -83,9 +92,10 @@ fn main() {
     b.row("bitplane reaggregate", humanfmt::bytes(bytes as u64), rea, bytes);
 
     // ---- codecs over the concatenated planes (the real input shape) ----
+    let heavy = if fast { 2 } else { 4 };
     let plane_stream: Vec<u8> = pb.all_bytes().to_vec();
     for codec in [Codec::Lz4, Codec::Zstd] {
-        let c = time(|| { std::hint::black_box(codec.compress(&plane_stream)); }, 4);
+        let c = time(|| { std::hint::black_box(codec.compress(&plane_stream)); }, heavy);
         b.row(
             &format!("{codec} compress (planes)"),
             humanfmt::bytes(plane_stream.len() as u64),
@@ -95,7 +105,7 @@ fn main() {
         let comp = codec.compress(&plane_stream);
         let d = time(
             || { std::hint::black_box(codec.decompress(&comp, plane_stream.len()).unwrap()); },
-            4,
+            heavy,
         );
         b.row(
             &format!("{codec} decompress"),
@@ -156,7 +166,7 @@ fn main() {
                     .unwrap();
                 std::hint::black_box(&out);
             },
-            4,
+            heavy,
         );
         b.row(
             "zstd decompress append (reused buf)",
@@ -288,10 +298,201 @@ fn main() {
         );
     }
 
+    // ---- small-batch dispatch: pooled vs spawn/join vs serial ----
+    // Per-decode-step batches are a few blocks. The persistent pool must
+    // beat per-batch thread spawn/join there — and must not lose to the
+    // serial path — for serve() to benefit (CI gates on the latter via
+    // --check).
+    let mut small_rows: Vec<(usize, f64, f64, f64)> = Vec::new(); // (nb, serial, pooled, spawn/join)
+    let mut pooled_ok = true;
+    {
+        let la8 = LaneArray::new(8);
+        let la1 = LaneArray::new(1);
+        let iters = if fast { 40 } else { 160 };
+        let work = |lane: &mut Lane, bc: &Vec<u16>| {
+            let pb = disaggregate(Dtype::Bf16, bc);
+            let mut payload = Vec::new();
+            let dir = lane.compress_planes(&pb, Codec::Zstd, &mut payload);
+            (dir, payload)
+        };
+        // informational rows: fixed 8-lane pool for stable JSON keys
+        // across hosts (the perf-trajectory artifact)
+        for &nb in &[1usize, 4, 8] {
+            let small: Vec<Vec<u16>> = blocks[..nb].to_vec();
+            let small_bytes = (nb * 2048 * 2) as f64;
+            let tser = time(|| { std::hint::black_box(la1.run(&small, work)); }, iters);
+            b.row(
+                &format!("small batch {nb} blk serial"),
+                humanfmt::bytes(small_bytes as u64),
+                tser,
+                small_bytes,
+            );
+            let tpool = time(|| { std::hint::black_box(la8.run(&small, work)); }, iters);
+            b.row(
+                &format!("small batch {nb} blk pooled (8 lanes)"),
+                humanfmt::bytes(small_bytes as u64),
+                tpool,
+                small_bytes,
+            );
+            let tsj = time(|| { std::hint::black_box(la8.run_spawn_join(&small, work)); }, iters);
+            b.row(
+                &format!("small batch {nb} blk spawn-join (8 lanes)"),
+                humanfmt::bytes(small_bytes as u64),
+                tsj,
+                small_bytes,
+            );
+            small_rows.push((nb, small_bytes / tser, small_bytes / tpool, small_bytes / tsj));
+        }
+        // regression gate (--check): measured on the host-capped pool —
+        // the configuration serve()/default_pool actually run, so a
+        // 2-core CI runner is not forced to oversubscribe 8 lanes. The
+        // 10% tolerance absorbs timer noise and a failing size is
+        // re-measured up to twice; only consistently-slower-than-serial
+        // dispatch (a real pool regression) fails all three attempts.
+        // 1-block batches are skipped: they take the inline path on both
+        // sides by construction.
+        if check {
+            let la_host = LaneArray::with_default_lanes();
+            for &nb in &[4usize, 8] {
+                let small: Vec<Vec<u16>> = blocks[..nb].to_vec();
+                let measure = || {
+                    let tser = time(|| { std::hint::black_box(la1.run(&small, work)); }, iters);
+                    let tpool =
+                        time(|| { std::hint::black_box(la_host.run(&small, work)); }, iters);
+                    tser / tpool
+                };
+                let mut ratio = measure();
+                for _ in 0..2 {
+                    if ratio >= 0.90 {
+                        break;
+                    }
+                    ratio = ratio.max(measure());
+                }
+                if ratio < 0.90 {
+                    eprintln!(
+                        "gate: {nb}-blk pooled ({} lanes) {ratio:.2}x serial after retries",
+                        la_host.lane_count()
+                    );
+                    pooled_ok = false;
+                }
+            }
+        }
+    }
+
+    // ---- serve()-shaped end-to-end step loop ----
+    // 8 sequences, continuous decode: per-step policy degrade sweeps plus
+    // page sync, all through ONE shared lane pool — batched cross-sequence
+    // sync vs the per-sequence path the old serve loop used.
+    {
+        use camc::coordinator::{sync_sequences, KvPageStore, PolicyEngine};
+        use camc::memctrl::Layout;
+        use camc::quant::policy::{KvPolicy, PageTier};
+        use camc::runtime::model::{KvState, ModelMeta};
+
+        let meta = ModelMeta {
+            vocab: 256,
+            layers: 4,
+            d_model: 64,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_head: 16,
+            max_seq: 256,
+            kv_channels: 64,
+            prefill_len: 64,
+            page_tokens: 16,
+            n_pages: 16,
+            param_names: vec![],
+        };
+        let nseq = 8usize;
+        let prefill = 64usize;
+        let steps = if fast { 32 } else { 128 };
+        let row = meta.n_kv_heads * meta.d_head;
+        let policy = || KvPolicy::DynamicQuant {
+            tiers: vec![
+                PageTier { pages: 2, dtype: Dtype::Bf16 },
+                PageTier { pages: 6, dtype: Dtype::Fp8E4M3 },
+            ],
+        };
+        let mk_kv = |seed: u64| -> KvState {
+            let mut rng = Xoshiro256::new(seed);
+            let scales: Vec<f32> = (0..row).map(|_| 2f32.powf(rng.normal() as f32)).collect();
+            let mut kv = KvState {
+                k: vec![0.0; meta.layers * meta.max_seq * row],
+                v: vec![0.0; meta.layers * meta.max_seq * row],
+                queries: vec![0.0; meta.layers * meta.n_heads * meta.d_head],
+                pos: prefill,
+            };
+            for (i, x) in kv.k.iter_mut().enumerate() {
+                *x = scales[i % row] * (1.0 + 0.05 * rng.normal() as f32);
+            }
+            for (i, x) in kv.v.iter_mut().enumerate() {
+                *x = scales[i % row] * (1.0 + 0.05 * rng.normal() as f32);
+            }
+            for q in kv.queries.iter_mut() {
+                *q = rng.normal() as f32;
+            }
+            kv
+        };
+        let run_serve = |batched: bool| -> f64 {
+            let lanes = Arc::new(LaneArray::with_default_lanes());
+            let mut kvs: Vec<KvState> = (1..=nseq as u64).map(mk_kv).collect();
+            let mut stores: Vec<KvPageStore> = (0..nseq)
+                .map(|_| {
+                    KvPageStore::with_shared(&meta, Layout::Proposed, Codec::Zstd, Arc::clone(&lanes))
+                })
+                .collect();
+            let engines: Vec<PolicyEngine> = (0..nseq)
+                .map(|_| PolicyEngine::with_shared(policy(), Arc::clone(&lanes)))
+                .collect();
+            let t0 = Instant::now();
+            for _step in 0..steps {
+                for (kv, eng) in kvs.iter_mut().zip(&engines) {
+                    kv.pos += 1; // stand-in for the model decode step
+                    let plan = eng.plan(kv, &meta);
+                    std::hint::black_box(plan.page_bits);
+                }
+                if batched {
+                    let mut seqs: Vec<(&mut KvPageStore, &KvState)> =
+                        stores.iter_mut().zip(kvs.iter()).collect();
+                    sync_sequences(&mut seqs, &meta, &lanes);
+                } else {
+                    for (store, kv) in stores.iter_mut().zip(kvs.iter()) {
+                        store.sync(kv, &meta);
+                    }
+                }
+            }
+            t0.elapsed().as_secs_f64()
+        };
+        // raw KV bytes synced over the run: every page stored by the end,
+        // including the prefill backlog the first sync drains
+        let page_raw = meta.layers * meta.page_tokens * row * 2 * 2;
+        let serve_bytes = (nseq * ((prefill + steps) / meta.page_tokens) * page_raw) as f64;
+        let tb = run_serve(true);
+        b.row(
+            "serve-shaped step loop batched sync (8 seq)",
+            format!("{steps} steps"),
+            tb,
+            serve_bytes,
+        );
+        let tp = run_serve(false);
+        b.row(
+            "serve-shaped step loop per-seq sync (8 seq)",
+            format!("{steps} steps"),
+            tp,
+            serve_bytes,
+        );
+        println!(
+            "serve-shaped: batched sync {:.2}x per-seq ({:.1} vs {:.1} steps/s)",
+            tp / tb,
+            steps as f64 / tb,
+            steps as f64 / tp
+        );
+    }
+
     // ---- DRAM sim command rate ----
     let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
     let t0 = Instant::now();
-    let sim_bytes = 32u64 << 20;
+    let sim_bytes = if fast { 4u64 << 20 } else { 32u64 << 20 };
     let cycles = mem.run_stream_read(0, sim_bytes);
     let wall = t0.elapsed().as_secs_f64();
     b.tab.row(&[
@@ -318,9 +519,26 @@ fn main() {
         );
     }
 
+    // small-batch dispatch summary (the acceptance metric: pooled >=
+    // 1.3x spawn/join at <=8 blocks, never slower than serial)
+    println!("\n== small-batch dispatch (8 lanes, zstd, vs serial / spawn-join) ==");
+    for &(nb, serial, pooled, spawnjoin) in &small_rows {
+        println!(
+            "  {nb} blk: pooled {}  ({:.2}x serial, {:.2}x spawn-join)",
+            humanfmt::rate(pooled),
+            pooled / serial,
+            pooled / spawnjoin
+        );
+    }
+
     let npaths = b.json.len();
     let json = Json::Obj(b.json);
     std::fs::write("BENCH_hotpath.json", json.to_string() + "\n")
         .expect("write BENCH_hotpath.json");
     println!("\nwrote BENCH_hotpath.json ({npaths} paths)");
+
+    if check && !pooled_ok {
+        eprintln!("CHECK FAILED: pooled small-batch dispatch is slower than serial");
+        std::process::exit(1);
+    }
 }

@@ -48,6 +48,7 @@ fn hash3(data: &[u8], i: usize) -> usize {
 }
 
 /// A parsed LZ sequence: `lit_len` literals then a match.
+#[derive(Debug)]
 struct Seq {
     lit_len: u32,
     match_len: u32, // 0 only for the final literals-only pseudo-seq
@@ -64,17 +65,29 @@ fn to_code(v: u32) -> (u8, u32, u32) {
     (code as u8, v - (1 << code), code)
 }
 
-/// Reusable match-finder state: the hash-head table and position chain
+/// Reusable compressor state: the hash-head table and position chain
 /// survive across calls, with head entries epoch-tagged (high 32 bits) so
 /// stale entries from earlier blocks read as empty without a per-block
-/// table clear. Candidate visibility — and therefore output — is
-/// byte-identical to the one-shot path.
+/// table clear. The parse outputs (sequences + literals), the entropy
+/// code streams, and the payload BitWriter are scratch-resident too, so
+/// the steady-state block path performs no per-block allocation at all.
+/// Candidate visibility — and therefore output — is byte-identical to
+/// the one-shot path.
 #[derive(Debug, Default)]
 pub struct ZstdScratch {
     /// entry = (epoch << 32) | position; wrong-epoch = empty.
     head: Vec<u64>,
     chain: Vec<u32>,
     epoch: u32,
+    /// Parse outputs, cleared per block.
+    seqs: Vec<Seq>,
+    literals: Vec<u8>,
+    /// Entropy code streams (one code byte per sequence), cleared per block.
+    ll_codes: Vec<u8>,
+    ml_codes: Vec<u8>,
+    of_codes: Vec<u8>,
+    /// Payload staging, cleared per block.
+    writer: BitWriter,
 }
 
 const EPOCH_HI: u64 = 0xFFFF_FFFF_0000_0000;
@@ -85,16 +98,18 @@ impl ZstdScratch {
     }
 }
 
-fn lz_parse(data: &[u8], scratch: &mut ZstdScratch) -> (Vec<Seq>, Vec<u8>) {
+/// Greedy-lazy LZ parse of `data` into `scratch.seqs`/`scratch.literals`
+/// (cleared first).
+fn lz_parse(data: &[u8], scratch: &mut ZstdScratch) {
     let n = data.len();
-    let mut seqs = Vec::new();
-    let mut literals = Vec::with_capacity(n / 2);
+    scratch.seqs.clear();
+    scratch.literals.clear();
     if n < MIN_MATCH + 1 {
         if n > 0 {
-            literals.extend_from_slice(data);
-            seqs.push(Seq { lit_len: n as u32, match_len: 0, offset: 0 });
+            scratch.literals.extend_from_slice(data);
+            scratch.seqs.push(Seq { lit_len: n as u32, match_len: 0, offset: 0 });
         }
-        return (seqs, literals);
+        return;
     }
     if scratch.head.len() != 1 << HASH_LOG {
         scratch.head = vec![0u64; 1 << HASH_LOG];
@@ -218,8 +233,8 @@ fn lz_parse(data: &[u8], scratch: &mut ZstdScratch) -> (Vec<Seq>, Vec<u8>) {
                 }
                 mlen = mlen.min(n - i);
                 let lit_len = (i - anchor) as u32;
-                literals.extend_from_slice(&data[anchor..i]);
-                seqs.push(Seq {
+                scratch.literals.extend_from_slice(&data[anchor..i]);
+                scratch.seqs.push(Seq {
                     lit_len,
                     match_len: mlen as u32,
                     offset: moff as u32,
@@ -237,14 +252,13 @@ fn lz_parse(data: &[u8], scratch: &mut ZstdScratch) -> (Vec<Seq>, Vec<u8>) {
         }
     }
     if anchor < n {
-        literals.extend_from_slice(&data[anchor..]);
-        seqs.push(Seq {
+        scratch.literals.extend_from_slice(&data[anchor..]);
+        scratch.seqs.push(Seq {
             lit_len: (n - anchor) as u32,
             match_len: 0,
             offset: 0,
         });
     }
-    (seqs, literals)
 }
 
 /// Compress. Falls back to raw/rle framing when LZ+entropy doesn't help,
@@ -256,7 +270,9 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
 }
 
 /// Compress into a caller-provided buffer (cleared first) with reusable
-/// match-finder scratch. Byte-identical to [`compress`].
+/// compressor scratch. Byte-identical to [`compress`]; the steady state
+/// allocates nothing (parse vectors, code streams, and the payload
+/// BitWriter are all scratch-resident).
 pub fn compress_into(src: &[u8], scratch: &mut ZstdScratch, out: &mut Vec<u8>) {
     out.clear();
     // RLE fast path
@@ -264,44 +280,45 @@ pub fn compress_into(src: &[u8], scratch: &mut ZstdScratch, out: &mut Vec<u8>) {
         out.extend_from_slice(&[0xCA, 0x5D, 0x01, src[0]]);
         return;
     }
-    let (seqs, literals) = lz_parse(src, scratch);
+    lz_parse(src, scratch);
 
     // Build the three auxiliary byte streams for entropy coding.
-    let mut ll_codes = Vec::with_capacity(seqs.len()); // literal-length codes
-    let mut ml_codes = Vec::with_capacity(seqs.len()); // match-length codes
-    let mut of_codes = Vec::with_capacity(seqs.len()); // offset codes
-    for s in &seqs {
-        ll_codes.push(to_code(s.lit_len + 1).0);
-        ml_codes.push(to_code(s.match_len + 1).0);
-        of_codes.push(to_code(s.offset + 1).0);
+    scratch.ll_codes.clear(); // literal-length codes
+    scratch.ml_codes.clear(); // match-length codes
+    scratch.of_codes.clear(); // offset codes
+    for s in &scratch.seqs {
+        scratch.ll_codes.push(to_code(s.lit_len + 1).0);
+        scratch.ml_codes.push(to_code(s.match_len + 1).0);
+        scratch.of_codes.push(to_code(s.offset + 1).0);
     }
 
-    let lit_enc = Encoder::from_data(&literals);
-    let ll_enc = Encoder::from_data(&ll_codes);
-    let ml_enc = Encoder::from_data(&ml_codes);
-    let of_enc = Encoder::from_data(&of_codes);
+    let lit_enc = Encoder::from_data(&scratch.literals);
+    let ll_enc = Encoder::from_data(&scratch.ll_codes);
+    let ml_enc = Encoder::from_data(&scratch.ml_codes);
+    let of_enc = Encoder::from_data(&scratch.of_codes);
 
-    let mut w = BitWriter::new();
-    w.put(seqs.len() as u64, 32);
-    w.put(literals.len() as u64, 32);
-    lit_enc.write_table(&mut w);
-    ll_enc.write_table(&mut w);
-    ml_enc.write_table(&mut w);
-    of_enc.write_table(&mut w);
-    lit_enc.encode_into(&literals, &mut w);
-    for (k, s) in seqs.iter().enumerate() {
-        ll_enc.encode_into(&[ll_codes[k]], &mut w);
+    let w = &mut scratch.writer;
+    w.clear();
+    w.put(scratch.seqs.len() as u64, 32);
+    w.put(scratch.literals.len() as u64, 32);
+    lit_enc.write_table(w);
+    ll_enc.write_table(w);
+    ml_enc.write_table(w);
+    of_enc.write_table(w);
+    lit_enc.encode_into(&scratch.literals, w);
+    for (k, s) in scratch.seqs.iter().enumerate() {
+        ll_enc.encode_into(&scratch.ll_codes[k..k + 1], w);
         let (c, extra, nbits) = to_code(s.lit_len + 1);
-        debug_assert_eq!(c, ll_codes[k]);
+        debug_assert_eq!(c, scratch.ll_codes[k]);
         w.put(extra as u64, nbits);
-        ml_enc.encode_into(&[ml_codes[k]], &mut w);
+        ml_enc.encode_into(&scratch.ml_codes[k..k + 1], w);
         let (_, extra, nbits) = to_code(s.match_len + 1);
         w.put(extra as u64, nbits);
-        of_enc.encode_into(&[of_codes[k]], &mut w);
+        of_enc.encode_into(&scratch.of_codes[k..k + 1], w);
         let (_, extra, nbits) = to_code(s.offset + 1);
         w.put(extra as u64, nbits);
     }
-    let payload = w.finish();
+    let payload = w.flush_bytes();
 
     if payload.len() + 3 >= src.len() + 3 {
         // raw fallback
@@ -312,7 +329,7 @@ pub fn compress_into(src: &[u8], scratch: &mut ZstdScratch, out: &mut Vec<u8>) {
     }
     out.reserve(payload.len() + 3);
     out.extend_from_slice(&[0xCA, 0x5D, 0x02]);
-    out.extend_from_slice(&payload);
+    out.extend_from_slice(payload);
 }
 
 /// Decompress a frame produced by [`compress`]. `expected` = original size.

@@ -9,6 +9,8 @@
 //! BF16 codes — exactly what a partial-plane fetch through the memory
 //! controller returns to the fabric.
 
+use std::sync::Arc;
+
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::fmt::{truncate_to_planes, Dtype};
@@ -33,21 +35,28 @@ pub struct PolicyPlan {
 pub struct PolicyEngine {
     pub policy: KvPolicy,
     /// Lane array the per-step degradation sweep is sharded across
-    /// (one work item per layer — disjoint cache slices).
-    pub lanes: LaneArray,
+    /// (one work item per layer — disjoint cache slices). Shared with
+    /// the serve loop's page-sync path so every per-step batch reuses
+    /// one persistent parked pool.
+    pub lanes: Arc<LaneArray>,
 }
 
 impl PolicyEngine {
+    /// An engine on the process-wide [`crate::engine::default_pool`]
+    /// (lane threads shared with every other default-constructed user;
+    /// use [`PolicyEngine::with_lanes`] for an isolated pool).
     pub fn new(policy: KvPolicy) -> Self {
-        Self::with_lanes(policy, crate::engine::default_lanes())
+        Self::with_shared(policy, crate::engine::default_pool())
     }
 
     /// A policy engine with an explicit lane count (`1` = serial).
     pub fn with_lanes(policy: KvPolicy, lanes: usize) -> Self {
-        Self {
-            policy,
-            lanes: LaneArray::new(lanes),
-        }
+        Self::with_shared(policy, Arc::new(LaneArray::new(lanes)))
+    }
+
+    /// A policy engine dispatching into an existing shared lane pool.
+    pub fn with_shared(policy: KvPolicy, lanes: Arc<LaneArray>) -> Self {
+        Self { policy, lanes }
     }
 
     /// Quest scores per active page: sum over layers of

@@ -10,5 +10,5 @@ pub mod server;
 pub use footprint::{footprint_curve, FootprintPoint};
 pub use kvmanager::{degrade_f32, PolicyEngine, PolicyPlan};
 pub use metrics::ServeMetrics;
-pub use pagestore::KvPageStore;
+pub use pagestore::{sync_sequences, KvPageStore};
 pub use server::{serve, spawn, Request, Response};

@@ -1,10 +1,15 @@
 //! Routes completed KV pages through the memory controller and accounts
 //! for stored/fetched bytes — the glue between the model runtime and the
-//! controller that the end-to-end example exercises.
+//! controller that the end-to-end example exercises. The serve loop
+//! batches page compression *across sequences* with [`sync_sequences`]:
+//! one lane-array dispatch per decode step instead of one per sequence.
 
+use std::sync::Arc;
+
+use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::fmt::Dtype;
-use crate::memctrl::{Layout, MemController, RegionId};
+use crate::memctrl::{build_kv_group_frame, KvFrameSpec, Layout, MemController, RegionId};
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta};
 
@@ -20,10 +25,23 @@ pub struct KvPageStore {
 }
 
 impl KvPageStore {
+    /// A store on the process-wide [`crate::engine::default_pool`] (lane
+    /// threads shared with every other default-constructed user).
     pub fn new(meta: &ModelMeta, layout: Layout, codec: crate::compress::Codec) -> Self {
+        Self::with_shared(meta, layout, codec, crate::engine::default_pool())
+    }
+
+    /// A store whose controller dispatches into an existing shared lane
+    /// pool (the serve loop threads one pool through every sequence).
+    pub fn with_shared(
+        meta: &ModelMeta,
+        layout: Layout,
+        codec: crate::compress::Codec,
+        lanes: Arc<LaneArray>,
+    ) -> Self {
         let channels = meta.n_kv_heads * meta.d_head;
         Self {
-            mc: MemController::new(layout, codec),
+            mc: MemController::with_shared(layout, codec, lanes),
             pages: Vec::new(),
             page_raw_bytes: meta.layers * PAGE_TOKENS * channels * 2 * 2, // K+V bf16
             channels,
@@ -40,21 +58,41 @@ impl KvPageStore {
         self.pages.is_empty()
     }
 
-    /// Ingest pages completed by the sequence reaching `kv.pos`.
+    /// Ingest pages completed by the sequence reaching `kv.pos` (the
+    /// single-sequence path; the serve loop batches across sequences
+    /// with [`sync_sequences`]).
     pub fn sync(&mut self, kv: &KvState, meta: &ModelMeta) {
+        let lanes = Arc::clone(&self.mc.lanes);
+        sync_sequences(&mut [(&mut *self, kv)], meta, &lanes);
+    }
+
+    /// Rows per page region (for each layer: K tokens then V tokens).
+    pub fn page_rows(&self) -> usize {
+        PAGE_TOKENS * 2 * self.layers
+    }
+
+    /// Pages completed by `kv.pos` but not yet stored, with their codes.
+    pub fn pending_pages(&self, kv: &KvState, meta: &ModelMeta) -> Vec<(usize, Vec<u16>)> {
         let complete = kv.pos / PAGE_TOKENS;
-        while self.pages.len() < complete {
-            let p = self.pages.len();
-            let codes = self.page_codes(kv, meta, p);
-            let id = self.mc.store_kv(
-                &format!("page{p}"),
-                Dtype::Bf16,
-                PAGE_TOKENS * 2 * self.layers, // K and V rows for each layer
-                self.channels,
-                &codes,
-            );
-            self.pages.push(id);
-        }
+        (self.pages.len()..complete)
+            .map(|p| (p, self.page_codes(kv, meta, p)))
+            .collect()
+    }
+
+    /// The frame spec pages on this store compress under.
+    pub fn frame_spec(&self) -> KvFrameSpec {
+        self.mc.kv_frame_spec(Dtype::Bf16, self.channels)
+    }
+
+    /// Register page `p` from frames pre-built under
+    /// [`KvPageStore::frame_spec`]. Pages must commit in order.
+    pub fn commit_page(&mut self, p: usize, built: Vec<Vec<u8>>) {
+        assert_eq!(p, self.pages.len(), "pages commit in order");
+        let rows = self.page_rows();
+        let id =
+            self.mc
+                .register_kv_region(&format!("page{p}"), Dtype::Bf16, rows, self.channels, built);
+        self.pages.push(id);
     }
 
     /// BF16 codes of page `p` (token-major rows: for each layer, K tokens
@@ -104,11 +142,9 @@ impl KvPageStore {
             }
             if p < self.pages.len() {
                 let id = self.pages[p];
-                // partial-plane fetch through the controller
-                let (_, stats) = self
-                    .mc
-                    .load(id, bits, None)
-                    .expect("page load");
+                // partial-plane fetch accounting through the controller —
+                // header-only, nothing is actually decompressed
+                let stats = self.mc.fetch_stats(id, bits).expect("page stats");
                 total += stats.dram_bytes;
             } else {
                 // current partial page: raw on-chip, full precision
@@ -116,6 +152,59 @@ impl KvPageStore {
             }
         }
         total
+    }
+}
+
+/// One decode step's page sync across all active sequences: every
+/// completed-but-unstored page from every sequence is compressed in a
+/// SINGLE lane-array dispatch, then its frames are registered into the
+/// owning sequence's store. Frames and addresses are byte-identical to
+/// calling [`KvPageStore::sync`] per sequence — batching changes *where*
+/// a group compresses, never what it produces.
+pub fn sync_sequences(
+    seqs: &mut [(&mut KvPageStore, &KvState)],
+    meta: &ModelMeta,
+    lanes: &LaneArray,
+) {
+    // 1. collect pending page codes from every sequence
+    let mut jobs: Vec<(usize, usize, Vec<u16>)> = Vec::new(); // (seq, page, codes)
+    for (si, (store, kv)) in seqs.iter().enumerate() {
+        for (p, codes) in store.pending_pages(kv, meta) {
+            jobs.push((si, p, codes));
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+    // 2. flatten every page's group chunks into ONE cross-sequence batch
+    let mut specs: Vec<KvFrameSpec> = Vec::with_capacity(jobs.len());
+    let mut chunk_counts: Vec<usize> = Vec::with_capacity(jobs.len());
+    let mut chunks: Vec<(usize, usize, &[u16])> = Vec::new(); // (job, nt, data)
+    for (ji, &(si, _, ref codes)) in jobs.iter().enumerate() {
+        let store = &*seqs[si].0;
+        let spec = store.frame_spec();
+        let gt = store.mc.kv_group_tokens;
+        let rows = store.page_rows();
+        let mut t0 = 0usize;
+        let mut cnt = 0usize;
+        while t0 < rows {
+            let nt = gt.min(rows - t0);
+            chunks.push((ji, nt, &codes[t0 * spec.channels..(t0 + nt) * spec.channels]));
+            t0 += nt;
+            cnt += 1;
+        }
+        specs.push(spec);
+        chunk_counts.push(cnt);
+    }
+    let built: Vec<Vec<u8>> = lanes.run(&chunks, |lane, &(ji, nt, chunk)| {
+        build_kv_group_frame(lane, specs[ji], nt, chunk)
+    });
+    drop(chunks);
+    // 3. register frames per page, in the order per-sequence sync would
+    let mut built = built.into_iter();
+    for (ji, &(si, p, _)) in jobs.iter().enumerate() {
+        let frames: Vec<Vec<u8>> = built.by_ref().take(chunk_counts[ji]).collect();
+        seqs[si].0.commit_page(p, frames);
     }
 }
 
@@ -196,6 +285,53 @@ mod tests {
         let skip = ps.fetch_bytes(&[0, 0, 0, 16]);
         assert!(half < full, "half={half} full={full}");
         assert!(skip < half, "skip={skip}");
+    }
+
+    #[test]
+    fn batched_sync_matches_per_sequence_sync() {
+        // The cross-sequence batched path must produce byte-identical
+        // frames (and addresses) to per-sequence sync, at any lane count.
+        let m = meta();
+        let kvs: Vec<KvState> = [48usize, 64, 40, 16]
+            .iter()
+            .map(|&pos| kv_filled(&m, pos))
+            .collect();
+        let reference: Vec<KvPageStore> = kvs
+            .iter()
+            .map(|kv| {
+                let mut s = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+                s.sync(kv, &m);
+                s
+            })
+            .collect();
+        for lane_count in [1usize, 4] {
+            let lanes = Arc::new(LaneArray::new(lane_count));
+            let mut stores: Vec<KvPageStore> = (0..kvs.len())
+                .map(|_| {
+                    KvPageStore::with_shared(&m, Layout::Proposed, Codec::Zstd, Arc::clone(&lanes))
+                })
+                .collect();
+            let mut seqs: Vec<(&mut KvPageStore, &KvState)> =
+                stores.iter_mut().zip(kvs.iter()).collect();
+            sync_sequences(&mut seqs, &m, &lanes);
+            drop(seqs);
+            for (s, r) in stores.iter().zip(&reference) {
+                assert_eq!(s.len(), r.len(), "{lane_count} lanes: page count");
+                for (&a, &b) in s.pages.iter().zip(&r.pages) {
+                    let fa: Vec<_> = s.mc.region(a).frames().collect();
+                    let fb: Vec<_> = r.mc.region(b).frames().collect();
+                    assert_eq!(fa, fb, "{lane_count} lanes: frames diverged");
+                }
+            }
+            // idempotent: a second batched sync adds nothing
+            let before: Vec<usize> = stores.iter().map(|s| s.len()).collect();
+            let mut seqs: Vec<(&mut KvPageStore, &KvState)> =
+                stores.iter_mut().zip(kvs.iter()).collect();
+            sync_sequences(&mut seqs, &m, &lanes);
+            drop(seqs);
+            let after: Vec<usize> = stores.iter().map(|s| s.len()).collect();
+            assert_eq!(before, after);
+        }
     }
 
     #[test]

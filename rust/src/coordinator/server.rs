@@ -8,11 +8,11 @@
 //! DESIGN.md substrate table).
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 use super::kvmanager::PolicyEngine;
 use super::metrics::ServeMetrics;
-use super::pagestore::KvPageStore;
+use super::pagestore::{sync_sequences, KvPageStore};
 use crate::compress::Codec;
 use crate::memctrl::Layout;
 use crate::quant::policy::KvPolicy;
@@ -61,8 +61,14 @@ pub fn serve(
     slots: usize,
     metrics: &mut ServeMetrics,
 ) -> anyhow::Result<Vec<Response>> {
+    // ONE persistent lane pool serves every sequence: per-step policy
+    // sweeps and page compression all dispatch into parked workers
+    // instead of paying per-batch thread spawn/join per sequence.
+    let lanes = crate::engine::default_pool();
     let mut pending: VecDeque<Request> = requests.into();
     let mut active: Vec<Active> = Vec::new();
+    // current-step page_bits per active sequence (parallel to `active`)
+    let mut step_bits: Vec<Vec<u32>> = Vec::new();
     let mut done = Vec::new();
 
     while !pending.is_empty() || !active.is_empty() {
@@ -71,8 +77,13 @@ pub fn serve(
             let Some(req) = pending.pop_front() else { break };
             active.push(Active {
                 kv: KvState::new(&lm.meta),
-                engine: PolicyEngine::new(req.policy.clone()),
-                store: KvPageStore::new(&lm.meta, Layout::Proposed, Codec::Zstd),
+                engine: PolicyEngine::with_shared(req.policy.clone(), Arc::clone(&lanes)),
+                store: KvPageStore::with_shared(
+                    &lm.meta,
+                    Layout::Proposed,
+                    Codec::Zstd,
+                    Arc::clone(&lanes),
+                ),
                 produced: Vec::new(),
                 nll_sum: 0.0,
                 fetched: 0,
@@ -82,9 +93,8 @@ pub fn serve(
             });
         }
         // one decode step per active sequence (round-robin batching)
-        let mut i = 0;
-        while i < active.len() {
-            let a = &mut active[i];
+        step_bits.clear();
+        for a in active.iter_mut() {
             let next_input = if a.fed < a.req.prompt.len() {
                 a.req.prompt[a.fed]
             } else {
@@ -98,8 +108,6 @@ pub fn serve(
                 next_input,
                 &plan.mask,
             )?;
-            a.store.sync(&a.kv, &lm.meta);
-            a.fetched += a.store.fetch_bytes(&plan.page_bits);
             a.fed += 1;
             if a.fed >= a.req.prompt.len() {
                 let tok = TinyLm::argmax(&logits);
@@ -107,11 +115,31 @@ pub fn serve(
                 a.produced.push(tok);
             }
             metrics.steps += 1;
-
+            step_bits.push(plan.page_bits);
+        }
+        // cross-sequence page sync: every sequence's completed pages
+        // compress as ONE lane batch per decode step (byte-identical to
+        // the old per-sequence sync; see pagestore::sync_sequences)
+        {
+            let mut seqs: Vec<(&mut KvPageStore, &KvState)> = active
+                .iter_mut()
+                .map(|a| {
+                    let Active { store, kv, .. } = a;
+                    (store, &*kv)
+                })
+                .collect();
+            sync_sequences(&mut seqs, &lm.meta, &lanes);
+        }
+        // fetch accounting + retire finished sequences
+        let mut i = 0;
+        while i < active.len() {
+            let a = &mut active[i];
+            a.fetched += a.store.fetch_bytes(&step_bits[i]);
             let finished = a.produced.len() >= a.req.max_new_tokens
                 || a.kv.pos >= lm.meta.max_seq;
             if finished {
                 let a = active.swap_remove(i);
+                step_bits.swap_remove(i);
                 let wall = a.started.elapsed().as_secs_f64() * 1e3;
                 metrics.record_request(a.produced.len(), wall);
                 done.push(Response {

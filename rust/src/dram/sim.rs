@@ -36,6 +36,61 @@ struct Pending {
     tag: u64,
 }
 
+/// Arrival-ordered request queue with O(1) removal: slots are tombstoned
+/// (`None`) instead of shifted (`Vec::remove` was O(n) per FR-FCFS issue,
+/// quadratic per drained queue at depth 64+). Iteration yields live
+/// entries oldest-first with their stable slot index; slots compact when
+/// tombstones dominate, which never happens between a scan and its
+/// removal. Scheduling order is identical to the old Vec — FCFS age order
+/// is the slot order.
+#[derive(Default)]
+struct ReqQueue {
+    slots: std::collections::VecDeque<Option<Pending>>,
+    live: usize,
+}
+
+impl ReqQueue {
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn push(&mut self, p: Pending) {
+        self.slots.push_back(Some(p));
+        self.live += 1;
+    }
+
+    /// Live entries oldest-first, with stable slot indices for `remove`.
+    fn iter(&self) -> impl Iterator<Item = (usize, &Pending)> + '_ {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|p| (i, p)))
+    }
+
+    /// Oldest live entry.
+    fn first(&self) -> Option<&Pending> {
+        self.iter().next().map(|(_, p)| p)
+    }
+
+    /// Remove by slot index (as yielded by [`ReqQueue::iter`]).
+    fn remove(&mut self, slot: usize) -> Pending {
+        let p = self.slots[slot].take().expect("live queue slot");
+        self.live -= 1;
+        // trim leading tombstones; compact when they dominate
+        while matches!(self.slots.front(), Some(None)) {
+            self.slots.pop_front();
+        }
+        if self.slots.len() > 2 * self.live + 8 {
+            self.slots.retain(|s| s.is_some());
+        }
+        p
+    }
+}
+
 /// Energy counters (per channel, aggregated at report time).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EnergyCounters {
@@ -103,7 +158,7 @@ impl EnergyBreakdown {
 struct Channel {
     banks: Vec<Bank>, // bankgroups * banks_per_group
     rank: RankTiming,
-    queue: Vec<Pending>,
+    queue: ReqQueue,
     next_refresh: u64,
     /// Scan suppression: this channel cannot issue before this cycle
     /// (recomputed after every fruitless scan, cleared on enqueue).
@@ -135,7 +190,7 @@ impl MemorySystem {
             .map(|_| Channel {
                 banks: (0..cfg.banks()).map(|_| Bank::default()).collect(),
                 rank: RankTiming::new(cfg.bankgroups),
-                queue: Vec::new(),
+                queue: ReqQueue::default(),
                 next_refresh: cfg.t_refi,
                 skip_until: 0,
             })
@@ -256,7 +311,7 @@ impl MemorySystem {
                 continue;
             }
             upd(ch.next_refresh);
-            for p in &ch.queue {
+            for (_, p) in ch.queue.iter() {
                 upd(p.arrival);
                 let b = &ch.banks[p.addr.bankgroup * cfg.banks_per_group + p.addr.bank];
                 upd(b.next_act);
@@ -307,7 +362,7 @@ impl MemorySystem {
             let col_possible = ch.rank.col_floor(cfg) <= cycle;
             let mut issue: Option<(usize, bool)> = None; // (queue idx, is_hit)
             if col_possible {
-                for (qi, p) in ch.queue.iter().enumerate() {
+                for (qi, p) in ch.queue.iter() {
                     if p.arrival > cycle {
                         continue;
                     }
@@ -324,12 +379,7 @@ impl MemorySystem {
             }
             if issue.is_none() {
                 // oldest request, make progress on its bank
-                if let Some((qi, p)) = ch
-                    .queue
-                    .iter()
-                    .enumerate()
-                    .find(|(_, p)| p.arrival <= cycle)
-                {
+                if let Some((qi, p)) = ch.queue.iter().find(|(_, p)| p.arrival <= cycle) {
                     let p = *p;
                     let bidx = p.addr.bankgroup * cfg.banks_per_group + p.addr.bank;
                     let bank = &mut ch.banks[bidx];
@@ -592,6 +642,41 @@ mod tests {
         assert_eq!(fcomp.len(), ncomp.len());
         for (a, b) in fcomp.iter().zip(&ncomp) {
             assert_eq!((a.tag, a.finish), (b.tag, b.finish));
+        }
+    }
+
+    #[test]
+    fn req_queue_matches_vec_reference() {
+        // Random push/remove interleavings: the tombstoned queue must
+        // preserve exactly the Vec's arrival order and removal results.
+        let cfg = DDR5_4800_PAPER.clone();
+        let map = crate::dram::addrmap::AddrMap::new(&cfg);
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let mut rq = ReqQueue::default();
+        let mut vr: Vec<Pending> = Vec::new();
+        for step in 0..2000u64 {
+            if rq.len() < 64 && (vr.is_empty() || rng.next_f64() < 0.55) {
+                let p = Pending {
+                    addr: map.decode((rng.next_u64() % (1 << 28)) / 64 * 64),
+                    is_write: false,
+                    arrival: step,
+                    tag: step,
+                };
+                rq.push(p);
+                vr.push(p);
+            } else {
+                let k = rng.index(vr.len());
+                let (slot, _) = rq.iter().nth(k).unwrap();
+                let a = rq.remove(slot);
+                let b = vr.remove(k);
+                assert_eq!((a.tag, a.arrival), (b.tag, b.arrival));
+            }
+            assert_eq!(rq.len(), vr.len());
+            assert_eq!(rq.is_empty(), vr.is_empty());
+            let tags: Vec<u64> = rq.iter().map(|(_, p)| p.tag).collect();
+            let want: Vec<u64> = vr.iter().map(|p| p.tag).collect();
+            assert_eq!(tags, want, "order diverged at step {step}");
+            assert_eq!(rq.first().map(|p| p.tag), vr.first().map(|p| p.tag));
         }
     }
 

@@ -1,8 +1,21 @@
-//! The lane array: shards a batch of blocks across N OS threads.
+//! The lane array: a persistent pool of parked lane workers.
+//!
+//! PR 1 dispatched every batch by spawning and joining scoped OS threads,
+//! which is fine for store/bench-sized batches (64 blocks amortize the
+//! thread churn) but swamps the few-block batches the serve loop produces
+//! on every decode step. Lanes are now long-lived workers — spawned once,
+//! parked on a condvar between batches — fed through a shared injector:
+//! a batch is published as a generation-stamped job, participating
+//! workers wake, pull items off a shared cursor, write results into
+//! pre-claimed slots, and park again. `run`/`run_mut` keep their exact
+//! signatures and ordered-merge semantics, so output stays byte-identical
+//! to the serial path at every lane count.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
 
 use super::lane::{Lane, LaneStats};
 
@@ -17,23 +30,172 @@ pub fn default_lanes() -> usize {
     PAPER_LANES.min(hw)
 }
 
-/// An array of [`Lane`]s plus a work-sharing scheduler.
+/// The process-wide default pool, shared by the convenience constructors
+/// (`MemController::new`, `PolicyEngine::new`, `KvPageStore::new`): one
+/// set of parked workers for the whole process instead of one pool per
+/// object. Explicit `with_lanes`/`with_shared` callers are unaffected.
+pub fn default_pool() -> Arc<LaneArray> {
+    static POOL: std::sync::OnceLock<Arc<LaneArray>> = std::sync::OnceLock::new();
+    Arc::clone(POOL.get_or_init(|| Arc::new(LaneArray::with_default_lanes())))
+}
+
+/// Lock a lane, recovering from poisoning: a panic inside a batch closure
+/// cannot corrupt lane scratch (codec hash tables are epoch-tagged and
+/// every staging buffer is cleared on entry), so the lane stays usable
+/// and the pool survives a panicked batch.
+fn lock_lane(m: &Mutex<Lane>) -> MutexGuard<'_, Lane> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn lock_state(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A type-erased batch: participating workers call `task(worker_id)`.
+/// The pointee lives on the submitting thread's stack; erasing the
+/// lifetime is sound because `submit` does not return (and the job is
+/// cleared) until every participant has finished with it.
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    /// Workers with id < `nworkers` participate in this batch.
+    nworkers: usize,
+}
+
+// SAFETY: the pointer is only dereferenced while the submitting thread is
+// blocked inside `submit`, which keeps the pointee alive.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Stamp of the current batch; bumped once per submit. Workers track
+    /// the last generation they saw, so each batch is executed exactly
+    /// once per participating worker and skipped by the rest.
+    generation: u64,
+    job: Option<Job>,
+    /// Participating pool workers that have not yet finished the batch.
+    remaining: usize,
+    /// Participating pool workers that panicked during the batch.
+    panics: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    /// Lane scratch, indexed by worker id (0 = the submitting thread).
+    lanes: Vec<Mutex<Lane>>,
+    state: Mutex<PoolState>,
+    /// Workers park here between batches.
+    work_cv: Condvar,
+    /// Submitters park here waiting for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+/// Write-only view of the result slots. Each index is claimed by exactly
+/// one worker (shared cursor / locked queue), so writes are disjoint.
+struct Slots<R> {
+    ptr: *mut Option<R>,
+}
+
+// SAFETY: disjoint-index writes only (see above); R crosses threads.
+unsafe impl<R: Send> Sync for Slots<R> {}
+
+impl<R> Slots<R> {
+    /// SAFETY: caller must hold exclusive claim to index `i`.
+    unsafe fn write(&self, i: usize, r: R) {
+        *self.ptr.add(i) = Some(r);
+    }
+}
+
+/// Unwrap the filled result slots (every index must have been claimed).
+fn collect_slots<R>(slots: Vec<Option<R>>) -> Vec<R> {
+    slots
+        .into_iter()
+        .map(|o| o.expect("missing lane result"))
+        .collect()
+}
+
+fn worker_loop(shared: Arc<Shared>, wid: usize) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_state(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != last_gen {
+                    last_gen = st.generation;
+                    if let Some(job) = st.job {
+                        if wid < job.nworkers {
+                            break job;
+                        }
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        // SAFETY: the submitter blocks until `remaining == 0`, so the
+        // closure outlives this call.
+        let task = unsafe { &*job.task };
+        let panicked = catch_unwind(AssertUnwindSafe(|| task(wid))).is_err();
+        let mut st = lock_state(&shared.state);
+        if panicked {
+            st.panics += 1;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// An array of [`Lane`]s plus a persistent parked worker pool.
 ///
 /// `run`/`run_mut` map a function over a batch of items: items are pulled
 /// from a shared cursor by whichever lane is free (dynamic load balance,
-/// like the hardware's block scheduler), results are returned in item
-/// order. Because lanes are data-pure, the output is byte-identical to a
-/// serial map — parallelism changes *where* a block runs, never what it
-/// produces. With one lane (or one item) everything runs inline on the
-/// caller thread, so a `LaneArray::new(1)` is the serial reference path.
+/// like the hardware's block scheduler), results land in item order.
+/// Because lanes are data-pure, the output is byte-identical to a serial
+/// map — parallelism changes *where* a block runs, never what it
+/// produces. Lane 0 always runs on the submitting thread, so with one
+/// lane (or one item) everything stays inline and `LaneArray::new(1)` is
+/// the serial reference path with no pool threads at all.
+///
+/// One batch is in flight at a time (a second submitter parks until the
+/// first drains). Batch closures must not re-enter the same array. A
+/// panic inside a batch closure surfaces at the submitting call site
+/// after the batch drains; the pool itself survives and stays usable.
+/// Worker threads spawn lazily on the first parallel batch — an array
+/// that only ever runs inline (one lane, one-item batches, or never
+/// used) costs no threads at all. Dropping the array parks-out cleanly:
+/// workers are woken, drained, and joined.
 pub struct LaneArray {
-    lanes: Vec<Mutex<Lane>>,
+    shared: Arc<Shared>,
+    /// One parked OS thread per lane beyond lane 0, spawned on first use.
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    spawn_once: std::sync::Once,
+    /// Serializes batches onto the pool.
+    submit_lock: Mutex<()>,
 }
 
 impl LaneArray {
     pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            lanes: (0..n).map(|i| Mutex::new(Lane::new(i))).collect(),
+            state: Mutex::new(PoolState {
+                generation: 0,
+                job: None,
+                remaining: 0,
+                panics: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         Self {
-            lanes: (0..n.max(1)).map(|i| Mutex::new(Lane::new(i))).collect(),
+            shared,
+            workers: Mutex::new(Vec::new()),
+            spawn_once: std::sync::Once::new(),
+            submit_lock: Mutex::new(()),
         }
     }
 
@@ -43,15 +205,12 @@ impl LaneArray {
     }
 
     pub fn lane_count(&self) -> usize {
-        self.lanes.len()
+        self.shared.lanes.len()
     }
 
     /// Per-lane stats snapshot (index = lane id).
     pub fn lane_stats(&self) -> Vec<LaneStats> {
-        self.lanes
-            .iter()
-            .map(|l| l.lock().expect("lane poisoned").stats)
-            .collect()
+        self.shared.lanes.iter().map(|l| lock_lane(l).stats).collect()
     }
 
     /// All lanes' stats merged.
@@ -64,8 +223,70 @@ impl LaneArray {
     }
 
     pub fn reset_stats(&self) {
-        for l in &self.lanes {
-            l.lock().expect("lane poisoned").stats = LaneStats::default();
+        for l in &self.shared.lanes {
+            lock_lane(l).stats = LaneStats::default();
+        }
+    }
+
+    /// Publish `task` to the pool and run lane 0's share on the calling
+    /// thread; returns when every participating worker has finished.
+    /// Worker panics re-surface here after the batch drains.
+    fn submit(&self, nworkers: usize, task: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(nworkers >= 2 && nworkers <= self.lane_count());
+        let _batch = self.submit_lock.lock().unwrap_or_else(|p| p.into_inner());
+        // lazy pool bring-up: the first parallel batch pays the spawns
+        // once; construction and inline-only use cost no threads
+        self.spawn_once.call_once(|| {
+            let mut ws = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+            for wid in 1..self.lane_count() {
+                let sh = Arc::clone(&self.shared);
+                ws.push(
+                    std::thread::Builder::new()
+                        .name(format!("lane-{wid}"))
+                        .spawn(move || worker_loop(sh, wid))
+                        .expect("spawn lane worker"),
+                );
+            }
+        });
+        {
+            let mut st = lock_state(&self.shared.state);
+            st.generation = st.generation.wrapping_add(1);
+            // SAFETY: lifetime erasure only — no worker holds the pointer
+            // past the `remaining == 0` wait below.
+            st.job = Some(Job {
+                task: unsafe {
+                    std::mem::transmute::<
+                        &(dyn Fn(usize) + Sync),
+                        *const (dyn Fn(usize) + Sync + 'static),
+                    >(task)
+                },
+                nworkers,
+            });
+            st.remaining = nworkers - 1;
+            st.panics = 0;
+        }
+        self.shared.work_cv.notify_all();
+        // Lane 0's share always runs on the submitting thread: a small
+        // batch can finish entirely inline while the pool workers are
+        // still waking, costing zero context switches in the best case.
+        let caller = catch_unwind(AssertUnwindSafe(|| task(0)));
+        let worker_panics = {
+            let mut st = lock_state(&self.shared.state);
+            while st.remaining > 0 {
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            st.job = None;
+            st.panics
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panics > 0 {
+            panic!("lane worker panicked ({worker_panics} worker(s))");
         }
     }
 
@@ -77,20 +298,93 @@ impl LaneArray {
         F: Fn(&mut Lane, &T) -> R + Sync,
     {
         let n = items.len();
-        if self.lanes.len() == 1 || n <= 1 {
-            let mut lane = self.lanes[0].lock().expect("lane poisoned");
+        if self.lane_count() == 1 || n <= 1 {
+            let mut lane = lock_lane(&self.shared.lanes[0]);
             return items.iter().map(|it| f(&mut lane, it)).collect();
         }
+        let nworkers = self.lane_count().min(n);
         let next = AtomicUsize::new(0);
-        let nworkers = self.lanes.len().min(n);
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let out = Slots {
+            ptr: slots.as_mut_ptr(),
+        };
+        let shared = &self.shared;
+        let task = |wid: usize| {
+            let mut lane = lock_lane(&shared.lanes[wid]);
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&mut lane, &items[i]);
+                // SAFETY: index i was claimed exactly once via the cursor.
+                unsafe { out.write(i, r) };
+            }
+        };
+        self.submit(nworkers, &task);
+        collect_slots(slots)
+    }
+
+    /// Like [`LaneArray::run`] but consumes the items — for work that owns
+    /// mutable state (e.g. disjoint `&mut` slices of one tensor).
+    pub fn run_mut<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&mut Lane, T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.lane_count() == 1 || n <= 1 {
+            let mut lane = lock_lane(&self.shared.lanes[0]);
+            return items.into_iter().map(|it| f(&mut lane, it)).collect();
+        }
+        let nworkers = self.lane_count().min(n);
+        let queue: Mutex<VecDeque<(usize, T)>> =
+            Mutex::new(items.into_iter().enumerate().collect());
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let out = Slots {
+            ptr: slots.as_mut_ptr(),
+        };
+        let shared = &self.shared;
+        let task = |wid: usize| {
+            let mut lane = lock_lane(&shared.lanes[wid]);
+            loop {
+                let item = queue.lock().unwrap_or_else(|p| p.into_inner()).pop_front();
+                let Some((i, it)) = item else { break };
+                let r = f(&mut lane, it);
+                // SAFETY: index i is unique (each item popped once).
+                unsafe { out.write(i, r) };
+            }
+        };
+        self.submit(nworkers, &task);
+        collect_slots(slots)
+    }
+
+    /// The PR-1 dispatcher — scoped spawn/join per batch — retained as the
+    /// microbench baseline the pooled path is gated against. Output is
+    /// byte-identical to [`LaneArray::run`].
+    pub fn run_spawn_join<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&mut Lane, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.lane_count() == 1 || n <= 1 {
+            return self.run(items, f); // same inline path
+        }
+        let next = AtomicUsize::new(0);
+        let nworkers = self.lane_count().min(n);
         let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = self.lanes[..nworkers]
+            let handles: Vec<_> = self.shared.lanes[..nworkers]
                 .iter()
                 .map(|lm| {
                     let next = &next;
                     let f = &f;
                     s.spawn(move || {
-                        let mut lane = lm.lock().expect("lane poisoned");
+                        let mut lane = lock_lane(lm);
                         let mut local = Vec::new();
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
@@ -108,65 +402,30 @@ impl LaneArray {
                 .map(|h| h.join().expect("lane worker panicked"))
                 .collect()
         });
-        merge_ordered(n, parts)
-    }
-
-    /// Like [`LaneArray::run`] but consumes the items — for work that owns
-    /// mutable state (e.g. disjoint `&mut` slices of one tensor).
-    pub fn run_mut<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
-    where
-        T: Send,
-        R: Send,
-        F: Fn(&mut Lane, T) -> R + Sync,
-    {
-        let n = items.len();
-        if self.lanes.len() == 1 || n <= 1 {
-            let mut lane = self.lanes[0].lock().expect("lane poisoned");
-            return items.into_iter().map(|it| f(&mut lane, it)).collect();
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for part in parts {
+            for (i, r) in part {
+                slots[i] = Some(r);
+            }
         }
-        let nworkers = self.lanes.len().min(n);
-        let queue: Mutex<VecDeque<(usize, T)>> =
-            Mutex::new(items.into_iter().enumerate().collect());
-        let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = self.lanes[..nworkers]
-                .iter()
-                .map(|lm| {
-                    let queue = &queue;
-                    let f = &f;
-                    s.spawn(move || {
-                        let mut lane = lm.lock().expect("lane poisoned");
-                        let mut local = Vec::new();
-                        while let Some((i, it)) = {
-                            let mut q = queue.lock().expect("queue poisoned");
-                            q.pop_front()
-                        } {
-                            local.push((i, f(&mut lane, it)));
-                        }
-                        local
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("lane worker panicked"))
-                .collect()
-        });
-        merge_ordered(n, parts)
+        collect_slots(slots)
     }
 }
 
-fn merge_ordered<R>(n: usize, parts: Vec<Vec<(usize, R)>>) -> Vec<R> {
-    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
-    slots.resize_with(n, || None);
-    for part in parts {
-        for (i, r) in part {
-            slots[i] = Some(r);
+impl Drop for LaneArray {
+    fn drop(&mut self) {
+        lock_state(&self.shared.state).shutdown = true;
+        self.shared.work_cv.notify_all();
+        let ws = std::mem::take(
+            self.workers
+                .get_mut()
+                .unwrap_or_else(|p| p.into_inner()),
+        );
+        for h in ws {
+            let _ = h.join();
         }
     }
-    slots
-        .into_iter()
-        .map(|o| o.expect("missing lane result"))
-        .collect()
 }
 
 #[cfg(test)]
@@ -213,9 +472,14 @@ mod tests {
             };
             let serial = LaneArray::new(1).run(&blocks, work);
             for lanes in [2usize, 3, 8] {
-                let par = LaneArray::new(lanes).run(&blocks, work);
+                let la = LaneArray::new(lanes);
+                let par = la.run(&blocks, work);
                 if par != serial {
                     return Err(format!("{lanes} lanes diverged ({codec})"));
+                }
+                // the spawn/join reference dispatcher agrees too
+                if la.run_spawn_join(&blocks, work) != serial {
+                    return Err(format!("{lanes} lanes spawn/join diverged ({codec})"));
                 }
             }
             Ok(())
@@ -242,5 +506,61 @@ mod tests {
     fn default_lanes_respects_caps() {
         let d = default_lanes();
         assert!(d >= 1 && d <= PAPER_LANES);
+    }
+
+    #[test]
+    fn pool_drops_cleanly_used_and_unused() {
+        for lanes in [1usize, 2, 8] {
+            // never submitted to: workers are parked from birth
+            drop(LaneArray::new(lanes));
+            // dropped right after batches, while workers re-park
+            let la = LaneArray::new(lanes);
+            let items: Vec<u64> = (0..100).collect();
+            for _ in 0..3 {
+                let out = la.run(&items, |_lane, &x| x.wrapping_mul(7));
+                assert_eq!(out.len(), items.len());
+            }
+            drop(la);
+        }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_and_pool_survives() {
+        let la = LaneArray::new(4);
+        let items: Vec<usize> = (0..64).collect();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            la.run(&items, |_lane, &i| {
+                if i == 13 {
+                    panic!("injected lane panic");
+                }
+                i
+            })
+        }));
+        assert!(res.is_err(), "panic must surface at the submitting call site");
+        // the pool drained the batch and remains serviceable
+        let got = la.run(&items, |_lane, &i| i + 1);
+        let want: Vec<usize> = (1..65).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        // Two threads batching into one shared array: batches queue up
+        // behind the submit lock and both complete correctly.
+        let la = std::sync::Arc::new(LaneArray::new(4));
+        let items: Vec<usize> = (0..200).collect();
+        let want: Vec<usize> = items.iter().map(|&i| i * 2).collect();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let la = std::sync::Arc::clone(&la);
+                let items = items.clone();
+                let want = want.clone();
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        assert_eq!(la.run(&items, |_lane, &i| i * 2), want);
+                    }
+                });
+            }
+        });
     }
 }

@@ -9,27 +9,42 @@
 //! * weight/KV stores in [`crate::memctrl::MemController`],
 //! * frame decode on partial-precision loads,
 //! * KV group batches in [`crate::kvcluster`],
-//! * page degradation sweeps in [`crate::coordinator::kvmanager`].
+//! * page degradation sweeps in [`crate::coordinator::kvmanager`],
+//! * the serve loop's cross-sequence page sync
+//!   ([`crate::coordinator::pagestore::sync_sequences`]).
 //!
 //! ## Lane model
 //!
-//! A [`Lane`] is one worker pinned to one OS thread for the duration of a
-//! batch. [`LaneArray::run`] shards a batch over the lanes with a shared
-//! atomic cursor (dynamic load balance — a lane that draws an
-//! incompressible block simply pulls fewer items), and reassembles results
-//! in item order. The default lane count is the paper's 32, capped at the
-//! host's available parallelism ([`default_lanes`]).
+//! The hardware's lanes are *always-on*: work arrives and is consumed
+//! with no setup cost. A [`LaneArray`] mirrors that with a persistent
+//! parked worker pool — one long-lived OS thread per lane beyond lane 0,
+//! spawned lazily on the first parallel batch (construction and
+//! inline-only use cost no threads) and parked on a condvar between
+//! batches.
+//! [`LaneArray::run`] publishes a batch as a generation-stamped job;
+//! participating workers wake, pull items off a shared atomic cursor
+//! (dynamic load balance — a lane that draws an incompressible block
+//! simply pulls fewer items), write results into pre-claimed slots, and
+//! park again. Lane 0 always runs on the submitting thread, so a small
+//! per-decode-step batch can finish entirely inline while the pool wakes,
+//! and `LaneArray::new(1)` spawns no threads at all — it *is* the serial
+//! reference path. Worker panics surface at the submitting call site
+//! after the batch drains (the pool survives and stays usable), and
+//! dropping the array wakes, drains, and joins every worker. The default
+//! lane count is the paper's 32, capped at the host's available
+//! parallelism ([`default_lanes`]).
 //!
 //! ## Scratch reuse
 //!
 //! Each lane owns every buffer the block path needs — the LZ4 hash table,
-//! the zstd-class hash-head/chain tables, a compressed-plane staging
-//! buffer, and a flat decompressed-plane staging buffer. Hash tables are
-//! neither re-allocated *nor cleared* between blocks: entries carry an
-//! epoch tag in their high bits, so stale entries from earlier blocks
-//! read as empty (see `compress/lz4.rs`, `compress/zstdlike.rs`). The
-//! steady state allocates only the output frames. This is the software
-//! stand-in for the per-lane SRAM the paper budgets in Table IV.
+//! the zstd-class hash-head/chain tables plus the parse/entropy staging
+//! (sequence + literal vectors and the BitWriter), a compressed-plane
+//! staging buffer, and a flat decompressed-plane staging buffer. Hash
+//! tables are neither re-allocated *nor cleared* between blocks: entries
+//! carry an epoch tag in their high bits, so stale entries from earlier
+//! blocks read as empty (see `compress/lz4.rs`, `compress/zstdlike.rs`).
+//! The steady state allocates only the output frames. This is the
+//! software stand-in for the per-lane SRAM the paper budgets in Table IV.
 //!
 //! ## Flat plane layout
 //!
@@ -41,14 +56,16 @@
 //!
 //! ## Determinism contract
 //!
-//! Lanes are pure functions of their input block: scratch reuse and lane
-//! scheduling never change a single output byte versus the serial path.
-//! `LaneArray::new(1)` *is* the serial reference, and the property tests
-//! in this module and `tests/engine_parity.rs` pin byte-identity for
-//! every lane count.
+//! Lanes are pure functions of their input block: scratch reuse, the
+//! parked pool, and lane scheduling never change a single output byte
+//! versus the serial path. `LaneArray::new(1)` *is* the serial reference,
+//! and the property tests in this module and `tests/engine_parity.rs` pin
+//! byte-identity for every lane count — including the retained
+//! spawn/join reference dispatcher ([`LaneArray::run_spawn_join`], the
+//! microbench baseline the pooled path is gated against in CI).
 
 pub mod array;
 pub mod lane;
 
-pub use array::{default_lanes, LaneArray, PAPER_LANES};
+pub use array::{default_lanes, default_pool, LaneArray, PAPER_LANES};
 pub use lane::{Lane, LaneStats};

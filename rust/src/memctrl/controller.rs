@@ -9,6 +9,8 @@
 //! frame *prefix* needed for the requested precision, decompresses, and
 //! reconstitutes standard layout — the compute fabric never knows.
 
+use std::sync::Arc;
+
 use super::frame::{decode_header, encode_header, FrameHeader, FrameKind};
 use crate::bitplane::layout::disaggregate;
 use crate::compress::Codec;
@@ -146,8 +148,10 @@ pub struct MemController {
     pub kv_group_tokens: usize,
     pub mode: DecorrelateMode,
     /// The multi-lane (de)compression engine every store/load batch runs
-    /// through (paper: 32 lanes; here capped at host parallelism).
-    pub lanes: LaneArray,
+    /// through (paper: 32 lanes; here capped at host parallelism). An
+    /// `Arc` so the serve loop can thread ONE persistent pool through
+    /// every per-sequence store instead of spinning one up per sequence.
+    pub lanes: Arc<LaneArray>,
     regions: Vec<Region>,
     /// Next free DRAM byte address (bump allocator, 64 B aligned).
     next_addr: u64,
@@ -156,19 +160,29 @@ pub struct MemController {
 }
 
 impl MemController {
+    /// A controller on the process-wide [`crate::engine::default_pool`]
+    /// — lane threads (and their [`LaneArray::lane_stats`] counters) are
+    /// shared with every other default-constructed controller/engine/
+    /// store. Use [`MemController::with_lanes`] for an isolated pool.
     pub fn new(layout: Layout, codec: Codec) -> Self {
-        Self::with_lanes(layout, codec, crate::engine::default_lanes())
+        Self::with_shared(layout, codec, crate::engine::default_pool())
     }
 
     /// A controller with an explicit lane count (`1` = serial reference).
     pub fn with_lanes(layout: Layout, codec: Codec, lanes: usize) -> Self {
+        Self::with_shared(layout, codec, Arc::new(LaneArray::new(lanes)))
+    }
+
+    /// A controller sharing an existing lane pool (the serve loop threads
+    /// one pool through every per-sequence store and policy engine).
+    pub fn with_shared(layout: Layout, codec: Codec, lanes: Arc<LaneArray>) -> Self {
         Self {
             engine: EngineModel::default(),
             layout,
             codec,
             kv_group_tokens: 16,
             mode: DecorrelateMode::ExpDelta,
-            lanes: LaneArray::new(lanes),
+            lanes,
             regions: Vec::new(),
             next_addr: 0,
             total: ReadStats::default(),
@@ -223,7 +237,7 @@ impl MemController {
     pub fn store_kv(&mut self, name: &str, dtype: Dtype, tokens: usize, channels: usize, codes: &[u16]) -> RegionId {
         assert_eq!(codes.len(), tokens * channels);
         let gt = self.kv_group_tokens;
-        let (layout, codec, mode) = (self.layout, self.codec, self.mode);
+        let spec = self.kv_frame_spec(dtype, channels);
         let mut chunks: Vec<(usize, &[u16])> = Vec::new();
         let mut t0 = 0;
         while t0 < tokens {
@@ -231,25 +245,38 @@ impl MemController {
             chunks.push((nt, &codes[t0 * channels..(t0 + nt) * channels]));
             t0 += nt;
         }
-        let built: Vec<Vec<u8>> = self.lanes.run(&chunks, |lane, &(nt, chunk)| match layout {
-            Layout::Proposed => {
-                // channel-major + delta + planes
-                let kv = crate::kvcluster::KvGroup::new(dtype, nt, channels, chunk.to_vec());
-                let cm = kv.channel_major();
-                let (tr, betas) = decorrelate(dtype, nt, channels, &cm, mode);
-                build_frame_with(
-                    lane,
-                    FrameKind::KvCache,
-                    dtype,
-                    codec,
-                    &tr,
-                    channels,
-                    &betas,
-                    mode_code(mode),
-                )
-            }
-            Layout::Traditional => build_traditional_frame(FrameKind::KvCache, dtype, chunk),
-        });
+        let built: Vec<Vec<u8>> = self
+            .lanes
+            .run(&chunks, |lane, &(nt, chunk)| {
+                build_kv_group_frame(lane, spec, nt, chunk)
+            });
+        self.register_kv_region(name, dtype, tokens, channels, built)
+    }
+
+    /// The frame spec [`MemController::store_kv`] would use for a KV
+    /// region on this controller.
+    pub fn kv_frame_spec(&self, dtype: Dtype, channels: usize) -> KvFrameSpec {
+        KvFrameSpec {
+            layout: self.layout,
+            codec: self.codec,
+            mode: self.mode,
+            dtype,
+            channels,
+        }
+    }
+
+    /// Register a KV region from frames pre-built with
+    /// [`build_kv_group_frame`] under this controller's
+    /// [`MemController::kv_frame_spec`] — the batched serve-sync path.
+    /// Frames and addresses are identical to [`MemController::store_kv`].
+    pub fn register_kv_region(
+        &mut self,
+        name: &str,
+        dtype: Dtype,
+        tokens: usize,
+        channels: usize,
+        built: Vec<Vec<u8>>,
+    ) -> RegionId {
         let mut frames = Vec::with_capacity(built.len());
         for frame in built {
             let addr = self.alloc(frame.len());
@@ -261,13 +288,40 @@ impl MemController {
             dtype,
             layout: self.layout,
             codec: self.codec,
-            n: codes.len(),
+            n: tokens * channels,
             channels,
             mode: self.mode,
             frames,
-            frame_codes: gt * channels,
+            frame_codes: self.kv_group_tokens * channels,
         });
         RegionId(self.regions.len() - 1)
+    }
+
+    /// Header-only read accounting: the same `ReadStats` a
+    /// [`MemController::load`] with `mem = None` would produce (identical
+    /// `dram_bytes`/`logical_bytes`/`engine_ns`/`frames`, `dram_cycles`
+    /// stays 0) without decoding anything — no plane decompression, no
+    /// lane dispatch. The serve loop's per-step fetch accounting runs on
+    /// this; cumulative totals are updated exactly as `load` would.
+    pub fn fetch_stats(&mut self, id: RegionId, keep_bits: u32) -> anyhow::Result<ReadStats> {
+        let region = &self.regions[id.0];
+        let keep = keep_bits.min(region.dtype.bits());
+        let mut stats = ReadStats::default();
+        for (_, frame) in &region.frames {
+            let (fetch_bytes, m) = frame_fetch_info(region.layout, frame, keep)?;
+            stats.frames += 1;
+            stats.dram_bytes += fetch_bytes as u64;
+            stats.engine_ns += match region.layout {
+                Layout::Proposed => self.engine.process_ns(fetch_bytes),
+                Layout::Traditional => 0.0,
+            };
+            stats.logical_bytes += (m * keep as usize).div_ceil(8) as u64;
+        }
+        self.total.dram_bytes += stats.dram_bytes;
+        self.total.logical_bytes += stats.logical_bytes;
+        self.total.engine_ns += stats.engine_ns;
+        self.total.frames += stats.frames;
+        Ok(stats)
     }
 
     /// Read a whole region at an effective precision of `keep_bits`
@@ -286,13 +340,7 @@ impl MemController {
         let layout = region.layout;
         let mut stats = ReadStats::default();
         for (addr, frame) in &region.frames {
-            let fetch_bytes = match layout {
-                Layout::Proposed => {
-                    let (h, _) = decode_header(frame)?;
-                    h.prefix_bytes(keep)
-                }
-                Layout::Traditional => frame.len(),
-            };
+            let (fetch_bytes, _) = frame_fetch_info(layout, frame, keep)?;
             stats.frames += 1;
             stats.dram_bytes += fetch_bytes as u64;
             stats.engine_ns += match layout {
@@ -321,6 +369,59 @@ impl MemController {
         self.total.engine_ns += stats.engine_ns;
         self.total.frames += stats.frames;
         Ok((out, stats))
+    }
+}
+
+/// Per-frame fetch accounting shared by [`MemController::load`] and
+/// [`MemController::fetch_stats`]: (bytes moved from DRAM at `keep`
+/// planes, codes stored in the frame).
+fn frame_fetch_info(layout: Layout, frame: &[u8], keep: u32) -> anyhow::Result<(usize, usize)> {
+    match layout {
+        Layout::Proposed => {
+            let (h, _) = decode_header(frame)?;
+            Ok((h.prefix_bytes(keep), h.m))
+        }
+        Layout::Traditional => {
+            anyhow::ensure!(frame.len() >= 12, "truncated frame");
+            let m = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+            Ok((frame.len(), m))
+        }
+    }
+}
+
+/// Everything but the data that determines a KV group frame's bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct KvFrameSpec {
+    pub layout: Layout,
+    pub codec: Codec,
+    pub mode: DecorrelateMode,
+    pub dtype: Dtype,
+    pub channels: usize,
+}
+
+/// Build one KV group frame (`nt` tokens × `spec.channels`) on a lane —
+/// the [`MemController::store_kv`] work item, exposed so the serve loop
+/// can batch groups from many sequences into a single lane dispatch
+/// (see [`crate::coordinator::pagestore::sync_sequences`]).
+pub fn build_kv_group_frame(lane: &mut Lane, spec: KvFrameSpec, nt: usize, chunk: &[u16]) -> Vec<u8> {
+    match spec.layout {
+        Layout::Proposed => {
+            // channel-major + delta + planes
+            let kv = crate::kvcluster::KvGroup::new(spec.dtype, nt, spec.channels, chunk.to_vec());
+            let cm = kv.channel_major();
+            let (tr, betas) = decorrelate(spec.dtype, nt, spec.channels, &cm, spec.mode);
+            build_frame_with(
+                lane,
+                FrameKind::KvCache,
+                spec.dtype,
+                spec.codec,
+                &tr,
+                spec.channels,
+                &betas,
+                mode_code(spec.mode),
+            )
+        }
+        Layout::Traditional => build_traditional_frame(FrameKind::KvCache, spec.dtype, chunk),
     }
 }
 
@@ -546,6 +647,39 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fetch_stats_matches_load_accounting() {
+        // The header-only path must report exactly what a decoding load
+        // reports (the serve loop's fetch accounting depends on it).
+        let t = weight_tensor(20_000, 13);
+        let kv_codes = crate::synth::gen_kv_layer(
+            48,
+            32,
+            crate::synth::CorpusProfile::Book,
+            0.5,
+            7,
+        );
+        for layout in [Layout::Proposed, Layout::Traditional] {
+            let mut mc = MemController::new(layout, Codec::Zstd);
+            let wid = mc.store_weights("w", &t);
+            let kid = mc.store_kv("kv", Dtype::Bf16, 48, 32, &kv_codes);
+            for id in [wid, kid] {
+                for keep in [4u32, 8, 16] {
+                    let (_, ls) = mc.load(id, keep, None).unwrap();
+                    let fs = mc.fetch_stats(id, keep).unwrap();
+                    assert_eq!(fs.dram_bytes, ls.dram_bytes, "{layout:?} keep={keep}");
+                    assert_eq!(fs.logical_bytes, ls.logical_bytes, "{layout:?} keep={keep}");
+                    assert_eq!(fs.frames, ls.frames, "{layout:?} keep={keep}");
+                    assert!(
+                        (fs.engine_ns - ls.engine_ns).abs() < 1e-6,
+                        "{layout:?} keep={keep}"
+                    );
+                    assert_eq!(fs.dram_cycles, 0);
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,5 +6,8 @@
 pub mod controller;
 pub mod frame;
 
-pub use controller::{EngineModel, Layout, MemController, ReadStats, Region, RegionId, BLOCK_BYTES};
+pub use controller::{
+    build_kv_group_frame, EngineModel, KvFrameSpec, Layout, MemController, ReadStats, Region,
+    RegionId, BLOCK_BYTES,
+};
 pub use frame::{FrameHeader, FrameKind};

@@ -36,8 +36,10 @@ pub fn popcount(bytes: &[u8]) -> usize {
     total
 }
 
-/// An append-only bit writer (LSB-first within each byte).
-#[derive(Default)]
+/// An append-only bit writer (LSB-first within each byte). Reusable: the
+/// zstd-class hot path keeps one inside its scratch and resets it per
+/// block with [`BitWriter::clear`], so the payload buffer allocates once.
+#[derive(Debug, Default)]
 pub struct BitWriter {
     buf: Vec<u8>,
     /// Bits used in the final byte (0..8; 0 means byte-aligned).
@@ -75,6 +77,25 @@ impl BitWriter {
             self.buf.push(self.acc as u8);
         }
         self.buf
+    }
+
+    /// Reset to empty for reuse, keeping the buffer allocation.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.nbits = 0;
+        self.acc = 0;
+    }
+
+    /// Flush (zero-padding the last byte) and borrow the bytes; unlike
+    /// [`BitWriter::finish`] the writer stays alive for reuse via
+    /// [`BitWriter::clear`]. Idempotent until the next `put`.
+    pub fn flush_bytes(&mut self) -> &[u8] {
+        if self.nbits > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+        &self.buf
     }
 }
 
@@ -220,6 +241,28 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn reused_writer_matches_finish() {
+        // clear + flush_bytes must reproduce the one-shot finish() bytes
+        // across reuse (the zstd scratch path depends on it).
+        let mut reused = BitWriter::new();
+        for trial in 0..20u64 {
+            let items: Vec<(u64, u32)> =
+                (0..trial * 3).map(|i| (i % 117, 1 + (i % 31) as u32)).collect();
+            let mut fresh = BitWriter::new();
+            reused.clear();
+            for &(v, b) in &items {
+                let v = v & ((1u64 << b) - 1);
+                fresh.put(v, b);
+                reused.put(v, b);
+            }
+            let flushed = reused.flush_bytes().to_vec();
+            // flush is idempotent until the next put
+            assert_eq!(reused.flush_bytes(), &flushed[..]);
+            assert_eq!(flushed, fresh.finish(), "trial {trial}");
+        }
     }
 
     #[test]

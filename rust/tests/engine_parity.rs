@@ -2,9 +2,11 @@
 //! be byte-identical to the serial ones for every lane count, and the
 //! reusable-scratch codec entry points must agree with the one-shot API.
 //! Parallelism may change *where* a block runs, never what it produces.
+//! Also pins the pooled dispatcher's lifecycle: clean drop with parked
+//! workers, and worker panics surfacing at the submitting call site.
 
 use camc::compress::{Codec, CodecScratch};
-use camc::engine::{LaneArray, PAPER_LANES};
+use camc::engine::{Lane, LaneArray, PAPER_LANES};
 use camc::fmt::minifloat::BF16;
 use camc::fmt::{CodeTensor, Dtype};
 use camc::kvcluster::{compress_groups, decompress_groups, DecorrelateMode, KvGroup};
@@ -102,6 +104,84 @@ fn kv_group_batches_are_lane_count_invariant() {
             }
         }
     }
+}
+
+#[test]
+fn pooled_dispatch_is_byte_identical_at_every_lane_count() {
+    // The acceptance sweep: EVERY lane count 1..=PAPER_LANES produces
+    // frames byte-identical to the serial controller.
+    let t = weight_tensor(20_000, 21);
+    let mut serial = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+    let sid = serial.store_weights("w", &t);
+    let serial_frames: Vec<(u64, Vec<u8>)> = serial
+        .region(sid)
+        .frames()
+        .map(|(a, f)| (a, f.to_vec()))
+        .collect();
+    for lanes in 1..=PAPER_LANES {
+        let mut par = MemController::with_lanes(Layout::Proposed, Codec::Zstd, lanes);
+        let pid = par.store_weights("w", &t);
+        let par_frames: Vec<(u64, Vec<u8>)> = par
+            .region(pid)
+            .frames()
+            .map(|(a, f)| (a, f.to_vec()))
+            .collect();
+        assert_eq!(par_frames, serial_frames, "{lanes} lanes: frames diverged");
+    }
+}
+
+#[test]
+fn pooled_and_spawn_join_dispatch_agree() {
+    // The retained spawn/join reference dispatcher and the parked pool
+    // must produce identical ordered results over the same lanes.
+    let la = LaneArray::new(6);
+    let blocks: Vec<Vec<u16>> = (0..40)
+        .map(|i| {
+            let mut r = Xoshiro256::new(400 + i as u64);
+            (0..700).map(|_| r.next_u64() as u16).collect()
+        })
+        .collect();
+    let work = |lane: &mut Lane, codes: &Vec<u16>| {
+        let pb = camc::bitplane::layout::disaggregate(Dtype::Bf16, codes);
+        let mut payload = Vec::new();
+        let dir = lane.compress_planes(&pb, Codec::Zstd, &mut payload);
+        (dir, payload)
+    };
+    assert_eq!(la.run(&blocks, work), la.run_spawn_join(&blocks, work));
+}
+
+#[test]
+fn pool_drop_is_clean_with_parked_workers() {
+    // Drop never-used pools (workers parked from birth) and pools dropped
+    // right after batches; neither may hang, leak, or panic.
+    for lanes in [2usize, 8, PAPER_LANES] {
+        drop(LaneArray::new(lanes));
+        let la = LaneArray::new(lanes);
+        let items: Vec<u64> = (0..500).collect();
+        for _ in 0..4 {
+            let out = la.run(&items, |_lane, &x| x ^ 0x5aa5);
+            assert_eq!(out.len(), items.len());
+        }
+        drop(la);
+    }
+}
+
+#[test]
+fn worker_panic_propagates_to_submitting_call_site() {
+    let la = LaneArray::new(8);
+    let items: Vec<usize> = (0..128).collect();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        la.run(&items, |_lane, &i| {
+            if i % 37 == 5 {
+                panic!("injected worker panic");
+            }
+            i
+        })
+    }));
+    assert!(res.is_err(), "worker panic must surface to the submitter");
+    // the pool drained and stays usable, and still matches serial output
+    let want: Vec<usize> = items.iter().map(|&i| i * 9).collect();
+    assert_eq!(la.run(&items, |_lane, &i| i * 9), want);
 }
 
 #[test]
