@@ -1,0 +1,131 @@
+//! Traffic-serving demo: a seeded multi-tenant Poisson workload served
+//! through the compressed-capacity-aware continuous-batching scheduler,
+//! entirely hermetic (synthetic decode backend — no artifacts, no XLA).
+//!
+//!     cargo run --release --example serve_traffic
+//!
+//! Prints the compressed-vs-uncompressed capacity comparison (same byte
+//! budget, strictly more concurrent sequences with compression on), the
+//! pressure/eviction schedule, per-tenant throughput, and TTFT/TBT/e2e
+//! latency percentiles in deterministic virtual-step units.
+
+use std::sync::Arc;
+
+use camc::coordinator::{
+    fixed_slots_for_budget, serve_trace, EventKind, SchedConfig, ServeMetrics,
+};
+use camc::engine::LaneArray;
+use camc::report::Table;
+use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    let lm = SynthLm::tiny(2026);
+    let spec = WorkloadSpec::chat_plus_batch(
+        ArrivalProcess::Poisson { rate: 1.2 },
+        48,
+        lm.meta.max_seq,
+    );
+    let trace = Trace::generate(&spec, 7);
+    println!(
+        "trace: {} requests over {} virtual steps, tenants: {}",
+        trace.requests.len(),
+        trace.requests.last().map(|r| r.arrival_step).unwrap_or(0),
+        spec.tenants
+            .iter()
+            .map(|t| t.name.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    // round-trip through the record/replay format, as a recorded incident
+    // trace would
+    let trace = Trace::from_bytes(&trace.to_bytes())?;
+
+    // a KV tier worth ~6 full sequences raw
+    let budget: u64 = 6 * 16 * 1024;
+    let mut tab = Table::new(
+        "same byte budget, three admission policies",
+        &[
+            "admission",
+            "peak conc",
+            "steps",
+            "evicts",
+            "ttft p50/p99",
+            "tbt p99",
+            "e2e p99",
+        ],
+    );
+    let mut peaks = Vec::new();
+    for (name, cfg) in [
+        (
+            "fixed-slot (raw reserve)",
+            SchedConfig::fixed_slots(fixed_slots_for_budget(budget, &lm.meta)),
+        ),
+        ("budget, uncompressed", SchedConfig::uncompressed(budget)),
+        ("budget, compressed", SchedConfig::compressed(budget)),
+    ] {
+        let lanes = Arc::new(LaneArray::with_default_lanes());
+        let mut m = ServeMetrics::default();
+        let out = serve_trace(&lm, &trace, &cfg, lanes, &mut m)?;
+        let evicts = out
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Evict)
+            .count();
+        tab.row(&[
+            name.into(),
+            out.peak_active.to_string(),
+            out.steps.to_string(),
+            evicts.to_string(),
+            format!(
+                "{:.0}/{:.0}",
+                m.ttft_steps_p(0.5),
+                m.ttft_steps_p(0.99)
+            ),
+            format!("{:.0}", m.tbt_steps_p(0.99)),
+            format!("{:.0}", m.e2e_steps_p(0.99)),
+        ]);
+        peaks.push((name, out.peak_active, out.pressure_steps, m, out));
+    }
+    tab.print();
+
+    let (_, _, pressure, m, out) = peaks.last().expect("compressed run");
+    println!(
+        "\ncompressed run: pressure ladder steps none/soft/hard = {}/{}/{}",
+        pressure[0], pressure[1], pressure[2]
+    );
+    let mut ten = Table::new(
+        "per-tenant throughput (compressed run)",
+        &["tenant", "requests", "tokens", "tokens/step"],
+    );
+    for (t, s) in &m.tenants {
+        let name = &spec.tenants[*t as usize].name;
+        ten.row(&[
+            name.clone(),
+            s.requests.to_string(),
+            s.tokens_out.to_string(),
+            format!("{:.3}", s.tokens_out as f64 / out.steps.max(1) as f64),
+        ]);
+    }
+    ten.print();
+
+    let ratio = out
+        .responses
+        .iter()
+        .map(|r| r.kv_ratio)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!("best per-sequence KV compression ratio: {ratio:.2}x");
+
+    // the point of the subsystem: compression -> more concurrent users
+    let fixed = peaks[0].1;
+    let uncomp = peaks[1].1;
+    let comp = peaks[2].1;
+    assert!(
+        comp > uncomp && comp >= fixed,
+        "compressed budget must sustain the most concurrency ({comp} vs {uncomp}/{fixed})"
+    );
+    println!(
+        "capacity check ✓ compressed admission sustained {comp} concurrent sequences \
+         vs {uncomp} uncompressed / {fixed} fixed-slot under one {budget}-byte budget"
+    );
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Traffic-serving bench: the continuous-batching scheduler under a
+//! seeded open-loop Poisson workload, hermetic on the synthetic decode
+//! backend. Prints the admission-policy comparison AND writes
+//! `BENCH_serve.json` so the traffic profile joins the perf trajectory
+//! next to `BENCH_hotpath.json`.
+//!
+//!     cargo bench --bench serve_traffic [-- --fast] [-- --check]
+//!
+//! `--fast` trims the trace/horizon for CI smoke runs; `--check` exits
+//! non-zero if pressure-driven admission serves fewer sequences than
+//! fixed-slot admission at equal byte budget, or if the compressed
+//! budget fails to sustain more concurrency than the byte-equal
+//! uncompressed budget (the regressions CI gates on).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use camc::coordinator::{
+    fixed_slots_for_budget, serve_trace, EventKind, SchedConfig, SchedOutcome, ServeMetrics,
+};
+use camc::engine::LaneArray;
+use camc::report::json::Json;
+use camc::report::Table;
+use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let check = args.iter().any(|a| a == "--check");
+
+    let lm = SynthLm::tiny(2026);
+    let n_requests = if fast { 28 } else { 72 };
+    let horizon: u64 = if fast { 220 } else { 520 };
+    let spec = WorkloadSpec::chat_plus_batch(
+        ArrivalProcess::Poisson { rate: 1.2 },
+        n_requests,
+        lm.meta.max_seq,
+    );
+    let trace = Trace::generate(&spec, 7);
+    // a KV tier worth ~6 worst-case raw sequences
+    let budget: u64 = 6 * 16 * 1024;
+
+    let mut json: BTreeMap<String, Json> = BTreeMap::new();
+    let run = |cfg: &SchedConfig| -> (SchedOutcome, ServeMetrics, f64) {
+        let lanes = Arc::new(LaneArray::with_default_lanes());
+        let mut m = ServeMetrics::default();
+        let t0 = Instant::now();
+        let out = serve_trace(&lm, &trace, cfg, lanes, &mut m).expect("serve_trace");
+        (out, m, t0.elapsed().as_secs_f64())
+    };
+    let capped = |mut cfg: SchedConfig| -> SchedConfig {
+        cfg.max_steps = horizon;
+        cfg
+    };
+
+    // equal-budget comparison within a fixed virtual horizon: how many
+    // sequences does each admission policy actually serve?
+    let (fx, _, _) = run(&capped(SchedConfig::fixed_slots(fixed_slots_for_budget(
+        budget, &lm.meta,
+    ))));
+    let (un, _, _) = run(&capped(SchedConfig::uncompressed(budget)));
+    let (co, cm, _) = run(&capped(SchedConfig::compressed(budget)));
+    // wall-rate row: the full trace, uncapped, compressed admission
+    let (full, fm, wall) = run(&SchedConfig::compressed(budget));
+
+    let evicts = |o: &SchedOutcome| {
+        o.events
+            .iter()
+            .filter(|e| e.kind == EventKind::Evict)
+            .count()
+    };
+    let mut tab = Table::new(
+        &format!("traffic @ {budget} B KV budget, horizon {horizon} steps"),
+        &["admission", "served", "peak conc", "evicts", "ttft p99", "e2e p99"],
+    );
+    for (name, o, m) in [
+        ("fixed-slot", &fx, None),
+        ("budget uncompressed", &un, None),
+        ("budget compressed", &co, Some(&cm)),
+    ] {
+        tab.row(&[
+            name.into(),
+            o.responses.len().to_string(),
+            o.peak_active.to_string(),
+            evicts(o).to_string(),
+            m.map(|m| format!("{:.0}", m.ttft_steps_p(0.99)))
+                .unwrap_or_else(|| "-".into()),
+            m.map(|m| format!("{:.0}", m.e2e_steps_p(0.99)))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    tab.print();
+    println!(
+        "full trace (compressed, uncapped): {} requests in {} virtual steps, {:.1} steps/s, {:.0} tok/s wall",
+        full.responses.len(),
+        full.steps,
+        full.steps as f64 / wall,
+        fm.tokens_per_sec(wall)
+    );
+
+    json.insert(
+        "serve_traffic steps_per_sec".into(),
+        Json::Num((full.steps as f64 / wall).round()),
+    );
+    json.insert(
+        "serve_traffic tokens_per_sec".into(),
+        Json::Num(fm.tokens_per_sec(wall).round()),
+    );
+    json.insert(
+        "served sequences (pressure, compressed)".into(),
+        Json::Num(co.responses.len() as f64),
+    );
+    json.insert(
+        "served sequences (budget, uncompressed)".into(),
+        Json::Num(un.responses.len() as f64),
+    );
+    json.insert(
+        "served sequences (fixed-slot)".into(),
+        Json::Num(fx.responses.len() as f64),
+    );
+    json.insert(
+        "peak concurrency (compressed)".into(),
+        Json::Num(co.peak_active as f64),
+    );
+    json.insert(
+        "peak concurrency (uncompressed)".into(),
+        Json::Num(un.peak_active as f64),
+    );
+    json.insert(
+        "evictions (compressed)".into(),
+        Json::Num(evicts(&co) as f64),
+    );
+    json.insert("ttft p99 steps".into(), Json::Num(cm.ttft_steps_p(0.99)));
+    json.insert("tbt p99 steps".into(), Json::Num(cm.tbt_steps_p(0.99)));
+    json.insert("e2e p99 steps".into(), Json::Num(cm.e2e_steps_p(0.99)));
+
+    let npaths = json.len();
+    std::fs::write("BENCH_serve.json", Json::Obj(json).to_string() + "\n")
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json ({npaths} paths)");
+
+    if check {
+        let mut ok = true;
+        if co.responses.len() < fx.responses.len() {
+            eprintln!(
+                "CHECK FAILED: pressure-driven admission served {} sequences, fixed-slot served {} (equal budget)",
+                co.responses.len(),
+                fx.responses.len()
+            );
+            ok = false;
+        }
+        if co.peak_active <= un.peak_active {
+            eprintln!(
+                "CHECK FAILED: compressed budget peak concurrency {} <= uncompressed {}",
+                co.peak_active, un.peak_active
+            );
+            ok = false;
+        }
+        if !ok {
+            std::process::exit(1);
+        }
+        println!(
+            "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}",
+            co.responses.len(),
+            fx.responses.len(),
+            co.peak_active,
+            un.peak_active
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Epoch-tagged hash-table reset — the shared reuse invariant behind both
+//! codecs' match finders.
+//!
+//! A reusable compressor scratch must make every block start from a table
+//! that *reads* as freshly zeroed without *paying* an O(table) clear per
+//! block. The trick (used identically by `lz4::Lz4Scratch` and the
+//! zstd-class parser's head table, previously hand-duplicated in both):
+//! tag every entry with the epoch it was written in (high 32 bits); an
+//! entry from a different epoch reads as empty. The table is actually
+//! cleared only on (re)allocation or on 32-bit epoch wrap-around, so the
+//! steady state is a single counter bump per block. Candidate visibility —
+//! and therefore compressed output — is byte-identical to a zeroed table.
+
+/// Mask selecting the epoch tag of an entry.
+pub const EPOCH_HI: u64 = 0xFFFF_FFFF_0000_0000;
+
+/// An epoch-tagged `u64` hash table. Callers own the entry encoding in the
+/// low 32 bits (position, position+1, …); this type owns the realloc /
+/// epoch-bump / wrap-clear lifecycle.
+#[derive(Debug, Default)]
+pub struct EpochTable {
+    /// entry = (epoch << 32) | caller-encoded value; wrong-epoch = empty.
+    table: Vec<u64>,
+    epoch: u32,
+}
+
+impl EpochTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new block: (re)allocate to `len` slots if needed, advance
+    /// the epoch (clearing only on alloc or epoch wrap), and return the
+    /// table plus this block's epoch tag (already shifted into the high
+    /// 32 bits, ready to OR with an entry value).
+    pub fn reset(&mut self, len: usize) -> (&mut [u64], u64) {
+        if self.table.len() != len {
+            self.table = vec![0u64; len];
+            self.epoch = 0;
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.table.fill(0);
+            self.epoch = 1;
+        }
+        (self.table.as_mut_slice(), (self.epoch as u64) << 32)
+    }
+
+    /// Is `entry` live under `tag` (a value returned by [`reset`])?
+    ///
+    /// [`reset`]: EpochTable::reset
+    #[inline]
+    pub fn live(entry: u64, tag: u64) -> bool {
+        entry & EPOCH_HI == tag
+    }
+
+    #[cfg(test)]
+    fn force_epoch(&mut self, e: u32) {
+        self.epoch = e;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stale_entries_read_empty_across_epochs() {
+        let mut t = EpochTable::new();
+        let (tab, tag1) = t.reset(16);
+        tab[3] = tag1 | 7;
+        assert!(EpochTable::live(tab[3], tag1));
+        let (tab, tag2) = t.reset(16);
+        assert_ne!(tag1, tag2);
+        // the physical entry survives but reads as empty under the new tag
+        assert_eq!(tab[3], tag1 | 7);
+        assert!(!EpochTable::live(tab[3], tag2));
+    }
+
+    #[test]
+    fn realloc_on_size_change_clears() {
+        let mut t = EpochTable::new();
+        let (tab, tag) = t.reset(8);
+        tab[0] = tag | 1;
+        let (tab, tag) = t.reset(32);
+        assert_eq!(tab.len(), 32);
+        assert!(tab.iter().all(|&e| e == 0));
+        // first epoch after realloc is 1
+        assert_eq!(tag, 1u64 << 32);
+    }
+
+    #[test]
+    fn epoch_wrap_clears_table() {
+        let mut t = EpochTable::new();
+        let (tab, tag) = t.reset(4);
+        tab[2] = tag | 9;
+        t.force_epoch(u32::MAX); // next bump wraps to 0 -> clear -> 1
+        let (tab, tag) = t.reset(4);
+        assert_eq!(tag, 1u64 << 32);
+        assert!(tab.iter().all(|&e| e == 0), "wrap must physically clear");
+    }
+}

@@ -10,62 +10,93 @@ use crate::util::bits::{BitReader, BitWriter};
 pub const MAX_CODE_LEN: u32 = 12;
 const NUM_SYMBOLS: usize = 256;
 
+/// Huffman tree node: leaves encode `-1 - symbol` in both children.
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    /// Kept for debuggability; ordering lives in the heap keys.
+    #[allow(dead_code)]
+    freq: u64,
+    left: i32, // -1-symbol for leaves, index for internal
+    right: i32,
+}
+
+/// Reusable tree-construction scratch for [`build_lengths_with`] /
+/// [`Encoder::from_data_with`]: the node arena, the frequency heap, the
+/// depth-assignment stack, and the canonical-code sort buffer all survive
+/// across calls, so a hot loop (the zstd-class codec builds four code
+/// tables per block) performs no per-stream allocation. Output is
+/// byte-identical to the one-shot [`Encoder::from_data`].
+#[derive(Debug, Default)]
+pub struct HufScratch {
+    nodes: Vec<Node>,
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>>,
+    stack: Vec<(usize, u32)>,
+    by_len: Vec<(u8, usize)>,
+}
+
+impl HufScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Build length-limited Huffman code lengths from symbol frequencies.
 /// Returns `lens[s] == 0` for absent symbols. Works for any count of
 /// present symbols (1 present symbol gets length 1).
 pub fn build_lengths(freqs: &[u64; NUM_SYMBOLS]) -> [u8; NUM_SYMBOLS] {
+    build_lengths_with(freqs, &mut HufScratch::new())
+}
+
+/// [`build_lengths`] on reusable scratch (allocation-free once warm).
+pub fn build_lengths_with(freqs: &[u64; NUM_SYMBOLS], s: &mut HufScratch) -> [u8; NUM_SYMBOLS] {
     let mut lens = [0u8; NUM_SYMBOLS];
-    let present: Vec<usize> = (0..NUM_SYMBOLS).filter(|&s| freqs[s] > 0).collect();
-    match present.len() {
+    let present = freqs.iter().filter(|&&f| f > 0).count();
+    match present {
         0 => return lens,
         1 => {
-            lens[present[0]] = 1;
+            let sym = freqs.iter().position(|&f| f > 0).expect("one present");
+            lens[sym] = 1;
             return lens;
         }
         _ => {}
     }
 
     // Build the Huffman tree with a two-queue O(n log n) method.
-    #[derive(Clone, Copy)]
-    struct Node {
-        /// Kept for debuggability; ordering lives in the heap keys.
-        #[allow(dead_code)]
-        freq: u64,
-        left: i32, // -1-symbol for leaves, index for internal
-        right: i32,
-    }
-    let mut nodes: Vec<Node> = Vec::with_capacity(present.len() * 2);
-    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
-        std::collections::BinaryHeap::new();
-    for &s in &present {
-        nodes.push(Node {
-            freq: freqs[s],
-            left: -1 - (s as i32),
-            right: -1 - (s as i32),
+    s.nodes.clear();
+    s.heap.clear();
+    for sym in 0..NUM_SYMBOLS {
+        if freqs[sym] == 0 {
+            continue;
+        }
+        s.nodes.push(Node {
+            freq: freqs[sym],
+            left: -1 - (sym as i32),
+            right: -1 - (sym as i32),
         });
-        heap.push(std::cmp::Reverse((freqs[s], nodes.len() - 1)));
+        s.heap.push(std::cmp::Reverse((freqs[sym], s.nodes.len() - 1)));
     }
-    while heap.len() > 1 {
-        let std::cmp::Reverse((fa, a)) = heap.pop().unwrap();
-        let std::cmp::Reverse((fb, b)) = heap.pop().unwrap();
-        nodes.push(Node {
+    while s.heap.len() > 1 {
+        let std::cmp::Reverse((fa, a)) = s.heap.pop().unwrap();
+        let std::cmp::Reverse((fb, b)) = s.heap.pop().unwrap();
+        s.nodes.push(Node {
             freq: fa + fb,
             left: a as i32,
             right: b as i32,
         });
-        heap.push(std::cmp::Reverse((fa + fb, nodes.len() - 1)));
+        s.heap.push(std::cmp::Reverse((fa + fb, s.nodes.len() - 1)));
     }
     // DFS to assign depths
-    let root = nodes.len() - 1;
-    let mut stack = vec![(root, 0u32)];
-    while let Some((idx, depth)) = stack.pop() {
-        let n = nodes[idx];
+    let root = s.nodes.len() - 1;
+    s.stack.clear();
+    s.stack.push((root, 0u32));
+    while let Some((idx, depth)) = s.stack.pop() {
+        let n = s.nodes[idx];
         if n.left < 0 {
             let sym = (-(n.left) - 1) as usize;
             lens[sym] = depth.max(1) as u8;
         } else {
-            stack.push((n.left as usize, depth + 1));
-            stack.push((n.right as usize, depth + 1));
+            s.stack.push((n.left as usize, depth + 1));
+            s.stack.push((n.right as usize, depth + 1));
         }
     }
 
@@ -137,15 +168,21 @@ fn limit_lengths(lens: &mut [u8; NUM_SYMBOLS]) {
 /// Returns (code, len) pairs; code bits are stored MSB-first conceptually
 /// but we emit them LSB-first reversed for the LSB-first bit IO.
 pub fn canonical_codes(lens: &[u8; NUM_SYMBOLS]) -> [(u16, u8); NUM_SYMBOLS] {
+    canonical_codes_with(lens, &mut Vec::new())
+}
+
+/// [`canonical_codes`] using a caller-provided sort buffer.
+fn canonical_codes_with(
+    lens: &[u8; NUM_SYMBOLS],
+    by_len: &mut Vec<(u8, usize)>,
+) -> [(u16, u8); NUM_SYMBOLS] {
     let mut codes = [(0u16, 0u8); NUM_SYMBOLS];
-    let mut by_len: Vec<(u8, usize)> = (0..NUM_SYMBOLS)
-        .filter(|&s| lens[s] > 0)
-        .map(|s| (lens[s], s))
-        .collect();
+    by_len.clear();
+    by_len.extend((0..NUM_SYMBOLS).filter(|&s| lens[s] > 0).map(|s| (lens[s], s)));
     by_len.sort_unstable();
     let mut code = 0u16;
     let mut prev_len = 0u8;
-    for &(l, s) in &by_len {
+    for &(l, s) in by_len.iter() {
         code <<= l - prev_len;
         codes[s] = (code, l);
         code += 1;
@@ -178,12 +215,19 @@ pub struct Encoder {
 
 impl Encoder {
     pub fn from_data(data: &[u8]) -> Self {
+        Self::from_data_with(data, &mut HufScratch::new())
+    }
+
+    /// [`Encoder::from_data`] on reusable tree-construction scratch —
+    /// byte-identical table and stream, zero steady-state allocation (the
+    /// encoder itself holds only fixed-size arrays).
+    pub fn from_data_with(data: &[u8], s: &mut HufScratch) -> Self {
         let mut freqs = [0u64; NUM_SYMBOLS];
         for &b in data {
             freqs[b as usize] += 1;
         }
-        let lens = build_lengths(&freqs);
-        let codes = canonical_codes(&lens);
+        let lens = build_lengths_with(&freqs, s);
+        let codes = canonical_codes_with(&lens, &mut s.by_len);
         let payload: usize = data.iter().map(|&b| codes[b as usize].1 as usize).sum();
         let table = Self::table_bits(&lens);
         // raw if entropy coding + header loses to 8 bits/symbol
@@ -492,6 +536,36 @@ mod tests {
             let bps = enc.payload_bits(&data) as f64 / n;
             if bps > h + 1.0 + 1e-9 {
                 return Err(format!("bps={bps:.3} entropy={h:.3}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scratch_encoder_is_byte_identical_property() {
+        // One HufScratch reused across many streams must produce exactly
+        // the one-shot encoder's table and codes every time — the
+        // zstd-class steady-state contract.
+        let mut s = HufScratch::new();
+        check("huffman_scratch_identical", 150, |g| {
+            let data = if g.rng.next_f64() < 0.5 {
+                g.bytes(4096)
+            } else {
+                g.compressible_bytes(4096)
+            };
+            let one = Encoder::from_data(&data);
+            let reused = Encoder::from_data_with(&data, &mut s);
+            if one.lens != reused.lens || one.raw != reused.raw {
+                return Err("table diverged".into());
+            }
+            let mut wa = BitWriter::new();
+            one.write_table(&mut wa);
+            one.encode_into(&data, &mut wa);
+            let mut wb = BitWriter::new();
+            reused.write_table(&mut wb);
+            reused.encode_into(&data, &mut wb);
+            if wa.finish() != wb.finish() {
+                return Err("stream diverged".into());
             }
             Ok(())
         });

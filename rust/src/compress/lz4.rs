@@ -12,6 +12,8 @@
 //! also what the paper's hardware lane implements — one hash probe per
 //! position is what fits a 2 GHz pipeline.
 
+use super::epoch::EpochTable;
+
 const MIN_MATCH: usize = 4;
 const LAST_LITERALS: usize = 5;
 const MFLIMIT: usize = 12;
@@ -30,37 +32,19 @@ fn read_u32(data: &[u8], i: usize) -> u32 {
 
 /// Reusable compressor state: the hash table survives across calls, so a
 /// hot loop (an engine lane) performs no per-block allocation — and no
-/// per-block table clear either: entries are epoch-tagged (high 32 bits),
-/// so stale entries from earlier blocks read as empty. Candidate
-/// visibility is identical to a freshly zeroed table, so output is
-/// byte-identical to the one-shot [`compress`].
+/// per-block table clear either (see [`EpochTable`] for the shared
+/// realloc/bump/wrap-clear invariant). Candidate visibility is identical
+/// to a freshly zeroed table, so output is byte-identical to the one-shot
+/// [`compress`]. Entries encode `position + 1` in the low bits (zero =
+/// empty within a live epoch).
 #[derive(Debug, Default)]
 pub struct Lz4Scratch {
-    /// entry = (epoch << 32) | (position + 1); wrong-epoch or zero = empty.
-    table: Vec<u64>,
-    epoch: u32,
+    table: EpochTable,
 }
-
-const EPOCH_HI: u64 = 0xFFFF_FFFF_0000_0000;
 
 impl Lz4Scratch {
     pub fn new() -> Self {
         Self::default()
-    }
-
-    /// Advance the epoch (clearing only on alloc or epoch wrap) and return
-    /// the table plus this block's epoch tag.
-    fn reset(&mut self) -> (&mut [u64], u64) {
-        if self.table.len() != 1 << HASH_LOG {
-            self.table = vec![0u64; 1 << HASH_LOG];
-            self.epoch = 0;
-        }
-        self.epoch = self.epoch.wrapping_add(1);
-        if self.epoch == 0 {
-            self.table.fill(0);
-            self.epoch = 1;
-        }
-        ((self.table.as_mut_slice()), (self.epoch as u64) << 32)
     }
 }
 
@@ -88,7 +72,7 @@ pub fn compress_into(src: &[u8], scratch: &mut Lz4Scratch, dst: &mut Vec<u8>) {
         return;
     }
 
-    let (table, epoch) = scratch.reset();
+    let (table, epoch) = scratch.table.reset(1 << HASH_LOG);
     let match_limit = n - MFLIMIT; // no match may start at/after this
     let mut anchor = 0usize;
     let mut i = 0usize;
@@ -97,7 +81,7 @@ pub fn compress_into(src: &[u8], scratch: &mut Lz4Scratch, dst: &mut Vec<u8>) {
         // find a match at i
         let h = hash4(read_u32(src, i));
         let e = table[h];
-        let cand = if e & EPOCH_HI == epoch { e as u32 as usize } else { 0 };
+        let cand = if EpochTable::live(e, epoch) { e as u32 as usize } else { 0 };
         table[h] = epoch | (i + 1) as u64;
         let found = cand > 0 && {
             let c = cand - 1;

@@ -8,10 +8,14 @@
 //! * [`huffman`] — the entropy stage.
 //! * [`codec`] — engine selection + the paper's 4 KB-block ratio metric.
 //! * [`entropy`] — measurement helpers for Fig 8.
+//! * [`epoch`] — the shared epoch-tagged hash-table reset both match
+//!   finders reuse scratch through.
 pub mod codec;
 pub mod entropy;
+pub mod epoch;
 pub mod huffman;
 pub mod lz4;
 pub mod zstdlike;
 
 pub use codec::{block_compression_ratio, footprint_reduction, Codec, CodecScratch, PAPER_BLOCK};
+pub use epoch::EpochTable;

@@ -23,7 +23,8 @@
 //!          (len-code extra bits, off-code extra bits)
 //! ```
 
-use super::huffman::{Decoder, Encoder};
+use super::epoch::EpochTable;
+use super::huffman::{Decoder, Encoder, HufScratch};
 use crate::util::bits::{BitReader, BitWriter};
 
 const WINDOW: usize = 1 << 17; // 128 KiB — covers the 4–64 KiB paper blocks
@@ -66,19 +67,18 @@ fn to_code(v: u32) -> (u8, u32, u32) {
 }
 
 /// Reusable compressor state: the hash-head table and position chain
-/// survive across calls, with head entries epoch-tagged (high 32 bits) so
-/// stale entries from earlier blocks read as empty without a per-block
-/// table clear. The parse outputs (sequences + literals), the entropy
-/// code streams, and the payload BitWriter are scratch-resident too, so
-/// the steady-state block path performs no per-block allocation at all.
-/// Candidate visibility — and therefore output — is byte-identical to
-/// the one-shot path.
+/// survive across calls, with head entries epoch-tagged so stale entries
+/// from earlier blocks read as empty without a per-block table clear
+/// (the shared [`EpochTable`] invariant; entries encode `position` in the
+/// low bits). The parse outputs (sequences + literals), the entropy code
+/// streams, the Huffman tree-construction scratch, and the payload
+/// BitWriter are scratch-resident too, so the steady-state block path
+/// performs no per-block allocation at all. Candidate visibility — and
+/// therefore output — is byte-identical to the one-shot path.
 #[derive(Debug, Default)]
 pub struct ZstdScratch {
-    /// entry = (epoch << 32) | position; wrong-epoch = empty.
-    head: Vec<u64>,
+    head: EpochTable,
     chain: Vec<u32>,
-    epoch: u32,
     /// Parse outputs, cleared per block.
     seqs: Vec<Seq>,
     literals: Vec<u8>,
@@ -86,11 +86,12 @@ pub struct ZstdScratch {
     ll_codes: Vec<u8>,
     ml_codes: Vec<u8>,
     of_codes: Vec<u8>,
+    /// Huffman code-table construction scratch, reused by all four
+    /// per-stream encoders.
+    huf: HufScratch,
     /// Payload staging, cleared per block.
     writer: BitWriter,
 }
-
-const EPOCH_HI: u64 = 0xFFFF_FFFF_0000_0000;
 
 impl ZstdScratch {
     pub fn new() -> Self {
@@ -111,21 +112,11 @@ fn lz_parse(data: &[u8], scratch: &mut ZstdScratch) {
         }
         return;
     }
-    if scratch.head.len() != 1 << HASH_LOG {
-        scratch.head = vec![0u64; 1 << HASH_LOG];
-        scratch.epoch = 0;
-    }
-    scratch.epoch = scratch.epoch.wrapping_add(1);
-    if scratch.epoch == 0 {
-        scratch.head.fill(0);
-        scratch.epoch = 1;
-    }
-    let epoch: u64 = (scratch.epoch as u64) << 32;
+    let (head, epoch) = scratch.head.reset(1 << HASH_LOG);
     // the chain is position-indexed and fully re-initialized (O(n), not
     // O(table)) per block
     scratch.chain.clear();
     scratch.chain.resize(n, u32::MAX);
-    let head: &mut [u64] = &mut scratch.head;
     let chain: &mut [u32] = &mut scratch.chain;
     let mut anchor = 0usize;
     let mut i = 0usize;
@@ -134,7 +125,7 @@ fn lz_parse(data: &[u8], scratch: &mut ZstdScratch) {
     #[inline]
     fn head_get(head: &[u64], epoch: u64, h: usize) -> u32 {
         let e = head[h];
-        if e & EPOCH_HI == epoch {
+        if EpochTable::live(e, epoch) {
             e as u32
         } else {
             u32::MAX
@@ -292,10 +283,12 @@ pub fn compress_into(src: &[u8], scratch: &mut ZstdScratch, out: &mut Vec<u8>) {
         scratch.of_codes.push(to_code(s.offset + 1).0);
     }
 
-    let lit_enc = Encoder::from_data(&scratch.literals);
-    let ll_enc = Encoder::from_data(&scratch.ll_codes);
-    let ml_enc = Encoder::from_data(&scratch.ml_codes);
-    let of_enc = Encoder::from_data(&scratch.of_codes);
+    // all four per-stream code tables build on one reused tree scratch —
+    // output is byte-identical to the one-shot Encoder::from_data
+    let lit_enc = Encoder::from_data_with(&scratch.literals, &mut scratch.huf);
+    let ll_enc = Encoder::from_data_with(&scratch.ll_codes, &mut scratch.huf);
+    let ml_enc = Encoder::from_data_with(&scratch.ml_codes, &mut scratch.huf);
+    let of_enc = Encoder::from_data_with(&scratch.of_codes, &mut scratch.huf);
 
     let w = &mut scratch.writer;
     w.clear();

@@ -99,6 +99,21 @@ impl PolicyEngine {
 
     /// Build this step's plan from the true cache.
     pub fn plan(&self, kv: &KvState, meta: &ModelMeta) -> PolicyPlan {
+        self.plan_pressured(kv, meta, None)
+    }
+
+    /// [`PolicyEngine::plan`] with an optional scheduler-imposed pressure
+    /// clamp: `Some(c)` caps every non-current page's fetch precision at
+    /// `c` bit-planes (see [`crate::quant::policy::apply_pressure`]) — the
+    /// continuous-batching scheduler's degrade escalation, applied *on
+    /// top of* the request's own policy. `None` is byte-identical to
+    /// [`PolicyEngine::plan`].
+    pub fn plan_pressured(
+        &self,
+        kv: &KvState,
+        meta: &ModelMeta,
+        clamp: Option<u32>,
+    ) -> PolicyPlan {
         let npages_active = kv.pos.div_ceil(PAGE_TOKENS).max(1);
         let scores = if matches!(self.policy, KvPolicy::Full | KvPolicy::SlidingWindow { .. }) {
             // rank-free policies
@@ -107,9 +122,12 @@ impl PolicyEngine {
             self.page_scores(kv, meta)
         };
         let ranks = ranks_from_scores(&scores);
-        let bits = self
+        let mut bits = self
             .policy
             .page_precisions(npages_active, Dtype::Bf16, &ranks);
+        if let Some(c) = clamp {
+            crate::quant::policy::apply_pressure(&mut bits, c);
+        }
 
         let mut mask = vec![0.0f32; meta.n_pages];
         for (p, &b) in bits.iter().enumerate() {
@@ -315,6 +333,24 @@ mod tests {
             assert_eq!(par.degraded_v, serial.degraded_v, "{lanes} lanes v");
             assert_eq!(par.page_bits, serial.page_bits, "{lanes} lanes bits");
         }
+    }
+
+    #[test]
+    fn pressured_plan_clamps_reads_not_the_current_page() {
+        let m = meta();
+        let kv = kv_with(&m, 64, 7);
+        let eng = PolicyEngine::new(KvPolicy::Full);
+        let free = eng.plan_pressured(&kv, &m, None);
+        assert_eq!(free.page_bits, vec![16, 16, 16, 16]);
+        let tight = eng.plan_pressured(&kv, &m, Some(8));
+        assert_eq!(tight.page_bits, vec![8, 8, 8, 16]);
+        // degrade actually applied to the clamped pages
+        assert_ne!(tight.degraded_k, kv.k);
+        assert!(tight.fetched_bits < free.fetched_bits);
+        // clamp None is byte-identical to plan()
+        let plain = eng.plan(&kv, &m);
+        assert_eq!(plain.page_bits, free.page_bits);
+        assert_eq!(plain.degraded_k, free.degraded_k);
     }
 
     #[test]

@@ -1,4 +1,21 @@
-//! Serving metrics: step counts, request latencies, percentile summary.
+//! Serving metrics: step counts, request latencies (wall-clock and
+//! virtual-step domains), TTFT/TBT/e2e percentile summaries, and
+//! per-tenant throughput.
+//!
+//! Latency comes in two domains. *Wall milliseconds* measure the host.
+//! *Virtual steps* (one scheduler iteration = one step) measure the
+//! schedule itself — queueing, admission, pressure, eviction — and are
+//! bit-reproducible for a given trace + seed, so SLO-shaped assertions
+//! can live in tests and CI gates without timer noise.
+
+use std::collections::BTreeMap;
+
+/// Per-tenant counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStats {
+    pub requests: u64,
+    pub tokens_out: u64,
+}
 
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
@@ -6,6 +23,14 @@ pub struct ServeMetrics {
     pub requests: u64,
     pub tokens_out: u64,
     latencies_ms: Vec<f64>,
+    /// Time-to-first-token per request, virtual steps.
+    ttft_steps: Vec<u64>,
+    /// Time-between-tokens (decode gaps after the first token), steps.
+    tbt_steps: Vec<u64>,
+    /// Arrival-to-completion per request, virtual steps.
+    e2e_steps: Vec<u64>,
+    /// Per-tenant throughput accounting.
+    pub tenants: BTreeMap<u32, TenantStats>,
 }
 
 impl ServeMetrics {
@@ -15,12 +40,29 @@ impl ServeMetrics {
         self.latencies_ms.push(wall_ms);
     }
 
+    /// Record the schedule-domain latencies of one finished request and
+    /// attribute its tokens to `tenant`.
+    pub fn record_traffic(&mut self, tenant: u32, tokens: usize, ttft: u64, e2e: u64) {
+        self.ttft_steps.push(ttft);
+        self.e2e_steps.push(e2e);
+        let t = self.tenants.entry(tenant).or_default();
+        t.requests += 1;
+        t.tokens_out += tokens as u64;
+    }
+
+    /// Record one decode gap (steps since this sequence's previous token).
+    /// A gap > 1 means the sequence stalled — queued behind a batch,
+    /// swapped out, or starved by admission.
+    pub fn record_tbt(&mut self, gap_steps: u64) {
+        self.tbt_steps.push(gap_steps);
+    }
+
     pub fn p50_ms(&self) -> f64 {
-        percentile(&self.latencies_ms, 0.50)
+        percentile_f64(&self.latencies_ms, 0.50)
     }
 
     pub fn p99_ms(&self) -> f64 {
-        percentile(&self.latencies_ms, 0.99)
+        percentile_f64(&self.latencies_ms, 0.99)
     }
 
     pub fn mean_ms(&self) -> f64 {
@@ -31,6 +73,21 @@ impl ServeMetrics {
         }
     }
 
+    /// TTFT percentile in virtual steps (q in [0, 1]).
+    pub fn ttft_steps_p(&self, q: f64) -> f64 {
+        percentile_u64(&self.ttft_steps, q)
+    }
+
+    /// Time-between-tokens percentile in virtual steps.
+    pub fn tbt_steps_p(&self, q: f64) -> f64 {
+        percentile_u64(&self.tbt_steps, q)
+    }
+
+    /// End-to-end latency percentile in virtual steps.
+    pub fn e2e_steps_p(&self, q: f64) -> f64 {
+        percentile_u64(&self.e2e_steps, q)
+    }
+
     /// Aggregate decode throughput over the measured wall time.
     pub fn tokens_per_sec(&self, wall_s: f64) -> f64 {
         if wall_s <= 0.0 {
@@ -39,9 +96,19 @@ impl ServeMetrics {
             self.tokens_out as f64 / wall_s
         }
     }
+
+    /// Per-tenant tokens per *step* over a horizon of `steps` — the
+    /// schedule-domain throughput split (deterministic).
+    pub fn tenant_tokens_per_step(&self, steps: u64) -> BTreeMap<u32, f64> {
+        let s = steps.max(1) as f64;
+        self.tenants
+            .iter()
+            .map(|(&t, st)| (t, st.tokens_out as f64 / s))
+            .collect()
+    }
 }
 
-fn percentile(xs: &[f64], q: f64) -> f64 {
+fn percentile_f64(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
@@ -49,6 +116,12 @@ fn percentile(xs: &[f64], q: f64) -> f64 {
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
     v[idx]
+}
+
+fn percentile_u64(xs: &[u64], q: f64) -> f64 {
+    // step counts are < 2^53, so the f64 round-trip is exact
+    let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    percentile_f64(&v, q)
 }
 
 #[cfg(test)]
@@ -73,5 +146,28 @@ mod tests {
         assert_eq!(m.p50_ms(), 0.0);
         assert_eq!(m.mean_ms(), 0.0);
         assert_eq!(m.tokens_per_sec(1.0), 0.0);
+        assert_eq!(m.ttft_steps_p(0.99), 0.0);
+        assert_eq!(m.tbt_steps_p(0.5), 0.0);
+        assert_eq!(m.e2e_steps_p(0.5), 0.0);
+        assert!(m.tenant_tokens_per_step(100).is_empty());
+    }
+
+    #[test]
+    fn traffic_latencies_and_tenants_accumulate() {
+        let mut m = ServeMetrics::default();
+        for i in 0..100u64 {
+            m.record_traffic((i % 2) as u32, 10, i + 1, 2 * (i + 1));
+        }
+        for g in [1u64, 1, 1, 8] {
+            m.record_tbt(g);
+        }
+        assert!((m.ttft_steps_p(0.50) - 50.0).abs() <= 1.0);
+        assert!((m.e2e_steps_p(0.50) - 100.0).abs() <= 2.0);
+        assert_eq!(m.tbt_steps_p(1.0), 8.0);
+        assert_eq!(m.tenants.len(), 2);
+        assert_eq!(m.tenants[&0].requests, 50);
+        assert_eq!(m.tenants[&1].tokens_out, 500);
+        let per_step = m.tenant_tokens_per_step(1000);
+        assert!((per_step[&0] - 0.5).abs() < 1e-12);
     }
 }

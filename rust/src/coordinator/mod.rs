@@ -1,14 +1,21 @@
-//! L3 coordinator: the serving loop that ties the runtime (PJRT model),
-//! the KV policy engine (dynamic quantization), and the memory controller
-//! together — plus the Fig 1 footprint analytics.
+//! L3 coordinator: the serving stack that ties the runtime (decode
+//! backend), the KV policy engine (dynamic quantization), and the memory
+//! controller together — the continuous-batching scheduler
+//! ([`scheduler`]), the legacy fixed-slot front door ([`server`]), and
+//! the Fig 1 footprint analytics.
 pub mod footprint;
 pub mod kvmanager;
 pub mod metrics;
 pub mod pagestore;
+pub mod scheduler;
 pub mod server;
 
 pub use footprint::{footprint_curve, FootprintPoint};
 pub use kvmanager::{degrade_f32, PolicyEngine, PolicyPlan};
-pub use metrics::ServeMetrics;
+pub use metrics::{ServeMetrics, TenantStats};
 pub use pagestore::{sync_sequences, KvPageStore};
+pub use scheduler::{
+    fixed_slots_for_budget, serve_trace, Admission, EventKind, SchedConfig, SchedEvent,
+    SchedOutcome, StepModel, TrafficResponse,
+};
 pub use server::{serve, spawn, Request, Response};

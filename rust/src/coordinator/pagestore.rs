@@ -24,6 +24,32 @@ pub struct KvPageStore {
     layers: usize,
 }
 
+/// Raw bytes of one full KV page (K+V, bf16, all layers) for a model —
+/// the unit every capacity computation in the scheduler shares with the
+/// store itself.
+pub fn page_raw_bytes(meta: &ModelMeta) -> usize {
+    meta.layers * PAGE_TOKENS * meta.n_kv_heads * meta.d_head * 2 * 2
+}
+
+/// BF16 codes of tokens `[t0, t1)` in page layout (for each layer: K
+/// tokens then V tokens, token-major rows — keeps channel alignment for
+/// the clustering path). This is THE canonical KV serialization order:
+/// the store's page builder and the scheduler's swap-out tail both use
+/// it, so a resumed cache is byte-identical by construction.
+pub(crate) fn span_codes(kv: &KvState, meta: &ModelMeta, t0: usize, t1: usize) -> Vec<u16> {
+    let row = meta.n_kv_heads * meta.d_head;
+    let mut codes = Vec::with_capacity(meta.layers * (t1 - t0) * 2 * row);
+    for l in 0..meta.layers {
+        for src in [&kv.k, &kv.v] {
+            for t in t0..t1 {
+                let off = (l * meta.max_seq + t) * row;
+                codes.extend(src[off..off + row].iter().map(|&x| BF16.encode(x) as u16));
+            }
+        }
+    }
+    codes
+}
+
 impl KvPageStore {
     /// A store on the process-wide [`crate::engine::default_pool`] (lane
     /// threads shared with every other default-constructed user).
@@ -39,12 +65,11 @@ impl KvPageStore {
         codec: crate::compress::Codec,
         lanes: Arc<LaneArray>,
     ) -> Self {
-        let channels = meta.n_kv_heads * meta.d_head;
         Self {
             mc: MemController::with_shared(layout, codec, lanes),
             pages: Vec::new(),
-            page_raw_bytes: meta.layers * PAGE_TOKENS * channels * 2 * 2, // K+V bf16
-            channels,
+            page_raw_bytes: page_raw_bytes(meta),
+            channels: meta.n_kv_heads * meta.d_head,
             layers: meta.layers,
         }
     }
@@ -95,21 +120,9 @@ impl KvPageStore {
         self.pages.push(id);
     }
 
-    /// BF16 codes of page `p` (token-major rows: for each layer, K tokens
-    /// then V tokens — keeps channel alignment for the clustering path).
+    /// BF16 codes of page `p` (the canonical [`span_codes`] order).
     fn page_codes(&self, kv: &KvState, meta: &ModelMeta, p: usize) -> Vec<u16> {
-        let row = self.channels;
-        let t0 = p * PAGE_TOKENS;
-        let mut codes = Vec::with_capacity(self.layers * PAGE_TOKENS * 2 * row);
-        for l in 0..self.layers {
-            for src in [&kv.k, &kv.v] {
-                for t in t0..t0 + PAGE_TOKENS {
-                    let off = (l * meta.max_seq + t) * row;
-                    codes.extend(src[off..off + row].iter().map(|&x| BF16.encode(x) as u16));
-                }
-            }
-        }
-        codes
+        span_codes(kv, meta, p * PAGE_TOKENS, (p + 1) * PAGE_TOKENS)
     }
 
     /// Stored bytes across all pages (compressed footprint).
@@ -129,6 +142,52 @@ impl KvPageStore {
         } else {
             self.raw_bytes() as f64 / self.stored_bytes().max(1) as f64
         }
+    }
+
+    /// Bytes of KV capacity this sequence currently occupies in the
+    /// budgeted tier: the *measured compressed* footprint of its stored
+    /// pages plus the raw on-chip partial-page tail. This is the quantity
+    /// the continuous-batching scheduler admits and evicts against — a
+    /// better compression ratio mechanically shrinks it, admitting more
+    /// concurrent sequences under the same byte budget.
+    pub fn footprint_bytes(&self, kv: &KvState) -> u64 {
+        let tail_tokens = kv.pos.saturating_sub(self.len() * PAGE_TOKENS);
+        let tail_raw = tail_tokens * self.channels * 2 * 2 * self.layers; // K+V bf16
+        self.stored_bytes() + tail_raw as u64
+    }
+
+    /// Decode stored page `p` back to its BF16 codes through the
+    /// controller (full precision) — the scheduler's swap-in path.
+    /// Returns the codes and the read accounting (real DRAM traffic).
+    pub fn load_page(&mut self, p: usize) -> anyhow::Result<(Vec<u16>, crate::memctrl::ReadStats)> {
+        let id = *self
+            .pages
+            .get(p)
+            .ok_or_else(|| anyhow::anyhow!("page {p} not stored"))?;
+        self.mc.load(id, 16, None)
+    }
+
+    /// FNV-1a digest over every stored frame (address + bytes), in page
+    /// order. Two stores hold byte-identical compressed state iff their
+    /// digests match — the evict/resume and determinism property tests
+    /// pin on this.
+    pub fn frames_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        for &id in &self.pages {
+            for (addr, frame) in self.mc.region(id).frames() {
+                for b in addr.to_le_bytes() {
+                    eat(b);
+                }
+                for &b in frame {
+                    eat(b);
+                }
+            }
+        }
+        h
     }
 
     /// Bytes a step must fetch from DRAM given per-page kept bit-planes
@@ -344,5 +403,40 @@ mod tests {
         let (codes, _) = ps.mc.load(id, 16, None).unwrap();
         let want = ps.page_codes(&kv, &m, 0);
         assert_eq!(codes, want);
+        // load_page is the same read through the public swap-in entry
+        let (codes2, stats) = ps.load_page(0).unwrap();
+        assert_eq!(codes2, want);
+        assert!(stats.dram_bytes > 0);
+        assert!(ps.load_page(1).is_err(), "only one page stored");
+    }
+
+    #[test]
+    fn footprint_counts_compressed_pages_plus_raw_tail() {
+        let m = meta();
+        let kv = kv_filled(&m, 40); // 2 pages + 8-token tail
+        let mut ps = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &m);
+        let row = m.n_kv_heads * m.d_head;
+        let tail_raw = (8 * row * 2 * 2 * m.layers) as u64;
+        assert_eq!(ps.footprint_bytes(&kv), ps.stored_bytes() + tail_raw);
+        // compressed footprint beats raw for the stored part
+        assert!(ps.stored_bytes() < ps.raw_bytes());
+    }
+
+    #[test]
+    fn frames_digest_discriminates_content() {
+        let m = meta();
+        let kva = kv_filled(&m, 32);
+        let mut a = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        a.sync(&kva, &m);
+        let mut b = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        b.sync(&kva, &m);
+        assert_eq!(a.frames_digest(), b.frames_digest());
+        // different content -> different digest
+        let mut kvc = kv_filled(&m, 32);
+        kvc.k[5] += 1.0;
+        let mut c = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        c.sync(&kvc, &m);
+        assert_ne!(a.frames_digest(), c.frames_digest());
     }
 }

@@ -1,22 +1,24 @@
-//! Request-serving loop: a thread-owned model worker consuming a request
-//! queue, decoding multiple sequences round-robin (sequence-granular
-//! continuous batching), with every KV page routed through the memory
-//! controller and per-request latency metrics.
+//! Request-serving front door.
 //!
-//! The PJRT client is not `Sync`, so the worker owns the model; clients
-//! talk to it over std mpsc channels (tokio is unavailable offline — see
-//! DESIGN.md substrate table).
+//! [`serve`] is the legacy batch entry point: a list of requests, a fixed
+//! slot count, responses in completion order. Since the traffic
+//! subsystem landed it is a thin adapter over the continuous-batching
+//! scheduler ([`crate::coordinator::scheduler`]) running in
+//! [`Admission::FixedSlots`] mode — one loop implementation serves both
+//! the legacy path and the compressed-capacity traffic path. It accepts
+//! any [`StepModel`] (the PJRT tinylm, or the synthetic backend for
+//! hermetic runs).
+//!
+//! The PJRT client is not `Sync`, so [`spawn`]'s worker owns the model;
+//! clients talk to it over std mpsc channels (tokio is unavailable
+//! offline — see DESIGN.md substrate table).
 
-use std::collections::VecDeque;
-use std::sync::{mpsc, Arc};
+use std::sync::mpsc;
 
-use super::kvmanager::PolicyEngine;
 use super::metrics::ServeMetrics;
-use super::pagestore::{sync_sequences, KvPageStore};
-use crate::compress::Codec;
-use crate::memctrl::Layout;
+use super::scheduler::{serve_trace, SchedConfig, StepModel};
 use crate::quant::policy::KvPolicy;
-use crate::runtime::model::{KvState, TinyLm};
+use crate::workload::trace::{Trace, TrafficRequest};
 
 /// A generation request.
 pub struct Request {
@@ -40,122 +42,56 @@ pub struct Response {
     pub wall_ms: f64,
 }
 
-struct Active {
-    req: Request,
-    kv: KvState,
-    engine: PolicyEngine,
-    store: KvPageStore,
-    produced: Vec<u16>,
-    nll_sum: f64,
-    fetched: u64,
-    fed: usize,
-    started: std::time::Instant,
-}
-
 /// Serve a batch of requests to completion. Returns responses in
-/// completion order. `slots` bounds concurrent sequences (the batcher's
-/// admission control).
-pub fn serve(
-    lm: &TinyLm,
+/// completion order. `slots` bounds concurrent sequences (fixed-slot
+/// admission; for budget-driven admission use
+/// [`crate::coordinator::scheduler::serve_trace`] directly).
+pub fn serve<M: StepModel>(
+    lm: &M,
     requests: Vec<Request>,
     slots: usize,
     metrics: &mut ServeMetrics,
 ) -> anyhow::Result<Vec<Response>> {
-    // ONE persistent lane pool serves every sequence: per-step policy
-    // sweeps and page compression all dispatch into parked workers
-    // instead of paying per-batch thread spawn/join per sequence.
+    // ONE persistent lane pool serves every sequence (policy sweeps +
+    // page compression), threaded through the scheduler.
     let lanes = crate::engine::default_pool();
-    let mut pending: VecDeque<Request> = requests.into();
-    let mut active: Vec<Active> = Vec::new();
-    // current-step page_bits per active sequence (parallel to `active`)
-    let mut step_bits: Vec<Vec<u32>> = Vec::new();
-    let mut done = Vec::new();
-
-    while !pending.is_empty() || !active.is_empty() {
-        // admit
-        while active.len() < slots {
-            let Some(req) = pending.pop_front() else { break };
-            active.push(Active {
-                kv: KvState::new(&lm.meta),
-                engine: PolicyEngine::with_shared(req.policy.clone(), Arc::clone(&lanes)),
-                store: KvPageStore::with_shared(
-                    &lm.meta,
-                    Layout::Proposed,
-                    Codec::Zstd,
-                    Arc::clone(&lanes),
-                ),
-                produced: Vec::new(),
-                nll_sum: 0.0,
-                fetched: 0,
-                fed: 0,
-                started: std::time::Instant::now(),
-                req,
-            });
-        }
-        // one decode step per active sequence (round-robin batching)
-        step_bits.clear();
-        for a in active.iter_mut() {
-            let next_input = if a.fed < a.req.prompt.len() {
-                a.req.prompt[a.fed]
-            } else {
-                *a.produced.last().expect("produced")
-            };
-            let plan = a.engine.plan(&a.kv, &lm.meta);
-            let logits = lm.decode_step_degraded(
-                &mut a.kv,
-                &plan.degraded_k,
-                &plan.degraded_v,
-                next_input,
-                &plan.mask,
-            )?;
-            a.fed += 1;
-            if a.fed >= a.req.prompt.len() {
-                let tok = TinyLm::argmax(&logits);
-                a.nll_sum += TinyLm::nll(&logits, tok);
-                a.produced.push(tok);
-            }
-            metrics.steps += 1;
-            step_bits.push(plan.page_bits);
-        }
-        // cross-sequence page sync: every sequence's completed pages
-        // compress as ONE lane batch per decode step (byte-identical to
-        // the old per-sequence sync; see pagestore::sync_sequences)
-        {
-            let mut seqs: Vec<(&mut KvPageStore, &KvState)> = active
-                .iter_mut()
-                .map(|a| {
-                    let Active { store, kv, .. } = a;
-                    (store, &*kv)
-                })
-                .collect();
-            sync_sequences(&mut seqs, &lm.meta, &lanes);
-        }
-        // fetch accounting + retire finished sequences
-        let mut i = 0;
-        while i < active.len() {
-            let a = &mut active[i];
-            a.fetched += a.store.fetch_bytes(&step_bits[i]);
-            let finished = a.produced.len() >= a.req.max_new_tokens
-                || a.kv.pos >= lm.meta.max_seq;
-            if finished {
-                let a = active.swap_remove(i);
-                step_bits.swap_remove(i);
-                let wall = a.started.elapsed().as_secs_f64() * 1e3;
-                metrics.record_request(a.produced.len(), wall);
-                done.push(Response {
-                    id: a.req.id,
-                    mean_nll: a.nll_sum / a.produced.len().max(1) as f64,
-                    tokens: a.produced,
-                    kv_fetched_bytes: a.fetched,
-                    kv_ratio: a.store.ratio(),
-                    wall_ms: wall,
-                });
-            } else {
-                i += 1;
-            }
-        }
-    }
-    Ok(done)
+    // `serve_trace` rejects prompts that overflow the context (a
+    // malformed *trace* is a caller bug); the legacy batch API instead
+    // degrades gracefully — an oversized prompt is truncated to what the
+    // model can attend to, leaving room for one generated token, and the
+    // rest of the batch is unaffected.
+    let max_prompt = lm.meta().max_seq.saturating_sub(1).max(1);
+    let trace = Trace {
+        seed: 0,
+        requests: requests
+            .into_iter()
+            .map(|mut r| {
+                r.prompt.truncate(max_prompt);
+                TrafficRequest {
+                    id: r.id,
+                    tenant: 0,
+                    arrival_step: 0,
+                    prompt: r.prompt,
+                    max_new_tokens: r.max_new_tokens,
+                    policy: r.policy,
+                }
+            })
+            .collect(),
+    };
+    let cfg = SchedConfig::fixed_slots(slots);
+    let out = serve_trace(lm, &trace, &cfg, lanes, metrics)?;
+    Ok(out
+        .responses
+        .into_iter()
+        .map(|r| Response {
+            id: r.id,
+            tokens: r.tokens,
+            mean_nll: r.mean_nll,
+            kv_fetched_bytes: r.kv_fetched_bytes,
+            kv_ratio: r.kv_ratio,
+            wall_ms: r.wall_ms,
+        })
+        .collect())
 }
 
 /// Spawn a worker thread owning the model; returns a handle for async use
@@ -171,7 +107,7 @@ pub fn spawn(artifacts_dir: std::path::PathBuf, n_expected: usize, slots: usize)
     let (tx, req_rx) = mpsc::channel::<Request>();
     let (resp_tx, rx) = mpsc::channel::<Response>();
     let join = std::thread::spawn(move || -> anyhow::Result<ServeMetrics> {
-        let lm = TinyLm::load(&artifacts_dir)?;
+        let lm = crate::runtime::model::TinyLm::load(&artifacts_dir)?;
         let mut metrics = ServeMetrics::default();
         let mut batch = Vec::new();
         for _ in 0..n_expected {
@@ -186,4 +122,49 @@ pub fn spawn(artifacts_dir: std::path::PathBuf, n_expected: usize, slots: usize)
         Ok(metrics)
     });
     ServerHandle { tx, rx, join }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synthmodel::SynthLm;
+
+    #[test]
+    fn serve_runs_hermetically_on_the_synthetic_backend() {
+        let lm = SynthLm::tiny(17);
+        let requests: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: 10 + i,
+                prompt: (0..12).map(|t| (t * 3 + i as u16) % 256).collect(),
+                max_new_tokens: 16,
+                policy: KvPolicy::Full,
+            })
+            .collect();
+        let mut m = ServeMetrics::default();
+        let resp = serve(&lm, requests, 2, &mut m).unwrap();
+        assert_eq!(resp.len(), 4);
+        assert_eq!(m.requests, 4);
+        for r in &resp {
+            assert_eq!(r.tokens.len(), 16);
+            assert!(r.mean_nll.is_finite());
+            assert!(r.kv_fetched_bytes > 0);
+            assert!(r.kv_ratio > 1.0, "pages must compress: {}", r.kv_ratio);
+        }
+        // deterministic across runs
+        let lm2 = SynthLm::tiny(17);
+        let requests2: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: 10 + i,
+                prompt: (0..12).map(|t| (t * 3 + i as u16) % 256).collect(),
+                max_new_tokens: 16,
+                policy: KvPolicy::Full,
+            })
+            .collect();
+        let mut m2 = ServeMetrics::default();
+        let resp2 = serve(&lm2, requests2, 2, &mut m2).unwrap();
+        for (a, b) in resp.iter().zip(&resp2) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
 }

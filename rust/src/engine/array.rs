@@ -7,7 +7,10 @@
 //! parked on a condvar between batches — fed through a shared injector:
 //! a batch is published as a generation-stamped job, participating
 //! workers wake, pull items off a shared cursor, write results into
-//! pre-claimed slots, and park again. `run`/`run_mut` keep their exact
+//! pre-claimed slots, and park again. Each worker parks on its *own*
+//! condvar, so publishing a batch wakes exactly the `nworkers - 1` pool
+//! workers that batch needs — a 2-block batch on a 32-lane pool costs one
+//! targeted wake, not 31 futex storms. `run`/`run_mut` keep their exact
 //! signatures and ordered-merge semantics, so output stays byte-identical
 //! to the serial path at every lane count.
 
@@ -83,8 +86,13 @@ struct Shared {
     /// Lane scratch, indexed by worker id (0 = the submitting thread).
     lanes: Vec<Mutex<Lane>>,
     state: Mutex<PoolState>,
-    /// Workers park here between batches.
-    work_cv: Condvar,
+    /// One parking condvar per pool worker (index = worker id - 1): a
+    /// submit wakes exactly the participants with one `notify_one` each
+    /// instead of a `notify_all` broadcast to the whole pool. Only worker
+    /// `wid` ever waits on `work_cvs[wid - 1]`, so a targeted notify can
+    /// never be consumed by a non-participant (which would strand a
+    /// needed worker and hang the batch).
+    work_cvs: Vec<Condvar>,
     /// Submitters park here waiting for `remaining == 0`.
     done_cv: Condvar,
 }
@@ -130,7 +138,9 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
                         }
                     }
                 }
-                st = shared.work_cv.wait(st).unwrap_or_else(|p| p.into_inner());
+                st = shared.work_cvs[wid - 1]
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
             }
         };
         // SAFETY: the submitter blocks until `remaining == 0`, so the
@@ -188,7 +198,7 @@ impl LaneArray {
                 panics: 0,
                 shutdown: false,
             }),
-            work_cv: Condvar::new(),
+            work_cvs: (1..n).map(|_| Condvar::new()).collect(),
             done_cv: Condvar::new(),
         });
         Self {
@@ -265,7 +275,13 @@ impl LaneArray {
             st.remaining = nworkers - 1;
             st.panics = 0;
         }
-        self.shared.work_cv.notify_all();
+        // targeted wake: exactly the workers this batch participates
+        // (wids 1..nworkers), each on its private condvar — the ROADMAP's
+        // "notify exactly nworkers-1" item. Workers not in the batch stay
+        // parked and never touch the futex.
+        for cv in &self.shared.work_cvs[..nworkers - 1] {
+            cv.notify_one();
+        }
         // Lane 0's share always runs on the submitting thread: a small
         // batch can finish entirely inline while the pool workers are
         // still waking, costing zero context switches in the best case.
@@ -416,7 +432,9 @@ impl LaneArray {
 impl Drop for LaneArray {
     fn drop(&mut self) {
         lock_state(&self.shared.state).shutdown = true;
-        self.shared.work_cv.notify_all();
+        for cv in &self.shared.work_cvs {
+            cv.notify_all();
+        }
         let ws = std::mem::take(
             self.workers
                 .get_mut()
@@ -521,6 +539,28 @@ mod tests {
                 assert_eq!(out.len(), items.len());
             }
             drop(la);
+        }
+    }
+
+    #[test]
+    fn targeted_wakes_handle_mixed_batch_widths() {
+        // Alternating narrow and full-width batches on one pool: narrow
+        // batches wake only their participants, and workers that slept
+        // through several generations must still pick up the *current*
+        // job when their turn comes. A lost targeted wake would hang
+        // this test; a stale-generation bug would corrupt results.
+        let la = LaneArray::new(8);
+        for round in 0..50usize {
+            let n = match round % 4 {
+                0 => 2,     // wakes worker 1 only
+                1 => 200,   // all 7 workers
+                2 => 3,     // workers 1-2
+                _ => 9,     // all 7 workers (9 items > 8 lanes)
+            };
+            let items: Vec<usize> = (0..n).collect();
+            let got = la.run(&items, |_lane, &i| i * round);
+            let want: Vec<usize> = items.iter().map(|&i| i * round).collect();
+            assert_eq!(got, want, "round {round} width {n}");
         }
     }
 

@@ -18,4 +18,5 @@ pub mod hwmodel;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod workload;
 pub mod coordinator;

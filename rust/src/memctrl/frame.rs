@@ -145,7 +145,8 @@ pub fn decode_header(data: &[u8]) -> anyhow::Result<(FrameHeader, Vec<u16>)> {
     ))
 }
 
-fn dtype_code(d: Dtype) -> u8 {
+/// Stable on-disk/wire code for a dtype (shared with the trace format).
+pub(crate) fn dtype_code(d: Dtype) -> u8 {
     match d {
         Dtype::Bf16 => 0,
         Dtype::Fp16 => 1,
@@ -159,7 +160,8 @@ fn dtype_code(d: Dtype) -> u8 {
     }
 }
 
-fn dtype_from_code(c: u8) -> anyhow::Result<Dtype> {
+/// Inverse of [`dtype_code`].
+pub(crate) fn dtype_from_code(c: u8) -> anyhow::Result<Dtype> {
     Ok(match c {
         0 => Dtype::Bf16,
         1 => Dtype::Fp16,

@@ -129,6 +129,26 @@ impl KvPolicy {
     }
 }
 
+/// Degrade-escalation under memory/bandwidth pressure: clamp every page's
+/// fetch precision to at most `clamp` bit-planes — except the current
+/// (newest) page, which always reads at full precision, and pages a
+/// policy already skips (0 stays 0). This is how the scheduler tightens
+/// *any* tenant policy mechanically — a `Full` tenant becomes an
+/// everything-at-FP8 tenant at `clamp = 8` — spending read precision
+/// (the paper's dynamic quantization) before it spends residency
+/// (eviction).
+pub fn apply_pressure(bits: &mut [u32], clamp: u32) {
+    let n = bits.len();
+    for (p, b) in bits.iter_mut().enumerate() {
+        if p + 1 == n {
+            continue; // current page: newest tokens stay full precision
+        }
+        if *b > clamp {
+            *b = clamp;
+        }
+    }
+}
+
 /// Quest-style page importance from per-page key metadata: for query `q`,
 /// score_p = Σ_j max(q_j · min_j(p), q_j · max_j(p)) — an upper bound on
 /// any token's dot product within the page.
@@ -210,6 +230,19 @@ mod tests {
         let quest = avg(&table2[2].1);
         let dq = avg(&table2[4].1);
         assert!(full > dq && dq > quest && quest >= sw * 0.9, "{full} {dq} {quest} {sw}");
+    }
+
+    #[test]
+    fn pressure_clamps_all_but_current_and_skipped() {
+        let mut bits = vec![16, 8, 0, 16, 16];
+        apply_pressure(&mut bits, 8);
+        assert_eq!(bits, vec![8, 8, 0, 8, 16]);
+        apply_pressure(&mut bits, 4);
+        assert_eq!(bits, vec![4, 4, 0, 4, 16]);
+        // clamp above current precision is a no-op
+        let mut b2 = vec![4, 16];
+        apply_pressure(&mut b2, 8);
+        assert_eq!(b2, vec![4, 16]);
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Prompt / output length distributions.
+//!
+//! Serving behavior is dominated by length mixtures (many short chats, a
+//! long tail of document jobs), so the generator supports the shapes real
+//! traces exhibit: point masses, uniform bands, and the heavy-tailed
+//! log-normal that production prompt-length histograms fit well.
+
+use crate::util::rng::Xoshiro256;
+
+/// A seeded token-length distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    /// Every request has exactly this many tokens.
+    Fixed(usize),
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    Uniform { lo: usize, hi: usize },
+    /// `exp(Normal(mu, sigma))` rounded, clamped to `[lo, hi]` — the
+    /// heavy-tailed shape of real prompt/output length histograms.
+    LogNormal {
+        mu: f64,
+        sigma: f64,
+        lo: usize,
+        hi: usize,
+    },
+}
+
+impl LengthDist {
+    /// Sample one length (always >= 1).
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let n = match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::Uniform { lo, hi } => {
+                assert!(lo <= hi, "uniform lo > hi");
+                lo + rng.index(hi - lo + 1)
+            }
+            LengthDist::LogNormal { mu, sigma, lo, hi } => {
+                assert!(lo <= hi, "lognormal lo > hi");
+                let x = (mu + sigma * rng.normal()).exp().round();
+                (x as usize).clamp(lo, hi)
+            }
+        };
+        n.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_and_uniform_bounds() {
+        let mut rng = Xoshiro256::new(1);
+        assert_eq!(LengthDist::Fixed(32).sample(&mut rng), 32);
+        let d = LengthDist::Uniform { lo: 4, hi: 9 };
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let n = d.sample(&mut rng);
+            assert!((4..=9).contains(&n));
+            seen[n] = true;
+        }
+        assert!(seen[4..=9].iter().all(|&s| s), "all lengths hit");
+    }
+
+    #[test]
+    fn lognormal_is_clamped_and_heavy_tailed() {
+        let mut rng = Xoshiro256::new(2);
+        let d = LengthDist::LogNormal {
+            mu: 3.0,
+            sigma: 1.0,
+            lo: 2,
+            hi: 512,
+        };
+        let xs: Vec<usize> = (0..4000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (2..=512).contains(&x)));
+        let mean = xs.iter().sum::<usize>() as f64 / xs.len() as f64;
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        // log-normal: mean well above median (right skew)
+        assert!(mean > median * 1.2, "mean {mean:.1} median {median:.1}");
+    }
+
+    #[test]
+    fn zero_fixed_is_floored_to_one() {
+        let mut rng = Xoshiro256::new(3);
+        assert_eq!(LengthDist::Fixed(0).sample(&mut rng), 1);
+    }
+}

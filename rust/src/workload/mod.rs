@@ -1,0 +1,25 @@
+//! # Traffic workload subsystem
+//!
+//! Everything the serving layer needs to be driven like a production
+//! system instead of a unit test: seeded **open-loop arrival processes**
+//! ([`arrival`]: Poisson and bursty ON/OFF), **length distributions**
+//! ([`lengths`]), **multi-tenant request mixes** ([`tenant`]), a
+//! **record/replay trace format** ([`trace`]) so any workload is a
+//! bit-replayable file, and a **deterministic synthetic decode backend**
+//! ([`synthmodel`]) so the full scheduler stack runs hermetically — no
+//! trained artifacts, no XLA runtime.
+//!
+//! The consumer is [`crate::coordinator::scheduler`]: it serves a
+//! [`trace::Trace`] under a compressed-bytes KV budget, which is where
+//! the paper's compression machinery turns into *served concurrency*.
+pub mod arrival;
+pub mod lengths;
+pub mod synthmodel;
+pub mod tenant;
+pub mod trace;
+
+pub use arrival::ArrivalProcess;
+pub use lengths::LengthDist;
+pub use synthmodel::{bf16_canon, SynthLm};
+pub use tenant::{TenantSpec, WorkloadSpec};
+pub use trace::{Trace, TrafficRequest};

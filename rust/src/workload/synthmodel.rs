@@ -1,0 +1,167 @@
+//! Deterministic synthetic decode backend.
+//!
+//! The traffic scheduler needs a model to drive, but the PJRT model
+//! requires trained artifacts (and a real XLA runtime). [`SynthLm`] is a
+//! hermetic stand-in implementing the same per-step contract: it writes a
+//! fresh K/V row and query vector per decode step and returns logits —
+//! all as pure functions of `(seed, position, token)`, so a trace served
+//! through it is bit-reproducible at any lane count, on any host.
+//!
+//! Two deliberate properties:
+//!
+//! * **KV rows are channel-coherent** (per-channel magnitude scales, like
+//!   real caches), so the controller's clustering + exponent-delta
+//!   pipeline gets realistic compression ratios — the capacity story the
+//!   scheduler is built on.
+//! * **Logits ignore the degraded caches.** The decode *trajectory* is
+//!   therefore invariant under policy pressure, eviction, and lane count,
+//!   which is what lets the byte-identity and determinism property tests
+//!   compare contended runs against solo reference runs token-for-token.
+//!   Policy differences still show up where the scheduler measures them:
+//!   fetched bytes, stored bytes, and latency. Quality-sensitive
+//!   experiments use the real [`crate::runtime::model::TinyLm`].
+
+use crate::fmt::minifloat::BF16;
+use crate::runtime::model::{KvState, ModelMeta};
+use crate::util::rng::Xoshiro256;
+
+/// Round an f32 to its nearest BF16-representable value — the canonical
+/// precision of everything the controller stores losslessly.
+#[inline]
+pub fn bf16_canon(x: f32) -> f32 {
+    BF16.decode(BF16.encode(x))
+}
+
+/// A seeded synthetic decode backend (see module docs).
+pub struct SynthLm {
+    pub meta: ModelMeta,
+    seed: u64,
+    /// Per-channel magnitude scales (BF16-representable): gives KV pages
+    /// the cross-token channel coherence the clustering path exploits.
+    scales: Vec<f32>,
+}
+
+impl SynthLm {
+    pub fn new(meta: ModelMeta, seed: u64) -> Self {
+        let row = meta.n_kv_heads * meta.d_head;
+        let mut r = Xoshiro256::new(seed ^ 0x5EED_CA4C);
+        let scales = (0..row)
+            .map(|_| bf16_canon(2f32.powf(r.normal() as f32)))
+            .collect();
+        Self { meta, seed, scales }
+    }
+
+    /// A small model shape for tests, examples, and benches
+    /// (2 layers, 16 KV channels, 128-token context = 8 pages).
+    pub fn tiny(seed: u64) -> Self {
+        Self::new(
+            ModelMeta {
+                vocab: 256,
+                layers: 2,
+                d_model: 32,
+                n_heads: 4,
+                n_kv_heads: 2,
+                d_head: 8,
+                max_seq: 128,
+                kv_channels: 16,
+                prefill_len: 32,
+                page_tokens: 16,
+                n_pages: 8,
+                param_names: vec![],
+            },
+            seed,
+        )
+    }
+
+    /// One decode step: writes the new token's K/V row (BF16-canonical)
+    /// and queries into `kv`, advances `kv.pos`, and returns logits. Pure
+    /// in `(seed, kv.pos, token)`.
+    pub fn step(&self, kv: &mut KvState, token: u16) -> anyhow::Result<Vec<f32>> {
+        let m = &self.meta;
+        anyhow::ensure!(kv.pos < m.max_seq, "KV cache full");
+        let pos = kv.pos;
+        let mut r = Xoshiro256::new(
+            self.seed
+                ^ (pos as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (token as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        );
+        let row = m.n_kv_heads * m.d_head;
+        for l in 0..m.layers {
+            let off = (l * m.max_seq + pos) * row;
+            for c in 0..row {
+                kv.k[off + c] = bf16_canon(self.scales[c] * (1.0 + 0.05 * r.normal() as f32));
+            }
+            for c in 0..row {
+                kv.v[off + c] = bf16_canon(self.scales[c] * (1.0 + 0.05 * r.normal() as f32));
+            }
+        }
+        for q in kv.queries.iter_mut() {
+            *q = bf16_canon(r.normal() as f32);
+        }
+        kv.pos += 1;
+        Ok((0..m.vocab).map(|_| r.normal() as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_are_deterministic_and_position_pure() {
+        let lm = SynthLm::tiny(9);
+        let run = || {
+            let mut kv = KvState::new(&lm.meta);
+            let mut logits = Vec::new();
+            for t in 0..20u16 {
+                logits = lm.step(&mut kv, t).unwrap();
+            }
+            (kv.k, kv.v, kv.queries, kv.pos, logits)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.3, 20);
+        assert_eq!(a.4, b.4);
+        assert!(a.4.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn kv_values_are_bf16_canonical() {
+        let lm = SynthLm::tiny(3);
+        let mut kv = KvState::new(&lm.meta);
+        for t in 0..17u16 {
+            lm.step(&mut kv, t).unwrap();
+        }
+        let row = lm.meta.n_kv_heads * lm.meta.d_head;
+        for l in 0..lm.meta.layers {
+            for t in 0..17 {
+                let off = (l * lm.meta.max_seq + t) * row;
+                for c in 0..row {
+                    let x = kv.k[off + c];
+                    assert_eq!(x, bf16_canon(x), "k not bf16-canonical");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_kv_pages_actually_compress() {
+        // The channel-coherent generator must give the clustering +
+        // exponent-delta pipeline something to work with — the whole
+        // compressed-capacity story depends on ratio > 1.
+        use crate::compress::Codec;
+        use crate::coordinator::KvPageStore;
+        use crate::memctrl::Layout;
+        let lm = SynthLm::tiny(5);
+        let mut kv = KvState::new(&lm.meta);
+        for t in 0..64u16 {
+            lm.step(&mut kv, t).unwrap();
+        }
+        let mut ps = KvPageStore::new(&lm.meta, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &lm.meta);
+        assert_eq!(ps.len(), 4);
+        assert!(ps.ratio() > 1.25, "synthetic kv ratio {}", ps.ratio());
+    }
+}

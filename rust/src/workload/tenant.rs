@@ -1,0 +1,124 @@
+//! Multi-tenant request mixes.
+//!
+//! A tenant is a traffic class: its share of arrivals, its length
+//! distributions, and the KV policy its requests run under (an
+//! interactive tenant buys full-precision attention; a bulk tenant rides
+//! an aggressive dynamic-quantization tier). The trace generator samples
+//! the tenant per arrival from the weights, so one trace interleaves all
+//! classes the way a real frontend would.
+
+use crate::quant::policy::{KvPolicy, PageTier};
+
+use super::arrival::ArrivalProcess;
+use super::lengths::LengthDist;
+
+/// One traffic class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of arrivals (any positive scale).
+    pub weight: f64,
+    /// KV policy this tenant's requests decode under.
+    pub policy: KvPolicy,
+    pub prompt: LengthDist,
+    pub output: LengthDist,
+}
+
+/// A complete workload description: arrival process + tenant mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub arrival: ArrivalProcess,
+    pub tenants: Vec<TenantSpec>,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    /// Prompt token alphabet (tokens uniform in `[0, vocab)`).
+    pub vocab: usize,
+    /// Hard cap on `prompt + output` per request (the model's context).
+    pub max_seq: usize,
+}
+
+impl WorkloadSpec {
+    /// Cumulative tenant weights for sampling.
+    pub fn tenant_cdf(&self) -> Vec<f64> {
+        assert!(!self.tenants.is_empty(), "workload needs >= 1 tenant");
+        let mut acc = 0.0;
+        self.tenants
+            .iter()
+            .map(|t| {
+                assert!(t.weight > 0.0, "tenant weight must be positive");
+                acc += t.weight;
+                acc
+            })
+            .collect()
+    }
+
+    /// A ready-made two-class mix — interactive chat (Quest top-k reads,
+    /// short prompts, short outputs) over a bulk summarization tenant
+    /// (dynamic-quant tiers, long prompts) — handy for examples/benches.
+    pub fn chat_plus_batch(arrival: ArrivalProcess, n_requests: usize, max_seq: usize) -> Self {
+        let chat_hi = (max_seq / 4).max(2);
+        let bulk_hi = (max_seq / 2).max(2);
+        Self {
+            arrival,
+            tenants: vec![
+                TenantSpec {
+                    name: "chat".into(),
+                    weight: 3.0,
+                    policy: KvPolicy::QuestTopK { pages: 4 },
+                    prompt: LengthDist::LogNormal {
+                        mu: 2.5,
+                        sigma: 0.6,
+                        lo: 2,
+                        hi: chat_hi,
+                    },
+                    output: LengthDist::Uniform {
+                        lo: 4,
+                        hi: chat_hi,
+                    },
+                },
+                TenantSpec {
+                    name: "batch".into(),
+                    weight: 1.0,
+                    policy: KvPolicy::DynamicQuant {
+                        tiers: vec![
+                            PageTier {
+                                pages: 2,
+                                dtype: crate::fmt::Dtype::Bf16,
+                            },
+                            PageTier {
+                                pages: 6,
+                                dtype: crate::fmt::Dtype::Fp8E4M3,
+                            },
+                        ],
+                    },
+                    prompt: LengthDist::Uniform {
+                        lo: bulk_hi / 2,
+                        hi: bulk_hi,
+                    },
+                    output: LengthDist::Uniform { lo: 8, hi: 24 },
+                },
+            ],
+            n_requests,
+            vocab: 256,
+            max_seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_is_monotone_and_total_is_weight_sum() {
+        let spec = WorkloadSpec::chat_plus_batch(
+            ArrivalProcess::Poisson { rate: 0.5 },
+            10,
+            256,
+        );
+        let cdf = spec.tenant_cdf();
+        assert_eq!(cdf.len(), 2);
+        assert!(cdf[1] > cdf[0]);
+        assert!((cdf[1] - 4.0).abs() < 1e-12);
+    }
+}

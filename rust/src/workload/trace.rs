@@ -1,0 +1,297 @@
+//! Record/replay trace format.
+//!
+//! A trace is the fully materialized request stream: arrival steps,
+//! tenants, prompts, output budgets, and KV policies. Generating a trace
+//! from a [`WorkloadSpec`] + seed is deterministic, and a serialized
+//! trace replays bit-identically anywhere — so a production incident (or
+//! a CI regression) is a file, not a description. The binary format is
+//! self-describing and versioned:
+//!
+//! ```text
+//!   magic  "CAMCTRC1"                              (8 B)
+//!   seed   u64le
+//!   n      u32le
+//!   n x request:
+//!     id u64le, tenant u32le, arrival_step u64le, max_new u32le,
+//!     policy (tag u8: 0 full | 1 window u32 | 2 quest u32
+//!             | 3 dynquant: ntiers u8, ntiers x (pages u32, dtype u8)),
+//!     prompt_len u32le, prompt_len x u16le tokens
+//! ```
+
+use crate::memctrl::frame::{dtype_code, dtype_from_code};
+use crate::quant::policy::{KvPolicy, PageTier};
+use crate::util::rng::Xoshiro256;
+
+use super::tenant::WorkloadSpec;
+
+const MAGIC: &[u8; 8] = b"CAMCTRC1";
+
+/// One request in a traffic trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficRequest {
+    pub id: u64,
+    /// Index into the generating spec's tenant list.
+    pub tenant: u32,
+    /// Virtual step at which the request arrives (open loop).
+    pub arrival_step: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    pub policy: KvPolicy,
+}
+
+impl TrafficRequest {
+    /// Total tokens this request can occupy in the KV cache.
+    pub fn total_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// A materialized, replayable request stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Seed the trace was generated from (0 for hand-built traces).
+    pub seed: u64,
+    /// Requests in arrival order (non-decreasing `arrival_step`).
+    pub requests: Vec<TrafficRequest>,
+}
+
+impl Trace {
+    /// Materialize a trace from a workload spec. Deterministic in
+    /// (`spec`, `seed`).
+    pub fn generate(spec: &WorkloadSpec, seed: u64) -> Trace {
+        assert!(spec.vocab >= 2, "need a token alphabet");
+        assert!(spec.max_seq >= 2, "need room for prompt + output");
+        let mut rng = Xoshiro256::new(seed);
+        let arrivals = spec.arrival.sample(spec.n_requests, &mut rng);
+        let cdf = spec.tenant_cdf();
+        let mut requests = Vec::with_capacity(spec.n_requests);
+        for (i, &arrival_step) in arrivals.iter().enumerate() {
+            let ti = rng.sample_cdf(&cdf);
+            let t = &spec.tenants[ti];
+            // clamp prompt + output into the model context, keeping at
+            // least one token of each
+            let plen = t.prompt.sample(&mut rng).min(spec.max_seq - 1);
+            let max_new = t.output.sample(&mut rng).min(spec.max_seq - plen);
+            let prompt = (0..plen)
+                .map(|_| rng.below(spec.vocab as u64) as u16)
+                .collect();
+            requests.push(TrafficRequest {
+                id: i as u64,
+                tenant: ti as u32,
+                arrival_step,
+                prompt,
+                max_new_tokens: max_new,
+                policy: t.policy.clone(),
+            });
+        }
+        Trace { seed, requests }
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.requests.len() as u32).to_le_bytes());
+        for r in &self.requests {
+            out.extend_from_slice(&r.id.to_le_bytes());
+            out.extend_from_slice(&r.tenant.to_le_bytes());
+            out.extend_from_slice(&r.arrival_step.to_le_bytes());
+            out.extend_from_slice(&(r.max_new_tokens as u32).to_le_bytes());
+            write_policy(&mut out, &r.policy);
+            out.extend_from_slice(&(r.prompt.len() as u32).to_le_bytes());
+            for &t in &r.prompt {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse a serialized trace; rejects truncation and unknown tags.
+    pub fn from_bytes(data: &[u8]) -> anyhow::Result<Trace> {
+        let mut rd = Reader { data, off: 0 };
+        anyhow::ensure!(rd.take(8)? == MAGIC, "trace: bad magic");
+        let seed = rd.u64()?;
+        let n = rd.u32()? as usize;
+        let mut requests = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            let id = rd.u64()?;
+            let tenant = rd.u32()?;
+            let arrival_step = rd.u64()?;
+            let max_new_tokens = rd.u32()? as usize;
+            let policy = read_policy(&mut rd)?;
+            let plen = rd.u32()? as usize;
+            let mut prompt = Vec::with_capacity(plen.min(1 << 20));
+            for _ in 0..plen {
+                prompt.push(rd.u16()?);
+            }
+            requests.push(TrafficRequest {
+                id,
+                tenant,
+                arrival_step,
+                prompt,
+                max_new_tokens,
+                policy,
+            });
+        }
+        anyhow::ensure!(rd.off == data.len(), "trace: trailing bytes");
+        Ok(Trace { seed, requests })
+    }
+
+    /// Write the trace to a file.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read a trace from a file.
+    pub fn read(path: impl AsRef<std::path::Path>) -> anyhow::Result<Trace> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+fn write_policy(out: &mut Vec<u8>, p: &KvPolicy) {
+    match p {
+        KvPolicy::Full => out.push(0),
+        KvPolicy::SlidingWindow { window } => {
+            out.push(1);
+            out.extend_from_slice(&(*window as u32).to_le_bytes());
+        }
+        KvPolicy::QuestTopK { pages } => {
+            out.push(2);
+            out.extend_from_slice(&(*pages as u32).to_le_bytes());
+        }
+        KvPolicy::DynamicQuant { tiers } => {
+            out.push(3);
+            out.push(tiers.len() as u8);
+            for t in tiers {
+                out.extend_from_slice(&(t.pages as u32).to_le_bytes());
+                out.push(dtype_code(t.dtype));
+            }
+        }
+    }
+}
+
+fn read_policy(rd: &mut Reader) -> anyhow::Result<KvPolicy> {
+    Ok(match rd.u8()? {
+        0 => KvPolicy::Full,
+        1 => KvPolicy::SlidingWindow {
+            window: rd.u32()? as usize,
+        },
+        2 => KvPolicy::QuestTopK {
+            pages: rd.u32()? as usize,
+        },
+        3 => {
+            let n = rd.u8()? as usize;
+            let mut tiers = Vec::with_capacity(n);
+            for _ in 0..n {
+                let pages = rd.u32()? as usize;
+                let dtype = dtype_from_code(rd.u8()?)?;
+                tiers.push(PageTier { pages, dtype });
+            }
+            KvPolicy::DynamicQuant { tiers }
+        }
+        t => anyhow::bail!("trace: unknown policy tag {t}"),
+    })
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let s = self
+            .data
+            .get(self.off..self.off + n)
+            .ok_or_else(|| anyhow::anyhow!("trace: truncated at byte {}", self.off))?;
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrival::ArrivalProcess;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec::chat_plus_batch(ArrivalProcess::Poisson { rate: 0.5 }, 40, 128)
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let s = spec();
+        let a = Trace::generate(&s, 11);
+        let b = Trace::generate(&s, 11);
+        let c = Trace::generate(&s, 12);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.requests.len(), 40);
+        // arrival order, ids dense, lengths within the context
+        assert!(a
+            .requests
+            .windows(2)
+            .all(|w| w[1].arrival_step >= w[0].arrival_step));
+        for (i, r) in a.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.total_tokens() <= 128, "req {i} overflows context");
+            assert!(!r.prompt.is_empty() && r.max_new_tokens >= 1);
+        }
+        // both tenants appear
+        assert!(a.requests.iter().any(|r| r.tenant == 0));
+        assert!(a.requests.iter().any(|r| r.tenant == 1));
+    }
+
+    #[test]
+    fn serialization_roundtrips_bit_exactly() {
+        let t = Trace::generate(&spec(), 7);
+        let bytes = t.to_bytes();
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn parser_rejects_corruption() {
+        let t = Trace::generate(&spec(), 9);
+        let bytes = t.to_bytes();
+        assert!(Trace::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(Trace::from_bytes(&bytes[1..]).is_err());
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(Trace::from_bytes(&longer).is_err(), "trailing bytes");
+        let mut bad_tag = bytes;
+        // policy tag of request 0 sits right after the fixed header fields
+        let off = 8 + 8 + 4 + 8 + 4 + 8 + 4;
+        bad_tag[off] = 9;
+        assert!(Trace::from_bytes(&bad_tag).is_err(), "unknown policy tag");
+    }
+
+    #[test]
+    fn all_policies_roundtrip() {
+        let mut t = Trace::generate(&spec(), 5);
+        for (i, (_, p)) in KvPolicy::table2().into_iter().enumerate() {
+            t.requests[i].policy = p;
+        }
+        let back = Trace::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(t, back);
+    }
+}
