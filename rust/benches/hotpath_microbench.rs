@@ -383,8 +383,9 @@ fn main() {
     // 8 sequences, continuous decode: per-step policy degrade sweeps plus
     // page sync, all through ONE shared lane pool — batched cross-sequence
     // sync vs the per-sequence path the old serve loop used.
+    let mut fetch_ok = true;
     {
-        use camc::coordinator::{sync_sequences, KvPageStore, PolicyEngine};
+        use camc::coordinator::{fetch_sequences, sync_sequences, KvPageStore, PolicyEngine};
         use camc::memctrl::Layout;
         use camc::quant::policy::{KvPolicy, PageTier};
         use camc::runtime::model::{KvState, ModelMeta};
@@ -487,6 +488,110 @@ fn main() {
             steps as f64 / tb,
             steps as f64 / tp
         );
+
+        // ---- decode-side fetch dispatch: batched vs per-sequence ----
+        // 8 full-context sequences, every stored page read at an 8-plane
+        // prefix (the pressure-ladder shape): ONE cross-sequence lane
+        // dispatch per step vs one controller load per page. CI gates
+        // batched >= per-seq via --check.
+        {
+            let lanes = Arc::new(LaneArray::with_default_lanes());
+            let mut stores: Vec<KvPageStore> = (1..=nseq as u64)
+                .map(|s| {
+                    let mut kv = mk_kv(s);
+                    kv.pos = meta.max_seq; // full context: 16 pages
+                    let mut st = KvPageStore::with_shared(
+                        &meta,
+                        Layout::Proposed,
+                        Codec::Zstd,
+                        Arc::clone(&lanes),
+                    );
+                    st.sync(&kv, &meta);
+                    st
+                })
+                .collect();
+            let bits: Vec<Vec<u32>> = stores.iter().map(|s| vec![8u32; s.len()]).collect();
+            let iters = if fast { 8 } else { 24 };
+            let fetch_bytes: f64 = {
+                let mut seqs: Vec<(&mut KvPageStore, &[u32])> = stores
+                    .iter_mut()
+                    .zip(bits.iter())
+                    .map(|(s, bb)| (s, bb.as_slice()))
+                    .collect();
+                let outs = fetch_sequences(&mut seqs, &lanes).unwrap();
+                outs.iter().map(|o| o.dram_bytes_total()).sum::<u64>() as f64
+            };
+            let tb = time(
+                || {
+                    let mut seqs: Vec<(&mut KvPageStore, &[u32])> = stores
+                        .iter_mut()
+                        .zip(bits.iter())
+                        .map(|(s, bb)| (s, bb.as_slice()))
+                        .collect();
+                    std::hint::black_box(fetch_sequences(&mut seqs, &lanes).unwrap());
+                },
+                iters,
+            );
+            b.row(
+                "batched fetch 8 seq (8 planes)",
+                humanfmt::bytes(fetch_bytes as u64),
+                tb,
+                fetch_bytes,
+            );
+            let tp = time(
+                || {
+                    for (s, bb) in stores.iter_mut().zip(bits.iter()) {
+                        std::hint::black_box(s.fetch_pages(bb).unwrap());
+                    }
+                },
+                iters,
+            );
+            b.row(
+                "per-seq fetch 8 seq (8 planes)",
+                humanfmt::bytes(fetch_bytes as u64),
+                tp,
+                fetch_bytes,
+            );
+            println!("decode fetch: batched {:.2}x per-seq dispatch", tp / tb);
+            if check {
+                // same retry discipline as the pooled-dispatch gate: only
+                // a consistently-slower batched fetch (a real regression)
+                // fails all three attempts
+                let mut measure = || {
+                    let t_b = time(
+                        || {
+                            let mut seqs: Vec<(&mut KvPageStore, &[u32])> = stores
+                                .iter_mut()
+                                .zip(bits.iter())
+                                .map(|(s, bb)| (s, bb.as_slice()))
+                                .collect();
+                            std::hint::black_box(fetch_sequences(&mut seqs, &lanes).unwrap());
+                        },
+                        iters,
+                    );
+                    let t_p = time(
+                        || {
+                            for (s, bb) in stores.iter_mut().zip(bits.iter()) {
+                                std::hint::black_box(s.fetch_pages(bb).unwrap());
+                            }
+                        },
+                        iters,
+                    );
+                    t_p / t_b
+                };
+                let mut ratio = measure();
+                for _ in 0..2 {
+                    if ratio >= 0.90 {
+                        break;
+                    }
+                    ratio = ratio.max(measure());
+                }
+                if ratio < 0.90 {
+                    eprintln!("gate: batched fetch {ratio:.2}x per-seq after retries");
+                    fetch_ok = false;
+                }
+            }
+        }
     }
 
     // ---- DRAM sim command rate ----
@@ -539,6 +644,10 @@ fn main() {
 
     if check && !pooled_ok {
         eprintln!("CHECK FAILED: pooled small-batch dispatch is slower than serial");
+        std::process::exit(1);
+    }
+    if check && !fetch_ok {
+        eprintln!("CHECK FAILED: batched cross-sequence fetch is slower than per-sequence");
         std::process::exit(1);
     }
 }

@@ -17,7 +17,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use camc::coordinator::{
-    fixed_slots_for_budget, serve_trace, EventKind, SchedConfig, SchedOutcome, ServeMetrics,
+    fixed_slots_for_budget, serve_trace, EventKind, FetchMode, SchedConfig, SchedOutcome,
+    ServeMetrics,
 };
 use camc::engine::LaneArray;
 use camc::report::json::Json;
@@ -60,7 +61,14 @@ fn main() {
         budget, &lm.meta,
     ))));
     let (un, _, _) = run(&capped(SchedConfig::uncompressed(budget)));
-    let (co, cm, _) = run(&capped(SchedConfig::compressed(budget)));
+    let (co, cm, cwall) = run(&capped(SchedConfig::compressed(budget)));
+    // the same admission with the per-sequence (one-load-per-page)
+    // reference fetch: identical schedule by construction, more lane
+    // dispatches — the regression surface for the batched decode path
+    let (ps, psm, pwall) = run(&capped(SchedConfig {
+        fetch: FetchMode::PerSequence,
+        ..SchedConfig::compressed(budget)
+    }));
     // wall-rate row: the full trace, uncapped, compressed admission
     let (full, fm, wall) = run(&SchedConfig::compressed(budget));
 
@@ -78,6 +86,7 @@ fn main() {
         ("fixed-slot", &fx, None),
         ("budget uncompressed", &un, None),
         ("budget compressed", &co, Some(&cm)),
+        ("  + per-seq fetch", &ps, Some(&psm)),
     ] {
         tab.row(&[
             name.into(),
@@ -97,6 +106,13 @@ fn main() {
         full.steps,
         full.steps as f64 / wall,
         fm.tokens_per_sec(wall)
+    );
+    println!(
+        "decode fetch: batched {:.1} frames/dispatch vs per-seq {:.1} ({:.0} KiB fetched, {:.2}x wall)",
+        cm.fetch_frames_per_dispatch(),
+        psm.fetch_frames_per_dispatch(),
+        cm.fetched_bytes as f64 / 1024.0,
+        pwall / cwall.max(1e-9)
     );
 
     json.insert(
@@ -134,6 +150,26 @@ fn main() {
     json.insert("ttft p99 steps".into(), Json::Num(cm.ttft_steps_p(0.99)));
     json.insert("tbt p99 steps".into(), Json::Num(cm.tbt_steps_p(0.99)));
     json.insert("e2e p99 steps".into(), Json::Num(cm.e2e_steps_p(0.99)));
+    json.insert(
+        "served sequences (batched fetch)".into(),
+        Json::Num(co.responses.len() as f64),
+    );
+    json.insert(
+        "served sequences (per-seq fetch)".into(),
+        Json::Num(ps.responses.len() as f64),
+    );
+    json.insert(
+        "fetch frames per dispatch (batched)".into(),
+        Json::Num((cm.fetch_frames_per_dispatch() * 10.0).round() / 10.0),
+    );
+    json.insert(
+        "fetch frames per dispatch (per-seq)".into(),
+        Json::Num((psm.fetch_frames_per_dispatch() * 10.0).round() / 10.0),
+    );
+    json.insert(
+        "kv fetched bytes (batched)".into(),
+        Json::Num(cm.fetched_bytes as f64),
+    );
 
     let npaths = json.len();
     std::fs::write("BENCH_serve.json", Json::Obj(json).to_string() + "\n")
@@ -157,15 +193,34 @@ fn main() {
             );
             ok = false;
         }
+        if co.responses.len() < ps.responses.len() {
+            eprintln!(
+                "CHECK FAILED: batched fetch served {} sequences, per-sequence fetch served {} (same admission)",
+                co.responses.len(),
+                ps.responses.len()
+            );
+            ok = false;
+        }
+        if cm.fetch_dispatches > psm.fetch_dispatches {
+            eprintln!(
+                "CHECK FAILED: batched fetch used {} dispatches, per-sequence {} — batching regressed",
+                cm.fetch_dispatches, psm.fetch_dispatches
+            );
+            ok = false;
+        }
         if !ok {
             std::process::exit(1);
         }
         println!(
-            "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}",
+            "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}, batched fetch served {} >= per-seq {} in {} vs {} dispatches",
             co.responses.len(),
             fx.responses.len(),
             co.peak_active,
-            un.peak_active
+            un.peak_active,
+            co.responses.len(),
+            ps.responses.len(),
+            cm.fetch_dispatches,
+            psm.fetch_dispatches
         );
     }
 }

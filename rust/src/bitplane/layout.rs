@@ -134,9 +134,20 @@ pub fn disaggregate(dtype: Dtype, codes: &[u16]) -> PlaneBlock {
 /// read). Each plane must have `ceil(m/8)` bytes. Accepts any slice of
 /// byte-slice-like planes (`&[Vec<u8>]`, `&[&[u8]]`, ...).
 pub fn reaggregate<P: AsRef<[u8]>>(dtype: Dtype, m: usize, planes: &[P]) -> Vec<u16> {
+    let mut codes = vec![0u16; m];
+    reaggregate_into(dtype, m, planes, &mut codes);
+    codes
+}
+
+/// [`reaggregate`] writing straight into a caller-provided buffer
+/// (`dest.len() == m`; every element is overwritten) — the zero-copy
+/// entry point the batched fetch path decodes per-sequence destination
+/// views through.
+pub fn reaggregate_into<P: AsRef<[u8]>>(dtype: Dtype, m: usize, planes: &[P], dest: &mut [u16]) {
+    assert_eq!(dest.len(), m, "reaggregate destination size");
     let n = dtype.bits() as usize;
     let keep = planes.len().min(n);
-    let mut codes = vec![0u16; m];
+    let codes = dest;
     let chunks = m / 16;
     for c in 0..chunks {
         let base = c * 16;
@@ -166,7 +177,6 @@ pub fn reaggregate<P: AsRef<[u8]>>(dtype: Dtype, m: usize, planes: &[P]) -> Vec<
         }
         codes[idx] = code;
     }
-    codes
 }
 
 /// Reaggregate directly from a contiguous plane-major buffer holding (at
@@ -174,13 +184,23 @@ pub fn reaggregate<P: AsRef<[u8]>>(dtype: Dtype, m: usize, planes: &[P]) -> Vec<
 /// counterpart of [`reaggregate`] for [`PlaneBlock::prefix_bytes`] /
 /// engine-lane staging buffers.
 pub fn reaggregate_flat(dtype: Dtype, m: usize, flat: &[u8], keep: usize) -> Vec<u16> {
+    let mut codes = vec![0u16; m];
+    reaggregate_flat_into(dtype, m, flat, keep, &mut codes);
+    codes
+}
+
+/// [`reaggregate_flat`] writing straight into a caller-provided buffer
+/// (`dest.len() == m`; every element is overwritten).
+pub fn reaggregate_flat_into(dtype: Dtype, m: usize, flat: &[u8], keep: usize, dest: &mut [u16]) {
+    assert_eq!(dest.len(), m, "reaggregate destination size");
     let pb = m.div_ceil(8);
     let keep = keep.min(dtype.bits() as usize);
     if pb == 0 || keep == 0 {
-        return vec![0u16; m];
+        dest.fill(0);
+        return;
     }
     let views: Vec<&[u8]> = flat[..keep * pb].chunks_exact(pb).collect();
-    reaggregate(dtype, m, &views)
+    reaggregate_into(dtype, m, &views, dest);
 }
 
 /// Transpose a 16×16 bit matrix held in 4 u64 words.

@@ -22,6 +22,16 @@ pub struct ServeMetrics {
     pub steps: u64,
     pub requests: u64,
     pub tokens_out: u64,
+    /// Batched-read accounting: KV bytes moved by decode-side fetches
+    /// (stored-page DRAM traffic + raw partial-page tails).
+    pub fetched_bytes: u64,
+    /// Frames decoded by decode-side fetches.
+    pub fetch_frames: u64,
+    /// Lane-array dispatches those fetches used. Batched cross-sequence
+    /// fetch costs one per step; the per-sequence reference costs one per
+    /// page — the ratio [`ServeMetrics::fetch_frames_per_dispatch`] is
+    /// the batching win the serve bench reports.
+    pub fetch_dispatches: u64,
     latencies_ms: Vec<f64>,
     /// Time-to-first-token per request, virtual steps.
     ttft_steps: Vec<u64>,
@@ -55,6 +65,24 @@ impl ServeMetrics {
     /// swapped out, or starved by admission.
     pub fn record_tbt(&mut self, gap_steps: u64) {
         self.tbt_steps.push(gap_steps);
+    }
+
+    /// Record one decode-side fetch: `frames` frames decoded across
+    /// `dispatches` lane-array dispatches, moving `bytes` from DRAM.
+    pub fn record_fetch(&mut self, frames: u64, dispatches: u64, bytes: u64) {
+        self.fetch_frames += frames;
+        self.fetch_dispatches += dispatches;
+        self.fetched_bytes += bytes;
+    }
+
+    /// Mean frames decoded per lane dispatch on the fetch path — how much
+    /// read work each dispatch coalesced (higher = lanes busier).
+    pub fn fetch_frames_per_dispatch(&self) -> f64 {
+        if self.fetch_dispatches == 0 {
+            0.0
+        } else {
+            self.fetch_frames as f64 / self.fetch_dispatches as f64
+        }
     }
 
     pub fn p50_ms(&self) -> f64 {
@@ -150,6 +178,18 @@ mod tests {
         assert_eq!(m.tbt_steps_p(0.5), 0.0);
         assert_eq!(m.e2e_steps_p(0.5), 0.0);
         assert!(m.tenant_tokens_per_step(100).is_empty());
+    }
+
+    #[test]
+    fn fetch_accounting_accumulates() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.fetch_frames_per_dispatch(), 0.0);
+        m.record_fetch(24, 1, 4096);
+        m.record_fetch(8, 1, 1024);
+        assert_eq!(m.fetch_frames, 32);
+        assert_eq!(m.fetch_dispatches, 2);
+        assert_eq!(m.fetched_bytes, 5120);
+        assert!((m.fetch_frames_per_dispatch() - 16.0).abs() < 1e-12);
     }
 
     #[test]

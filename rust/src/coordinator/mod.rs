@@ -13,9 +13,9 @@ pub mod server;
 pub use footprint::{footprint_curve, FootprintPoint};
 pub use kvmanager::{degrade_f32, PolicyEngine, PolicyPlan};
 pub use metrics::{ServeMetrics, TenantStats};
-pub use pagestore::{sync_sequences, KvPageStore};
+pub use pagestore::{fetch_sequences, sync_sequences, FetchOutcome, KvPageStore};
 pub use scheduler::{
-    fixed_slots_for_budget, serve_trace, Admission, EventKind, SchedConfig, SchedEvent,
+    fixed_slots_for_budget, serve_trace, Admission, EventKind, FetchMode, SchedConfig, SchedEvent,
     SchedOutcome, StepModel, TrafficResponse,
 };
 pub use server::{serve, spawn, Request, Response};

@@ -1,15 +1,21 @@
 //! Routes completed KV pages through the memory controller and accounts
 //! for stored/fetched bytes — the glue between the model runtime and the
 //! controller that the end-to-end example exercises. The serve loop
-//! batches page compression *across sequences* with [`sync_sequences`]:
-//! one lane-array dispatch per decode step instead of one per sequence.
+//! batches BOTH directions across sequences: page compression with
+//! [`sync_sequences`] and decode-side page reads with
+//! [`fetch_sequences`] — one lane-array dispatch per decode step per
+//! direction instead of one per sequence (or one per page), keeping the
+//! paper's 32 lanes busy on the read path that dominates decode.
 
 use std::sync::Arc;
 
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::fmt::Dtype;
-use crate::memctrl::{build_kv_group_frame, KvFrameSpec, Layout, MemController, RegionId};
+use crate::memctrl::controller::{accrue_frame_fetch, decode_plans_into};
+use crate::memctrl::{
+    build_kv_group_frame, KvFrameSpec, Layout, MemController, ReadStats, RegionId,
+};
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta};
 
@@ -172,27 +178,46 @@ impl KvPageStore {
     /// digests match — the evict/resume and determinism property tests
     /// pin on this.
     pub fn frames_digest(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        let mut eat = |b: u8| {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        };
+        let mut h = crate::util::hash::Fnv1a::new();
         for &id in &self.pages {
             for (addr, frame) in self.mc.region(id).frames() {
-                for b in addr.to_le_bytes() {
-                    eat(b);
-                }
-                for &b in frame {
-                    eat(b);
-                }
+                h.write(&addr.to_le_bytes());
+                h.write(frame);
             }
         }
-        h
+        h.finish()
+    }
+
+    /// Decode this step's planned reads (per-page kept bit-planes, as
+    /// produced by `PolicyEngine::plan_pressured` — pressure clamps and
+    /// tenant policy included) through the controller, one lane dispatch
+    /// per stored page. This is the per-sequence reference path the
+    /// batched [`fetch_sequences`] is property-tested byte-identical
+    /// against. Pages beyond the stored set (the on-chip partial page)
+    /// are counted raw, as in [`KvPageStore::fetch_bytes`].
+    pub fn fetch_pages(&mut self, page_bits: &[u32]) -> anyhow::Result<FetchOutcome> {
+        let mut out = FetchOutcome::default();
+        for (p, &bits) in page_bits.iter().enumerate() {
+            if bits == 0 {
+                continue;
+            }
+            if p < self.pages.len() {
+                let (codes, stats) = self.mc.load(self.pages[p], bits, None)?;
+                out.stats.merge(&stats);
+                out.pages.push((p, codes));
+            } else {
+                out.raw_tail_bytes += (self.page_raw_bytes / 2) as u64;
+            }
+        }
+        Ok(out)
     }
 
     /// Bytes a step must fetch from DRAM given per-page kept bit-planes
     /// (pages beyond the stored set — i.e. the current partial page — are
-    /// counted raw).
+    /// counted raw). Header-only accounting: nothing decompresses. The
+    /// serve loop's real read path is [`fetch_sequences`] /
+    /// [`KvPageStore::fetch_pages`]; this survives for cheap what-if
+    /// accounting (and reports the same `dram_bytes` they do).
     pub fn fetch_bytes(&mut self, page_bits: &[u32]) -> u64 {
         let mut total = 0u64;
         for (p, &bits) in page_bits.iter().enumerate() {
@@ -265,6 +290,95 @@ pub fn sync_sequences(
         let frames: Vec<Vec<u8>> = built.by_ref().take(chunk_counts[ji]).collect();
         seqs[si].0.commit_page(p, frames);
     }
+}
+
+/// The result of one sequence's share of a decode-step fetch: decoded
+/// stored-page codes at the fetched precision, plus read accounting.
+#[derive(Debug, Default)]
+pub struct FetchOutcome {
+    /// `(page index, value-major codes)` per fetched stored page, in page
+    /// order. Codes are exactly what [`KvPageStore::load_page`] at the
+    /// same precision returns (low planes zeroed under a partial prefix).
+    pub pages: Vec<(usize, Vec<u16>)>,
+    /// Accounting for the stored pages (what moved through the
+    /// controller). In the batched path `dispatches` stays 0 — the single
+    /// cross-sequence dispatch belongs to the step, not to any one
+    /// sequence; the caller records it once.
+    pub stats: ReadStats,
+    /// Raw bytes of the current (sub-page, on-chip) tail counted against
+    /// the fetch — the same accounting [`KvPageStore::fetch_bytes`] uses.
+    pub raw_tail_bytes: u64,
+}
+
+impl FetchOutcome {
+    /// Total DRAM-side bytes this fetch moved (stored pages + raw tail).
+    pub fn dram_bytes_total(&self) -> u64 {
+        self.stats.dram_bytes + self.raw_tail_bytes
+    }
+}
+
+/// One decode step's planned reads across all active sequences, coalesced
+/// into a SINGLE lane-array dispatch — the read-side mirror of
+/// [`sync_sequences`], closing the decode-path half of the paper's
+/// always-busy lane model. Every fetched frame decompresses directly into
+/// its sequence's destination view (zero gather copies); decoded codes
+/// and physical accounting are byte-identical to calling
+/// [`KvPageStore::fetch_pages`] per sequence, at any lane count —
+/// batching changes *where* a frame decodes, never what it produces.
+pub fn fetch_sequences(
+    seqs: &mut [(&mut KvPageStore, &[u32])],
+    lanes: &LaneArray,
+) -> anyhow::Result<Vec<FetchOutcome>> {
+    let mut outcomes: Vec<FetchOutcome> = seqs.iter().map(|_| FetchOutcome::default()).collect();
+    // 1. plan: per fetched page, the frame slices + geometry (the shared
+    //    `(keep, layout, frames, total_m)` plan shape `decode_plans_into`
+    //    consumes); physical accounting accrues per sequence exactly as
+    //    per-page loads would. `keys[k]` names the sequence + page that
+    //    owns plan k.
+    let mut plans: Vec<(u32, Layout, Vec<(&[u8], usize)>, usize)> = Vec::new();
+    let mut keys: Vec<(usize, usize)> = Vec::new();
+    for (si, (store, bits)) in seqs.iter().enumerate() {
+        let store: &KvPageStore = store;
+        for (p, &bits_p) in bits.iter().enumerate() {
+            if bits_p == 0 {
+                continue;
+            }
+            if p >= store.pages.len() {
+                outcomes[si].raw_tail_bytes += (store.page_raw_bytes / 2) as u64;
+                continue;
+            }
+            let region = store.mc.region(store.pages[p]);
+            let keep = bits_p.min(region.dtype.bits());
+            let mut frames = Vec::new();
+            let mut total_m = 0usize;
+            for (_, frame) in region.frames() {
+                let (_, m) = accrue_frame_fetch(
+                    &mut outcomes[si].stats,
+                    &store.mc.engine,
+                    region.layout,
+                    frame,
+                    keep,
+                )?;
+                frames.push((frame, m));
+                total_m += m;
+            }
+            plans.push((keep, region.layout, frames, total_m));
+            keys.push((si, p));
+        }
+    }
+    // 2. ONE cross-sequence dispatch through the shared decode core; each
+    //    frame decompresses straight into its page's destination view
+    let bufs = decode_plans_into(lanes, &plans)?;
+    drop(plans);
+    // 3. hand decoded pages to their sequences (page order is preserved
+    //    by construction) and account each store's controller totals
+    for ((si, page), buf) in keys.into_iter().zip(bufs) {
+        outcomes[si].pages.push((page, buf));
+    }
+    for (si, (store, _)) in seqs.iter_mut().enumerate() {
+        store.mc.account_read(outcomes[si].stats);
+    }
+    Ok(outcomes)
 }
 
 #[cfg(test)]
@@ -390,6 +504,112 @@ mod tests {
             drop(seqs);
             let after: Vec<usize> = stores.iter().map(|s| s.len()).collect();
             assert_eq!(before, after);
+        }
+    }
+
+    #[test]
+    fn batched_fetch_matches_per_sequence_fetch() {
+        // The decode-side mirror of `batched_sync_matches_per_sequence_sync`:
+        // one cross-sequence dispatch must return byte-identical page
+        // codes and physical accounting to per-sequence fetch_pages, at
+        // any lane count, under mixed plane prefixes (incl. 0 = skipped
+        // and a partial-page raw tail).
+        let m = meta();
+        let kvs: Vec<KvState> = [48usize, 64, 40, 16]
+            .iter()
+            .map(|&pos| kv_filled(&m, pos))
+            .collect();
+        let bits: Vec<Vec<u32>> = vec![
+            vec![16, 8, 16],  // 3 pages stored
+            vec![4, 0, 8, 16], // 4 pages stored, one skipped
+            vec![8, 16, 16],  // 2 stored + raw tail
+            vec![16],         // 1 stored
+        ];
+        // reference: per-sequence decode through fetch_pages
+        let mut ref_stores: Vec<KvPageStore> = kvs
+            .iter()
+            .map(|kv| {
+                let mut s = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+                s.sync(kv, &m);
+                s
+            })
+            .collect();
+        let want: Vec<FetchOutcome> = ref_stores
+            .iter_mut()
+            .zip(&bits)
+            .map(|(s, b)| s.fetch_pages(b).unwrap())
+            .collect();
+        for lane_count in [1usize, 4] {
+            let lanes = Arc::new(LaneArray::new(lane_count));
+            let mut stores: Vec<KvPageStore> = kvs
+                .iter()
+                .map(|kv| {
+                    let mut s = KvPageStore::with_shared(
+                        &m,
+                        Layout::Proposed,
+                        Codec::Zstd,
+                        Arc::clone(&lanes),
+                    );
+                    s.sync(kv, &m);
+                    s
+                })
+                .collect();
+            let mut seqs: Vec<(&mut KvPageStore, &[u32])> = stores
+                .iter_mut()
+                .zip(bits.iter())
+                .map(|(s, b)| (s, b.as_slice()))
+                .collect();
+            let got = fetch_sequences(&mut seqs, &lanes).unwrap();
+            drop(seqs);
+            for (si, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.pages, w.pages, "{lane_count} lanes seq {si}: codes");
+                assert_eq!(g.stats.frames, w.stats.frames, "{lane_count} lanes seq {si}");
+                assert_eq!(g.stats.dram_bytes, w.stats.dram_bytes, "seq {si}");
+                assert_eq!(g.stats.logical_bytes, w.stats.logical_bytes, "seq {si}");
+                assert!((g.stats.engine_ns - w.stats.engine_ns).abs() < 1e-6, "seq {si}");
+                assert_eq!(g.raw_tail_bytes, w.raw_tail_bytes, "seq {si}");
+                assert_eq!(g.dram_bytes_total(), w.dram_bytes_total(), "seq {si}");
+                // the batched path charges no per-sequence dispatches
+                assert_eq!(g.stats.dispatches, 0);
+                assert!(w.stats.dispatches >= 1);
+            }
+            // controller totals advanced exactly as the reference's did
+            for (s, r) in stores.iter().zip(&ref_stores) {
+                assert_eq!(s.mc.total.dram_bytes, r.mc.total.dram_bytes);
+                assert_eq!(s.mc.total.frames, r.mc.total.frames);
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_pages_agrees_with_header_only_accounting() {
+        // The decoding fetch and the header-only fetch_bytes estimate must
+        // report the same DRAM traffic — and the decoded codes must be the
+        // plane-truncation of the stored pages.
+        let m = meta();
+        let kv = kv_filled(&m, 64);
+        let mut ps = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &m);
+        let mut ps2 = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps2.sync(&kv, &m);
+        // keeps are 0/9/16: with ExpDelta, >= 9 planes (sign + full
+        // exponent field) reconstructs the exact exponent, so the decoded
+        // codes equal plane-truncation of the stored page (below 9 the
+        // delta LSB is lost and the comparison target would differ — see
+        // the kv_pipeline integration test)
+        for bits in [[16u32, 16, 16, 16], [9, 9, 9, 9], [0, 0, 9, 16]] {
+            let est = ps.fetch_bytes(&bits);
+            let out = ps2.fetch_pages(&bits).unwrap();
+            assert_eq!(out.dram_bytes_total(), est, "{bits:?}");
+            for &(p, ref codes) in &out.pages {
+                let (full, _) = ps2.load_page(p).unwrap();
+                let keep = bits[p];
+                let want: Vec<u16> = full
+                    .iter()
+                    .map(|&c| crate::fmt::truncate_to_planes(c, Dtype::Bf16, keep))
+                    .collect();
+                assert_eq!(codes, &want, "page {p} at {keep} planes");
+            }
         }
     }
 

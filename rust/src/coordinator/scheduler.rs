@@ -26,10 +26,19 @@
 //!    BF16-canonical, so the lossless BF16 store reproduces it exactly)
 //!    and the sequence continues as if never interrupted.
 //!
+//! Both sides of the memory path batch across sequences, once per decode
+//! step: stores via [`sync_sequences`] and decode-side reads via
+//! [`fetch_sequences`] — every active sequence's planned page reads
+//! (tenant policy + pressure clamp, from `PolicyEngine::plan_pressured`)
+//! coalesce into ONE lane-array dispatch that decompresses into
+//! per-sequence views. [`FetchMode::PerSequence`] keeps the
+//! one-load-per-page path alive as the property-test reference; both
+//! modes move identical bytes and produce identical schedules.
+//!
 //! Time is virtual: one loop iteration = one decode step, so a given
 //! trace + seed yields a bit-identical schedule, responses, and
-//! step-domain latency metrics at any lane count (property-tested at 1
-//! and 8 lanes).
+//! step-domain latency metrics at any lane count (property-tested at
+//! 1/2/8/32 lanes, both admissions, both fetch modes).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -37,7 +46,9 @@ use std::time::Instant;
 
 use super::kvmanager::PolicyEngine;
 use super::metrics::ServeMetrics;
-use super::pagestore::{page_raw_bytes, span_codes, sync_sequences, KvPageStore};
+use super::pagestore::{
+    fetch_sequences, page_raw_bytes, span_codes, sync_sequences, KvPageStore,
+};
 use crate::compress::Codec;
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
@@ -108,10 +119,24 @@ pub enum Admission {
     CompressedBudget { bytes: u64 },
 }
 
+/// How each step's planned page reads run through the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchMode {
+    /// All active sequences' reads coalesce into ONE lane dispatch per
+    /// step ([`fetch_sequences`]) — the paper's always-busy lane model on
+    /// the decode path. The default.
+    Batched,
+    /// One controller load per stored page per sequence — the reference
+    /// path the batched fetch is property-tested byte-identical against.
+    PerSequence,
+}
+
 /// Scheduler knobs. See module docs for the escalation ladder.
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
     pub admission: Admission,
+    /// Decode-side fetch dispatch shape (identical bytes either way).
+    pub fetch: FetchMode,
     /// usage/budget above which reads clamp to 8 bit-planes.
     pub pressure_soft: f64,
     /// usage/budget above which reads clamp to 4 bit-planes.
@@ -138,6 +163,7 @@ impl SchedConfig {
     pub fn compressed(bytes: u64) -> Self {
         Self {
             admission: Admission::CompressedBudget { bytes },
+            fetch: FetchMode::Batched,
             pressure_soft: 0.75,
             pressure_hard: 0.90,
             max_active: 64,
@@ -454,16 +480,56 @@ pub fn serve_trace<M: StepModel>(
             sync_sequences(&mut seqs, meta, &lanes);
         }
 
-        // 5. fetch accounting + retire finished sequences
+        // 5. decode-side fetch: every sequence's planned page reads run
+        // through the controller — coalesced into ONE cross-sequence lane
+        // dispatch (Batched), or one load per page (PerSequence, the
+        // reference). Identical bytes move either way. Unlike the old
+        // header-only accounting (which left the lanes idle on the read
+        // path the paper's controller spends most of its time on), this
+        // performs the real decompression; the decoded views are not yet
+        // handed to attention (SynthLm decodes from the working cache), so
+        // their buffers are per-step allocations for now — recycling them
+        // through a scratch arena is a ROADMAP item.
+        let mut step_fetched: Vec<u64> = match cfg.fetch {
+            FetchMode::Batched => {
+                let outs = {
+                    let mut seqs: Vec<(&mut KvPageStore, &[u32])> = active
+                        .iter_mut()
+                        .zip(step_bits.iter())
+                        .map(|(s, bits)| {
+                            let Seq { store, .. } = s;
+                            (store, bits.as_slice())
+                        })
+                        .collect();
+                    fetch_sequences(&mut seqs, &lanes)?
+                };
+                let frames: u64 = outs.iter().map(|o| o.stats.frames).sum();
+                let bytes: u64 = outs.iter().map(|o| o.dram_bytes_total()).sum();
+                metrics.record_fetch(frames, u64::from(frames > 0), bytes);
+                outs.iter().map(|o| o.dram_bytes_total()).collect()
+            }
+            FetchMode::PerSequence => {
+                let mut v = Vec::with_capacity(active.len());
+                for (s, bits) in active.iter_mut().zip(&step_bits) {
+                    let o = s.store.fetch_pages(bits)?;
+                    metrics.record_fetch(o.stats.frames, o.stats.dispatches, o.dram_bytes_total());
+                    v.push(o.dram_bytes_total());
+                }
+                v
+            }
+        };
+
+        // 6. retire finished sequences
         let mut i = 0;
         while i < active.len() {
             let s = &mut active[i];
-            s.fetched += s.store.fetch_bytes(&step_bits[i]);
+            s.fetched += step_fetched[i];
             let finished =
                 s.produced.len() >= s.req.max_new_tokens || s.kv.pos >= meta.max_seq;
             if finished {
                 let s = active.swap_remove(i);
                 step_bits.swap_remove(i);
+                step_fetched.swap_remove(i);
                 out.events.push(SchedEvent {
                     step,
                     id: s.req.id,
@@ -499,7 +565,7 @@ pub fn serve_trace<M: StepModel>(
             }
         }
 
-        // 6. pressure ladder for the *next* step: degrade first, then
+        // 7. pressure ladder for the *next* step: degrade first, then
         // evict youngest-admitted until the measured footprint fits
         if let Admission::CompressedBudget { bytes: budget } = cfg.admission {
             let budget = budget.max(1);
@@ -798,31 +864,92 @@ mod tests {
     #[test]
     fn seeded_trace_is_deterministic_across_runs_and_lanes() {
         // Same trace + seed => identical schedule, responses, and
-        // step-domain metrics — at 1 lane, at 8 lanes, and across runs.
+        // step-domain metrics — across the full matrix of {1, 2, 8, 32}
+        // lanes × {FixedSlots, CompressedBudget} admission × {Batched,
+        // PerSequence} fetch, and across repeated runs.
         let spec = WorkloadSpec::chat_plus_batch(
             ArrivalProcess::Poisson { rate: 0.8 },
             14,
             128,
         );
         let trace = Trace::generate(&spec, 42);
-        let cfg = SchedConfig::compressed(64 * 1024);
-        let (base, bm) = run(&trace, &cfg, 1, 7);
-        assert_eq!(base.responses.len(), 14, "all requests complete");
+        for admission in ["budget", "slots"] {
+            let cfg = match admission {
+                "budget" => SchedConfig::compressed(64 * 1024),
+                _ => SchedConfig::fixed_slots(3),
+            };
+            let (base, bm) = run(&trace, &cfg, 1, 7);
+            assert_eq!(base.responses.len(), 14, "{admission}: all requests complete");
+            for lanes in [1usize, 2, 8, 32] {
+                for fetch in [FetchMode::Batched, FetchMode::PerSequence] {
+                    let cfg = SchedConfig { fetch, ..cfg.clone() };
+                    let (o, m) = run(&trace, &cfg, lanes, 7);
+                    let tag = format!("{admission}/{lanes} lanes/{fetch:?}");
+                    assert_eq!(o.events, base.events, "{tag}: schedule diverged");
+                    assert_eq!(o.peak_active, base.peak_active, "{tag}");
+                    assert_eq!(o.steps, base.steps, "{tag}");
+                    assert_eq!(o.pressure_steps, base.pressure_steps, "{tag}");
+                    assert_eq!(
+                        o.responses.iter().map(key).collect::<Vec<_>>(),
+                        base.responses.iter().map(key).collect::<Vec<_>>(),
+                        "{tag}: responses diverged"
+                    );
+                    assert_eq!(m.steps, bm.steps, "{tag}");
+                    assert_eq!(m.ttft_steps_p(0.99), bm.ttft_steps_p(0.99), "{tag}");
+                    assert_eq!(m.e2e_steps_p(0.5), bm.e2e_steps_p(0.5), "{tag}");
+                    assert_eq!(m.tenants, bm.tenants, "{tag}");
+                    // both fetch modes move identical bytes and frames;
+                    // only the dispatch count differs
+                    assert_eq!(m.fetched_bytes, bm.fetched_bytes, "{tag}");
+                    assert_eq!(m.fetch_frames, bm.fetch_frames, "{tag}");
+                    if fetch == FetchMode::Batched {
+                        assert!(
+                            m.fetch_dispatches <= bm.fetch_dispatches,
+                            "{tag}: batched fetch must not dispatch more"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_fetch_equals_per_sequence_under_pressure_and_eviction() {
+        // The acceptance property: with a budget tight enough to engage
+        // the pressure clamp AND force evict/resume cycles, the batched
+        // cross-sequence fetch yields bit-identical outcomes (schedule,
+        // tokens, fetched bytes, stored-frame digests) to the
+        // per-sequence reference — at 1 and 8 lanes.
+        let trace = Trace::generate(&dense_spec(8, 8.0, 16, 48), 31);
+        let budget = 9500u64;
+        let base_cfg = SchedConfig::compressed(budget);
+        let (per, pm) = run(
+            &trace,
+            &SchedConfig { fetch: FetchMode::PerSequence, ..base_cfg.clone() },
+            1,
+            5,
+        );
+        assert_eq!(per.responses.len(), 8);
+        assert!(
+            per.events.iter().any(|e| e.kind == EventKind::Evict),
+            "budget must force evictions or the test is vacuous"
+        );
+        assert!(
+            per.pressure_steps[1] + per.pressure_steps[2] > 0,
+            "budget must engage the pressure clamp"
+        );
         for lanes in [1usize, 8] {
-            let (o, m) = run(&trace, &cfg, lanes, 7);
-            assert_eq!(o.events, base.events, "{lanes} lanes: schedule diverged");
-            assert_eq!(o.peak_active, base.peak_active);
-            assert_eq!(o.steps, base.steps);
-            assert_eq!(o.pressure_steps, base.pressure_steps);
+            let (bat, bm) = run(&trace, &base_cfg, lanes, 5);
+            assert_eq!(bat.events, per.events, "{lanes} lanes");
+            assert_eq!(bat.pressure_steps, per.pressure_steps, "{lanes} lanes");
             assert_eq!(
-                o.responses.iter().map(key).collect::<Vec<_>>(),
-                base.responses.iter().map(key).collect::<Vec<_>>(),
+                bat.responses.iter().map(key).collect::<Vec<_>>(),
+                per.responses.iter().map(key).collect::<Vec<_>>(),
                 "{lanes} lanes: responses diverged"
             );
-            assert_eq!(m.steps, bm.steps);
-            assert_eq!(m.ttft_steps_p(0.99), bm.ttft_steps_p(0.99));
-            assert_eq!(m.e2e_steps_p(0.5), bm.e2e_steps_p(0.5));
-            assert_eq!(m.tenants, bm.tenants);
+            assert_eq!(bm.fetched_bytes, pm.fetched_bytes, "{lanes} lanes");
+            assert_eq!(bm.fetch_frames, pm.fetch_frames, "{lanes} lanes");
+            assert!(bm.fetch_dispatches < pm.fetch_dispatches, "{lanes} lanes");
         }
     }
 

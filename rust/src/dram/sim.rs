@@ -31,25 +31,50 @@ pub struct Completion {
 #[derive(Debug, Clone, Copy)]
 struct Pending {
     addr: Address,
+    /// Flat bank index (`bankgroup * banks_per_group + bank`) — the
+    /// bucket key, precomputed at enqueue.
+    bank: usize,
     is_write: bool,
     arrival: u64,
     tag: u64,
 }
 
-/// Arrival-ordered request queue with O(1) removal: slots are tombstoned
-/// (`None`) instead of shifted (`Vec::remove` was O(n) per FR-FCFS issue,
-/// quadratic per drained queue at depth 64+). Iteration yields live
-/// entries oldest-first with their stable slot index; slots compact when
-/// tombstones dominate, which never happens between a scan and its
-/// removal. Scheduling order is identical to the old Vec — FCFS age order
-/// is the slot order.
-#[derive(Default)]
+/// Arrival-ordered request queue with O(1) removal and a per-bank bucket
+/// index for the FR-FCFS hit scan.
+///
+/// Slots are tombstoned (`None`) instead of shifted (`Vec::remove` was
+/// O(n) per FR-FCFS issue, quadratic per drained queue at depth 64+) and
+/// addressed by *virtual index*: assigned at push, monotone in age, and
+/// stable across front-trimming (`front` tracks the virtual index of
+/// `slots[0]`). Each bank's bucket holds its entries' virtual indices
+/// oldest-first, so the scheduler's row-hit scan touches only the banks
+/// that can issue — O(banks) instead of O(queue) per cycle — while
+/// comparing candidates by virtual index preserves exact global FCFS age
+/// order. Bucket entries go stale when their slot is removed: stale
+/// fronts are popped lazily, stale interiors are skipped by the scan and
+/// dropped wholesale when tombstones force a compaction (which rebuilds
+/// the buckets; rare by the growth threshold, and never between a scan
+/// and its removal). Scheduling order is identical to the old linear
+/// scan — property-tested against it below.
 struct ReqQueue {
     slots: std::collections::VecDeque<Option<Pending>>,
     live: usize,
+    /// Virtual index of `slots[0]`.
+    front: u64,
+    /// Per-bank FIFO of virtual indices (oldest first, lazily pruned).
+    buckets: Vec<std::collections::VecDeque<u64>>,
 }
 
 impl ReqQueue {
+    fn new(nbanks: usize) -> Self {
+        Self {
+            slots: std::collections::VecDeque::new(),
+            live: 0,
+            front: 0,
+            buckets: vec![std::collections::VecDeque::new(); nbanks],
+        }
+    }
+
     fn len(&self) -> usize {
         self.live
     }
@@ -59,16 +84,30 @@ impl ReqQueue {
     }
 
     fn push(&mut self, p: Pending) {
+        let v = self.front + self.slots.len() as u64;
+        self.buckets[p.bank].push_back(v);
         self.slots.push_back(Some(p));
         self.live += 1;
     }
 
-    /// Live entries oldest-first, with stable slot indices for `remove`.
-    fn iter(&self) -> impl Iterator<Item = (usize, &Pending)> + '_ {
+    /// Live entries oldest-first, with stable *virtual* indices for
+    /// [`ReqQueue::remove`].
+    fn iter(&self) -> impl Iterator<Item = (u64, &Pending)> + '_ {
+        let front = self.front;
         self.slots
             .iter()
             .enumerate()
-            .filter_map(|(i, s)| s.as_ref().map(|p| (i, p)))
+            .filter_map(move |(i, s)| s.as_ref().map(|p| (front + i as u64, p)))
+    }
+
+    /// Entry by virtual index (None once removed or trimmed).
+    fn get(&self, v: u64) -> Option<&Pending> {
+        if v < self.front {
+            return None;
+        }
+        self.slots
+            .get((v - self.front) as usize)
+            .and_then(|s| s.as_ref())
     }
 
     /// Oldest live entry.
@@ -76,18 +115,68 @@ impl ReqQueue {
         self.iter().next().map(|(_, p)| p)
     }
 
-    /// Remove by slot index (as yielded by [`ReqQueue::iter`]).
-    fn remove(&mut self, slot: usize) -> Pending {
-        let p = self.slots[slot].take().expect("live queue slot");
+    /// Oldest live entry in `bank`'s bucket that targets `row`, has
+    /// arrived, and satisfies `ready` — the per-bank FR-FCFS hit
+    /// candidate. Walks the bucket in age order, so the first match IS
+    /// the bank's oldest match; comparing returned virtual indices across
+    /// banks reproduces the global age order of the old linear scan.
+    fn oldest_hit(
+        &mut self,
+        bank: usize,
+        row: usize,
+        cycle: u64,
+        ready: impl Fn(&Pending) -> bool,
+    ) -> Option<u64> {
+        // prune dead fronts so the common case touches only live heads
+        while let Some(&v) = self.buckets[bank].front() {
+            if self.get(v).is_some() {
+                break;
+            }
+            self.buckets[bank].pop_front();
+        }
+        for &v in &self.buckets[bank] {
+            let Some(p) = self.get(v) else { continue };
+            if p.addr.row == row && p.arrival <= cycle && ready(p) {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Remove by virtual index (as yielded by [`ReqQueue::iter`] /
+    /// [`ReqQueue::oldest_hit`]).
+    fn remove(&mut self, v: u64) -> Pending {
+        let idx = (v - self.front) as usize;
+        let p = self.slots[idx].take().expect("live queue slot");
         self.live -= 1;
-        // trim leading tombstones; compact when they dominate
+        // trim leading tombstones (virtual front advances with them)
         while matches!(self.slots.front(), Some(None)) {
             self.slots.pop_front();
+            self.front += 1;
         }
+        // compact when tombstones dominate: virtual indices are
+        // reassigned, so the buckets rebuild (amortized by the threshold)
         if self.slots.len() > 2 * self.live + 8 {
             self.slots.retain(|s| s.is_some());
+            for b in &mut self.buckets {
+                b.clear();
+            }
+            for (i, s) in self.slots.iter().enumerate() {
+                if let Some(q) = s {
+                    self.buckets[q.bank].push_back(self.front + i as u64);
+                }
+            }
         }
         p
+    }
+
+    /// Live entries of one bank oldest-first (reference-test aid).
+    #[cfg(test)]
+    fn bank_live(&self, bank: usize) -> Vec<&Pending> {
+        self.buckets[bank]
+            .iter()
+            .filter_map(|&v| self.get(v))
+            .collect()
     }
 }
 
@@ -190,7 +279,7 @@ impl MemorySystem {
             .map(|_| Channel {
                 banks: (0..cfg.banks()).map(|_| Bank::default()).collect(),
                 rank: RankTiming::new(cfg.bankgroups),
-                queue: ReqQueue::default(),
+                queue: ReqQueue::new(cfg.banks()),
                 next_refresh: cfg.t_refi,
                 skip_until: 0,
             })
@@ -221,6 +310,7 @@ impl MemorySystem {
         }
         ch.queue.push(Pending {
             addr,
+            bank: addr.bankgroup * self.cfg.banks_per_group + addr.bank,
             is_write: req.is_write,
             arrival: req.arrival.max(self.cycle),
             tag: req.tag,
@@ -313,7 +403,7 @@ impl MemorySystem {
             upd(ch.next_refresh);
             for (_, p) in ch.queue.iter() {
                 upd(p.arrival);
-                let b = &ch.banks[p.addr.bankgroup * cfg.banks_per_group + p.addr.bank];
+                let b = &ch.banks[p.bank];
                 upd(b.next_act);
                 upd(b.next_pre);
                 upd(b.next_rdwr);
@@ -359,21 +449,31 @@ impl MemorySystem {
             // (2) otherwise oldest request (activate/precharge as needed).
             // Rank-floor guard: if no column may issue this cycle under
             // rank-wide tCCD_S, skip the hit scan entirely (§Perf).
+            // The hit scan runs on the per-bank bucket index: only banks
+            // with an open row and ready column timing are walked, each to
+            // its oldest live row-match — O(banks) per issue instead of
+            // O(queue), identical pick order to the linear scan (the
+            // global minimum virtual index over per-bank minima IS the
+            // oldest ready hit; property-tested below).
             let col_possible = ch.rank.col_floor(cfg) <= cycle;
-            let mut issue: Option<(usize, bool)> = None; // (queue idx, is_hit)
+            let mut issue: Option<u64> = None; // oldest ready hit (virtual idx)
             if col_possible {
-                for (qi, p) in ch.queue.iter() {
-                    if p.arrival > cycle {
+                for bidx in 0..ch.banks.len() {
+                    let (open, rdwr) = {
+                        let b = &ch.banks[bidx];
+                        (b.open_row, b.next_rdwr)
+                    };
+                    let Some(row) = open else { continue };
+                    if rdwr > cycle {
                         continue;
                     }
-                    let bidx = p.addr.bankgroup * cfg.banks_per_group + p.addr.bank;
-                    let bank = &ch.banks[bidx];
-                    if bank.open_row == Some(p.addr.row)
-                        && bank.next_rdwr <= cycle
-                        && ch.rank.col_ready(cfg, p.addr.bankgroup, p.is_write) <= cycle
-                    {
-                        issue = Some((qi, true));
-                        break; // oldest ready hit
+                    let rank = &ch.rank;
+                    if let Some(v) = ch.queue.oldest_hit(bidx, row, cycle, |p| {
+                        rank.col_ready(cfg, p.addr.bankgroup, p.is_write) <= cycle
+                    }) {
+                        if issue.map_or(true, |best| v < best) {
+                            issue = Some(v);
+                        }
                     }
                 }
             }
@@ -381,8 +481,7 @@ impl MemorySystem {
                 // oldest request, make progress on its bank
                 if let Some((qi, p)) = ch.queue.iter().find(|(_, p)| p.arrival <= cycle) {
                     let p = *p;
-                    let bidx = p.addr.bankgroup * cfg.banks_per_group + p.addr.bank;
-                    let bank = &mut ch.banks[bidx];
+                    let bank = &mut ch.banks[p.bank];
                     match bank.open_row {
                         Some(r) if r == p.addr.row => { /* waiting on timing */ }
                         Some(_) => {
@@ -415,10 +514,9 @@ impl MemorySystem {
                     let _ = qi;
                 }
             }
-            if let Some((qi, _)) = issue {
-                let p = ch.queue.remove(qi);
-                let bidx = p.addr.bankgroup * cfg.banks_per_group + p.addr.bank;
-                let bank = &mut ch.banks[bidx];
+            if let Some(v) = issue {
+                let p = ch.queue.remove(v);
+                let bank = &mut ch.banks[p.bank];
                 bank.row_hits += 1;
                 self.stats.row_hits += 1;
                 ch.rank.record_col(cfg, p.addr.bankgroup, cycle, p.is_write);
@@ -456,8 +554,7 @@ impl MemorySystem {
                         }
                     };
                     if let Some(p) = ch.queue.first() {
-                        let b = &ch.banks
-                            [p.addr.bankgroup * cfg.banks_per_group + p.addr.bank];
+                        let b = &ch.banks[p.bank];
                         upd(p.arrival);
                         upd(b.next_act);
                         upd(b.next_pre);
@@ -645,29 +742,37 @@ mod tests {
         }
     }
 
+    fn pending_at(map: &crate::dram::addrmap::AddrMap, cfg: &Ddr5Config, byte_addr: u64, step: u64) -> Pending {
+        let addr = map.decode(byte_addr);
+        Pending {
+            addr,
+            bank: addr.bankgroup * cfg.banks_per_group + addr.bank,
+            is_write: false,
+            arrival: step,
+            tag: step,
+        }
+    }
+
     #[test]
     fn req_queue_matches_vec_reference() {
         // Random push/remove interleavings: the tombstoned queue must
-        // preserve exactly the Vec's arrival order and removal results.
+        // preserve exactly the Vec's arrival order and removal results —
+        // including the per-bank bucket index, which must mirror the Vec
+        // filtered by bank at every step.
         let cfg = DDR5_4800_PAPER.clone();
         let map = crate::dram::addrmap::AddrMap::new(&cfg);
         let mut rng = crate::util::rng::Xoshiro256::new(9);
-        let mut rq = ReqQueue::default();
+        let mut rq = ReqQueue::new(cfg.banks());
         let mut vr: Vec<Pending> = Vec::new();
         for step in 0..2000u64 {
             if rq.len() < 64 && (vr.is_empty() || rng.next_f64() < 0.55) {
-                let p = Pending {
-                    addr: map.decode((rng.next_u64() % (1 << 28)) / 64 * 64),
-                    is_write: false,
-                    arrival: step,
-                    tag: step,
-                };
+                let p = pending_at(&map, &cfg, (rng.next_u64() % (1 << 28)) / 64 * 64, step);
                 rq.push(p);
                 vr.push(p);
             } else {
                 let k = rng.index(vr.len());
-                let (slot, _) = rq.iter().nth(k).unwrap();
-                let a = rq.remove(slot);
+                let (v, _) = rq.iter().nth(k).unwrap();
+                let a = rq.remove(v);
                 let b = vr.remove(k);
                 assert_eq!((a.tag, a.arrival), (b.tag, b.arrival));
             }
@@ -677,6 +782,66 @@ mod tests {
             let want: Vec<u64> = vr.iter().map(|p| p.tag).collect();
             assert_eq!(tags, want, "order diverged at step {step}");
             assert_eq!(rq.first().map(|p| p.tag), vr.first().map(|p| p.tag));
+            // bucket index == Vec filtered by bank, in age order
+            for b in 0..cfg.banks() {
+                let got: Vec<u64> = rq.bank_live(b).iter().map(|p| p.tag).collect();
+                let want: Vec<u64> =
+                    vr.iter().filter(|p| p.bank == b).map(|p| p.tag).collect();
+                assert_eq!(got, want, "bank {b} bucket diverged at step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_hit_scan_matches_linear_reference() {
+        // The bucketed oldest_hit must return exactly what the old linear
+        // age-order scan returned, for random queues, open rows, and
+        // readiness predicates — the equivalence tick_issue's O(banks)
+        // scan rests on.
+        let cfg = DDR5_4800_PAPER.clone();
+        let map = crate::dram::addrmap::AddrMap::new(&cfg);
+        let mut rng = crate::util::rng::Xoshiro256::new(31);
+        let mut rq = ReqQueue::new(cfg.banks());
+        let mut vr: Vec<Pending> = Vec::new();
+        for step in 0..3000u64 {
+            // churn: push with random (sometimes future) arrivals, remove
+            // randomly to create tombstones and force compactions
+            if rq.len() < 48 && (vr.is_empty() || rng.next_f64() < 0.6) {
+                let mut p =
+                    pending_at(&map, &cfg, (rng.next_u64() % (1 << 26)) / 64 * 64, step);
+                if rng.next_f64() < 0.2 {
+                    p.arrival = step + 1 + rng.next_u64() % 5; // not yet arrived
+                }
+                rq.push(p);
+                vr.push(p);
+            } else {
+                let k = rng.index(vr.len());
+                let (v, _) = rq.iter().nth(k).unwrap();
+                rq.remove(v);
+                vr.remove(k);
+            }
+            // a random readiness predicate, deterministic per entry
+            let salt = rng.next_u64();
+            let ready =
+                |p: &Pending| (p.tag ^ p.addr.column as u64 ^ salt).wrapping_mul(0x9E37) % 4 != 0;
+            // compare per (bank, row) for a sample of rows present
+            for _ in 0..4 {
+                if vr.is_empty() {
+                    break;
+                }
+                let probe = vr[rng.index(vr.len())];
+                let (bank, row) = (probe.bank, probe.addr.row);
+                let linear = vr
+                    .iter()
+                    .find(|p| {
+                        p.bank == bank && p.addr.row == row && p.arrival <= step && ready(p)
+                    })
+                    .map(|p| p.tag);
+                let bucketed = rq
+                    .oldest_hit(bank, row, step, ready)
+                    .map(|v| rq.get(v).unwrap().tag);
+                assert_eq!(bucketed, linear, "step {step} bank {bank} row {row}");
+            }
         }
     }
 

@@ -14,7 +14,6 @@
 //! signatures and ordered-merge semantics, so output stays byte-identical
 //! to the serial path at every lane count.
 
-use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -97,19 +96,25 @@ struct Shared {
     done_cv: Condvar,
 }
 
-/// Write-only view of the result slots. Each index is claimed by exactly
-/// one worker (shared cursor / locked queue), so writes are disjoint.
+/// Per-index view of a slot vector. Each index is claimed by exactly one
+/// worker (shared atomic cursor), so accesses are disjoint. Used for both
+/// the result slots (write side) and `run_mut`'s input items (take side).
 struct Slots<R> {
     ptr: *mut Option<R>,
 }
 
-// SAFETY: disjoint-index writes only (see above); R crosses threads.
+// SAFETY: disjoint-index accesses only (see above); R crosses threads.
 unsafe impl<R: Send> Sync for Slots<R> {}
 
 impl<R> Slots<R> {
     /// SAFETY: caller must hold exclusive claim to index `i`.
     unsafe fn write(&self, i: usize, r: R) {
         *self.ptr.add(i) = Some(r);
+    }
+
+    /// SAFETY: caller must hold exclusive claim to index `i`.
+    unsafe fn take(&self, i: usize) -> Option<R> {
+        (*self.ptr.add(i)).take()
     }
 }
 
@@ -343,7 +348,11 @@ impl LaneArray {
     }
 
     /// Like [`LaneArray::run`] but consumes the items — for work that owns
-    /// mutable state (e.g. disjoint `&mut` slices of one tensor).
+    /// mutable state (e.g. disjoint `&mut` destination views of the
+    /// sequences' output buffers, as the batched decode fetch paths in
+    /// `memctrl::fetch_group` / `coordinator::pagestore::fetch_sequences`
+    /// dispatch). Items are claimed off the same lock-free atomic cursor
+    /// `run` uses — no queue mutex on the per-frame hot path.
     pub fn run_mut<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
@@ -356,8 +365,11 @@ impl LaneArray {
             return items.into_iter().map(|it| f(&mut lane, it)).collect();
         }
         let nworkers = self.lane_count().min(n);
-        let queue: Mutex<VecDeque<(usize, T)>> =
-            Mutex::new(items.into_iter().enumerate().collect());
+        let mut items: Vec<Option<T>> = items.into_iter().map(Some).collect();
+        let input = Slots {
+            ptr: items.as_mut_ptr(),
+        };
+        let next = AtomicUsize::new(0);
         let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
         let out = Slots {
@@ -367,14 +379,22 @@ impl LaneArray {
         let task = |wid: usize| {
             let mut lane = lock_lane(&shared.lanes[wid]);
             loop {
-                let item = queue.lock().unwrap_or_else(|p| p.into_inner()).pop_front();
-                let Some((i, it)) = item else { break };
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: index i was claimed exactly once via the cursor.
+                let it = unsafe { input.take(i) }.expect("item claimed once");
                 let r = f(&mut lane, it);
-                // SAFETY: index i is unique (each item popped once).
+                // SAFETY: same exclusive claim on the result slot.
                 unsafe { out.write(i, r) };
             }
         };
         self.submit(nworkers, &task);
+        // `submit` returns only after every participant drained, so no
+        // worker still holds the raw item pointer (unclaimed items — e.g.
+        // after a panicked batch — drop here).
+        drop(items);
         collect_slots(slots)
     }
 
@@ -562,6 +582,32 @@ mod tests {
             let want: Vec<usize> = items.iter().map(|&i| i * round).collect();
             assert_eq!(got, want, "round {round} width {n}");
         }
+    }
+
+    #[test]
+    fn run_mut_panic_surfaces_and_drops_unclaimed_items() {
+        // A panic mid-batch must surface, and every unprocessed owned item
+        // must still drop (no leaks from the cursor-claimed input slots).
+        let la = LaneArray::new(4);
+        let strong = Arc::new(());
+        let items: Vec<(usize, Arc<()>)> =
+            (0..64).map(|i| (i, Arc::clone(&strong))).collect();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            la.run_mut(items, |_lane, (i, _keep)| {
+                if i == 21 {
+                    panic!("injected run_mut panic");
+                }
+                i
+            })
+        }));
+        assert!(res.is_err(), "panic must surface at the submitting call site");
+        // every item (processed or not) has been dropped
+        assert_eq!(Arc::strong_count(&strong), 1);
+        // and the pool stays serviceable
+        let items: Vec<usize> = (0..64).collect();
+        let got = la.run_mut(items, |_lane, i| i * 2);
+        let want: Vec<usize> = (0..64).map(|i| i * 2).collect();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use crate::bitplane::layout::{reaggregate_flat, PlaneBlock};
+use crate::bitplane::layout::{reaggregate_flat_into, PlaneBlock};
 use crate::compress::codec::CodecScratch;
 use crate::compress::Codec;
 use crate::fmt::Dtype;
@@ -107,6 +107,27 @@ impl Lane {
         payload: &[u8],
         keep: usize,
     ) -> anyhow::Result<Vec<u16>> {
+        let mut codes = vec![0u16; m];
+        self.decode_planes_into(dtype, m, codec, dir, payload, keep, &mut codes)?;
+        Ok(codes)
+    }
+
+    /// [`Lane::decode_planes`] writing the reaggregated codes straight into
+    /// `dest` (`dest.len() == m`) — no output allocation. The batched
+    /// fetch path decodes each frame's share of a sequence's destination
+    /// view through this.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_planes_into(
+        &mut self,
+        dtype: Dtype,
+        m: usize,
+        codec: Codec,
+        dir: &[(u32, bool)],
+        payload: &[u8],
+        keep: usize,
+        dest: &mut [u16],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(dest.len() == m, "decode destination size");
         let t0 = Instant::now();
         let pbytes = m.div_ceil(8);
         let keep = keep.min(dir.len());
@@ -130,12 +151,12 @@ impl Lane {
             off += len;
             stored += len;
         }
-        let codes = reaggregate_flat(dtype, m, &self.plane_buf, keep);
+        reaggregate_flat_into(dtype, m, &self.plane_buf, keep, dest);
         self.stats.blocks += 1;
         self.stats.bytes_in += self.plane_buf.len() as u64;
         self.stats.bytes_out += stored as u64;
         self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
-        Ok(codes)
+        Ok(())
     }
 }
 

@@ -7,11 +7,17 @@
 //! batch of block traffic in the model flows through it:
 //!
 //! * weight/KV stores in [`crate::memctrl::MemController`],
-//! * frame decode on partial-precision loads,
+//! * frame decode on partial-precision loads — per-region
+//!   (`MemController::load`) and grouped across regions in one dispatch
+//!   (`MemController::fetch_group`, each frame decoding straight into its
+//!   destination view via `Lane::decode_planes_into`),
 //! * KV group batches in [`crate::kvcluster`],
 //! * page degradation sweeps in [`crate::coordinator::kvmanager`],
-//! * the serve loop's cross-sequence page sync
-//!   ([`crate::coordinator::pagestore::sync_sequences`]).
+//! * the serve loop's cross-sequence page sync AND cross-sequence decode
+//!   fetch — one dispatch per decode step per direction
+//!   ([`crate::coordinator::pagestore::sync_sequences`],
+//!   [`crate::coordinator::pagestore::fetch_sequences`]), keeping the
+//!   lanes busy on the read path that dominates decode.
 //!
 //! ## Lane model
 //!

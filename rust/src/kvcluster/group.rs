@@ -58,6 +58,16 @@ impl KvGroup {
     }
 }
 
+/// Transpose a channel-major stream back to token-major straight into
+/// `dest` — the allocation-free inverse of [`KvGroup::channel_major`]
+/// (the batched fetch path writes decoded KV frames into per-sequence
+/// destination views through this).
+pub fn from_channel_major_into(tokens: usize, channels: usize, cm: &[u16], dest: &mut [u16]) {
+    assert_eq!(cm.len(), tokens * channels);
+    assert_eq!(dest.len(), tokens * channels);
+    transpose_tiled(cm, dest, channels, tokens);
+}
+
 /// `dst[c * rows + r] = src[r * cols + c]`, processed in
 /// [`TRANSPOSE_TILE`]² tiles so both sides stay cache-resident.
 fn transpose_tiled(src: &[u16], dst: &mut [u16], rows: usize, cols: usize) {

@@ -19,6 +19,6 @@
 pub mod group;
 
 pub use group::{
-    cluster_ratio, compress_groups, decompress_groups, decorrelate, recorrelate, ClusteredBlock,
-    DecorrelateMode, KvGroup,
+    cluster_ratio, compress_groups, decompress_groups, decorrelate, from_channel_major_into,
+    recorrelate, ClusteredBlock, DecorrelateMode, KvGroup,
 };

@@ -10,9 +10,33 @@
 //! ```text
 //!   [ kind:1 | dtype:1 | mode:1 | codec:1 | m:4 | channels:4 ]   12 B
 //!   [ plane_len: u16 × nplanes ]  (bit15 = raw flag)
+//!   [ plane_sum: u8 × nplanes ]   (checksum of each stored plane)
 //!   [ betas: u8 × channels ]      (KV frames only)
+//!   [ head_sum: u8 ]              (checksum of the header itself)
 //!   [ plane 0 payload | plane 1 payload | ... ]
 //! ```
+//!
+//! The two checksum fields are the controller's integrity net: `head_sum`
+//! is verified by [`decode_header`], so a flipped mode byte, inflated
+//! plane size, clobbered code count, or corrupted β surfaces as a clean
+//! parse error; `plane_sum[i]` covers the *stored* bytes of plane `i` and
+//! is verified by every read path over exactly the plane prefix it
+//! fetches — corruption of stored data cannot silently decode into wrong
+//! codes. The cost is `nplanes + 1` bytes per frame.
+//!
+//! Guarantee, precisely: any single corrupted byte that leaves the
+//! header's *length* unchanged is deterministically detected (the
+//! checksum step function is bijective per input byte). The two fields
+//! that determine the header length — `dtype` (→ nplanes) and
+//! `channels` — sit before the checksum, so a flip there can relocate
+//! where `head_sum` is read from; those flips are instead caught by the
+//! field validations here (unknown dtype/kind/codec/mode codes), the
+//! header-length bound, the read path's geometry backstops
+//! (`m % channels == 0` for KV frames, `channels == 0` for weights
+//! frames — see `controller::read_frame_into`), with the relocated
+//! header + plane checksums as additional defense in depth. The
+//! corruption test suite (`tests/corruption.rs`) sweeps single-byte
+//! flips over whole stored frames and pins clean errors throughout.
 
 use crate::compress::Codec;
 use crate::fmt::Dtype;
@@ -40,12 +64,15 @@ pub struct FrameHeader {
     pub mode: u8,
     /// Per-plane stored sizes and raw flags, MSB plane first.
     pub plane_len: Vec<(u32, bool)>,
+    /// Per-plane checksum of the stored plane bytes (same order).
+    pub plane_sum: Vec<u8>,
 }
 
 impl FrameHeader {
-    /// Serialized header size in bytes.
+    /// Serialized header size in bytes (incl. per-plane checksums and the
+    /// trailing header checksum).
     pub fn header_bytes(&self) -> usize {
-        12 + self.plane_len.len() * 2 + self.channels
+        12 + self.plane_len.len() * 3 + self.channels + 1
     }
 
     /// Total frame size.
@@ -72,7 +99,20 @@ impl FrameHeader {
     }
 }
 
-/// Serialize a header. (Payloads are appended by the write path.)
+/// 8-bit rolling checksum (xor + odd-multiplier mix). Every step is a
+/// bijection of the running state for a fixed input byte, so any single
+/// corrupted byte — anywhere in the covered range — changes the final
+/// value. Used for both the per-plane payload sums and the header sum.
+pub fn plane_checksum(bytes: &[u8]) -> u8 {
+    let mut h: u8 = 0xA5;
+    for &b in bytes {
+        h = (h ^ b).wrapping_mul(0x13);
+    }
+    h
+}
+
+/// Serialize a header. (Payloads are appended by the write path.) The
+/// trailing byte is a checksum of the serialized header itself.
 pub fn encode_header(h: &FrameHeader, betas: &[u16]) -> Vec<u8> {
     let mut out = Vec::with_capacity(h.header_bytes());
     out.push(match h.kind {
@@ -93,9 +133,12 @@ pub fn encode_header(h: &FrameHeader, betas: &[u16]) -> Vec<u8> {
         let v = (len as u16) | if raw { 0x8000 } else { 0 };
         out.extend_from_slice(&v.to_le_bytes());
     }
+    debug_assert_eq!(h.plane_sum.len(), h.plane_len.len(), "one checksum per plane");
+    out.extend_from_slice(&h.plane_sum);
     for &b in betas {
         out.push(b as u8);
     }
+    out.push(plane_checksum(&out));
     out
 }
 
@@ -120,14 +163,19 @@ pub fn decode_header(data: &[u8]) -> anyhow::Result<(FrameHeader, Vec<u16>)> {
     let m = u32::from_le_bytes(data[4..8].try_into().unwrap()) as usize;
     let channels = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
     let nplanes = dtype.bits() as usize;
-    let need = 12 + nplanes * 2 + channels;
+    let need = 12 + nplanes * 3 + channels + 1;
     anyhow::ensure!(data.len() >= need, "frame header truncated");
+    anyhow::ensure!(
+        plane_checksum(&data[..need - 1]) == data[need - 1],
+        "frame header checksum mismatch (corrupt frame)"
+    );
     let mut plane_len = Vec::with_capacity(nplanes);
     for i in 0..nplanes {
         let v = u16::from_le_bytes(data[12 + 2 * i..14 + 2 * i].try_into().unwrap());
         plane_len.push(((v & 0x7FFF) as u32, v & 0x8000 != 0));
     }
-    let betas = data[12 + nplanes * 2..need]
+    let plane_sum = data[12 + nplanes * 2..12 + nplanes * 3].to_vec();
+    let betas = data[12 + nplanes * 3..need - 1]
         .iter()
         .map(|&b| b as u16)
         .collect();
@@ -140,6 +188,7 @@ pub fn decode_header(data: &[u8]) -> anyhow::Result<(FrameHeader, Vec<u16>)> {
             channels,
             mode,
             plane_len,
+            plane_sum,
         },
         betas,
     ))
@@ -190,6 +239,7 @@ mod tests {
                 channels: 128,
                 mode: 1,
                 plane_len: (0..16).map(|i| (10 + i as u32 * 7, i % 3 == 0)).collect(),
+                plane_sum: (0..16).map(|i| (i as u8).wrapping_mul(37)).collect(),
             },
             (0..128u16).map(|i| i % 256).collect(),
         )
@@ -207,7 +257,30 @@ mod tests {
         assert_eq!(h2.m, h.m);
         assert_eq!(h2.channels, h.channels);
         assert_eq!(h2.plane_len, h.plane_len);
+        assert_eq!(h2.plane_sum, h.plane_sum);
         assert_eq!(betas2, betas);
+    }
+
+    #[test]
+    fn header_corruption_is_detected() {
+        // Single-byte flips anywhere that keeps the parsed length fields'
+        // *sizes* intact must fail the header checksum (or an earlier
+        // field validation) — never parse silently. Bytes 8..12 (channels)
+        // are flipped only by +1 patterns that grow `need` past the
+        // buffer, which trips the truncation check instead.
+        let (h, betas) = sample_header();
+        let enc = encode_header(&h, &betas);
+        assert_eq!(enc.len(), h.header_bytes());
+        for i in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x01;
+            assert!(decode_header(&bad).is_err(), "flip at byte {i} undetected");
+        }
+        // checksum byte itself
+        let mut bad = enc.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x80;
+        assert!(decode_header(&bad).is_err());
     }
 
     #[test]
@@ -242,11 +315,13 @@ mod tests {
             channels: 0,
             mode: 0,
             plane_len: (0..8).map(|_| (100u32, false)).collect(),
+            plane_sum: vec![0x5A; 8],
         };
         let enc = encode_header(&h, &[]);
         let (h2, betas) = decode_header(&enc).unwrap();
         assert_eq!(h2.channels, 0);
         assert!(betas.is_empty());
-        assert_eq!(h2.header_bytes(), 12 + 16);
+        // 12 fixed + 8 plane lens (2 B) + 8 plane sums + header checksum
+        assert_eq!(h2.header_bytes(), 12 + 16 + 8 + 1);
     }
 }

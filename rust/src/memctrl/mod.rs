@@ -3,11 +3,21 @@
 //! placement (bit-plane disaggregation; cross-token KV clustering +
 //! exponent delta) and (2) makes DRAM traffic proportional to dynamic
 //! quantization via partial-plane fetches.
+//!
+//! Both directions batch across the lane array: stores via
+//! [`build_kv_group_frame`] work items, reads via
+//! [`MemController::fetch_group`] / [`read_frame_into`] (one dispatch per
+//! group, each frame decoding straight into its destination view). Every
+//! Proposed-layout frame carries per-plane and header checksums, verified
+//! on every read path — corruption surfaces as a clean error, never
+//! silent wrong data (see `frame` for the precise guarantee).
+//! Traditional-layout frames are the deliberately-bare baseline: raw
+//! value-major bytes behind a 12-byte mini header, length-checked only.
 pub mod controller;
 pub mod frame;
 
 pub use controller::{
-    build_kv_group_frame, EngineModel, KvFrameSpec, Layout, MemController, ReadStats, Region,
-    RegionId, BLOCK_BYTES,
+    build_kv_group_frame, read_frame_into, EngineModel, KvFrameSpec, Layout, MemController,
+    ReadStats, Region, RegionId, BLOCK_BYTES,
 };
 pub use frame::{FrameHeader, FrameKind};

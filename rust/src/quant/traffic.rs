@@ -54,6 +54,7 @@ impl WeightTraffic {
             channels: 0,
             mode: 0,
             plane_len: vec![(0, false); base.bits() as usize],
+            plane_sum: vec![0; base.bits() as usize],
         };
         let header_bits = h.header_bytes() as f64 * 8.0 / codes_per_block as f64;
         Self {

@@ -1,0 +1,75 @@
+//! FNV-1a 64-bit — the crate's one digest for byte-identity witnesses
+//! (stored-frame digests, trace-file integrity). Every step is a
+//! bijection of the running hash for a fixed input byte, so any single
+//! corrupted byte in the covered stream changes the final value.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_known_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_equals_oneshot() {
+        let mut h = Fnv1a::new();
+        h.write(b"hello ");
+        h.write(b"world");
+        assert_eq!(h.finish(), fnv1a64(b"hello world"));
+    }
+
+    #[test]
+    fn single_byte_flip_changes_digest() {
+        let base = b"the quick brown fox".to_vec();
+        let want = fnv1a64(&base);
+        for i in 0..base.len() {
+            for mask in [0x01u8, 0x80] {
+                let mut bad = base.clone();
+                bad[i] ^= mask;
+                assert_ne!(fnv1a64(&bad), want, "flip at {i}");
+            }
+        }
+    }
+}

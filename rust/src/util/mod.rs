@@ -1,7 +1,8 @@
-//! Small self-contained utilities (RNG, bit I/O, property testing,
-//! human-readable formatting) — in-tree substitutes for crates that are
-//! unavailable in the offline build environment.
+//! Small self-contained utilities (RNG, bit I/O, hashing, property
+//! testing, human-readable formatting) — in-tree substitutes for crates
+//! that are unavailable in the offline build environment.
 pub mod bits;
 pub mod check;
+pub mod hash;
 pub mod humanfmt;
 pub mod rng;

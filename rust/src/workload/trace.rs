@@ -8,7 +8,7 @@
 //! self-describing and versioned:
 //!
 //! ```text
-//!   magic  "CAMCTRC1"                              (8 B)
+//!   magic  "CAMCTRC2"                              (8 B)
 //!   seed   u64le
 //!   n      u32le
 //!   n x request:
@@ -16,15 +16,22 @@
 //!     policy (tag u8: 0 full | 1 window u32 | 2 quest u32
 //!             | 3 dynquant: ntiers u8, ntiers x (pages u32, dtype u8)),
 //!     prompt_len u32le, prompt_len x u16le tokens
+//!   digest u64le   (FNV-1a over everything before it)
 //! ```
+//!
+//! The trailing digest makes corruption of a trace file — any flipped or
+//! truncated byte — a clean parse error instead of a silently different
+//! replay (a corrupted trace that still parses would "replay" a workload
+//! nobody recorded).
 
 use crate::memctrl::frame::{dtype_code, dtype_from_code};
 use crate::quant::policy::{KvPolicy, PageTier};
+use crate::util::hash::fnv1a64;
 use crate::util::rng::Xoshiro256;
 
 use super::tenant::WorkloadSpec;
 
-const MAGIC: &[u8; 8] = b"CAMCTRC1";
+const MAGIC: &[u8; 8] = b"CAMCTRC2";
 
 /// One request in a traffic trace.
 #[derive(Debug, Clone, PartialEq)]
@@ -104,12 +111,22 @@ impl Trace {
                 out.extend_from_slice(&t.to_le_bytes());
             }
         }
+        let digest = fnv1a64(&out);
+        out.extend_from_slice(&digest.to_le_bytes());
         out
     }
 
-    /// Parse a serialized trace; rejects truncation and unknown tags.
+    /// Parse a serialized trace; rejects truncation, unknown tags, and any
+    /// byte-level corruption (trailing FNV-1a digest).
     pub fn from_bytes(data: &[u8]) -> anyhow::Result<Trace> {
-        let mut rd = Reader { data, off: 0 };
+        anyhow::ensure!(data.len() >= 8 + 8, "trace: too short");
+        let (body, tail) = data.split_at(data.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        anyhow::ensure!(
+            fnv1a64(body) == want,
+            "trace: digest mismatch (corrupt or truncated file)"
+        );
+        let mut rd = Reader { data: body, off: 0 };
         anyhow::ensure!(rd.take(8)? == MAGIC, "trace: bad magic");
         let seed = rd.u64()?;
         let n = rd.u32()? as usize;
@@ -134,7 +151,7 @@ impl Trace {
                 policy,
             });
         }
-        anyhow::ensure!(rd.off == data.len(), "trace: trailing bytes");
+        anyhow::ensure!(rd.off == body.len(), "trace: trailing bytes");
         Ok(Trace { seed, requests })
     }
 

@@ -1,0 +1,244 @@
+//! Differential / fuzz-style property tests for the batched decode fetch
+//! path (seeded via `util::check` — no fuzzing dependency): random block
+//! contents, sizes, and bit-plane prefixes round-trip through BOTH codecs
+//! (lz4 and zstdlike) at 1 vs N lanes, batched (`fetch_group` /
+//! `fetch_sequences`) vs per-sequence (`load` / `fetch_pages`), asserting
+//! byte identity everywhere — including pressure-clamped plane prefixes.
+//! Batching must change *where* a frame decodes, never what it produces.
+
+use std::sync::Arc;
+
+use camc::compress::Codec;
+use camc::coordinator::{fetch_sequences, FetchOutcome, KvPageStore};
+use camc::engine::LaneArray;
+use camc::fmt::minifloat::BF16;
+use camc::fmt::{truncate_to_planes, Dtype};
+use camc::memctrl::{Layout, MemController};
+use camc::quant::policy::apply_pressure;
+use camc::runtime::model::{KvState, ModelMeta};
+use camc::util::check::check;
+use camc::util::rng::Xoshiro256;
+
+fn weight_codes(n: usize, seed: u64) -> Vec<u16> {
+    let mut r = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| BF16.encode((r.normal() * 0.02) as f32) as u16)
+        .collect()
+}
+
+#[test]
+fn fetch_group_differential_vs_per_region_loads() {
+    // Random region mixes (weights + KV), random prefixes, both codecs,
+    // serial vs parallel lanes: the grouped single-dispatch fetch must be
+    // byte-identical to per-region loads, and weight reads must equal
+    // plane-truncation of the source codes.
+    check("fetch_group_differential", 14, |g| {
+        let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+        let nw = g.usize_in(1, 8000);
+        let w = weight_codes(nw, g.case_seed);
+        let wt = camc::fmt::CodeTensor::new(Dtype::Bf16, w.clone(), vec![nw]);
+        let tokens = g.usize_in(1, 48);
+        let channels = g.usize_in(1, 64);
+        let kv: Vec<u16> = (0..tokens * channels)
+            .map(|_| g.rng.next_u64() as u16)
+            .collect();
+        let keep_w = g.usize_in(0, 16) as u32;
+        let keep_k = g.usize_in(0, 16) as u32;
+        let mut serial_outs: Option<Vec<Vec<u16>>> = None;
+        for lanes in [1usize, 2, 8] {
+            let mut grouped = MemController::with_lanes(Layout::Proposed, codec, lanes);
+            let gw = grouped.store_weights("w", &wt);
+            let gk = grouped.store_kv("kv", Dtype::Bf16, tokens, channels, &kv);
+            let mut reference = MemController::with_lanes(Layout::Proposed, codec, lanes);
+            let rw = reference.store_weights("w", &wt);
+            let rk = reference.store_kv("kv", Dtype::Bf16, tokens, channels, &kv);
+            let (outs, gs) = grouped
+                .fetch_group(&[(gw, keep_w), (gk, keep_k)], None)
+                .map_err(|e| e.to_string())?;
+            let (lw, sw) = reference.load(rw, keep_w, None).map_err(|e| e.to_string())?;
+            let (lk, sk) = reference.load(rk, keep_k, None).map_err(|e| e.to_string())?;
+            if outs[0] != lw || outs[1] != lk {
+                return Err(format!("{codec} {lanes} lanes: grouped codes diverged"));
+            }
+            // ground truth for the weights region: exact plane truncation
+            for (i, (&src, &got)) in w.iter().zip(&outs[0]).enumerate() {
+                let want = truncate_to_planes(src, Dtype::Bf16, keep_w);
+                if got != want {
+                    return Err(format!("{codec} {lanes} lanes: w[{i}] keep={keep_w}"));
+                }
+            }
+            if gs.dram_bytes != sw.dram_bytes + sk.dram_bytes
+                || gs.frames != sw.frames + sk.frames
+                || gs.dispatches != 1
+            {
+                return Err(format!("{codec} {lanes} lanes: accounting diverged"));
+            }
+            // and identical across lane counts (vs the 1-lane result)
+            match serial_outs.take() {
+                None => serial_outs = Some(outs),
+                Some(s) => {
+                    if s != outs {
+                        return Err(format!("{codec} {lanes} lanes vs serial diverged"));
+                    }
+                    serial_outs = Some(s);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn tiny_meta() -> ModelMeta {
+    ModelMeta {
+        vocab: 256,
+        layers: 2,
+        d_model: 32,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_head: 8,
+        max_seq: 128,
+        kv_channels: 16,
+        prefill_len: 32,
+        page_tokens: 16,
+        n_pages: 8,
+        param_names: vec![],
+    }
+}
+
+fn kv_filled(meta: &ModelMeta, pos: usize, seed: u64) -> KvState {
+    let row = meta.n_kv_heads * meta.d_head;
+    let mut kv = KvState {
+        k: vec![0.0; meta.layers * meta.max_seq * row],
+        v: vec![0.0; meta.layers * meta.max_seq * row],
+        queries: vec![0.0; meta.layers * meta.n_heads * meta.d_head],
+        pos,
+    };
+    let mut r = Xoshiro256::new(seed);
+    let scales: Vec<f32> = (0..row).map(|_| 2f32.powf(r.normal() as f32)).collect();
+    for l in 0..meta.layers {
+        for t in 0..pos {
+            for c in 0..row {
+                kv.k[(l * meta.max_seq + t) * row + c] =
+                    scales[c] * (1.0 + 0.05 * r.normal() as f32);
+                kv.v[(l * meta.max_seq + t) * row + c] =
+                    scales[c] * (1.0 + 0.05 * r.normal() as f32);
+            }
+        }
+    }
+    kv
+}
+
+fn outcomes_match(g: &FetchOutcome, w: &FetchOutcome) -> Result<(), String> {
+    if g.pages != w.pages {
+        return Err("page codes diverged".into());
+    }
+    if g.stats.frames != w.stats.frames
+        || g.stats.dram_bytes != w.stats.dram_bytes
+        || g.stats.logical_bytes != w.stats.logical_bytes
+        || g.raw_tail_bytes != w.raw_tail_bytes
+    {
+        return Err("accounting diverged".into());
+    }
+    if (g.stats.engine_ns - w.stats.engine_ns).abs() > 1e-6 {
+        return Err("engine_ns diverged".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn fetch_sequences_differential_vs_fetch_pages() {
+    // Random sequence populations (sizes, codecs), random per-page plane
+    // prefixes — including the scheduler's pressure ladder applied on top
+    // (8- and 4-plane clamps) and skipped pages — batched cross-sequence
+    // fetch vs the per-sequence reference, at 1/2/8 lanes: byte-identical
+    // pages, identical physical accounting.
+    check("fetch_sequences_differential", 10, |g| {
+        let meta = tiny_meta();
+        let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+        let nseq = g.usize_in(1, 5);
+        let positions: Vec<usize> = (0..nseq).map(|_| g.usize_in(1, 120)).collect();
+        let kvs: Vec<KvState> = positions
+            .iter()
+            .enumerate()
+            .map(|(i, &pos)| kv_filled(&meta, pos, g.case_seed ^ i as u64))
+            .collect();
+        // per-page plan: random bits in {0, 4, 8, 9, 16}, sometimes with
+        // the scheduler's pressure clamp applied on top
+        let bits: Vec<Vec<u32>> = kvs
+            .iter()
+            .map(|kv| {
+                let npages = kv.pos.div_ceil(16).max(1);
+                let mut b: Vec<u32> = (0..npages)
+                    .map(|_| [0u32, 4, 8, 9, 16][g.rng.index(5)])
+                    .collect();
+                if g.rng.next_f64() < 0.5 {
+                    let clamp = if g.rng.next_f64() < 0.5 { 8 } else { 4 };
+                    apply_pressure(&mut b, clamp);
+                }
+                b
+            })
+            .collect();
+        // reference: per-sequence decode
+        let mut ref_stores: Vec<KvPageStore> = kvs
+            .iter()
+            .map(|kv| {
+                let mut s = KvPageStore::new(&meta, Layout::Proposed, codec);
+                s.sync(kv, &meta);
+                s
+            })
+            .collect();
+        let want: Vec<FetchOutcome> = ref_stores
+            .iter_mut()
+            .zip(&bits)
+            .map(|(s, b)| s.fetch_pages(b).map_err(|e| e.to_string()))
+            .collect::<Result<_, _>>()?;
+        for lanes in [1usize, 2, 8] {
+            let la = Arc::new(LaneArray::new(lanes));
+            let mut stores: Vec<KvPageStore> = kvs
+                .iter()
+                .map(|kv| {
+                    let mut s =
+                        KvPageStore::with_shared(&meta, Layout::Proposed, codec, Arc::clone(&la));
+                    s.sync(kv, &meta);
+                    s
+                })
+                .collect();
+            let mut seqs: Vec<(&mut KvPageStore, &[u32])> = stores
+                .iter_mut()
+                .zip(bits.iter())
+                .map(|(s, b)| (s, b.as_slice()))
+                .collect();
+            let got = fetch_sequences(&mut seqs, &la).map_err(|e| e.to_string())?;
+            drop(seqs);
+            for (si, (gi, wi)) in got.iter().zip(&want).enumerate() {
+                outcomes_match(gi, wi)
+                    .map_err(|e| format!("{codec} {lanes} lanes seq {si}: {e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fetch_sequences_is_idempotent_and_stateless() {
+    // Fetching is a read: repeating the same batched fetch returns the
+    // same bytes and leaves stored frames untouched (digest-pinned).
+    let meta = tiny_meta();
+    let kv = kv_filled(&meta, 100, 7);
+    let lanes = Arc::new(LaneArray::new(4));
+    let mut store = KvPageStore::with_shared(&meta, Layout::Proposed, Codec::Zstd, Arc::clone(&lanes));
+    store.sync(&kv, &meta);
+    let digest = store.frames_digest();
+    let bits = vec![8u32; 7];
+    let first = {
+        let mut seqs: Vec<(&mut KvPageStore, &[u32])> = vec![(&mut store, bits.as_slice())];
+        fetch_sequences(&mut seqs, &lanes).unwrap()
+    };
+    let second = {
+        let mut seqs: Vec<(&mut KvPageStore, &[u32])> = vec![(&mut store, bits.as_slice())];
+        fetch_sequences(&mut seqs, &lanes).unwrap()
+    };
+    assert_eq!(first[0].pages, second[0].pages);
+    assert_eq!(first[0].dram_bytes_total(), second[0].dram_bytes_total());
+    assert_eq!(store.frames_digest(), digest, "reads must not mutate frames");
+}
