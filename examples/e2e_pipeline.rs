@@ -39,7 +39,7 @@ fn eval_policy(
     let mut nll = 0.0;
     let mut fetched = 0u64;
     for i in 0..EVAL_TOKENS {
-        let plan = engine.plan(&kv, &lm.meta);
+        let plan = engine.plan_materialized(&kv, &lm.meta);
         let logits = lm.decode_step_degraded(
             &mut kv,
             &plan.degraded_k,

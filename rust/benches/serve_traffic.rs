@@ -8,22 +8,36 @@
 //!
 //! `--fast` trims the trace/horizon for CI smoke runs; `--check` exits
 //! non-zero if pressure-driven admission serves fewer sequences than
-//! fixed-slot admission at equal byte budget, or if the compressed
-//! budget fails to sustain more concurrency than the byte-equal
-//! uncompressed budget (the regressions CI gates on).
+//! fixed-slot admission at equal byte budget, if the compressed budget
+//! fails to sustain more concurrency than the byte-equal uncompressed
+//! budget, or if the zero-materialization view path's per-step host copy
+//! bytes stop beating the materializing copy-plan baseline (the
+//! regressions CI gates on).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use camc::coordinator::{
-    fixed_slots_for_budget, serve_trace, EventKind, FetchMode, SchedConfig, SchedOutcome,
-    ServeMetrics,
+    fixed_slots_for_budget, serve_trace, EventKind, FetchMode, MaterializedRef, SchedConfig,
+    SchedOutcome, ServeMetrics, StepModel,
 };
 use camc::engine::LaneArray;
 use camc::report::json::Json;
 use camc::report::Table;
 use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
+
+fn run_with<M: StepModel>(
+    lm: &M,
+    trace: &Trace,
+    cfg: &SchedConfig,
+) -> (SchedOutcome, ServeMetrics, f64) {
+    let lanes = Arc::new(LaneArray::with_default_lanes());
+    let mut m = ServeMetrics::default();
+    let t0 = Instant::now();
+    let out = serve_trace(lm, trace, cfg, lanes, &mut m).expect("serve_trace");
+    (out, m, t0.elapsed().as_secs_f64())
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -43,13 +57,7 @@ fn main() {
     let budget: u64 = 6 * 16 * 1024;
 
     let mut json: BTreeMap<String, Json> = BTreeMap::new();
-    let run = |cfg: &SchedConfig| -> (SchedOutcome, ServeMetrics, f64) {
-        let lanes = Arc::new(LaneArray::with_default_lanes());
-        let mut m = ServeMetrics::default();
-        let t0 = Instant::now();
-        let out = serve_trace(&lm, &trace, cfg, lanes, &mut m).expect("serve_trace");
-        (out, m, t0.elapsed().as_secs_f64())
-    };
+    let run = |cfg: &SchedConfig| -> (SchedOutcome, ServeMetrics, f64) { run_with(&lm, &trace, cfg) };
     let capped = |mut cfg: SchedConfig| -> SchedConfig {
         cfg.max_steps = horizon;
         cfg
@@ -69,6 +77,13 @@ fn main() {
         fetch: FetchMode::PerSequence,
         ..SchedConfig::compressed(budget)
     }));
+    // the materializing (copy-plan) reference: same admission/schedule,
+    // dense degraded K/V copies per step — the host-copy-bytes baseline
+    let (mat, matm, _) = run_with(
+        &MaterializedRef(&lm),
+        &trace,
+        &capped(SchedConfig::compressed(budget)),
+    );
     // wall-rate row: the full trace, uncapped, compressed admission
     let (full, fm, wall) = run(&SchedConfig::compressed(budget));
 
@@ -113,6 +128,12 @@ fn main() {
         psm.fetch_frames_per_dispatch(),
         cm.fetched_bytes as f64 / 1024.0,
         pwall / cwall.max(1e-9)
+    );
+    println!(
+        "read path host copies: view {:.0} B/step vs materialized {:.0} B/step ({:.1}x less)",
+        cm.host_copy_bytes_per_step(),
+        matm.host_copy_bytes_per_step(),
+        matm.host_copy_bytes as f64 / cm.host_copy_bytes.max(1) as f64
     );
 
     json.insert(
@@ -170,6 +191,14 @@ fn main() {
         "kv fetched bytes (batched)".into(),
         Json::Num(cm.fetched_bytes as f64),
     );
+    json.insert(
+        "host copy bytes per step (view)".into(),
+        Json::Num(cm.host_copy_bytes_per_step().round()),
+    );
+    json.insert(
+        "host copy bytes per step (materialized)".into(),
+        Json::Num(matm.host_copy_bytes_per_step().round()),
+    );
 
     let npaths = json.len();
     std::fs::write("BENCH_serve.json", Json::Obj(json).to_string() + "\n")
@@ -208,9 +237,32 @@ fn main() {
             );
             ok = false;
         }
+        if mat.responses.len() != co.responses.len() {
+            eprintln!(
+                "CHECK FAILED: materialized reference served {} sequences, view path {} — \
+                 the read path must not change the schedule",
+                mat.responses.len(),
+                co.responses.len()
+            );
+            ok = false;
+        }
+        // deterministic byte counts, not timings: the zero-materialization
+        // path must copy strictly less host data per step than the
+        // copy-plan baseline
+        if cm.host_copy_bytes >= matm.host_copy_bytes {
+            eprintln!(
+                "CHECK FAILED: view path host copies {} B >= materializing baseline {} B",
+                cm.host_copy_bytes, matm.host_copy_bytes
+            );
+            ok = false;
+        }
         if !ok {
             std::process::exit(1);
         }
+        println!(
+            "check ✓ host copies view {} B < materialized {} B",
+            cm.host_copy_bytes, matm.host_copy_bytes
+        );
         println!(
             "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}, batched fetch served {} >= per-seq {} in {} vs {} dispatches",
             co.responses.len(),

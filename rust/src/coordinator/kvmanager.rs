@@ -8,16 +8,90 @@
 //! systems rely on. Precision reduction is bit-plane truncation of the
 //! BF16 codes — exactly what a partial-plane fetch through the memory
 //! controller returns to the fabric.
+//!
+//! ## The view/lazy-degrade contract
+//!
+//! A decode step's plan is a [`KvViewPlan`]: per-page [`PageView`]s
+//! (plane-prefix precision + token range + mask), built **without copying
+//! or degrading a single cache value** — the degraded representation is a
+//! *description* of what a partial-precision fetch returns, resolved
+//! lazily when the attention path reads it (fetched page codes from the
+//! step's `DecodeArena`, or the raw working tail). Host-side memcpy on
+//! the plan path is therefore zero; only the bytes a step actually
+//! fetches are ever materialized, exactly as the modeled DRAM traffic
+//! scales. [`PolicyEngine::plan_pressured_into`] reuses every buffer in
+//! the plan, so steady-state planning is allocation-free.
+//!
+//! The old eager path survives as
+//! [`PolicyEngine::plan_materialized_pressured`] — full degraded K/V
+//! copies via bit-plane truncation of the working cache — and is the
+//! property-test reference (and the XLA backend's input, which needs a
+//! dense buffer to upload).
 
 use std::sync::Arc;
 
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::fmt::{truncate_to_planes, Dtype};
-use crate::quant::policy::{ranks_from_scores, KvPolicy, PAGE_TOKENS};
+use crate::quant::policy::{ranks_from_scores_into, KvPolicy, PAGE_TOKENS};
 use crate::runtime::model::{KvState, ModelMeta};
 
-/// The per-step plan produced by [`PolicyEngine::plan`].
+/// One page's share of a decode step's KV read: which tokens, at what
+/// plane-prefix precision. `bits == 0` means the policy skips the page
+/// (its mask slot is -1e9 and nothing is fetched for it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageView {
+    pub page: usize,
+    /// Bit-planes fetched for this page (0 = skipped).
+    pub bits: u32,
+    /// Token range `[t0, t1)` the page covered at plan time.
+    pub t0: usize,
+    pub t1: usize,
+}
+
+/// The per-step read plan produced by [`PolicyEngine::plan`] /
+/// [`PolicyEngine::plan_pressured`]: a lazy, zero-materialization
+/// description of the degraded KV a step attends over. Holds reusable
+/// buffers (including the scoring scratch), so
+/// [`PolicyEngine::plan_pressured_into`] is allocation-free in steady
+/// state.
+#[derive(Debug, Default)]
+pub struct KvViewPlan {
+    /// Additive page mask for the decode step (0 attend, -1e9 skip).
+    pub mask: Vec<f32>,
+    /// Bit-planes kept per active page (0 = skipped) — the fetch plan
+    /// `pagestore::fetch_sequences` consumes.
+    pub page_bits: Vec<u32>,
+    /// One view per active page, ascending page order (`bits` mirrors
+    /// `page_bits`).
+    pub views: Vec<PageView>,
+    /// Ideal fetched KV bits under this plan (bandwidth proxy; the
+    /// compressed accounting lives in `pagestore`).
+    pub fetched_bits: u64,
+    /// `kv.pos` at plan time (the views cover exactly `[0, pos)`).
+    pub pos: usize,
+    // ---- reusable planning scratch (contents meaningless between steps) ----
+    scores: Vec<f64>,
+    ranks: Vec<usize>,
+    rank_idx: Vec<usize>,
+    qbar: Vec<f32>,
+}
+
+impl KvViewPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The views a step actually reads (`bits > 0`).
+    pub fn active_views(&self) -> impl Iterator<Item = &PageView> + '_ {
+        self.views.iter().filter(|v| v.bits > 0)
+    }
+}
+
+/// The materialized per-step plan produced by
+/// [`PolicyEngine::plan_materialized`]: full degraded K/V copies — the
+/// reference path the lazy [`KvViewPlan`] is property-tested against, and
+/// the input shape dense backends (the PJRT tinylm) upload.
 pub struct PolicyPlan {
     /// Additive page mask for the decode step (0 attend, -1e9 skip).
     pub mask: Vec<f32>,
@@ -63,14 +137,32 @@ impl PolicyEngine {
     /// Σ_ch max(q̄_ch · min_p,ch, q̄_ch · max_p,ch), with q̄ the group-mean
     /// query per KV head channel from the previous step.
     pub fn page_scores(&self, kv: &KvState, meta: &ModelMeta) -> Vec<f64> {
+        let mut scores = Vec::new();
+        let mut qbar = Vec::new();
+        self.page_scores_into(kv, meta, &mut scores, &mut qbar);
+        scores
+    }
+
+    /// [`PolicyEngine::page_scores`] into reusable buffers (`qbar` is the
+    /// per-layer group-mean-query scratch) — allocation-free in steady
+    /// state, identical output.
+    pub fn page_scores_into(
+        &self,
+        kv: &KvState,
+        meta: &ModelMeta,
+        scores: &mut Vec<f64>,
+        qbar: &mut Vec<f32>,
+    ) {
         let npages = kv.pos.div_ceil(PAGE_TOKENS);
         let row = meta.n_kv_heads * meta.d_head; // channels per token
         let group = meta.n_heads / meta.n_kv_heads;
-        let mut scores = vec![0.0f64; npages.max(1)];
+        scores.clear();
+        scores.resize(npages.max(1), 0.0);
         // group-mean query per layer -> [L][row]
         for l in 0..meta.layers {
             let qbase = l * meta.n_heads * meta.d_head;
-            let mut qbar = vec![0.0f32; row];
+            qbar.clear();
+            qbar.resize(row, 0.0);
             for h in 0..meta.n_heads {
                 let kvh = h / group;
                 for d in 0..meta.d_head {
@@ -94,11 +186,12 @@ impl PolicyEngine {
                 }
             }
         }
-        scores
     }
 
-    /// Build this step's plan from the true cache.
-    pub fn plan(&self, kv: &KvState, meta: &ModelMeta) -> PolicyPlan {
+    /// Build this step's lazy read plan from the true cache. No cache
+    /// value is copied or degraded — see the module docs for the
+    /// view/lazy-degrade contract.
+    pub fn plan(&self, kv: &KvState, meta: &ModelMeta) -> KvViewPlan {
         self.plan_pressured(kv, meta, None)
     }
 
@@ -106,56 +199,93 @@ impl PolicyEngine {
     /// clamp: `Some(c)` caps every non-current page's fetch precision at
     /// `c` bit-planes (see [`crate::quant::policy::apply_pressure`]) — the
     /// continuous-batching scheduler's degrade escalation, applied *on
-    /// top of* the request's own policy. `None` is byte-identical to
+    /// top of* the request's own policy. `None` is identical to
     /// [`PolicyEngine::plan`].
     pub fn plan_pressured(
         &self,
         kv: &KvState,
         meta: &ModelMeta,
         clamp: Option<u32>,
-    ) -> PolicyPlan {
+    ) -> KvViewPlan {
+        let mut plan = KvViewPlan::default();
+        self.plan_pressured_into(kv, meta, clamp, &mut plan);
+        plan
+    }
+
+    /// [`PolicyEngine::plan_pressured`] reusing a caller-held plan — the
+    /// serve loop's steady-state entry point: every buffer (mask, bits,
+    /// views, scoring scratch) is recycled, so planning a decode step
+    /// allocates nothing and copies no cache data. O(pages) work total.
+    pub fn plan_pressured_into(
+        &self,
+        kv: &KvState,
+        meta: &ModelMeta,
+        clamp: Option<u32>,
+        plan: &mut KvViewPlan,
+    ) {
         let npages_active = kv.pos.div_ceil(PAGE_TOKENS).max(1);
-        let scores = if matches!(self.policy, KvPolicy::Full | KvPolicy::SlidingWindow { .. }) {
+        if matches!(self.policy, KvPolicy::Full | KvPolicy::SlidingWindow { .. }) {
             // rank-free policies
-            vec![0.0; npages_active]
+            plan.scores.clear();
+            plan.scores.resize(npages_active, 0.0);
         } else {
-            self.page_scores(kv, meta)
-        };
-        let ranks = ranks_from_scores(&scores);
-        let mut bits = self
-            .policy
-            .page_precisions(npages_active, Dtype::Bf16, &ranks);
+            self.page_scores_into(kv, meta, &mut plan.scores, &mut plan.qbar);
+        }
+        ranks_from_scores_into(&plan.scores, &mut plan.ranks, &mut plan.rank_idx);
+        self.policy
+            .page_precisions_into(npages_active, Dtype::Bf16, &plan.ranks, &mut plan.page_bits);
         if let Some(c) = clamp {
-            crate::quant::policy::apply_pressure(&mut bits, c);
+            crate::quant::policy::apply_pressure(&mut plan.page_bits, c);
         }
-
-        let mut mask = vec![0.0f32; meta.n_pages];
-        for (p, &b) in bits.iter().enumerate() {
+        plan.mask.clear();
+        plan.mask.resize(meta.n_pages, 0.0);
+        plan.views.clear();
+        plan.fetched_bits = 0;
+        plan.pos = kv.pos;
+        let row = meta.n_kv_heads * meta.d_head;
+        for (p, &b) in plan.page_bits.iter().enumerate() {
+            let t0 = p * PAGE_TOKENS;
+            let t1 = ((p + 1) * PAGE_TOKENS).min(kv.pos);
             if b == 0 {
-                mask[p] = -1e9;
+                plan.mask[p] = -1e9;
+            } else {
+                plan.fetched_bits += ((t1 - t0) * row * 2) as u64 * b as u64 * meta.layers as u64;
             }
+            plan.views.push(PageView { page: p, bits: b, t0, t1 });
         }
+    }
 
+    /// Build this step's plan WITH materialized degraded K/V copies — the
+    /// eager reference path (see [`PolicyPlan`]).
+    pub fn plan_materialized(&self, kv: &KvState, meta: &ModelMeta) -> PolicyPlan {
+        self.plan_materialized_pressured(kv, meta, None)
+    }
+
+    /// [`PolicyEngine::plan_materialized`] with the scheduler's pressure
+    /// clamp. Metadata (mask, bits, fetched_bits) is exactly
+    /// [`PolicyEngine::plan_pressured`]'s; on top of it the full caches
+    /// are cloned and each kept page quantized to its tier — O(context)
+    /// host copies per call, which is precisely what the lazy view path
+    /// eliminates.
+    pub fn plan_materialized_pressured(
+        &self,
+        kv: &KvState,
+        meta: &ModelMeta,
+        clamp: Option<u32>,
+    ) -> PolicyPlan {
+        let plan = self.plan_pressured(kv, meta, clamp);
         // degraded copies: quantize each kept page to its tier
         let mut dk = kv.k.clone();
         let mut dv = kv.v.clone();
         let row = meta.n_kv_heads * meta.d_head;
-        let mut fetched_bits = 0u64;
-        for (p, &b) in bits.iter().enumerate() {
-            let t0 = p * PAGE_TOKENS;
-            let t1 = ((p + 1) * PAGE_TOKENS).min(kv.pos);
-            if b == 0 {
-                continue;
-            }
-            fetched_bits += ((t1 - t0) * row * 2) as u64 * b as u64 * meta.layers as u64;
-        }
         // The degradation sweep (BF16 encode → truncate → decode per
-        // element) is the per-step batch hot path; shard it across the
-        // lane array, one disjoint layer slice per work item. Values are
-        // element-wise pure, so the result is identical to the serial
+        // element) is the materialized path's hot loop; shard it across
+        // the lane array, one disjoint layer slice per work item. Values
+        // are element-wise pure, so the result is identical to the serial
         // sweep.
         let layer_elems = meta.max_seq * row;
         let pos = kv.pos;
+        let bits = &plan.page_bits;
         if layer_elems > 0 && bits.iter().any(|&b| b > 0 && b < 16) {
             let items: Vec<(&mut [f32], &mut [f32])> = dk
                 .chunks_mut(layer_elems)
@@ -182,11 +312,11 @@ impl PolicyEngine {
             });
         }
         PolicyPlan {
-            mask,
-            page_bits: bits,
+            mask: plan.mask,
+            page_bits: plan.page_bits,
             degraded_k: dk,
             degraded_v: dv,
-            fetched_bits,
+            fetched_bits: plan.fetched_bits,
         }
     }
 }
@@ -248,10 +378,67 @@ mod tests {
     fn full_policy_plan_is_identity() {
         let m = meta();
         let kv = kv_with(&m, 40, 1);
-        let plan = PolicyEngine::new(KvPolicy::Full).plan(&kv, &m);
+        let plan = PolicyEngine::new(KvPolicy::Full).plan_materialized(&kv, &m);
         assert_eq!(plan.degraded_k, kv.k);
         assert!(plan.mask.iter().all(|&x| x == 0.0));
         assert!(plan.page_bits.iter().all(|&b| b == 16));
+    }
+
+    #[test]
+    fn view_plan_matches_materialized_metadata() {
+        // The lazy plan's metadata (mask, bits, fetched_bits) must be
+        // exactly the materialized reference's, and its views must tile
+        // [0, pos) in page order with bits mirroring page_bits.
+        let m = meta();
+        let kv = kv_with(&m, 55, 6);
+        let policy = KvPolicy::DynamicQuant {
+            tiers: vec![
+                PageTier { pages: 1, dtype: Dtype::Bf16 },
+                PageTier { pages: 2, dtype: Dtype::Fp8E4M3 },
+            ],
+        };
+        let eng = PolicyEngine::new(policy);
+        for clamp in [None, Some(8), Some(4)] {
+            let vp = eng.plan_pressured(&kv, &m, clamp);
+            let mp = eng.plan_materialized_pressured(&kv, &m, clamp);
+            assert_eq!(vp.mask, mp.mask, "{clamp:?}");
+            assert_eq!(vp.page_bits, mp.page_bits, "{clamp:?}");
+            assert_eq!(vp.fetched_bits, mp.fetched_bits, "{clamp:?}");
+            assert_eq!(vp.pos, kv.pos);
+            assert_eq!(vp.views.len(), vp.page_bits.len());
+            let mut next_t = 0usize;
+            for (p, v) in vp.views.iter().enumerate() {
+                assert_eq!(v.page, p);
+                assert_eq!(v.bits, vp.page_bits[p]);
+                assert_eq!(v.t0, next_t);
+                next_t = v.t1;
+            }
+            assert_eq!(next_t, kv.pos, "views must tile the context");
+            // active_views filters exactly the fetched pages
+            assert_eq!(
+                vp.active_views().count(),
+                vp.page_bits.iter().filter(|&&b| b > 0).count()
+            );
+        }
+    }
+
+    #[test]
+    fn plan_into_reuse_is_identical_to_fresh() {
+        // A plan buffer recycled across steps (and across different cache
+        // states) must produce exactly what a fresh plan produces.
+        let m = meta();
+        let eng = PolicyEngine::new(KvPolicy::QuestTopK { pages: 2 });
+        let mut reused = KvViewPlan::new();
+        for (pos, seed) in [(17usize, 2u64), (64, 3), (33, 4), (1, 5)] {
+            let kv = kv_with(&m, pos, seed);
+            eng.plan_pressured_into(&kv, &m, Some(8), &mut reused);
+            let fresh = eng.plan_pressured(&kv, &m, Some(8));
+            assert_eq!(reused.mask, fresh.mask, "pos={pos}");
+            assert_eq!(reused.page_bits, fresh.page_bits, "pos={pos}");
+            assert_eq!(reused.views, fresh.views, "pos={pos}");
+            assert_eq!(reused.fetched_bits, fresh.fetched_bits, "pos={pos}");
+            assert_eq!(reused.pos, fresh.pos, "pos={pos}");
+        }
     }
 
     #[test]
@@ -276,7 +463,7 @@ mod tests {
                 PageTier { pages: 2, dtype: Dtype::Fp8E4M3 },
             ],
         };
-        let plan = PolicyEngine::new(policy).plan(&kv, &m);
+        let plan = PolicyEngine::new(policy).plan_materialized(&kv, &m);
         // exactly one page at 16 bits + the current page forced to 16
         let full = plan.page_bits.iter().filter(|&&b| b == 16).count();
         assert!(full >= 1 && full <= 2, "{:?}", plan.page_bits);
@@ -326,9 +513,9 @@ mod tests {
                 PageTier { pages: 2, dtype: Dtype::Fp8E4M3 },
             ],
         };
-        let serial = PolicyEngine::with_lanes(policy(), 1).plan(&kv, &m);
+        let serial = PolicyEngine::with_lanes(policy(), 1).plan_materialized(&kv, &m);
         for lanes in [2usize, 4, 8] {
-            let par = PolicyEngine::with_lanes(policy(), lanes).plan(&kv, &m);
+            let par = PolicyEngine::with_lanes(policy(), lanes).plan_materialized(&kv, &m);
             assert_eq!(par.degraded_k, serial.degraded_k, "{lanes} lanes k");
             assert_eq!(par.degraded_v, serial.degraded_v, "{lanes} lanes v");
             assert_eq!(par.page_bits, serial.page_bits, "{lanes} lanes bits");
@@ -340,15 +527,15 @@ mod tests {
         let m = meta();
         let kv = kv_with(&m, 64, 7);
         let eng = PolicyEngine::new(KvPolicy::Full);
-        let free = eng.plan_pressured(&kv, &m, None);
+        let free = eng.plan_materialized_pressured(&kv, &m, None);
         assert_eq!(free.page_bits, vec![16, 16, 16, 16]);
-        let tight = eng.plan_pressured(&kv, &m, Some(8));
+        let tight = eng.plan_materialized_pressured(&kv, &m, Some(8));
         assert_eq!(tight.page_bits, vec![8, 8, 8, 16]);
         // degrade actually applied to the clamped pages
         assert_ne!(tight.degraded_k, kv.k);
         assert!(tight.fetched_bits < free.fetched_bits);
-        // clamp None is byte-identical to plan()
-        let plain = eng.plan(&kv, &m);
+        // clamp None is byte-identical to plan_materialized()
+        let plain = eng.plan_materialized(&kv, &m);
         assert_eq!(plain.page_bits, free.page_bits);
         assert_eq!(plain.degraded_k, free.degraded_k);
     }

@@ -32,6 +32,13 @@ pub struct ServeMetrics {
     /// page — the ratio [`ServeMetrics::fetch_frames_per_dispatch`] is
     /// the batching win the serve bench reports.
     pub fetch_dispatches: u64,
+    /// Host-side bytes materialized to serve decode-side KV reads: each
+    /// step's arena volume (decoded page codes) plus any dense degraded
+    /// K/V copies materialized for backends that cannot consume lazy
+    /// views. The zero-materialization view path pays only the arena
+    /// share, so this is THE tracked number for the copy-vs-view win
+    /// (deterministic — CI gates on it).
+    pub host_copy_bytes: u64,
     latencies_ms: Vec<f64>,
     /// Time-to-first-token per request, virtual steps.
     ttft_steps: Vec<u64>,
@@ -73,6 +80,21 @@ impl ServeMetrics {
         self.fetch_frames += frames;
         self.fetch_dispatches += dispatches;
         self.fetched_bytes += bytes;
+    }
+
+    /// Record host-side bytes copied/materialized for KV reads this step
+    /// (see [`ServeMetrics::host_copy_bytes`]).
+    pub fn record_host_copy(&mut self, bytes: u64) {
+        self.host_copy_bytes += bytes;
+    }
+
+    /// Mean host-copy bytes per decode step (0 before any step runs).
+    pub fn host_copy_bytes_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.host_copy_bytes as f64 / self.steps as f64
+        }
     }
 
     /// Mean frames decoded per lane dispatch on the fetch path — how much
@@ -190,6 +212,17 @@ mod tests {
         assert_eq!(m.fetch_dispatches, 2);
         assert_eq!(m.fetched_bytes, 5120);
         assert!((m.fetch_frames_per_dispatch() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_copy_accounting_accumulates() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.host_copy_bytes_per_step(), 0.0);
+        m.record_host_copy(1000);
+        m.record_host_copy(24);
+        assert_eq!(m.host_copy_bytes, 1024);
+        m.steps = 4;
+        assert!((m.host_copy_bytes_per_step() - 256.0).abs() < 1e-12);
     }
 
     #[test]

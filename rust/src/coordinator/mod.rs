@@ -11,11 +11,15 @@ pub mod scheduler;
 pub mod server;
 
 pub use footprint::{footprint_curve, FootprintPoint};
-pub use kvmanager::{degrade_f32, PolicyEngine, PolicyPlan};
+pub use kvmanager::{degrade_f32, KvViewPlan, PageView, PolicyEngine, PolicyPlan};
 pub use metrics::{ServeMetrics, TenantStats};
-pub use pagestore::{fetch_sequences, sync_sequences, FetchOutcome, KvPageStore};
+pub use pagestore::{
+    fetch_sequences, span_k_base, span_v_base, sync_sequences, ArenaSpan, DecodeArena,
+    FetchOutcome, KvPageStore,
+};
 pub use scheduler::{
-    fixed_slots_for_budget, serve_trace, Admission, EventKind, FetchMode, SchedConfig, SchedEvent,
-    SchedOutcome, StepModel, TrafficResponse,
+    fixed_slots_for_budget, materialize_read, serve_trace, Admission, EventKind, FetchMode,
+    KvRead, KvViews, MaterializedRef, SchedConfig, SchedEvent, SchedOutcome, StepModel,
+    StepOutput, TrafficResponse,
 };
 pub use server::{serve, spawn, Request, Response};

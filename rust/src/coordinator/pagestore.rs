@@ -6,18 +6,107 @@
 //! [`fetch_sequences`] — one lane-array dispatch per decode step per
 //! direction instead of one per sequence (or one per page), keeping the
 //! paper's 32 lanes busy on the read path that dominates decode.
+//!
+//! ## The arena contract
+//!
+//! Every page a decode step fetches decompresses into ONE grow-only
+//! per-step buffer, the [`DecodeArena`]: the step resets it, the fetch
+//! paths carve disjoint [`ArenaSpan`]s out of it (one per decoded page,
+//! handed to the lane dispatch as destination views), and the attention
+//! path reads the spans until the next reset. Steady-state decode fetches
+//! therefore allocate nothing — host-side copies scale with the bytes a
+//! step actually reads (the arena's high-water mark), not with the number
+//! of pages times a fresh `Vec` each. [`FetchOutcome`] carries spans, not
+//! buffers; resolve them against the arena with [`FetchOutcome::decoded`]
+//! / [`DecodeArena::codes`].
 
 use std::sync::Arc;
 
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::fmt::Dtype;
-use crate::memctrl::controller::{accrue_frame_fetch, decode_plans_into};
+use crate::memctrl::controller::{plan_frame_fetch, run_decode_dispatch, RegionPlan};
 use crate::memctrl::{
     build_kv_group_frame, KvFrameSpec, Layout, MemController, ReadStats, RegionId,
 };
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta};
+
+/// A page's slice of the step's [`DecodeArena`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaSpan {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Grow-only per-step scratch backing every page decoded by one decode
+/// step's fetch (see the module docs for the contract). One buffer per
+/// serve loop, reset each step; capacity persists, so steady-state
+/// fetches are allocation-free.
+#[derive(Debug, Default)]
+pub struct DecodeArena {
+    buf: Vec<u16>,
+}
+
+impl DecodeArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop this step's spans (capacity is kept).
+    pub fn reset(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Codes currently handed out (the step's decoded volume).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The decoded codes a span addresses.
+    pub fn codes(&self, span: ArenaSpan) -> &[u16] {
+        &self.buf[span.start..span.start + span.len]
+    }
+
+    /// Carve a fresh zeroed span off the end of the buffer.
+    fn alloc(&mut self, len: usize) -> ArenaSpan {
+        let start = self.buf.len();
+        self.buf.resize(start + len, 0);
+        ArenaSpan { start, len }
+    }
+
+    /// Mutable view of one span (a decode destination).
+    fn slice_mut(&mut self, span: ArenaSpan) -> &mut [u16] {
+        &mut self.buf[span.start..span.start + span.len]
+    }
+
+    /// Disjoint mutable views of freshly allocated spans — the decode
+    /// dispatch's destination slices. Spans must be contiguous and in
+    /// allocation order (as consecutive [`DecodeArena::alloc`]s produce).
+    fn slices_mut(&mut self, spans: &[ArenaSpan]) -> Vec<&mut [u16]> {
+        let mut out = Vec::with_capacity(spans.len());
+        let Some(first) = spans.first() else {
+            return out;
+        };
+        let mut rest = &mut self.buf[first.start..];
+        let mut at = first.start;
+        for s in spans {
+            // hard assert: a non-contiguous span set would silently decode
+            // pages into the wrong offsets (the cost is nothing next to
+            // the per-span decompression)
+            assert_eq!(s.start, at, "spans must be contiguous");
+            let (d, tail) = rest.split_at_mut(s.len);
+            out.push(d);
+            rest = tail;
+            at += s.len;
+        }
+        out
+    }
+}
 
 /// Per-sequence store of compressed KV pages.
 pub struct KvPageStore {
@@ -54,6 +143,22 @@ pub(crate) fn span_codes(kv: &KvState, meta: &ModelMeta, t0: usize, t1: usize) -
         }
     }
     codes
+}
+
+/// Row base of layer `l`, token-offset `dt`'s K row within a stored-page
+/// span ([`span_codes`] order: per layer, K tokens then V tokens,
+/// token-major rows of `row` channels). Every consumer of fetched page
+/// spans — the lazy accessors, the materializer, and the parity suite —
+/// indexes through this pair, so the canonical layout is defined once.
+#[inline]
+pub fn span_k_base(l: usize, dt: usize, row: usize) -> usize {
+    ((l * 2) * PAGE_TOKENS + dt) * row
+}
+
+/// [`span_k_base`]'s V-row counterpart.
+#[inline]
+pub fn span_v_base(l: usize, dt: usize, row: usize) -> usize {
+    ((l * 2 + 1) * PAGE_TOKENS + dt) * row
 }
 
 impl KvPageStore {
@@ -166,11 +271,23 @@ impl KvPageStore {
     /// controller (full precision) — the scheduler's swap-in path.
     /// Returns the codes and the read accounting (real DRAM traffic).
     pub fn load_page(&mut self, p: usize) -> anyhow::Result<(Vec<u16>, crate::memctrl::ReadStats)> {
+        self.load_page_at(p, 16)
+    }
+
+    /// [`KvPageStore::load_page`] at a partial plane prefix, returning a
+    /// fresh `Vec` per call — the pre-arena read shape (one allocation
+    /// per page), kept as the bench baseline the arena-backed
+    /// [`KvPageStore::fetch_pages`] is measured against.
+    pub fn load_page_at(
+        &mut self,
+        p: usize,
+        keep_bits: u32,
+    ) -> anyhow::Result<(Vec<u16>, crate::memctrl::ReadStats)> {
         let id = *self
             .pages
             .get(p)
             .ok_or_else(|| anyhow::anyhow!("page {p} not stored"))?;
-        self.mc.load(id, 16, None)
+        self.mc.load(id, keep_bits, None)
     }
 
     /// FNV-1a digest over every stored frame (address + bytes), in page
@@ -191,20 +308,27 @@ impl KvPageStore {
     /// Decode this step's planned reads (per-page kept bit-planes, as
     /// produced by `PolicyEngine::plan_pressured` — pressure clamps and
     /// tenant policy included) through the controller, one lane dispatch
-    /// per stored page. This is the per-sequence reference path the
-    /// batched [`fetch_sequences`] is property-tested byte-identical
-    /// against. Pages beyond the stored set (the on-chip partial page)
-    /// are counted raw, as in [`KvPageStore::fetch_bytes`].
-    pub fn fetch_pages(&mut self, page_bits: &[u32]) -> anyhow::Result<FetchOutcome> {
+    /// per stored page, each page decompressing into a span of the step's
+    /// `arena`. This is the per-sequence reference path the batched
+    /// [`fetch_sequences`] is property-tested byte-identical against.
+    /// Pages beyond the stored set (the on-chip partial page) are counted
+    /// raw, as in [`KvPageStore::fetch_bytes`].
+    pub fn fetch_pages(
+        &mut self,
+        page_bits: &[u32],
+        arena: &mut DecodeArena,
+    ) -> anyhow::Result<FetchOutcome> {
         let mut out = FetchOutcome::default();
         for (p, &bits) in page_bits.iter().enumerate() {
             if bits == 0 {
                 continue;
             }
             if p < self.pages.len() {
-                let (codes, stats) = self.mc.load(self.pages[p], bits, None)?;
+                let id = self.pages[p];
+                let span = arena.alloc(self.mc.region(id).n);
+                let stats = self.mc.load_into(id, bits, arena.slice_mut(span))?;
                 out.stats.merge(&stats);
-                out.pages.push((p, codes));
+                out.pages.push((p, span));
             } else {
                 out.raw_tail_bytes += (self.page_raw_bytes / 2) as u64;
             }
@@ -292,14 +416,17 @@ pub fn sync_sequences(
     }
 }
 
-/// The result of one sequence's share of a decode-step fetch: decoded
-/// stored-page codes at the fetched precision, plus read accounting.
+/// The result of one sequence's share of a decode-step fetch: spans of
+/// decoded stored-page codes in the step's [`DecodeArena`], plus read
+/// accounting.
 #[derive(Debug, Default)]
 pub struct FetchOutcome {
-    /// `(page index, value-major codes)` per fetched stored page, in page
-    /// order. Codes are exactly what [`KvPageStore::load_page`] at the
-    /// same precision returns (low planes zeroed under a partial prefix).
-    pub pages: Vec<(usize, Vec<u16>)>,
+    /// `(page index, arena span)` per fetched stored page, in page order.
+    /// The span's codes are exactly what [`KvPageStore::load_page`] at
+    /// the same precision returns (low planes zeroed under a partial
+    /// prefix); resolve with [`FetchOutcome::decoded`] or
+    /// [`DecodeArena::codes`]. Spans die at the arena's next reset.
+    pub pages: Vec<(usize, ArenaSpan)>,
     /// Accounting for the stored pages (what moved through the
     /// controller). In the batched path `dispatches` stays 0 — the single
     /// cross-sequence dispatch belongs to the step, not to any one
@@ -315,27 +442,45 @@ impl FetchOutcome {
     pub fn dram_bytes_total(&self) -> u64 {
         self.stats.dram_bytes + self.raw_tail_bytes
     }
+
+    /// The fetched pages' decoded codes, resolved against the arena the
+    /// fetch ran with.
+    pub fn decoded<'a>(
+        &'a self,
+        arena: &'a DecodeArena,
+    ) -> impl Iterator<Item = (usize, &'a [u16])> + 'a {
+        self.pages.iter().map(move |&(p, span)| (p, arena.codes(span)))
+    }
+
+    /// This fetch's span for stored page `p`, if it was fetched.
+    pub fn span_for(&self, page: usize) -> Option<ArenaSpan> {
+        self.pages
+            .iter()
+            .find(|&&(p, _)| p == page)
+            .map(|&(_, span)| span)
+    }
 }
 
 /// One decode step's planned reads across all active sequences, coalesced
 /// into a SINGLE lane-array dispatch — the read-side mirror of
 /// [`sync_sequences`], closing the decode-path half of the paper's
 /// always-busy lane model. Every fetched frame decompresses directly into
-/// its sequence's destination view (zero gather copies); decoded codes
-/// and physical accounting are byte-identical to calling
-/// [`KvPageStore::fetch_pages`] per sequence, at any lane count —
-/// batching changes *where* a frame decodes, never what it produces.
+/// its page's span of the step `arena` (zero gather copies, zero per-page
+/// allocation); decoded codes and physical accounting are byte-identical
+/// to calling [`KvPageStore::fetch_pages`] per sequence, at any lane
+/// count — batching changes *where* a frame decodes, never what it
+/// produces.
 pub fn fetch_sequences(
     seqs: &mut [(&mut KvPageStore, &[u32])],
     lanes: &LaneArray,
+    arena: &mut DecodeArena,
 ) -> anyhow::Result<Vec<FetchOutcome>> {
     let mut outcomes: Vec<FetchOutcome> = seqs.iter().map(|_| FetchOutcome::default()).collect();
-    // 1. plan: per fetched page, the frame slices + geometry (the shared
-    //    `(keep, layout, frames, total_m)` plan shape `decode_plans_into`
-    //    consumes); physical accounting accrues per sequence exactly as
-    //    per-page loads would. `keys[k]` names the sequence + page that
-    //    owns plan k.
-    let mut plans: Vec<(u32, Layout, Vec<(&[u8], usize)>, usize)> = Vec::new();
+    // 1. plan: per fetched page, the frame decode jobs (headers parsed +
+    //    checksum-verified once, here); physical accounting accrues per
+    //    sequence exactly as per-page loads would. `keys[k]` names the
+    //    sequence + page that owns plan k.
+    let mut plans: Vec<RegionPlan<'_>> = Vec::new();
     let mut keys: Vec<(usize, usize)> = Vec::new();
     for (si, (store, bits)) in seqs.iter().enumerate() {
         let store: &KvPageStore = store;
@@ -352,29 +497,36 @@ pub fn fetch_sequences(
             let mut frames = Vec::new();
             let mut total_m = 0usize;
             for (_, frame) in region.frames() {
-                let (_, m) = accrue_frame_fetch(
+                let (_, fp) = plan_frame_fetch(
                     &mut outcomes[si].stats,
                     &store.mc.engine,
                     region.layout,
                     frame,
                     keep,
                 )?;
-                frames.push((frame, m));
-                total_m += m;
+                total_m += fp.m;
+                frames.push(fp);
             }
-            plans.push((keep, region.layout, frames, total_m));
+            plans.push(RegionPlan {
+                keep,
+                layout: region.layout,
+                frames,
+                total_m,
+            });
             keys.push((si, p));
         }
     }
-    // 2. ONE cross-sequence dispatch through the shared decode core; each
-    //    frame decompresses straight into its page's destination view
-    let bufs = decode_plans_into(lanes, &plans)?;
-    drop(plans);
-    // 3. hand decoded pages to their sequences (page order is preserved
-    //    by construction) and account each store's controller totals
-    for ((si, page), buf) in keys.into_iter().zip(bufs) {
-        outcomes[si].pages.push((page, buf));
+    // 2. carve one arena span per fetched page and hand the spans to
+    //    their sequences (page order is preserved by construction)
+    let spans: Vec<ArenaSpan> = plans.iter().map(|pl| arena.alloc(pl.total_m)).collect();
+    for (&(si, page), &span) in keys.iter().zip(&spans) {
+        outcomes[si].pages.push((page, span));
     }
+    // 3. ONE cross-sequence dispatch through the shared decode core; each
+    //    frame decompresses straight into its page's arena span
+    let dests = arena.slices_mut(&spans);
+    run_decode_dispatch(lanes, plans, dests)?;
+    // 4. account each store's controller totals
     for (si, (store, _)) in seqs.iter_mut().enumerate() {
         store.mc.account_read(outcomes[si].stats);
     }
@@ -534,11 +686,15 @@ mod tests {
                 s
             })
             .collect();
+        let mut ref_arena = DecodeArena::new();
         let want: Vec<FetchOutcome> = ref_stores
             .iter_mut()
             .zip(&bits)
-            .map(|(s, b)| s.fetch_pages(b).unwrap())
+            .map(|(s, b)| s.fetch_pages(b, &mut ref_arena).unwrap())
             .collect();
+        let decoded = |o: &FetchOutcome, arena: &DecodeArena| -> Vec<(usize, Vec<u16>)> {
+            o.decoded(arena).map(|(p, c)| (p, c.to_vec())).collect()
+        };
         for lane_count in [1usize, 4] {
             let lanes = Arc::new(LaneArray::new(lane_count));
             let mut stores: Vec<KvPageStore> = kvs
@@ -554,15 +710,20 @@ mod tests {
                     s
                 })
                 .collect();
+            let mut arena = DecodeArena::new();
             let mut seqs: Vec<(&mut KvPageStore, &[u32])> = stores
                 .iter_mut()
                 .zip(bits.iter())
                 .map(|(s, b)| (s, b.as_slice()))
                 .collect();
-            let got = fetch_sequences(&mut seqs, &lanes).unwrap();
+            let got = fetch_sequences(&mut seqs, &lanes, &mut arena).unwrap();
             drop(seqs);
             for (si, (g, w)) in got.iter().zip(&want).enumerate() {
-                assert_eq!(g.pages, w.pages, "{lane_count} lanes seq {si}: codes");
+                assert_eq!(
+                    decoded(g, &arena),
+                    decoded(w, &ref_arena),
+                    "{lane_count} lanes seq {si}: codes"
+                );
                 assert_eq!(g.stats.frames, w.stats.frames, "{lane_count} lanes seq {si}");
                 assert_eq!(g.stats.dram_bytes, w.stats.dram_bytes, "seq {si}");
                 assert_eq!(g.stats.logical_bytes, w.stats.logical_bytes, "seq {si}");
@@ -597,19 +758,56 @@ mod tests {
         // codes equal plane-truncation of the stored page (below 9 the
         // delta LSB is lost and the comparison target would differ — see
         // the kv_pipeline integration test)
+        let mut arena = DecodeArena::new();
         for bits in [[16u32, 16, 16, 16], [9, 9, 9, 9], [0, 0, 9, 16]] {
             let est = ps.fetch_bytes(&bits);
-            let out = ps2.fetch_pages(&bits).unwrap();
+            arena.reset();
+            let out = ps2.fetch_pages(&bits, &mut arena).unwrap();
             assert_eq!(out.dram_bytes_total(), est, "{bits:?}");
-            for &(p, ref codes) in &out.pages {
+            let pages: Vec<(usize, Vec<u16>)> =
+                out.decoded(&arena).map(|(p, c)| (p, c.to_vec())).collect();
+            for (p, codes) in pages {
                 let (full, _) = ps2.load_page(p).unwrap();
                 let keep = bits[p];
                 let want: Vec<u16> = full
                     .iter()
                     .map(|&c| crate::fmt::truncate_to_planes(c, Dtype::Bf16, keep))
                     .collect();
-                assert_eq!(codes, &want, "page {p} at {keep} planes");
+                assert_eq!(codes, want, "page {p} at {keep} planes");
             }
+        }
+    }
+
+    #[test]
+    fn decode_arena_spans_tile_and_survive_reset_cycles() {
+        // Repeated steps over the same fetch shape: spans tile the arena
+        // exactly, reset drops them, and the decoded volume is identical
+        // every step (the grow-only buffer reaches steady state after
+        // step 0).
+        let m = meta();
+        let kv = kv_filled(&m, 64);
+        let mut ps = KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        ps.sync(&kv, &m);
+        let mut arena = DecodeArena::new();
+        let bits = [16u32, 8, 9, 4];
+        let mut first_len = None;
+        for _step in 0..5 {
+            arena.reset();
+            assert!(arena.is_empty());
+            let out = ps.fetch_pages(&bits, &mut arena).unwrap();
+            assert_eq!(out.pages.len(), 4);
+            match first_len {
+                None => first_len = Some(arena.len()),
+                Some(n) => assert_eq!(arena.len(), n, "steady-state volume"),
+            }
+            let mut at = 0usize;
+            for &(_, s) in &out.pages {
+                assert_eq!(s.start, at, "spans tile the arena in order");
+                at += s.len;
+            }
+            assert_eq!(at, arena.len());
+            assert!(out.span_for(0).is_some());
+            assert!(out.span_for(9).is_none());
         }
     }
 

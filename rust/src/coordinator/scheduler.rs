@@ -44,10 +44,11 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::kvmanager::PolicyEngine;
+use super::kvmanager::{degrade_f32, KvViewPlan, PolicyEngine};
 use super::metrics::ServeMetrics;
 use super::pagestore::{
-    fetch_sequences, page_raw_bytes, span_codes, sync_sequences, KvPageStore,
+    fetch_sequences, page_raw_bytes, span_codes, span_k_base, span_v_base, sync_sequences,
+    DecodeArena, FetchOutcome, KvPageStore,
 };
 use crate::compress::Codec;
 use crate::engine::LaneArray;
@@ -55,23 +56,75 @@ use crate::fmt::minifloat::BF16;
 use crate::memctrl::Layout;
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta, TinyLm};
+use crate::util::hash::Fnv1a;
 use crate::workload::synthmodel::{bf16_canon, SynthLm};
 use crate::workload::trace::{Trace, TrafficRequest};
 
+/// The lazy view bundle one decode step attends over: the sequence's read
+/// plan plus the pages this step's fetch decoded into the step arena.
+/// Values resolve on access — fetched stored pages from their arena
+/// spans, the raw working tail (always planned at full precision) from
+/// the live cache — so nothing is materialized unless a backend asks for
+/// [`KvRead::Dense`] (see [`materialize_read`]).
+pub struct KvViews<'a> {
+    pub plan: &'a KvViewPlan,
+    pub fetch: &'a FetchOutcome,
+    pub arena: &'a DecodeArena,
+}
+
+impl<'a> KvViews<'a> {
+    /// Decoded codes of stored page `p`, if this step fetched it
+    /// ([`crate::coordinator::pagestore::span_codes`] layout: per layer,
+    /// K tokens then V tokens, token-major rows).
+    pub fn fetched(&self, page: usize) -> Option<&'a [u16]> {
+        self.fetch.span_for(page).map(|s| self.arena.codes(s))
+    }
+}
+
+/// What a decode step reads for attention.
+pub enum KvRead<'a> {
+    /// Materialized degraded copies (same layout as `KvState`) — what a
+    /// dense backend (the PJRT tinylm) uploads. The scheduler builds
+    /// these from the lazy views via [`materialize_read`] only for
+    /// backends whose [`StepModel::consumes_views`] is false.
+    Dense { k: &'a [f32], v: &'a [f32] },
+    /// Lazy plane-prefix views — the zero-materialization path.
+    Views(KvViews<'a>),
+}
+
+/// One decode step's result.
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    /// FNV-1a digest of the attention readout computed over the degraded
+    /// KV read (0 when the backend computes none) — the witness that the
+    /// fetched bytes were load-bearing for the step. Identical between
+    /// the view path and the materialized reference by construction;
+    /// property-tested in the view-parity suite.
+    pub read_digest: u64,
+}
+
 /// The per-step decode contract the scheduler drives. Implementations
 /// must write the new token's K/V row and the step's queries into `kv`
-/// and advance `kv.pos`; attention reads the *degraded* caches (what a
-/// partial-precision fetch through the controller returns).
+/// and advance `kv.pos`; attention reads the *degraded* representation
+/// (what a partial-precision fetch through the controller returns) via
+/// `read` — lazily ([`KvRead::Views`]) or as dense copies
+/// ([`KvRead::Dense`]), per [`StepModel::consumes_views`].
 pub trait StepModel {
     fn meta(&self) -> &ModelMeta;
+
+    /// Whether decode consumes lazy views (`true`) or needs the scheduler
+    /// to materialize dense degraded copies first (`false`).
+    fn consumes_views(&self) -> bool {
+        false
+    }
+
     fn decode(
         &self,
         kv: &mut KvState,
-        degraded_k: &[f32],
-        degraded_v: &[f32],
+        read: KvRead<'_>,
         token: u16,
         mask: &[f32],
-    ) -> anyhow::Result<Vec<f32>>;
+    ) -> anyhow::Result<StepOutput>;
 }
 
 impl StepModel for TinyLm {
@@ -82,12 +135,20 @@ impl StepModel for TinyLm {
     fn decode(
         &self,
         kv: &mut KvState,
-        degraded_k: &[f32],
-        degraded_v: &[f32],
+        read: KvRead<'_>,
         token: u16,
         mask: &[f32],
-    ) -> anyhow::Result<Vec<f32>> {
-        self.decode_step_degraded(kv, degraded_k, degraded_v, token, mask)
+    ) -> anyhow::Result<StepOutput> {
+        match read {
+            KvRead::Dense { k, v } => Ok(StepOutput {
+                logits: self.decode_step_degraded(kv, k, v, token, mask)?,
+                read_digest: 0,
+            }),
+            KvRead::Views(_) => anyhow::bail!(
+                "TinyLm uploads dense buffers; the scheduler materializes for it \
+                 (consumes_views = false)"
+            ),
+        }
     }
 }
 
@@ -96,15 +157,137 @@ impl StepModel for SynthLm {
         &self.meta
     }
 
+    /// The synthetic backend attends over the *fetched* views: the read
+    /// digest is computed from exactly the bytes the controller returned
+    /// (or, on the reference path, the dense copies materialized from
+    /// them), so degraded-read quality is observable end-to-end. Logits
+    /// stay pure in `(seed, pos, token)` — the decode trajectory remains
+    /// invariant under pressure/eviction/lane count, which the
+    /// byte-identity property tests rely on.
+    fn consumes_views(&self) -> bool {
+        true
+    }
+
     fn decode(
         &self,
         kv: &mut KvState,
-        _degraded_k: &[f32],
-        _degraded_v: &[f32],
+        read: KvRead<'_>,
         token: u16,
-        _mask: &[f32],
-    ) -> anyhow::Result<Vec<f32>> {
-        self.step(kv, token)
+        mask: &[f32],
+    ) -> anyhow::Result<StepOutput> {
+        let m = &self.meta;
+        let row = m.n_kv_heads * m.d_head;
+        let read_digest = match read {
+            KvRead::Views(views) => {
+                // resolve each page's source once: fetched arena codes
+                // for stored pages, the raw working tail otherwise
+                let npages = views.plan.pos.div_ceil(PAGE_TOKENS);
+                let mut src: Vec<Option<&[u16]>> = vec![None; npages];
+                for (p, codes) in views.fetch.decoded(views.arena) {
+                    if p < npages {
+                        src[p] = Some(codes);
+                    }
+                }
+                let bits = &views.plan.page_bits;
+                let (kc, vc) = (&kv.k, &kv.v);
+                let kf = |l: usize, t: usize, c: usize| -> f32 {
+                    let p = t / PAGE_TOKENS;
+                    match src[p] {
+                        Some(codes) => BF16
+                            .decode(codes[span_k_base(l, t - p * PAGE_TOKENS, row) + c] as u32),
+                        None => degrade_f32(kc[(l * m.max_seq + t) * row + c], bits[p]),
+                    }
+                };
+                let vf = |l: usize, t: usize, c: usize| -> f32 {
+                    let p = t / PAGE_TOKENS;
+                    match src[p] {
+                        Some(codes) => BF16
+                            .decode(codes[span_v_base(l, t - p * PAGE_TOKENS, row) + c] as u32),
+                        None => degrade_f32(vc[(l * m.max_seq + t) * row + c], bits[p]),
+                    }
+                };
+                self.attend_readout(views.plan.pos, &kv.queries, mask, kf, vf)
+            }
+            KvRead::Dense { k, v } => {
+                let kf = |l: usize, t: usize, c: usize| k[(l * m.max_seq + t) * row + c];
+                let vf = |l: usize, t: usize, c: usize| v[(l * m.max_seq + t) * row + c];
+                self.attend_readout(kv.pos, &kv.queries, mask, kf, vf)
+            }
+        };
+        let logits = self.step(kv, token)?;
+        Ok(StepOutput { logits, read_digest })
+    }
+}
+
+/// Wrap any backend to force the scheduler down the materializing
+/// (copy-plan) read path: `consumes_views()` reports `false`, so every
+/// decode step clones-and-degrades dense K/V buffers from the step's
+/// views (via [`materialize_read`]) before `decode` sees them. This is
+/// the end-to-end reference the zero-materialization path is
+/// property-tested bit-identical against (`tests/view_parity.rs`) and
+/// the host-copy-bytes baseline the serve bench gates on.
+pub struct MaterializedRef<'a, M>(pub &'a M);
+
+impl<M: StepModel> StepModel for MaterializedRef<'_, M> {
+    fn meta(&self) -> &ModelMeta {
+        self.0.meta()
+    }
+
+    fn decode(
+        &self,
+        kv: &mut KvState,
+        read: KvRead<'_>,
+        token: u16,
+        mask: &[f32],
+    ) -> anyhow::Result<StepOutput> {
+        self.0.decode(kv, read, token, mask)
+    }
+}
+
+/// Materialize the dense degraded K/V copies a [`KvRead::Dense`] backend
+/// uploads, from the same lazy views the zero-copy path resolves: fetched
+/// pages decode from their arena spans, the working tail degrades to its
+/// planned precision, skipped pages zero-fill (they are masked). Every
+/// element the attention path can access is bit-identical to what the
+/// lazy accessors resolve — this is the copy-plan reference the
+/// differential view-parity suite pins the view path against, and the
+/// O(context) host copy the view path eliminates.
+pub fn materialize_read(
+    views: &KvViews<'_>,
+    kv: &KvState,
+    meta: &ModelMeta,
+    dk: &mut Vec<f32>,
+    dv: &mut Vec<f32>,
+) {
+    let row = meta.n_kv_heads * meta.d_head;
+    dk.clear();
+    dk.resize(meta.kv_elems(), 0.0);
+    dv.clear();
+    dv.resize(meta.kv_elems(), 0.0);
+    for view in views.plan.active_views() {
+        let codes = views.fetched(view.page);
+        for l in 0..meta.layers {
+            for t in view.t0..view.t1 {
+                let off = (l * meta.max_seq + t) * row;
+                let dt = t - view.t0;
+                match codes {
+                    Some(c) => {
+                        let kbase = span_k_base(l, dt, row);
+                        let vbase = span_v_base(l, dt, row);
+                        for ch in 0..row {
+                            dk[off + ch] = BF16.decode(c[kbase + ch] as u32);
+                            dv[off + ch] = BF16.decode(c[vbase + ch] as u32);
+                        }
+                    }
+                    None => {
+                        for ch in 0..row {
+                            dk[off + ch] = degrade_f32(kv.k[off + ch], view.bits);
+                            dv[off + ch] = degrade_f32(kv.v[off + ch], view.bits);
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -223,6 +406,12 @@ pub struct TrafficResponse {
     pub kv_ratio: f64,
     /// FNV digest of the stored page frames — byte-identity witness.
     pub kv_pages_digest: u64,
+    /// Chained FNV digest of every step's attention-readout digest
+    /// ([`StepOutput::read_digest`]) — the witness that the degraded
+    /// bytes each step fetched were actually consumed by attention.
+    /// Identical across lane counts, fetch modes, and the view vs
+    /// materialized read paths (0-chain for backends that compute none).
+    pub read_digest: u64,
     /// Times this sequence was swapped out.
     pub evictions: u32,
     /// Time to first token, virtual steps (>= 1).
@@ -251,9 +440,14 @@ struct Seq {
     kv: KvState,
     engine: PolicyEngine,
     store: KvPageStore,
+    /// Reusable per-step read plan (lazy views; see [`KvViewPlan`]).
+    plan: KvViewPlan,
     produced: Vec<u16>,
     nll_sum: f64,
     fetched: u64,
+    /// Chained per-step attention-readout digests (see
+    /// [`TrafficResponse::read_digest`]).
+    read_digest: u64,
     fed: usize,
     evictions: u32,
     /// Monotone admission stamp; the eviction victim is the largest.
@@ -330,7 +524,14 @@ pub fn serve_trace<M: StepModel>(
     // pressure clamp applied to this step's reads (set by last step's
     // usage measurement)
     let mut clamp: Option<u32> = None;
-    let mut step_bits: Vec<Vec<u32>> = Vec::new();
+    // ONE grow-only arena backs every page decoded per step (reset each
+    // step, capacity persists) — the read side's steady-state scratch
+    let mut arena = DecodeArena::new();
+    // dense degraded-copy scratch, used only for backends that cannot
+    // consume lazy views (TinyLm's XLA upload)
+    let mut dense_k: Vec<f32> = Vec::new();
+    let mut dense_v: Vec<f32> = Vec::new();
+    let mut step_fetched: Vec<u64> = Vec::new();
 
     while next_req < n || !pending.is_empty() || !active.is_empty() || !swapped.is_empty() {
         if cfg.max_steps > 0 && step >= cfg.max_steps {
@@ -424,7 +625,9 @@ pub fn serve_trace<M: StepModel>(
         }
         out.peak_active = out.peak_active.max(active.len());
 
-        // 3. one decode step per active sequence (round-robin batching)
+        // 3. plan every active sequence's reads: lazy per-page views. No
+        // cache value is copied or degraded — the plan is O(pages) and
+        // reuses the sequence's buffers (allocation-free steady state).
         if !active.is_empty() {
             out.pressure_steps[match clamp {
                 None => 0,
@@ -432,30 +635,90 @@ pub fn serve_trace<M: StepModel>(
                 Some(_) => 2,
             }] += 1;
         }
-        step_bits.clear();
         for s in active.iter_mut() {
+            let Seq { engine, kv, plan, .. } = s;
+            engine.plan_pressured_into(kv, meta, clamp, plan);
+        }
+
+        // 4. decode-side fetch, BEFORE the decode that consumes it: every
+        // sequence's planned page reads run through the controller into
+        // the step arena — coalesced into ONE cross-sequence lane
+        // dispatch (Batched), or one load per page (PerSequence, the
+        // reference). Identical bytes move either way; the stored pages
+        // a step attends over are exactly what this fetch decoded.
+        arena.reset();
+        let outs: Vec<FetchOutcome> = match cfg.fetch {
+            FetchMode::Batched => {
+                let outs = {
+                    let mut seqs: Vec<(&mut KvPageStore, &[u32])> = active
+                        .iter_mut()
+                        .map(|s| {
+                            let Seq { store, plan, .. } = s;
+                            (store, plan.page_bits.as_slice())
+                        })
+                        .collect();
+                    fetch_sequences(&mut seqs, &lanes, &mut arena)?
+                };
+                let frames: u64 = outs.iter().map(|o| o.stats.frames).sum();
+                let bytes: u64 = outs.iter().map(|o| o.dram_bytes_total()).sum();
+                metrics.record_fetch(frames, u64::from(frames > 0), bytes);
+                outs
+            }
+            FetchMode::PerSequence => {
+                let mut v = Vec::with_capacity(active.len());
+                for s in active.iter_mut() {
+                    let Seq { store, plan, .. } = s;
+                    let o = store.fetch_pages(&plan.page_bits, &mut arena)?;
+                    metrics.record_fetch(o.stats.frames, o.stats.dispatches, o.dram_bytes_total());
+                    v.push(o);
+                }
+                v
+            }
+        };
+        step_fetched.clear();
+        step_fetched.extend(outs.iter().map(|o| o.dram_bytes_total()));
+        // the decoded page codes are this step's host-side read volume
+        metrics.record_host_copy((arena.len() * 2) as u64);
+
+        // 5. one decode step per active sequence (round-robin batching):
+        // attention consumes the fetched views, making the fetched bytes
+        // load-bearing. Backends that need dense inputs (the PJRT tinylm)
+        // get them materialized FROM the same views — the copy path,
+        // charged to host_copy_bytes.
+        for (s, fetch) in active.iter_mut().zip(&outs) {
             let next_input = if s.fed < s.req.prompt.len() {
                 s.req.prompt[s.fed]
             } else {
                 *s.produced.last().expect("produced")
             };
-            let plan = s.engine.plan_pressured(&s.kv, meta, clamp);
-            let logits = lm.decode(
-                &mut s.kv,
-                &plan.degraded_k,
-                &plan.degraded_v,
-                next_input,
-                &plan.mask,
-            )?;
+            let step_out = if lm.consumes_views() {
+                let views = KvViews { plan: &s.plan, fetch, arena: &arena };
+                lm.decode(&mut s.kv, KvRead::Views(views), next_input, &s.plan.mask)?
+            } else {
+                let views = KvViews { plan: &s.plan, fetch, arena: &arena };
+                materialize_read(&views, &s.kv, meta, &mut dense_k, &mut dense_v);
+                metrics.record_host_copy(((dense_k.len() + dense_v.len()) * 4) as u64);
+                lm.decode(
+                    &mut s.kv,
+                    KvRead::Dense { k: &dense_k, v: &dense_v },
+                    next_input,
+                    &s.plan.mask,
+                )?
+            };
             // keep the working cache BF16-canonical: what the fabric later
             // re-reads from the lossless BF16 store is, by construction,
             // exactly what sits in the working copy — the invariant the
             // byte-identical swap/resume path rests on
             canon_new_row(&mut s.kv, meta);
             s.fed += 1;
+            // chain the step's attention-readout digest into the witness
+            let mut h = Fnv1a::new();
+            h.write(&s.read_digest.to_le_bytes());
+            h.write(&step_out.read_digest.to_le_bytes());
+            s.read_digest = h.finish();
             if s.fed >= s.req.prompt.len() {
-                let tok = TinyLm::argmax(&logits);
-                s.nll_sum += TinyLm::nll(&logits, tok);
+                let tok = TinyLm::argmax(&step_out.logits);
+                s.nll_sum += TinyLm::nll(&step_out.logits, tok);
                 s.produced.push(tok);
                 if s.first_token_step.is_none() {
                     s.first_token_step = Some(step);
@@ -465,10 +728,10 @@ pub fn serve_trace<M: StepModel>(
                 s.last_token_step = step;
             }
             metrics.steps += 1;
-            step_bits.push(plan.page_bits);
         }
+        drop(outs);
 
-        // 4. cross-sequence page sync: one lane dispatch per step
+        // 6. cross-sequence page sync: one lane dispatch per step
         {
             let mut seqs: Vec<(&mut KvPageStore, &KvState)> = active
                 .iter_mut()
@@ -480,46 +743,7 @@ pub fn serve_trace<M: StepModel>(
             sync_sequences(&mut seqs, meta, &lanes);
         }
 
-        // 5. decode-side fetch: every sequence's planned page reads run
-        // through the controller — coalesced into ONE cross-sequence lane
-        // dispatch (Batched), or one load per page (PerSequence, the
-        // reference). Identical bytes move either way. Unlike the old
-        // header-only accounting (which left the lanes idle on the read
-        // path the paper's controller spends most of its time on), this
-        // performs the real decompression; the decoded views are not yet
-        // handed to attention (SynthLm decodes from the working cache), so
-        // their buffers are per-step allocations for now — recycling them
-        // through a scratch arena is a ROADMAP item.
-        let mut step_fetched: Vec<u64> = match cfg.fetch {
-            FetchMode::Batched => {
-                let outs = {
-                    let mut seqs: Vec<(&mut KvPageStore, &[u32])> = active
-                        .iter_mut()
-                        .zip(step_bits.iter())
-                        .map(|(s, bits)| {
-                            let Seq { store, .. } = s;
-                            (store, bits.as_slice())
-                        })
-                        .collect();
-                    fetch_sequences(&mut seqs, &lanes)?
-                };
-                let frames: u64 = outs.iter().map(|o| o.stats.frames).sum();
-                let bytes: u64 = outs.iter().map(|o| o.dram_bytes_total()).sum();
-                metrics.record_fetch(frames, u64::from(frames > 0), bytes);
-                outs.iter().map(|o| o.dram_bytes_total()).collect()
-            }
-            FetchMode::PerSequence => {
-                let mut v = Vec::with_capacity(active.len());
-                for (s, bits) in active.iter_mut().zip(&step_bits) {
-                    let o = s.store.fetch_pages(bits)?;
-                    metrics.record_fetch(o.stats.frames, o.stats.dispatches, o.dram_bytes_total());
-                    v.push(o.dram_bytes_total());
-                }
-                v
-            }
-        };
-
-        // 6. retire finished sequences
+        // 7. retire finished sequences
         let mut i = 0;
         while i < active.len() {
             let s = &mut active[i];
@@ -528,7 +752,6 @@ pub fn serve_trace<M: StepModel>(
                 s.produced.len() >= s.req.max_new_tokens || s.kv.pos >= meta.max_seq;
             if finished {
                 let s = active.swap_remove(i);
-                step_bits.swap_remove(i);
                 step_fetched.swap_remove(i);
                 out.events.push(SchedEvent {
                     step,
@@ -554,6 +777,7 @@ pub fn serve_trace<M: StepModel>(
                     } else {
                         0
                     },
+                    read_digest: s.read_digest,
                     evictions: s.evictions,
                     ttft_steps: ttft,
                     e2e_steps: e2e,
@@ -565,7 +789,7 @@ pub fn serve_trace<M: StepModel>(
             }
         }
 
-        // 7. pressure ladder for the *next* step: degrade first, then
+        // 8. pressure ladder for the *next* step: degrade first, then
         // evict youngest-admitted until the measured footprint fits
         if let Admission::CompressedBudget { bytes: budget } = cfg.admission {
             let budget = budget.max(1);
@@ -675,9 +899,11 @@ fn admit(
         kv: KvState::new(meta),
         engine: PolicyEngine::with_shared(req.policy.clone(), Arc::clone(lanes)),
         store: KvPageStore::with_shared(meta, cfg.layout, cfg.codec, Arc::clone(lanes)),
+        plan: KvViewPlan::new(),
         produced: Vec::new(),
         nll_sum: 0.0,
         fetched: 0,
+        read_digest: 0,
         fed: 0,
         evictions: 0,
         admitted_order,
@@ -807,7 +1033,8 @@ mod tests {
     use crate::quant::policy::KvPolicy;
 
     /// Everything deterministic about a response (wall time excluded).
-    fn key(r: &TrafficResponse) -> (u64, u32, Vec<u16>, u64, u64, u32, u64, u64, u64, u64) {
+    #[allow(clippy::type_complexity)]
+    fn key(r: &TrafficResponse) -> (u64, u32, Vec<u16>, u64, u64, u32, u64, u64, u64, u64, u64) {
         (
             r.id,
             r.tenant,
@@ -816,6 +1043,7 @@ mod tests {
             r.kv_fetched_bytes,
             r.evictions,
             r.kv_pages_digest,
+            r.read_digest,
             r.kv_ratio.to_bits(),
             r.ttft_steps,
             r.e2e_steps,

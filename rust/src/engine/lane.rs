@@ -53,6 +53,10 @@ pub struct Lane {
     comp_buf: Vec<u8>,
     /// Flat plane-major staging for decoded planes.
     plane_buf: Vec<u8>,
+    /// Staging for decoded (still transform-domain) codes — the KV frame
+    /// decode re-correlates these in place and transposes straight into
+    /// the caller's destination view, with zero per-frame allocations.
+    code_buf: Vec<u16>,
     pub stats: LaneStats,
 }
 
@@ -158,6 +162,32 @@ impl Lane {
         self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
     }
+
+    /// [`Lane::decode_planes`] into the lane's reusable code-staging
+    /// buffer, returned mutably so the caller can apply an in-place
+    /// transform (KV re-correlation) before copying out — the
+    /// zero-intermediate frame decode path. Contents are overwritten on
+    /// every call; the borrow ends when the caller is done with it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_planes_staged(
+        &mut self,
+        dtype: Dtype,
+        m: usize,
+        codec: Codec,
+        dir: &[(u32, bool)],
+        payload: &[u8],
+        keep: usize,
+    ) -> anyhow::Result<&mut [u16]> {
+        // take the buffer so `decode_planes_into` can borrow the rest of
+        // the lane's scratch mutably alongside it
+        let mut buf = std::mem::take(&mut self.code_buf);
+        buf.clear();
+        buf.resize(m, 0);
+        let r = self.decode_planes_into(dtype, m, codec, dir, payload, keep, &mut buf);
+        self.code_buf = buf;
+        r?;
+        Ok(&mut self.code_buf)
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +238,26 @@ mod tests {
             Ok(())
         });
         assert!(lane.stats.blocks > 0 && lane.stats.busy_ns > 0);
+    }
+
+    #[test]
+    fn staged_decode_matches_decode_planes() {
+        // the reusable code-staging buffer must hold exactly what the
+        // allocating decode returns, at every keep depth, across reuse
+        let mut lane = Lane::new(0);
+        let codes: Vec<u16> = (0..700).map(|i| (i * 31) as u16).collect();
+        let pb = disaggregate(Dtype::Bf16, &codes);
+        let mut payload = Vec::new();
+        let dir = lane.compress_planes(&pb, Codec::Zstd, &mut payload);
+        for keep in [0usize, 5, 9, 16] {
+            let want = lane
+                .decode_planes(Dtype::Bf16, codes.len(), Codec::Zstd, &dir, &payload, keep)
+                .unwrap();
+            let staged = lane
+                .decode_planes_staged(Dtype::Bf16, codes.len(), Codec::Zstd, &dir, &payload, keep)
+                .unwrap();
+            assert_eq!(staged, &want[..], "keep={keep}");
+        }
     }
 
     #[test]

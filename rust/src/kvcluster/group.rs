@@ -177,35 +177,51 @@ pub fn recorrelate(
     meta: &[u16],
     mode: DecorrelateMode,
 ) -> Vec<u16> {
+    let mut out = transformed.to_vec();
+    recorrelate_in_place(dtype, tokens, channels, &mut out, meta, mode);
+    out
+}
+
+/// In-place [`recorrelate`]: both inverse transforms are element-wise per
+/// `(channel, token)`, so they can overwrite their input — the
+/// zero-intermediate KV frame decode
+/// ([`crate::memctrl::read_frame_into`]) re-correlates the lane's staged
+/// codes in place and transposes them straight into the destination view,
+/// with no per-frame staging `Vec`s.
+pub fn recorrelate_in_place(
+    dtype: Dtype,
+    tokens: usize,
+    channels: usize,
+    codes: &mut [u16],
+    meta: &[u16],
+    mode: DecorrelateMode,
+) {
+    debug_assert_eq!(codes.len(), tokens * channels);
     match mode {
-        DecorrelateMode::None => transformed.to_vec(),
+        DecorrelateMode::None => {}
         DecorrelateMode::ExpDelta => {
             let (elo, ehi) = dtype.exponent_planes();
             let ewidth = ehi - elo;
             if ewidth == 0 {
-                return transformed.to_vec();
+                return;
             }
             let emask = ((1u32 << ewidth) - 1) as u16;
-            let mut out = vec![0u16; transformed.len()];
             for j in 0..channels {
                 let beta = meta[j];
                 for t in 0..tokens {
-                    let c = transformed[j * tokens + t];
+                    let c = codes[j * tokens + t];
                     let delta = (c >> elo) & emask;
                     let rest = c & !(emask << elo);
-                    out[j * tokens + t] = rest | ((delta + beta) << elo);
+                    codes[j * tokens + t] = rest | ((delta + beta) << elo);
                 }
             }
-            out
         }
         DecorrelateMode::XorFirst => {
-            let mut out = vec![0u16; transformed.len()];
             for j in 0..channels {
                 for t in 0..tokens {
-                    out[j * tokens + t] = transformed[j * tokens + t] ^ meta[j];
+                    codes[j * tokens + t] ^= meta[j];
                 }
             }
-            out
         }
     }
 }

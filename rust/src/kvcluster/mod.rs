@@ -20,5 +20,5 @@ pub mod group;
 
 pub use group::{
     cluster_ratio, compress_groups, decompress_groups, decorrelate, from_channel_major_into,
-    recorrelate, ClusteredBlock, DecorrelateMode, KvGroup,
+    recorrelate, recorrelate_in_place, ClusteredBlock, DecorrelateMode, KvGroup,
 };

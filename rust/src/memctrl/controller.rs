@@ -19,7 +19,7 @@ use crate::compress::Codec;
 use crate::dram::MemorySystem;
 use crate::engine::{Lane, LaneArray};
 use crate::fmt::{CodeTensor, Dtype};
-use crate::kvcluster::{decorrelate, from_channel_major_into, recorrelate, DecorrelateMode};
+use crate::kvcluster::{decorrelate, from_channel_major_into, recorrelate_in_place, DecorrelateMode};
 
 /// In-memory placement policy — the paper's P (proposed) vs T (traditional).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -324,7 +324,7 @@ impl MemController {
         let keep = keep_bits.min(region.dtype.bits());
         let mut stats = ReadStats::default();
         for (_, frame) in &region.frames {
-            accrue_frame_fetch(&mut stats, &self.engine, region.layout, frame, keep)?;
+            plan_frame_fetch(&mut stats, &self.engine, region.layout, frame, keep)?;
         }
         self.accumulate_total(&stats);
         Ok(stats)
@@ -347,41 +347,74 @@ impl MemController {
         let mut stats = ReadStats::default();
         // plan first with no side effects, so a corrupt header cannot
         // leave commands from earlier frames enqueued on the caller's
-        // MemorySystem when this read errors out
+        // MemorySystem when this read errors out. Each frame's header is
+        // parsed (and checksum-verified) exactly once, here — the decode
+        // dispatch consumes the planned header.
         let mut ranges: Vec<(u64, u64)> = Vec::with_capacity(region.frames.len());
+        let mut frames: Vec<FramePlan<'_>> = Vec::with_capacity(region.frames.len());
+        let mut total_m = 0usize;
         for (addr, frame) in &region.frames {
-            let (fetch_bytes, _) = frame_fetch_info(layout, frame, keep)?;
-            stats.frames += 1;
-            stats.dram_bytes += fetch_bytes as u64;
-            stats.engine_ns += match layout {
-                Layout::Proposed => self.engine.process_ns(fetch_bytes),
-                Layout::Traditional => 0.0,
-            };
+            let (fetch_bytes, fp) =
+                plan_frame_fetch(&mut stats, &self.engine, layout, frame, keep)?;
             ranges.push((*addr, fetch_bytes as u64));
+            total_m += fp.m;
+            frames.push(fp);
         }
         if let Some(m) = mem.as_deref_mut() {
             for &(addr, bytes) in &ranges {
                 m.enqueue_range(addr, bytes, false, 0);
             }
         }
-        let frames: Vec<&[u8]> = region.frames.iter().map(|(_, f)| f.as_slice()).collect();
-        let decoded = self
-            .lanes
-            .run(&frames, |lane, frame| read_frame_with(lane, frame, keep, layout));
+        let plan = RegionPlan { keep, layout, frames, total_m };
+        let mut out = vec![0u16; total_m];
+        let decoded = run_decode_dispatch(&self.lanes, vec![plan], vec![out.as_mut_slice()]);
         // drain BEFORE propagating decode errors — a failed read must not
         // leave orphaned commands to pollute the next read's timing
         if let Some(m) = mem.as_deref_mut() {
             stats.dram_cycles = m.drain();
         }
-        let mut out = Vec::with_capacity(region.n);
-        for codes in decoded {
-            let codes = codes?;
-            stats.logical_bytes += (codes.len() * keep as usize).div_ceil(8) as u64;
-            out.extend_from_slice(&codes);
-        }
+        decoded?;
         stats.dispatches = 1;
         self.accumulate_total(&stats);
         Ok((out, stats))
+    }
+
+    /// [`MemController::load`] decoding into a caller-provided destination
+    /// (`dest.len()` must equal the region's stored code count) — the
+    /// arena-backed read path: the per-sequence fetch decodes stored
+    /// pages straight into step-arena slices with zero output allocation.
+    /// Accounting is identical to `load` with `mem = None`.
+    pub fn load_into(
+        &mut self,
+        id: RegionId,
+        keep_bits: u32,
+        dest: &mut [u16],
+    ) -> anyhow::Result<ReadStats> {
+        let region = &self.regions[id.0];
+        let keep = keep_bits.min(region.dtype.bits());
+        let mut stats = ReadStats::default();
+        let mut frames: Vec<FramePlan<'_>> = Vec::with_capacity(region.frames.len());
+        let mut total_m = 0usize;
+        for (_, frame) in &region.frames {
+            let (_, fp) = plan_frame_fetch(&mut stats, &self.engine, region.layout, frame, keep)?;
+            total_m += fp.m;
+            frames.push(fp);
+        }
+        anyhow::ensure!(
+            dest.len() == total_m,
+            "region holds {total_m} codes, dest {}",
+            dest.len()
+        );
+        let plan = RegionPlan {
+            keep,
+            layout: region.layout,
+            frames,
+            total_m,
+        };
+        run_decode_dispatch(&self.lanes, vec![plan], vec![dest])?;
+        stats.dispatches = 1;
+        self.accumulate_total(&stats);
+        Ok(stats)
     }
 
     /// Read a *group* of regions — each at its own bit-plane prefix — in
@@ -401,12 +434,12 @@ impl MemController {
         mut mem: Option<&mut MemorySystem>,
     ) -> anyhow::Result<(Vec<Vec<u16>>, ReadStats)> {
         let mut stats = ReadStats::default();
-        // 1. plan with no side effects: per region, the frame slices +
-        //    code counts. DRAM ranges enqueue only after the whole plan
-        //    validates (same region/frame order per-region loads use), so
-        //    a corrupt header cannot orphan earlier regions' commands.
-        let mut plans: Vec<(u32, Layout, Vec<(&[u8], usize)>, usize)> =
-            Vec::with_capacity(reqs.len());
+        // 1. plan with no side effects: per region, the frame decode jobs
+        //    (header parsed + verified once, here). DRAM ranges enqueue
+        //    only after the whole plan validates (same region/frame order
+        //    per-region loads use), so a corrupt header cannot orphan
+        //    earlier regions' commands.
+        let mut plans: Vec<RegionPlan<'_>> = Vec::with_capacity(reqs.len());
         let mut ranges: Vec<(u64, u64)> = Vec::new();
         for &(id, keep_bits) in reqs {
             let region = &self.regions[id.0];
@@ -414,13 +447,18 @@ impl MemController {
             let mut frames = Vec::with_capacity(region.frames.len());
             let mut total_m = 0usize;
             for (addr, frame) in &region.frames {
-                let (fetch_bytes, m) =
-                    accrue_frame_fetch(&mut stats, &self.engine, region.layout, frame, keep)?;
+                let (fetch_bytes, fp) =
+                    plan_frame_fetch(&mut stats, &self.engine, region.layout, frame, keep)?;
                 ranges.push((*addr, fetch_bytes as u64));
-                frames.push((frame.as_slice(), m));
-                total_m += m;
+                total_m += fp.m;
+                frames.push(fp);
             }
-            plans.push((keep, region.layout, frames, total_m));
+            plans.push(RegionPlan {
+                keep,
+                layout: region.layout,
+                frames,
+                total_m,
+            });
         }
         // 2. time the whole group's DRAM traffic (one drain) — BEFORE the
         //    decode dispatch, so a decode error cannot leave orphaned
@@ -432,8 +470,7 @@ impl MemController {
             stats.dram_cycles = ms.drain();
         }
         // 3. one dispatch decodes the whole group straight into the views
-        let outs = decode_plans_into(&self.lanes, &plans)?;
-        drop(plans);
+        let outs = decode_plans_into(&self.lanes, plans)?;
         stats.dispatches = 1;
         self.accumulate_total(&stats);
         Ok((outs, stats))
@@ -457,52 +494,122 @@ impl MemController {
     }
 }
 
-/// The shared decode-dispatch core under [`MemController::fetch_group`]
-/// and [`crate::coordinator::pagestore::fetch_sequences`]: allocate one
-/// destination buffer per plan (`(keep, layout, [(frame bytes, codes in
-/// frame)], total codes)`), split each into per-frame views, and decode
-/// every frame of every plan in ONE lane-array dispatch via
-/// [`read_frame_into`].
-pub(crate) fn decode_plans_into(
+/// One planned frame decode: the stored bytes plus the header parsed (and
+/// checksum-verified) at planning time — the lane job consumes the parsed
+/// header instead of re-parsing it, halving per-frame header work on
+/// every fetch path. `parsed` is `None` for Traditional frames, whose
+/// 12-byte mini header re-parses for free in the job.
+pub(crate) struct FramePlan<'a> {
+    frame: &'a [u8],
+    /// Codes stored in the frame.
+    pub(crate) m: usize,
+    parsed: Option<(FrameHeader, Vec<u16>)>,
+}
+
+/// One region's (or page's) share of a decode dispatch: precision, layout,
+/// planned frames, and the total code count its destination view must hold.
+pub(crate) struct RegionPlan<'a> {
+    pub(crate) keep: u32,
+    pub(crate) layout: Layout,
+    pub(crate) frames: Vec<FramePlan<'a>>,
+    pub(crate) total_m: usize,
+}
+
+/// Decode every frame of every plan in ONE lane-array dispatch, each
+/// frame's codes landing directly in its slot of the matching destination
+/// view (`dests[i].len() == plans[i].total_m`) — the shared decode core
+/// under [`MemController::load`], [`MemController::load_into`],
+/// [`MemController::fetch_group`], and the cross-sequence
+/// [`crate::coordinator::pagestore::fetch_sequences`]. Headers planned by
+/// [`plan_frame_fetch`] are handed to the lane job; debug builds re-parse
+/// the stored bytes and assert the planned header matches the checksummed
+/// on-DRAM one.
+pub(crate) fn run_decode_dispatch(
     lanes: &LaneArray,
-    plans: &[(u32, Layout, Vec<(&[u8], usize)>, usize)],
-) -> anyhow::Result<Vec<Vec<u16>>> {
-    let mut bufs: Vec<Vec<u16>> = plans
-        .iter()
-        .map(|&(_, _, _, total_m)| vec![0u16; total_m])
-        .collect();
-    let mut jobs: Vec<(&[u8], u32, Layout, &mut [u16])> = Vec::new();
-    for (plan, buf) in plans.iter().zip(bufs.iter_mut()) {
-        let (keep, layout, frames, _) = plan;
-        let mut rest = buf.as_mut_slice();
-        for &(frame, m) in frames {
-            let (dst, tail) = rest.split_at_mut(m);
+    plans: Vec<RegionPlan<'_>>,
+    dests: Vec<&mut [u16]>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(plans.len() == dests.len(), "plan/destination arity");
+    let mut jobs: Vec<(FramePlan<'_>, u32, Layout, &mut [u16])> = Vec::new();
+    for (plan, dest) in plans.into_iter().zip(dests) {
+        let RegionPlan {
+            keep,
+            layout,
+            frames,
+            total_m,
+        } = plan;
+        anyhow::ensure!(
+            dest.len() == total_m,
+            "plan holds {total_m} codes, dest {}",
+            dest.len()
+        );
+        let mut rest = dest;
+        for fp in frames {
+            let (dst, tail) = rest.split_at_mut(fp.m);
             rest = tail;
-            jobs.push((frame, *keep, *layout, dst));
+            jobs.push((fp, keep, layout, dst));
         }
     }
-    let results = lanes.run_mut(jobs, |lane, (frame, keep, layout, dst)| {
-        read_frame_into(lane, frame, keep, layout, dst)
+    let results = lanes.run_mut(jobs, |lane, (fp, keep, layout, dst)| {
+        let FramePlan { frame, parsed, .. } = fp;
+        match (layout, parsed) {
+            (Layout::Proposed, Some((h, betas))) => {
+                #[cfg(debug_assertions)]
+                {
+                    let (h2, b2) = decode_header(frame).expect("planned frame re-parses");
+                    debug_assert!(
+                        h2 == h && b2 == betas,
+                        "planned header diverged from the stored bytes' header"
+                    );
+                }
+                read_frame_parsed(lane, &h, &betas, frame, keep, dst)
+            }
+            _ => read_frame_into(lane, frame, keep, layout, dst),
+        }
     });
     for r in results {
         r?;
     }
+    Ok(())
+}
+
+/// [`run_decode_dispatch`] allocating one output buffer per plan — the
+/// [`MemController::fetch_group`] shape (arena-backed callers provision
+/// their own destination views instead).
+pub(crate) fn decode_plans_into(
+    lanes: &LaneArray,
+    plans: Vec<RegionPlan<'_>>,
+) -> anyhow::Result<Vec<Vec<u16>>> {
+    let mut bufs: Vec<Vec<u16>> = plans.iter().map(|p| vec![0u16; p.total_m]).collect();
+    let dests: Vec<&mut [u16]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+    run_decode_dispatch(lanes, plans, dests)?;
     Ok(bufs)
 }
 
-/// Accrue one frame's read accounting into `stats` — the per-frame core
-/// every fetch planner shares ([`MemController::fetch_stats`],
+/// Plan one frame's fetch: parse (and checksum-verify) the header ONCE,
+/// accrue the read accounting into `stats`, and return the DRAM bytes the
+/// fetch moves plus the decode job carrying the parsed header — the
+/// per-frame core every fetch planner shares
+/// ([`MemController::fetch_stats`], [`MemController::load`],
 /// [`MemController::fetch_group`], and the cross-sequence
-/// `coordinator::pagestore::fetch_sequences`). Returns the same
-/// `(fetch_bytes, m)` as [`frame_fetch_info`].
-pub(crate) fn accrue_frame_fetch(
+/// `coordinator::pagestore::fetch_sequences`).
+pub(crate) fn plan_frame_fetch<'a>(
     stats: &mut ReadStats,
     engine: &EngineModel,
     layout: Layout,
-    frame: &[u8],
+    frame: &'a [u8],
     keep: u32,
-) -> anyhow::Result<(usize, usize)> {
-    let (fetch_bytes, m) = frame_fetch_info(layout, frame, keep)?;
+) -> anyhow::Result<(usize, FramePlan<'a>)> {
+    let (fetch_bytes, m, parsed) = match layout {
+        Layout::Proposed => {
+            let (h, betas) = decode_header(frame)?;
+            (h.prefix_bytes(keep), h.m, Some((h, betas)))
+        }
+        Layout::Traditional => {
+            let (fetch_bytes, m) = frame_fetch_info(layout, frame, keep)?;
+            (fetch_bytes, m, None)
+        }
+    };
     stats.frames += 1;
     stats.dram_bytes += fetch_bytes as u64;
     stats.logical_bytes += (m * keep as usize).div_ceil(8) as u64;
@@ -510,13 +617,14 @@ pub(crate) fn accrue_frame_fetch(
         Layout::Proposed => engine.process_ns(fetch_bytes),
         Layout::Traditional => 0.0,
     };
-    Ok((fetch_bytes, m))
+    Ok((fetch_bytes, FramePlan { frame, m, parsed }))
 }
 
-/// Per-frame fetch accounting shared by [`MemController::load`],
-/// [`MemController::fetch_stats`], [`MemController::fetch_group`], and
-/// the cross-sequence fetch in `coordinator::pagestore`: (bytes moved
-/// from DRAM at `keep` planes, codes stored in the frame).
+/// Raw per-frame fetch geometry: (bytes moved from DRAM at `keep`
+/// planes, codes stored in the frame). [`plan_frame_fetch`] is the entry
+/// every fetch planner goes through; this survives as its
+/// Traditional-layout helper (the mini header has no plane directory to
+/// carry forward).
 pub(crate) fn frame_fetch_info(
     layout: Layout,
     frame: &[u8],
@@ -655,42 +763,16 @@ fn build_traditional_frame(kind: FrameKind, dtype: Dtype, chunk: &[u16]) -> Vec<
     f
 }
 
-/// Decode a frame's top `keep` planes back into value-major codes
-/// (including KV re-correlation and layout restore) on an engine lane.
-/// Parses the header once: Proposed frames go straight to
-/// [`read_frame_parsed`] with the decoded header.
-fn read_frame_with(
-    lane: &mut Lane,
-    frame: &[u8],
-    keep: u32,
-    layout: Layout,
-) -> anyhow::Result<Vec<u16>> {
-    match layout {
-        Layout::Traditional => {
-            // mini-header parse is alloc-free; reuse the shared path
-            let (_, m) = frame_fetch_info(layout, frame, keep)?;
-            let mut codes = vec![0u16; m];
-            read_frame_into(lane, frame, keep, layout, &mut codes)?;
-            Ok(codes)
-        }
-        Layout::Proposed => {
-            let (h, betas) = decode_header(frame)?;
-            let mut codes = vec![0u16; h.m];
-            read_frame_parsed(lane, &h, &betas, frame, keep, &mut codes)?;
-            Ok(codes)
-        }
-    }
-}
-
 /// Decode a frame's top `keep` planes straight into `dest` (value-major
 /// codes; `dest.len()` must equal the frame's code count) on an engine
 /// lane — KV re-correlation and layout restore included, no gather
 /// copies: the final codes land directly in the caller's view. Weights
 /// frames reaggregate into `dest` with zero intermediates
-/// ([`Lane::decode_planes_into`]); KV frames still stage the
-/// re-correlation transform through two per-frame buffers before the
-/// transpose writes `dest` (folding those into lane scratch is a ROADMAP
-/// item). This is THE frame decoder under [`MemController::load`],
+/// ([`Lane::decode_planes_into`]); KV frames decode into the lane's
+/// reusable code staging, re-correlate IN PLACE, and transpose straight
+/// into `dest` ([`Lane::decode_planes_staged`] +
+/// [`recorrelate_in_place`]) — also zero per-frame intermediates. This is
+/// THE frame decoder under [`MemController::load`],
 /// [`MemController::fetch_group`], and the serve loop's batched
 /// cross-sequence fetch ([`crate::coordinator::pagestore::fetch_sequences`]);
 /// per-plane checksums are verified here over exactly the plane prefix
@@ -732,7 +814,8 @@ pub fn read_frame_into(
 }
 
 /// [`read_frame_into`] for a Proposed frame whose header is already
-/// decoded — the single-parse inner path `read_frame_with` uses on loads.
+/// decoded — the single-parse inner path [`run_decode_dispatch`] feeds
+/// with the planned header from [`plan_frame_fetch`].
 fn read_frame_parsed(
     lane: &mut Lane,
     h: &FrameHeader,
@@ -793,7 +876,11 @@ fn read_frame_parsed(
                 h.channels
             );
             let tokens = h.m / h.channels;
-            let codes = lane.decode_planes(
+            // decode into the lane's reusable code staging, invert the
+            // de-correlation in place, and transpose channel-major ->
+            // token-major straight into the view: zero per-frame
+            // intermediates, matching the weights branch
+            let staged = lane.decode_planes_staged(
                 h.dtype,
                 h.m,
                 h.codec,
@@ -801,16 +888,15 @@ fn read_frame_parsed(
                 payload,
                 keep as usize,
             )?;
-            let cm = recorrelate(
+            recorrelate_in_place(
                 h.dtype,
                 tokens,
                 h.channels,
-                &codes,
+                staged,
                 betas,
                 mode_from_code(h.mode),
             );
-            // channel-major -> token-major straight into the view
-            from_channel_major_into(tokens, h.channels, &cm, dest);
+            from_channel_major_into(tokens, h.channels, staged, dest);
             Ok(())
         }
     }
@@ -913,6 +999,92 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn kv_frame_decode_matches_explicit_staging_reference() {
+        // The zero-intermediate KV decode (staged planes -> in-place
+        // recorrelate -> transpose into the view) must be byte-identical
+        // to the explicit two-Vec staging pipeline it replaced, at every
+        // plane prefix, for both codecs.
+        check("kv_decode_zero_intermediate_parity", 30, |g| {
+            let tokens = g.usize_in(1, 40);
+            let channels = g.usize_in(1, 48);
+            let codes = crate::synth::gen_kv_layer(
+                tokens,
+                channels,
+                crate::synth::CorpusProfile::Book,
+                0.5,
+                g.case_seed,
+            );
+            let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+            let spec = KvFrameSpec {
+                layout: Layout::Proposed,
+                codec,
+                mode: DecorrelateMode::ExpDelta,
+                dtype: Dtype::Bf16,
+                channels,
+            };
+            let mut lane = Lane::new(0);
+            let frame = build_kv_group_frame(&mut lane, spec, tokens, &codes);
+            let keep = g.usize_in(0, 16) as u32;
+            let mut got = vec![0u16; tokens * channels];
+            read_frame_into(&mut lane, &frame, keep, Layout::Proposed, &mut got)
+                .map_err(|e| e.to_string())?;
+            // reference: the pre-refactor staging path, Vec by Vec
+            let (h, betas) = decode_header(&frame).map_err(|e| e.to_string())?;
+            let payload = &frame[h.header_bytes()..];
+            let staged = lane
+                .decode_planes(h.dtype, h.m, h.codec, &h.plane_len, payload, keep as usize)
+                .map_err(|e| e.to_string())?;
+            let cm = crate::kvcluster::recorrelate(
+                h.dtype,
+                tokens,
+                h.channels,
+                &staged,
+                &betas,
+                mode_from_code(h.mode),
+            );
+            let mut want = vec![0u16; tokens * channels];
+            from_channel_major_into(tokens, h.channels, &cm, &mut want);
+            if got != want {
+                return Err(format!("{codec} t={tokens} c={channels} keep={keep}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn load_into_matches_load() {
+        // The arena-backed destination read must return the same codes and
+        // accounting as the allocating load, at every precision.
+        let t = weight_tensor(9000, 17);
+        let kv_codes =
+            crate::synth::gen_kv_layer(48, 32, crate::synth::CorpusProfile::Book, 0.5, 4);
+        for layout in [Layout::Proposed, Layout::Traditional] {
+            let mut a = MemController::new(layout, Codec::Zstd);
+            let wa = a.store_weights("w", &t);
+            let ka = a.store_kv("kv", Dtype::Bf16, 48, 32, &kv_codes);
+            let mut b = MemController::new(layout, Codec::Zstd);
+            let wb = b.store_weights("w", &t);
+            let kb = b.store_kv("kv", Dtype::Bf16, 48, 32, &kv_codes);
+            for (ia, ib, n) in [(wa, wb, t.codes.len()), (ka, kb, kv_codes.len())] {
+                for keep in [0u32, 8, 16] {
+                    let (codes, ls) = b.load(ib, keep, None).unwrap();
+                    let mut dest = vec![0u16; n];
+                    let is = a.load_into(ia, keep, &mut dest).unwrap();
+                    assert_eq!(dest, codes, "{layout:?} keep={keep}");
+                    assert_eq!(is.dram_bytes, ls.dram_bytes, "{layout:?} keep={keep}");
+                    assert_eq!(is.logical_bytes, ls.logical_bytes);
+                    assert_eq!(is.frames, ls.frames);
+                    assert_eq!(is.dispatches, 1);
+                    assert!((is.engine_ns - ls.engine_ns).abs() < 1e-6);
+                }
+            }
+            // wrong-size destination is a clean error
+            let mut short = vec![0u16; 3];
+            assert!(a.load_into(wa, 16, &mut short).is_err());
+        }
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub enum FrameKind {
 }
 
 /// Parsed frame directory (the header).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FrameHeader {
     pub kind: FrameKind,
     pub dtype: Dtype,

@@ -73,50 +73,60 @@ impl KvPolicy {
     /// kept (0 = skip). `npages` includes the current partial page, which
     /// is always read at full precision (it holds the newest tokens).
     pub fn page_precisions(&self, npages: usize, base: Dtype, ranks: &[usize]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(npages);
+        self.page_precisions_into(npages, base, ranks, &mut out);
+        out
+    }
+
+    /// [`KvPolicy::page_precisions`] writing into a reusable buffer — the
+    /// steady-state entry the per-step view planner
+    /// ([`crate::coordinator::PolicyEngine::plan_pressured_into`]) uses so
+    /// planning a decode step allocates nothing. Identical output.
+    pub fn page_precisions_into(
+        &self,
+        npages: usize,
+        base: Dtype,
+        ranks: &[usize],
+        out: &mut Vec<u32>,
+    ) {
         assert_eq!(ranks.len(), npages);
         let full = base.bits();
+        out.clear();
         match self {
-            KvPolicy::Full => vec![full; npages],
+            KvPolicy::Full => out.extend(std::iter::repeat(full).take(npages)),
             KvPolicy::SlidingWindow { window } => {
                 let keep_pages = window.div_ceil(PAGE_TOKENS);
-                (0..npages)
-                    .map(|p| if p + keep_pages >= npages { full } else { 0 })
-                    .collect()
+                out.extend((0..npages).map(|p| if p + keep_pages >= npages { full } else { 0 }));
             }
-            KvPolicy::QuestTopK { pages } => ranks
-                .iter()
-                .enumerate()
-                .map(|(p, &r)| {
+            KvPolicy::QuestTopK { pages } => {
+                out.extend(ranks.iter().enumerate().map(|(p, &r)| {
                     if r < *pages || p + 1 == npages {
                         full
                     } else {
                         0
                     }
-                })
-                .collect(),
+                }));
+            }
             KvPolicy::DynamicQuant { tiers } => {
-                // tier boundaries in rank space
+                // tier boundaries in rank space (tier lists are tiny and
+                // fixed per policy; this is the one O(tiers) allocation)
                 let mut bounds = Vec::with_capacity(tiers.len());
                 let mut acc = 0usize;
                 for t in tiers {
                     acc += t.pages;
                     bounds.push((acc, t.dtype));
                 }
-                ranks
-                    .iter()
-                    .enumerate()
-                    .map(|(p, &r)| {
-                        if p + 1 == npages {
-                            return full;
+                out.extend(ranks.iter().enumerate().map(|(p, &r)| {
+                    if p + 1 == npages {
+                        return full;
+                    }
+                    for &(b, d) in &bounds {
+                        if r < b {
+                            return d.bits().min(full);
                         }
-                        for &(b, d) in &bounds {
-                            if r < b {
-                                return d.bits().min(full);
-                            }
-                        }
-                        0
-                    })
-                    .collect()
+                    }
+                    0
+                }));
             }
         }
     }
@@ -167,13 +177,31 @@ pub fn quest_scores(q: &[f32], page_min: &[Vec<f32>], page_max: &[Vec<f32>]) -> 
 
 /// Ranks (0 = highest score) from scores.
 pub fn ranks_from_scores(scores: &[f64]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
-    let mut ranks = vec![0usize; scores.len()];
+    let mut ranks = Vec::new();
+    let mut idx = Vec::new();
+    ranks_from_scores_into(scores, &mut ranks, &mut idx);
+    ranks
+}
+
+/// [`ranks_from_scores`] writing into reusable buffers (`idx` is sort
+/// scratch), allocation-free in steady state. Ties break toward the lower
+/// page index — exactly the stable-sort order [`ranks_from_scores`] has
+/// always produced — via an explicit index tie-break on the unstable
+/// (allocation-free) sort.
+pub fn ranks_from_scores_into(scores: &[f64], ranks: &mut Vec<usize>, idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..scores.len());
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap()
+            .then_with(|| a.cmp(&b))
+    });
+    ranks.clear();
+    ranks.resize(scores.len(), 0);
     for (r, &p) in idx.iter().enumerate() {
         ranks[p] = r;
     }
-    ranks
 }
 
 #[cfg(test)]
@@ -252,6 +280,43 @@ mod tests {
         let pmax = vec![vec![1.1f32, -0.9], vec![0.1, 0.1]];
         let s = quest_scores(&q, &pmin, &pmax);
         assert!(s[0] > s[1]);
+    }
+
+    #[test]
+    fn ranks_into_matches_allocating_path_with_ties() {
+        // the reusable-buffer variant must reproduce the historical stable
+        // ordering, including tie-breaks toward the lower page index
+        let mut r = crate::util::rng::Xoshiro256::new(77);
+        let mut ranks = Vec::new();
+        let mut idx = Vec::new();
+        for _ in 0..200 {
+            let n = (r.next_u64() % 24) as usize;
+            // coarse values force frequent ties
+            let scores: Vec<f64> = (0..n).map(|_| (r.next_u64() % 5) as f64).collect();
+            let want = {
+                let mut idx: Vec<usize> = (0..scores.len()).collect();
+                idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+                let mut ranks = vec![0usize; scores.len()];
+                for (rk, &p) in idx.iter().enumerate() {
+                    ranks[p] = rk;
+                }
+                ranks
+            };
+            ranks_from_scores_into(&scores, &mut ranks, &mut idx);
+            assert_eq!(ranks, want, "scores={scores:?}");
+            assert_eq!(ranks_from_scores(&scores), want);
+        }
+    }
+
+    #[test]
+    fn page_precisions_into_reuses_buffer() {
+        let p = KvPolicy::table2()[3].1.clone();
+        let scores: Vec<f64> = (0..12).map(|i| -(i as f64)).collect();
+        let ranks = ranks_from_scores(&scores);
+        let want = p.page_precisions(12, Dtype::Bf16, &ranks);
+        let mut buf = vec![99u32; 40]; // stale contents must be cleared
+        p.page_precisions_into(12, Dtype::Bf16, &ranks, &mut buf);
+        assert_eq!(buf, want);
     }
 
     #[test]

@@ -18,11 +18,18 @@
 //!   which is what lets the byte-identity and determinism property tests
 //!   compare contended runs against solo reference runs token-for-token.
 //!   Policy differences still show up where the scheduler measures them:
-//!   fetched bytes, stored bytes, and latency. Quality-sensitive
-//!   experiments use the real [`crate::runtime::model::TinyLm`].
+//!   fetched bytes, stored bytes, latency — and, since the serve loop
+//!   hands the fetched views to attention, the per-step
+//!   [`SynthLm::attend_readout`] digest: a real attention pass over the
+//!   degraded KV read, so the fetched bytes ARE load-bearing and
+//!   degraded-read quality is observable end-to-end without perturbing
+//!   the trajectory. Quality-sensitive experiments use the real
+//!   [`crate::runtime::model::TinyLm`].
 
 use crate::fmt::minifloat::BF16;
+use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta};
+use crate::util::hash::Fnv1a;
 use crate::util::rng::Xoshiro256;
 
 /// Round an f32 to its nearest BF16-representable value — the canonical
@@ -101,6 +108,95 @@ impl SynthLm {
         kv.pos += 1;
         Ok((0..m.vocab).map(|_| r.normal() as f32).collect())
     }
+
+    /// Deterministic attention readout over a degraded KV read: per
+    /// layer, softmax(q̄ · k_t) over the unmasked pages' tokens, then the
+    /// value-weighted readout per channel, digested with FNV-1a over the
+    /// BF16-rounded readout bits. The `kf`/`vf` accessors resolve the
+    /// degraded K/V value at `(layer, token, channel)`; iteration order
+    /// (pages ascending, masked pages skipped entirely — their values are
+    /// never accessed) is fixed HERE, so two reads whose accessors
+    /// resolve to bit-identical values — lazy plane-prefix views vs a
+    /// materialized dense copy — produce bit-identical digests. This is
+    /// what makes the serve loop's fetched bytes load-bearing.
+    pub fn attend_readout<KF, VF>(
+        &self,
+        pos: usize,
+        queries: &[f32],
+        mask: &[f32],
+        kf: KF,
+        vf: VF,
+    ) -> u64
+    where
+        KF: Fn(usize, usize, usize) -> f32,
+        VF: Fn(usize, usize, usize) -> f32,
+    {
+        let m = &self.meta;
+        let row = m.n_kv_heads * m.d_head;
+        let group = m.n_heads / m.n_kv_heads;
+        let npages = pos.div_ceil(PAGE_TOKENS);
+        let page_active = |p: usize| mask.get(p).map_or(true, |&mv| mv > -1e8);
+        let mut h = Fnv1a::new();
+        let mut qbar = vec![0.0f32; row];
+        let mut scores: Vec<f32> = Vec::new();
+        let mut readout = vec![0.0f32; row];
+        for l in 0..m.layers {
+            // group-mean query per KV channel (the page scorer's reduction)
+            qbar.iter_mut().for_each(|q| *q = 0.0);
+            let qbase = l * m.n_heads * m.d_head;
+            for head in 0..m.n_heads {
+                let kvh = head / group;
+                for d in 0..m.d_head {
+                    qbar[kvh * m.d_head + d] +=
+                        queries[qbase + head * m.d_head + d] / group as f32;
+                }
+            }
+            // pass 1: scores over the unmasked pages' tokens
+            scores.clear();
+            let mut mx = f32::NEG_INFINITY;
+            for p in 0..npages {
+                if !page_active(p) {
+                    continue;
+                }
+                let t1 = ((p + 1) * PAGE_TOKENS).min(pos);
+                for t in p * PAGE_TOKENS..t1 {
+                    let mut s = 0.0f32;
+                    for c in 0..row {
+                        s += qbar[c] * kf(l, t, c);
+                    }
+                    scores.push(s);
+                    mx = mx.max(s);
+                }
+            }
+            if scores.is_empty() {
+                continue;
+            }
+            let mut z = 0.0f32;
+            for &s in &scores {
+                z += (s - mx).exp();
+            }
+            // pass 2: value-weighted readout, same token order
+            readout.iter_mut().for_each(|x| *x = 0.0);
+            let mut si = 0usize;
+            for p in 0..npages {
+                if !page_active(p) {
+                    continue;
+                }
+                let t1 = ((p + 1) * PAGE_TOKENS).min(pos);
+                for t in p * PAGE_TOKENS..t1 {
+                    let w = (scores[si] - mx).exp() / z;
+                    si += 1;
+                    for c in 0..row {
+                        readout[c] += w * vf(l, t, c);
+                    }
+                }
+            }
+            for &x in readout.iter() {
+                h.write(&bf16_canon(x).to_bits().to_le_bytes());
+            }
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +240,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn attend_readout_consumes_values_and_skips_masked_pages() {
+        let lm = SynthLm::tiny(11);
+        let mut kv = KvState::new(&lm.meta);
+        for t in 0..40u16 {
+            lm.step(&mut kv, t).unwrap();
+        }
+        let row = lm.meta.n_kv_heads * lm.meta.d_head;
+        let ms = lm.meta.max_seq;
+        let kf = |l: usize, t: usize, c: usize| kv.k[(l * ms + t) * row + c];
+        let vf = |l: usize, t: usize, c: usize| kv.v[(l * ms + t) * row + c];
+        let mask = vec![0.0f32; lm.meta.n_pages];
+        let a = lm.attend_readout(kv.pos, &kv.queries, &mask, kf, vf);
+        let b = lm.attend_readout(kv.pos, &kv.queries, &mask, kf, vf);
+        assert_eq!(a, b, "deterministic");
+        // value-sensitive: a degraded V changes the digest
+        let vf2 = |l: usize, t: usize, c: usize| {
+            let x = kv.v[(l * ms + t) * row + c];
+            crate::coordinator::degrade_f32(x, 4)
+        };
+        let d = lm.attend_readout(kv.pos, &kv.queries, &mask, kf, vf2);
+        assert_ne!(a, d, "readout must depend on the degraded values");
+        // masked pages are never accessed (accessor panics if touched)
+        let mut masked = mask.clone();
+        masked[0] = -1e9;
+        let kf_guard = |l: usize, t: usize, c: usize| {
+            assert!(t >= 16, "masked page 0 accessed");
+            kv.k[(l * ms + t) * row + c]
+        };
+        let e = lm.attend_readout(kv.pos, &kv.queries, &masked, kf_guard, vf);
+        assert_ne!(a, e, "mask changes the readout");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use camc::compress::Codec;
-use camc::coordinator::{fetch_sequences, FetchOutcome, KvPageStore};
+use camc::coordinator::{fetch_sequences, DecodeArena, FetchOutcome, KvPageStore};
 use camc::engine::LaneArray;
 use camc::fmt::minifloat::BF16;
 use camc::fmt::{truncate_to_planes, Dtype};
@@ -128,8 +128,15 @@ fn kv_filled(meta: &ModelMeta, pos: usize, seed: u64) -> KvState {
     kv
 }
 
-fn outcomes_match(g: &FetchOutcome, w: &FetchOutcome) -> Result<(), String> {
-    if g.pages != w.pages {
+fn outcomes_match(
+    g: &FetchOutcome,
+    ga: &DecodeArena,
+    w: &FetchOutcome,
+    wa: &DecodeArena,
+) -> Result<(), String> {
+    let gp: Vec<(usize, &[u16])> = g.decoded(ga).collect();
+    let wp: Vec<(usize, &[u16])> = w.decoded(wa).collect();
+    if gp != wp {
         return Err("page codes diverged".into());
     }
     if g.stats.frames != w.stats.frames
@@ -187,10 +194,11 @@ fn fetch_sequences_differential_vs_fetch_pages() {
                 s
             })
             .collect();
+        let mut ref_arena = DecodeArena::new();
         let want: Vec<FetchOutcome> = ref_stores
             .iter_mut()
             .zip(&bits)
-            .map(|(s, b)| s.fetch_pages(b).map_err(|e| e.to_string()))
+            .map(|(s, b)| s.fetch_pages(b, &mut ref_arena).map_err(|e| e.to_string()))
             .collect::<Result<_, _>>()?;
         for lanes in [1usize, 2, 8] {
             let la = Arc::new(LaneArray::new(lanes));
@@ -203,15 +211,16 @@ fn fetch_sequences_differential_vs_fetch_pages() {
                     s
                 })
                 .collect();
+            let mut arena = DecodeArena::new();
             let mut seqs: Vec<(&mut KvPageStore, &[u32])> = stores
                 .iter_mut()
                 .zip(bits.iter())
                 .map(|(s, b)| (s, b.as_slice()))
                 .collect();
-            let got = fetch_sequences(&mut seqs, &la).map_err(|e| e.to_string())?;
+            let got = fetch_sequences(&mut seqs, &la, &mut arena).map_err(|e| e.to_string())?;
             drop(seqs);
             for (si, (gi, wi)) in got.iter().zip(&want).enumerate() {
-                outcomes_match(gi, wi)
+                outcomes_match(gi, &arena, wi, &ref_arena)
                     .map_err(|e| format!("{codec} {lanes} lanes seq {si}: {e}"))?;
             }
         }
@@ -230,15 +239,21 @@ fn fetch_sequences_is_idempotent_and_stateless() {
     store.sync(&kv, &meta);
     let digest = store.frames_digest();
     let bits = vec![8u32; 7];
+    let mut arena_a = DecodeArena::new();
     let first = {
         let mut seqs: Vec<(&mut KvPageStore, &[u32])> = vec![(&mut store, bits.as_slice())];
-        fetch_sequences(&mut seqs, &lanes).unwrap()
+        fetch_sequences(&mut seqs, &lanes, &mut arena_a).unwrap()
     };
+    let mut arena_b = DecodeArena::new();
     let second = {
         let mut seqs: Vec<(&mut KvPageStore, &[u32])> = vec![(&mut store, bits.as_slice())];
-        fetch_sequences(&mut seqs, &lanes).unwrap()
+        fetch_sequences(&mut seqs, &lanes, &mut arena_b).unwrap()
     };
-    assert_eq!(first[0].pages, second[0].pages);
+    let pages_a: Vec<(usize, Vec<u16>)> =
+        first[0].decoded(&arena_a).map(|(p, c)| (p, c.to_vec())).collect();
+    let pages_b: Vec<(usize, Vec<u16>)> =
+        second[0].decoded(&arena_b).map(|(p, c)| (p, c.to_vec())).collect();
+    assert_eq!(pages_a, pages_b);
     assert_eq!(first[0].dram_bytes_total(), second[0].dram_bytes_total());
     assert_eq!(store.frames_digest(), digest, "reads must not mutate frames");
 }
