@@ -10,9 +10,11 @@
 //! non-zero if pressure-driven admission serves fewer sequences than
 //! fixed-slot admission at equal byte budget, if the compressed budget
 //! fails to sustain more concurrency than the byte-equal uncompressed
-//! budget, or if the zero-materialization view path's per-step host copy
-//! bytes stop beating the materializing copy-plan baseline (the
-//! regressions CI gates on).
+//! budget, if the zero-materialization view path's per-step host copy
+//! bytes stop beating the materializing copy-plan baseline, or if the
+//! fault-injection row pair stops resolving every recovery-ladder rung
+//! with fault-untouched sequences byte-identical to the fault-free run
+//! (the regressions CI gates on).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -20,9 +22,10 @@ use std::time::Instant;
 
 use camc::coordinator::{
     fixed_slots_for_budget, serve_trace, EventKind, FetchMode, MaterializedRef, SchedConfig,
-    SchedOutcome, ServeMetrics, StepModel,
+    SchedOutcome, ServeMetrics, StepModel, TrafficResponse,
 };
 use camc::engine::LaneArray;
+use camc::memctrl::FaultPlan;
 use camc::report::json::Json;
 use camc::report::Table;
 use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
@@ -87,6 +90,62 @@ fn main() {
     // wall-rate row: the full trace, uncapped, compressed admission
     let (full, fm, wall) = run(&SchedConfig::compressed(budget));
 
+    // fault-injection row pair: the same trace under a seeded FaultPlan,
+    // without and with the XOR parity plane. Run at a slack budget (no
+    // pressure clamps, no evictions) so the only divergence from the
+    // fault-free baseline is the faults themselves — which makes the
+    // byte-identity claim exact: every sequence the plan never touched
+    // (recovered_faults == 0, not quarantined) must match its baseline
+    // response byte-for-byte.
+    let slack: u64 = 1 << 20;
+    let digests = |parity: bool, faults: Option<Arc<FaultPlan>>| -> SchedConfig {
+        capped(SchedConfig {
+            collect_digests: true,
+            parity,
+            faults,
+            ..SchedConfig::compressed(slack)
+        })
+    };
+    let plan = Arc::new(FaultPlan {
+        seed: 2026,
+        p_plane_flip: 120,
+        p_header_flip: 8,
+        p_transient: 50,
+        p_lane_fault: 30,
+        flip_plane: None,
+    });
+    // parity changes every stored frame (and so every fault-site address):
+    // each faulty row compares against the fault-free run of its OWN
+    // geometry
+    let (base_np, _, _) = run(&digests(false, None));
+    let (base_pa, _, _) = run(&digests(true, None));
+    let (f_np, fnpm, _) = run(&digests(false, Some(Arc::clone(&plan))));
+    let (f_pa, fpam, _) = run(&digests(true, Some(Arc::clone(&plan))));
+    // (unaffected matched, of those byte-identical) vs the baseline
+    let survivors = |faulty: &SchedOutcome, base: &SchedOutcome| -> (u64, u64) {
+        let by_id: BTreeMap<u64, &TrafficResponse> =
+            base.responses.iter().map(|r| (r.id, r)).collect();
+        let (mut unaffected, mut identical) = (0u64, 0u64);
+        for r in &faulty.responses {
+            if r.recovered_faults != 0 {
+                continue;
+            }
+            let Some(b) = by_id.get(&r.id) else { continue };
+            unaffected += 1;
+            if r.tokens == b.tokens
+                && r.mean_nll == b.mean_nll
+                && r.kv_pages_digest == b.kv_pages_digest
+                && r.read_digest == b.read_digest
+                && r.kv_fetched_bytes == b.kv_fetched_bytes
+            {
+                identical += 1;
+            }
+        }
+        (unaffected, identical)
+    };
+    let (np_unaffected, np_identical) = survivors(&f_np, &base_np);
+    let (pa_unaffected, pa_identical) = survivors(&f_pa, &base_pa);
+
     let evicts = |o: &SchedOutcome| {
         o.events
             .iter()
@@ -134,6 +193,26 @@ fn main() {
         cm.host_copy_bytes_per_step(),
         matm.host_copy_bytes_per_step(),
         matm.host_copy_bytes as f64 / cm.host_copy_bytes.max(1) as f64
+    );
+    println!(
+        "fault run (no parity): {} served / {} quarantined — {} faults: {} retries, {} salvaged; unaffected {}/{} byte-identical to fault-free",
+        f_np.responses.len(),
+        fnpm.quarantined_seqs,
+        fnpm.faults_injected,
+        fnpm.retries,
+        fnpm.salvaged_reads,
+        np_identical,
+        np_unaffected,
+    );
+    println!(
+        "fault run (parity):    {} served / {} quarantined — {} faults: {} retries, {} repaired in place; unaffected {}/{} byte-identical to fault-free",
+        f_pa.responses.len(),
+        fpam.quarantined_seqs,
+        fpam.faults_injected,
+        fpam.retries,
+        fpam.parity_repairs,
+        pa_identical,
+        pa_unaffected,
     );
 
     json.insert(
@@ -199,6 +278,34 @@ fn main() {
         "host copy bytes per step (materialized)".into(),
         Json::Num(matm.host_copy_bytes_per_step().round()),
     );
+    json.insert(
+        "recovery faults injected (no parity)".into(),
+        Json::Num(fnpm.faults_injected as f64),
+    );
+    json.insert(
+        "recovery retries (no parity)".into(),
+        Json::Num(fnpm.retries as f64),
+    );
+    json.insert(
+        "recovery salvaged reads (no parity)".into(),
+        Json::Num(fnpm.salvaged_reads as f64),
+    );
+    json.insert(
+        "recovery parity repairs (parity)".into(),
+        Json::Num(fpam.parity_repairs as f64),
+    );
+    json.insert(
+        "recovery quarantined seqs (no parity)".into(),
+        Json::Num(fnpm.quarantined_seqs as f64),
+    );
+    json.insert(
+        "fault-run unaffected byte-identical (no parity)".into(),
+        Json::Num(np_identical as f64),
+    );
+    json.insert(
+        "fault-run unaffected byte-identical (parity)".into(),
+        Json::Num(pa_identical as f64),
+    );
 
     let npaths = json.len();
     std::fs::write("BENCH_serve.json", Json::Obj(json).to_string() + "\n")
@@ -256,12 +363,70 @@ fn main() {
             );
             ok = false;
         }
+        // recovery-ladder gates: the plan must actually fire, every rung
+        // it documents must resolve at least one fault (retry + salvage
+        // without parity, retry + in-place repair with parity — parity
+        // must leave NOTHING to salvage), and every sequence the plan
+        // never touched must be byte-identical to its fault-free baseline
+        if fnpm.faults_injected == 0 || fpam.faults_injected == 0 {
+            eprintln!(
+                "CHECK FAILED: fault plan never fired (no-parity {} faults, parity {})",
+                fnpm.faults_injected, fpam.faults_injected
+            );
+            ok = false;
+        }
+        if fnpm.retries == 0 || fpam.retries == 0 {
+            eprintln!(
+                "CHECK FAILED: retry rung never resolved a transient fault (no-parity {}, parity {})",
+                fnpm.retries, fpam.retries
+            );
+            ok = false;
+        }
+        if fnpm.salvaged_reads == 0 {
+            eprintln!("CHECK FAILED: no plane flip was salvaged on the no-parity run");
+            ok = false;
+        }
+        if fpam.parity_repairs == 0 || fpam.salvaged_reads != 0 {
+            eprintln!(
+                "CHECK FAILED: parity run repaired {} planes but salvaged {} (must repair all, salvage none)",
+                fpam.parity_repairs, fpam.salvaged_reads
+            );
+            ok = false;
+        }
+        if np_unaffected == 0 || np_identical != np_unaffected {
+            eprintln!(
+                "CHECK FAILED: no-parity fault run: {}/{} unaffected sequences byte-identical to the fault-free baseline",
+                np_identical, np_unaffected
+            );
+            ok = false;
+        }
+        if pa_unaffected == 0 || pa_identical != pa_unaffected {
+            eprintln!(
+                "CHECK FAILED: parity fault run: {}/{} unaffected sequences byte-identical to the fault-free baseline",
+                pa_identical, pa_unaffected
+            );
+            ok = false;
+        }
         if !ok {
             std::process::exit(1);
         }
         println!(
             "check ✓ host copies view {} B < materialized {} B",
             cm.host_copy_bytes, matm.host_copy_bytes
+        );
+        println!(
+            "check ✓ recovery ladder: {} + {} faults resolved ({} retried, {} salvaged, {} parity-repaired, {} + {} quarantined); unaffected byte-identical {}/{} and {}/{}",
+            fnpm.faults_injected,
+            fpam.faults_injected,
+            fnpm.retries + fpam.retries,
+            fnpm.salvaged_reads,
+            fpam.parity_repairs,
+            fnpm.quarantined_seqs,
+            fpam.quarantined_seqs,
+            np_identical,
+            np_unaffected,
+            pa_identical,
+            pa_unaffected
         );
         println!(
             "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}, batched fetch served {} >= per-seq {} in {} vs {} dispatches",

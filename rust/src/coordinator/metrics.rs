@@ -39,6 +39,21 @@ pub struct ServeMetrics {
     /// share, so this is THE tracked number for the copy-vs-view win
     /// (deterministic — CI gates on it).
     pub host_copy_bytes: u64,
+    /// Recovery-ladder accounting (see `memctrl::fault`): faults the
+    /// seeded `FaultPlan` injected into this run's read paths, and how
+    /// each was resolved. `faults_injected` counts injection sites;
+    /// `retries` counts bounded re-read attempts for transient bus/lane
+    /// faults; `parity_repairs` counts frames healed in place from the
+    /// XOR parity plane; `salvaged_reads` counts reads served clamped to
+    /// the intact plane prefix (page marked degraded-only);
+    /// `quarantined_seqs` counts sequences evicted because their fault
+    /// fell past the ladder. All zero on a fault-free run — CI gates on
+    /// exactly that.
+    pub faults_injected: u64,
+    pub retries: u64,
+    pub parity_repairs: u64,
+    pub salvaged_reads: u64,
+    pub quarantined_seqs: u64,
     latencies_ms: Vec<f64>,
     /// Time-to-first-token per request, virtual steps.
     ttft_steps: Vec<u64>,

@@ -27,7 +27,7 @@ use crate::fmt::minifloat::BF16;
 use crate::fmt::Dtype;
 use crate::memctrl::controller::{plan_frame_fetch, run_decode_dispatch, RegionPlan};
 use crate::memctrl::{
-    build_kv_group_frame, KvFrameSpec, Layout, MemController, ReadStats, RegionId,
+    build_kv_group_frame, KvFrameSpec, Layout, MemController, QuarantineError, ReadStats, RegionId,
 };
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta};
@@ -319,6 +319,23 @@ impl KvPageStore {
         arena: &mut DecodeArena,
     ) -> anyhow::Result<FetchOutcome> {
         let mut out = FetchOutcome::default();
+        // Recovery-ladder pre-pass: resolve every stored page's injected
+        // faults BEFORE fetching any, exactly as the batched
+        // [`fetch_sequences`] plan pass does — so a quarantine on page k
+        // leaves pages 0..k unfetched in both modes (bit-identical
+        // schedules) and never half-populates the outcome.
+        for (p, &bits) in page_bits.iter().enumerate() {
+            if bits == 0 || p >= self.pages.len() {
+                continue;
+            }
+            if let Err(e) = self.mc.prepare_read(self.pages[p], bits) {
+                if e.downcast_ref::<QuarantineError>().is_some() {
+                    out.quarantine = Some(e.to_string());
+                    return Ok(out);
+                }
+                return Err(e);
+            }
+        }
         for (p, &bits) in page_bits.iter().enumerate() {
             if bits == 0 {
                 continue;
@@ -435,6 +452,11 @@ pub struct FetchOutcome {
     /// Raw bytes of the current (sub-page, on-chip) tail counted against
     /// the fetch — the same accounting [`KvPageStore::fetch_bytes`] uses.
     pub raw_tail_bytes: u64,
+    /// Set when the recovery ladder quarantined this sequence (an
+    /// injected fault past the salvage floor): the reason string, and NO
+    /// pages were fetched for the sequence. The scheduler evicts exactly
+    /// this sequence; the rest of the batch's fetch proceeds unharmed.
+    pub quarantine: Option<String>,
 }
 
 impl FetchOutcome {
@@ -476,6 +498,33 @@ pub fn fetch_sequences(
     arena: &mut DecodeArena,
 ) -> anyhow::Result<Vec<FetchOutcome>> {
     let mut outcomes: Vec<FetchOutcome> = seqs.iter().map(|_| FetchOutcome::default()).collect();
+    // 0. recovery-ladder pre-pass: resolve injected faults (retry /
+    //    parity-heal / salvage clamp / quarantine) for every stored page
+    //    BEFORE planning any read, on the scheduling thread — so the
+    //    plan below sees only healed frames and clamped prefixes, and
+    //    the whole ladder is bit-identical at any lane count and in both
+    //    fetch modes. A quarantine marks just the owning sequence; the
+    //    rest of the batch proceeds.
+    let mut keeps: Vec<Vec<u32>> = Vec::with_capacity(seqs.len());
+    for (si, (store, bits)) in seqs.iter_mut().enumerate() {
+        let mut ks = vec![0u32; bits.len()];
+        for (p, &bits_p) in bits.iter().enumerate() {
+            if bits_p == 0 || p >= store.pages.len() {
+                continue;
+            }
+            match store.mc.prepare_read(store.pages[p], bits_p) {
+                Ok(k) => ks[p] = k,
+                Err(e) => {
+                    if e.downcast_ref::<QuarantineError>().is_some() {
+                        outcomes[si].quarantine = Some(e.to_string());
+                        break;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        keeps.push(ks);
+    }
     // 1. plan: per fetched page, the frame decode jobs (headers parsed +
     //    checksum-verified once, here); physical accounting accrues per
     //    sequence exactly as per-page loads would. `keys[k]` names the
@@ -484,6 +533,9 @@ pub fn fetch_sequences(
     let mut keys: Vec<(usize, usize)> = Vec::new();
     for (si, (store, bits)) in seqs.iter().enumerate() {
         let store: &KvPageStore = store;
+        if outcomes[si].quarantine.is_some() {
+            continue;
+        }
         for (p, &bits_p) in bits.iter().enumerate() {
             if bits_p == 0 {
                 continue;
@@ -493,7 +545,7 @@ pub fn fetch_sequences(
                 continue;
             }
             let region = store.mc.region(store.pages[p]);
-            let keep = bits_p.min(region.dtype.bits());
+            let keep = keeps[si][p];
             let mut frames = Vec::new();
             let mut total_m = 0usize;
             for (_, frame) in region.frames() {

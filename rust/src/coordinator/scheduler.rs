@@ -53,7 +53,7 @@ use super::pagestore::{
 use crate::compress::Codec;
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
-use crate::memctrl::Layout;
+use crate::memctrl::{FaultPlan, Layout, QuarantineError, RecoveryStats};
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta, TinyLm};
 use crate::util::hash::Fnv1a;
@@ -339,6 +339,15 @@ pub struct SchedConfig {
     /// the byte-identity witness is opt-in (property tests turn it on);
     /// off, the field is 0.
     pub collect_digests: bool,
+    /// Build every sequence's stored KV frames with the XOR parity plane
+    /// (see `memctrl::frame`): single-plane corruption heals in place at
+    /// the cost of one extra plane of stored footprint per frame.
+    pub parity: bool,
+    /// Seeded deterministic fault injection on every sequence's page
+    /// reads (`None` = fault-free). Each admitted sequence's controller
+    /// arms the plan with the request id as owner, so no two sequences
+    /// share a fault schedule and the whole run replays bit-exactly.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl SchedConfig {
@@ -354,6 +363,8 @@ impl SchedConfig {
             layout: Layout::Proposed,
             codec: Codec::Zstd,
             collect_digests: false,
+            parity: false,
+            faults: None,
         }
     }
 
@@ -383,6 +394,9 @@ pub enum EventKind {
     Evict,
     Resume,
     Finish,
+    /// The recovery ladder's last rung: an injected fault past repair and
+    /// salvage evicted exactly this sequence; the batch proceeded.
+    Quarantine,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -414,6 +428,11 @@ pub struct TrafficResponse {
     pub read_digest: u64,
     /// Times this sequence was swapped out.
     pub evictions: u32,
+    /// Injected faults the recovery ladder resolved for this sequence
+    /// (retry / parity repair / salvage). 0 = the fault plan never
+    /// touched this sequence, so its bytes must match the fault-free run
+    /// exactly — the property the serve bench digest-gates.
+    pub recovered_faults: u64,
     /// Time to first token, virtual steps (>= 1).
     pub ttft_steps: u64,
     /// Arrival to completion, virtual steps.
@@ -450,6 +469,9 @@ struct Seq {
     read_digest: u64,
     fed: usize,
     evictions: u32,
+    /// Controller recovery counters already drained into the run metrics
+    /// (the per-step drain folds only the delta).
+    recovery_seen: RecoveryStats,
     /// Monotone admission stamp; the eviction victim is the largest.
     admitted_order: u64,
     first_token_step: Option<u64>,
@@ -592,15 +614,37 @@ pub fn serve_trace<M: StepModel>(
                     let need = swapped_footprint(sw, meta)
                         .max(reserve_bytes(&sw.seq.req, meta, ratio));
                     if fits(committed, need, active.is_empty()) {
-                        let sw = swapped.pop_front().expect("front exists");
-                        let seq = resume(sw, meta, cfg.codec)?;
-                        out.events.push(SchedEvent {
-                            step,
-                            id: seq.req.id,
-                            kind: EventKind::Resume,
-                        });
-                        committed += committed_bytes(&seq, meta, ratio);
-                        active.push(seq);
+                        let mut sw = swapped.pop_front().expect("front exists");
+                        // swap-in reads run this step's fault draw
+                        sw.seq.store.mc.set_fault_step(step);
+                        match resume(sw, meta, cfg.codec) {
+                            Ok(seq) => {
+                                out.events.push(SchedEvent {
+                                    step,
+                                    id: seq.req.id,
+                                    kind: EventKind::Resume,
+                                });
+                                committed += committed_bytes(&seq, meta, ratio);
+                                active.push(seq);
+                            }
+                            Err((mut seq, e)) => {
+                                // the ladder's last rung at the swap-in
+                                // seam: quarantine just this sequence;
+                                // genuine corruption stays fatal
+                                if cfg.faults.is_none()
+                                    || e.downcast_ref::<QuarantineError>().is_none()
+                                {
+                                    return Err(e);
+                                }
+                                drain_recovery(metrics, &mut seq);
+                                metrics.quarantined_seqs += 1;
+                                out.events.push(SchedEvent {
+                                    step,
+                                    id: seq.req.id,
+                                    kind: EventKind::Quarantine,
+                                });
+                            }
+                        }
                         continue;
                     }
                     break; // HOL: keep swap-in order strict
@@ -636,6 +680,7 @@ pub fn serve_trace<M: StepModel>(
             }] += 1;
         }
         for s in active.iter_mut() {
+            s.store.mc.set_fault_step(step);
             let Seq { engine, kv, plan, .. } = s;
             engine.plan_pressured_into(kv, meta, clamp, plan);
         }
@@ -647,7 +692,7 @@ pub fn serve_trace<M: StepModel>(
         // reference). Identical bytes move either way; the stored pages
         // a step attends over are exactly what this fetch decoded.
         arena.reset();
-        let outs: Vec<FetchOutcome> = match cfg.fetch {
+        let mut outs: Vec<FetchOutcome> = match cfg.fetch {
             FetchMode::Batched => {
                 let outs = {
                     let mut seqs: Vec<(&mut KvPageStore, &[u32])> = active
@@ -675,6 +720,28 @@ pub fn serve_trace<M: StepModel>(
                 v
             }
         };
+        // recovery bookkeeping: fold every sequence's ladder counters into
+        // the run metrics (including sequences about to be quarantined),
+        // then evict exactly the quarantined sequences — their outcomes
+        // fetched nothing; the rest of the batch and its already-planned
+        // reads proceed unharmed. swap_remove at descending indices keeps
+        // `active` and `outs` aligned for the decode zip below.
+        for s in active.iter_mut() {
+            drain_recovery(metrics, s);
+        }
+        for i in (0..outs.len()).rev() {
+            if outs[i].quarantine.is_none() {
+                continue;
+            }
+            let s = active.swap_remove(i);
+            outs.swap_remove(i);
+            metrics.quarantined_seqs += 1;
+            out.events.push(SchedEvent {
+                step,
+                id: s.req.id,
+                kind: EventKind::Quarantine,
+            });
+        }
         step_fetched.clear();
         step_fetched.extend(outs.iter().map(|o| o.dram_bytes_total()));
         // the decoded page codes are this step's host-side read volume
@@ -779,6 +846,7 @@ pub fn serve_trace<M: StepModel>(
                     },
                     read_digest: s.read_digest,
                     evictions: s.evictions,
+                    recovered_faults: s.store.mc.recovery.faults_injected,
                     ttft_steps: ttft,
                     e2e_steps: e2e,
                     wall_ms: wall,
@@ -895,10 +963,17 @@ fn admit(
     admitted_order: u64,
     step: u64,
 ) -> Seq {
+    let mut store = KvPageStore::with_shared(meta, cfg.layout, cfg.codec, Arc::clone(lanes));
+    store.mc.parity = cfg.parity;
+    if let Some(plan) = &cfg.faults {
+        // the request id keys the fault schedule: replayable, and never
+        // shared between sequences
+        store.mc.install_faults(Arc::clone(plan), req.id);
+    }
     Seq {
         kv: KvState::new(meta),
         engine: PolicyEngine::with_shared(req.policy.clone(), Arc::clone(lanes)),
-        store: KvPageStore::with_shared(meta, cfg.layout, cfg.codec, Arc::clone(lanes)),
+        store,
         plan: KvViewPlan::new(),
         produced: Vec::new(),
         nll_sum: 0.0,
@@ -906,6 +981,7 @@ fn admit(
         read_digest: 0,
         fed: 0,
         evictions: 0,
+        recovery_seen: RecoveryStats::default(),
         admitted_order,
         first_token_step: None,
         last_token_step: step,
@@ -986,12 +1062,41 @@ fn swap_out(mut seq: Seq, meta: &ModelMeta, codec: Codec) -> Swapped {
     Swapped { seq, image }
 }
 
+/// Fold a sequence's controller recovery counters into the run metrics —
+/// delta since the last drain, so the fold is idempotent per site.
+fn drain_recovery(metrics: &mut ServeMetrics, s: &mut Seq) {
+    let now = s.store.mc.recovery;
+    metrics.faults_injected += now.faults_injected - s.recovery_seen.faults_injected;
+    metrics.retries += now.retries - s.recovery_seen.retries;
+    metrics.parity_repairs += now.parity_repairs - s.recovery_seen.parity_repairs;
+    metrics.salvaged_reads += now.salvaged_reads - s.recovery_seen.salvaged_reads;
+    s.recovery_seen = now;
+}
+
 /// Swap a sequence back in: stored pages decode through the controller
 /// (full precision, counted as fetch traffic), the tail and queries
 /// decompress from the swap image. Byte-identical to the never-evicted
 /// cache because the working copy is BF16-canonical.
-fn resume(sw: Swapped, meta: &ModelMeta, codec: Codec) -> anyhow::Result<Seq> {
+///
+/// The error variant returns the sequence alongside the error so the
+/// serve loop can quarantine it (drain its recovery counters, log the
+/// event) instead of losing it — swap-in is a read path, so the fault
+/// ladder can land on its last rung here too.
+#[allow(clippy::result_large_err)]
+fn resume(sw: Swapped, meta: &ModelMeta, codec: Codec) -> Result<Seq, (Seq, anyhow::Error)> {
     let Swapped { mut seq, image } = sw;
+    match resume_into(&mut seq, &image, meta, codec) {
+        Ok(()) => Ok(seq),
+        Err(e) => Err((seq, e)),
+    }
+}
+
+fn resume_into(
+    seq: &mut Seq,
+    image: &SwapImage,
+    meta: &ModelMeta,
+    codec: Codec,
+) -> anyhow::Result<()> {
     let row = meta.n_kv_heads * meta.d_head;
     seq.kv.k = vec![0.0; meta.kv_elems()];
     seq.kv.v = vec![0.0; meta.kv_elems()];
@@ -1020,7 +1125,7 @@ fn resume(sw: Swapped, meta: &ModelMeta, codec: Codec) -> anyhow::Result<Seq> {
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect();
     seq.kv.pos = image.pos;
-    Ok(seq)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1034,7 +1139,9 @@ mod tests {
 
     /// Everything deterministic about a response (wall time excluded).
     #[allow(clippy::type_complexity)]
-    fn key(r: &TrafficResponse) -> (u64, u32, Vec<u16>, u64, u64, u32, u64, u64, u64, u64, u64) {
+    fn key(
+        r: &TrafficResponse,
+    ) -> (u64, u32, Vec<u16>, u64, u64, u32, u64, u64, u64, u64, u64, u64) {
         (
             r.id,
             r.tenant,
@@ -1047,6 +1154,7 @@ mod tests {
             r.kv_ratio.to_bits(),
             r.ttft_steps,
             r.e2e_steps,
+            r.recovered_faults,
         )
     }
 
@@ -1325,7 +1433,7 @@ mod tests {
         let sw = swap_out(seq, &meta, Codec::Zstd);
         assert!(sw.seq.kv.k.is_empty(), "working set released");
         assert_eq!(sw.image.tail_tokens, 9);
-        let seq = resume(sw, &meta, Codec::Zstd).unwrap();
+        let seq = resume(sw, &meta, Codec::Zstd).map_err(|(_, e)| e).unwrap();
         assert_eq!(seq.kv.pos, 41);
         assert_eq!(seq.store.frames_digest(), digest0, "pages untouched");
         let k1: Vec<u32> = seq.kv.k.iter().map(|x| x.to_bits()).collect();
@@ -1357,6 +1465,149 @@ mod tests {
         let (short, _) = run(&trace, &capped, 1, 13);
         assert!(short.responses.len() < 5);
         assert!(short.steps <= 30);
+    }
+
+    #[test]
+    fn fault_injection_is_deterministic_and_spares_unaffected_sequences() {
+        use crate::memctrl::FaultClass;
+        let trace = Trace::generate(&dense_spec(16, 2.0, 16, 32), 23);
+        let slack = 1u64 << 20; // no pressure/eviction interference
+        let clean_cfg = SchedConfig::compressed(slack);
+        let (clean, cm) = run(&trace, &clean_cfg, 1, 9);
+        assert_eq!(clean.responses.len(), 16);
+        assert_eq!(
+            cm.faults_injected
+                + cm.retries
+                + cm.parity_repairs
+                + cm.salvaged_reads
+                + cm.quarantined_seqs,
+            0,
+            "fault-free run must count zero recovery actions"
+        );
+        // parity only adds the stored parity plane: identical schedule,
+        // tokens, and quality; different stored bytes
+        let (clean_par, _) =
+            run(&trace, &SchedConfig { parity: true, ..clean_cfg.clone() }, 1, 9);
+        assert_eq!(clean_par.events, clean.events);
+        for (a, b) in clean_par.responses.iter().zip(&clean.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.mean_nll.to_bits(), b.mean_nll.to_bits());
+            assert_ne!(a.kv_pages_digest, b.kv_pages_digest, "parity changes stored bytes");
+        }
+        let plan = Arc::new(FaultPlan {
+            seed: 77,
+            p_plane_flip: 220,
+            p_header_flip: 17,
+            p_transient: 80,
+            p_lane_fault: 40,
+            flip_plane: None,
+        });
+        for parity in [false, true] {
+            let cfg = SchedConfig {
+                parity,
+                faults: Some(Arc::clone(&plan)),
+                ..clean_cfg.clone()
+            };
+            let (base, bm) = run(&trace, &cfg, 1, 9);
+            // same seed + same plan => identical schedule, recovery
+            // actions, and responses at every lane count and fetch mode
+            for lanes in [2usize, 8, 32] {
+                for fetch in [FetchMode::Batched, FetchMode::PerSequence] {
+                    let cfg = SchedConfig { fetch, ..cfg.clone() };
+                    let (o, m) = run(&trace, &cfg, lanes, 9);
+                    let tag = format!("parity={parity}/{lanes} lanes/{fetch:?}");
+                    assert_eq!(o.events, base.events, "{tag}: schedule diverged");
+                    assert_eq!(
+                        o.responses.iter().map(key).collect::<Vec<_>>(),
+                        base.responses.iter().map(key).collect::<Vec<_>>(),
+                        "{tag}: responses diverged"
+                    );
+                    assert_eq!(
+                        (
+                            m.faults_injected,
+                            m.retries,
+                            m.parity_repairs,
+                            m.salvaged_reads,
+                            m.quarantined_seqs
+                        ),
+                        (
+                            bm.faults_injected,
+                            bm.retries,
+                            bm.parity_repairs,
+                            bm.salvaged_reads,
+                            bm.quarantined_seqs
+                        ),
+                        "{tag}: recovery actions diverged"
+                    );
+                }
+            }
+            // the ladder ran, and landed on the documented rungs
+            assert!(bm.faults_injected > 0, "parity={parity}: plan never fired");
+            assert!(bm.retries > 0, "parity={parity}: no transient retries");
+            if parity {
+                assert!(bm.parity_repairs > 0, "parity on must repair in place");
+                assert_eq!(bm.salvaged_reads, 0, "repair preempts salvage");
+            } else {
+                assert_eq!(bm.parity_repairs, 0, "no parity plane to repair from");
+                assert!(bm.salvaged_reads > 0, "plane flips must salvage");
+            }
+            // unaffected sequences stay byte-identical to the fault-free
+            // run (the parity baseline when parity is on — parity changes
+            // every stored frame)
+            let baseline = if parity { &clean_par } else { &clean };
+            let mut unaffected = 0usize;
+            for r in &base.responses {
+                let c = baseline
+                    .responses
+                    .iter()
+                    .find(|c| c.id == r.id)
+                    .expect("baseline response");
+                assert_eq!(r.tokens, c.tokens, "req {}", r.id);
+                assert_eq!(r.mean_nll.to_bits(), c.mean_nll.to_bits(), "req {}", r.id);
+                if r.recovered_faults == 0 {
+                    unaffected += 1;
+                    assert_eq!(r.kv_pages_digest, c.kv_pages_digest, "req {}", r.id);
+                    assert_eq!(r.read_digest, c.read_digest, "req {}", r.id);
+                    assert_eq!(r.kv_fetched_bytes, c.kv_fetched_bytes, "req {}", r.id);
+                }
+            }
+            assert!(unaffected > 0, "parity={parity}: rates drowned every sequence");
+        }
+        // the ladder coexists with the pressure/eviction machinery: a
+        // tight budget under the same plan drains without panic and stays
+        // bit-deterministic across lane counts (the swap-in read path
+        // quarantines cleanly too)
+        let tight = SchedConfig {
+            faults: Some(Arc::clone(&plan)),
+            ..SchedConfig::compressed(9500)
+        };
+        let (t1, tm1) = run(&trace, &tight, 1, 9);
+        let (t8, tm8) = run(&trace, &tight, 8, 9);
+        assert_eq!(t1.events, t8.events);
+        assert_eq!(
+            t1.responses.iter().map(key).collect::<Vec<_>>(),
+            t8.responses.iter().map(key).collect::<Vec<_>>()
+        );
+        assert_eq!(tm1.quarantined_seqs, tm8.quarantined_seqs);
+        assert!(
+            t1.events.iter().any(|e| e.kind == EventKind::Evict),
+            "tight budget must evict or the coexistence claim is vacuous"
+        );
+        // the last rung, pinned: header corruption at every site
+        // quarantines every sequence cleanly — zero panics, zero silent
+        // bytes, and the batch loop drains
+        let all_q = SchedConfig {
+            faults: Some(Arc::new(FaultPlan::always(1, FaultClass::HeaderFlip))),
+            ..clean_cfg.clone()
+        };
+        let (qo, qm) = run(&trace, &all_q, 1, 9);
+        assert_eq!(qm.quarantined_seqs, 16, "every sequence hits the last rung");
+        assert!(qo.responses.is_empty());
+        assert_eq!(
+            qo.events.iter().filter(|e| e.kind == EventKind::Quarantine).count(),
+            16
+        );
     }
 
     #[test]

@@ -203,6 +203,10 @@ pub struct SimStats {
     pub row_conflicts: u64,
     /// Sum of per-request latencies (cycles from arrival to data).
     pub total_latency: u64,
+    /// Requests re-enqueued by the controller's recovery ladder (bounded
+    /// retry of injected transient bus/lane faults). Counted in addition
+    /// to `requests`; zero on a fault-free run.
+    pub retried_requests: u64,
 }
 
 impl SimStats {
@@ -343,6 +347,16 @@ impl MemorySystem {
             tag += 1;
         }
         tag
+    }
+
+    /// Re-enqueue a byte range the recovery ladder is re-reading after a
+    /// transient fault. Identical bus traffic to the original read
+    /// ([`enqueue_range`](Self::enqueue_range) with tag 0), plus one
+    /// `retried_requests` tick per call so fault-free and faulty runs are
+    /// distinguishable in [`SimStats`].
+    pub fn enqueue_retry(&mut self, base: u64, bytes: u64) -> u64 {
+        self.stats.retried_requests += 1;
+        self.enqueue_range(base, bytes, false, 0)
     }
 
     /// Drain all queues; returns the cycle when the last data beat lands.

@@ -14,6 +14,7 @@
 //! signatures and ordered-merge semantics, so output stays byte-identical
 //! to the serial path at every lane count.
 
+use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -78,6 +79,13 @@ struct PoolState {
     remaining: usize,
     /// Participating pool workers that panicked during the batch.
     panics: usize,
+    /// The first panicking worker's payload, rethrown verbatim at the
+    /// submitting call site so the original message (not a generic
+    /// "worker panicked" count) reaches the caller. Only this job's
+    /// submitter observes it: the field is cleared on every publish, so
+    /// one poisoned batch can never fail a later submitter — the shared
+    /// `default_pool()` stays serviceable.
+    panic_payload: Option<Box<dyn Any + Send>>,
     shutdown: bool,
 }
 
@@ -151,10 +159,13 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
         // SAFETY: the submitter blocks until `remaining == 0`, so the
         // closure outlives this call.
         let task = unsafe { &*job.task };
-        let panicked = catch_unwind(AssertUnwindSafe(|| task(wid))).is_err();
+        let result = catch_unwind(AssertUnwindSafe(|| task(wid)));
         let mut st = lock_state(&shared.state);
-        if panicked {
+        if let Err(payload) = result {
             st.panics += 1;
+            if st.panic_payload.is_none() {
+                st.panic_payload = Some(payload);
+            }
         }
         st.remaining -= 1;
         if st.remaining == 0 {
@@ -201,6 +212,7 @@ impl LaneArray {
                 job: None,
                 remaining: 0,
                 panics: 0,
+                panic_payload: None,
                 shutdown: false,
             }),
             work_cvs: (1..n).map(|_| Condvar::new()).collect(),
@@ -279,6 +291,7 @@ impl LaneArray {
             });
             st.remaining = nworkers - 1;
             st.panics = 0;
+            st.panic_payload = None;
         }
         // targeted wake: exactly the workers this batch participates
         // (wids 1..nworkers), each on its private condvar — the ROADMAP's
@@ -291,7 +304,7 @@ impl LaneArray {
         // batch can finish entirely inline while the pool workers are
         // still waking, costing zero context switches in the best case.
         let caller = catch_unwind(AssertUnwindSafe(|| task(0)));
-        let worker_panics = {
+        let (worker_panics, worker_payload) = {
             let mut st = lock_state(&self.shared.state);
             while st.remaining > 0 {
                 st = self
@@ -301,12 +314,17 @@ impl LaneArray {
                     .unwrap_or_else(|p| p.into_inner());
             }
             st.job = None;
-            st.panics
+            (st.panics, st.panic_payload.take())
         };
         if let Err(payload) = caller {
             resume_unwind(payload);
         }
+        if let Some(payload) = worker_payload {
+            resume_unwind(payload);
+        }
         if worker_panics > 0 {
+            // unreachable unless a payload went missing; keep the count
+            // as a backstop so a worker panic can never pass silently
             panic!("lane worker panicked ({worker_panics} worker(s))");
         }
     }

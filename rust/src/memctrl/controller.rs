@@ -11,6 +11,7 @@
 
 use std::sync::Arc;
 
+use super::fault::{FaultClass, FaultCtx, FaultPlan, QuarantineError, RecoveryStats, SALVAGE_FLOOR};
 use super::frame::{
     decode_header, dtype_from_code, encode_header, plane_checksum, FrameHeader, FrameKind,
 };
@@ -123,6 +124,10 @@ pub struct Region {
     frames: Vec<(u64, Vec<u8>)>,
     /// Codes per frame.
     pub frame_codes: usize,
+    /// Plane-prefix ceiling after a salvage: reads clamp to this many
+    /// planes because a deeper plane holds unrepaired corruption
+    /// (`u32::MAX` = intact; see `MemController::prepare_read`).
+    degraded_keep: u32,
 }
 
 impl Region {
@@ -145,6 +150,11 @@ impl Region {
     /// The paper's compression ratio for this region.
     pub fn ratio(&self) -> f64 {
         self.logical_bytes() as f64 / self.stored_bytes().max(1) as f64
+    }
+
+    /// Plane-prefix ceiling after a salvage (`u32::MAX` = intact).
+    pub fn degraded_keep(&self) -> u32 {
+        self.degraded_keep
     }
 }
 
@@ -173,6 +183,16 @@ pub struct MemController {
     next_addr: u64,
     /// Cumulative read accounting.
     pub total: ReadStats,
+    /// Build Proposed frames with a trailing XOR parity plane (off by
+    /// default; geometry-versioned, costed in stored footprint) so the
+    /// recovery ladder can reconstruct a single corrupted plane in place.
+    pub parity: bool,
+    /// Installed fault-injection context (`None` = faults disarmed; the
+    /// ladder in [`MemController::prepare_read`] only engages when armed,
+    /// so genuine corruption stays a hard error).
+    fault: Option<FaultCtx>,
+    /// Recovery-ladder counters (drained per step by the serving layer).
+    pub recovery: RecoveryStats,
 }
 
 impl MemController {
@@ -202,11 +222,193 @@ impl MemController {
             regions: Vec::new(),
             next_addr: 0,
             total: ReadStats::default(),
+            parity: false,
+            fault: None,
+            recovery: RecoveryStats::default(),
         }
+    }
+
+    /// Arm deterministic fault injection on this controller's reads.
+    /// `owner` is mixed into every site hash (the serving layer passes
+    /// the request id) so no two sequences share a fault schedule.
+    pub fn install_faults(&mut self, plan: Arc<FaultPlan>, owner: u64) {
+        self.fault = Some(FaultCtx::new(plan, owner));
+    }
+
+    /// Advance the armed fault context's virtual step (no-op when
+    /// disarmed). Each step gets a fresh per-site fault draw.
+    pub fn set_fault_step(&mut self, step: u64) {
+        if let Some(ctx) = self.fault.as_mut() {
+            ctx.set_step(step);
+        }
+    }
+
+    /// Whether this step's ladder resolved `addr` with a bus retry — the
+    /// DRAM-attached read paths re-enqueue such ranges so the retry
+    /// traffic is timed.
+    fn fault_retry_pending(&self, addr: u64) -> bool {
+        self.fault
+            .as_ref()
+            .is_some_and(|c| c.retry_addrs.contains(&addr))
     }
 
     pub fn region(&self, id: RegionId) -> &Region {
         &self.regions[id.0]
+    }
+
+    /// Resolve a read's effective plane prefix through the self-healing
+    /// ladder, BEFORE any DRAM command is planned — every read path
+    /// (`load`, `load_into`, `fetch_group`, and the pagestore fetches)
+    /// runs this per region. With no fault context armed it is just the
+    /// dtype + `degraded_keep` clamp.
+    ///
+    /// When armed, the installed [`FaultPlan`] draws once per stored
+    /// frame (a *site* is `(virtual step, owner, frame addr)`; a site
+    /// already resolved this step is not re-drawn, so batched and
+    /// per-sequence fetch modes inject identically) and each fired fault
+    /// is resolved by exactly one ladder rung:
+    ///
+    /// 1. transient bus / lane faults → bounded retry (counted, and
+    ///    re-enqueued on attached DRAM by the caller);
+    /// 2. a stored plane flip with parity on → XOR reconstruction of the
+    ///    corrupted plane in place, verified against its checksum;
+    /// 3. without parity, a flip in plane `c >= SALVAGE_FLOOR` → the read
+    ///    serves the intact prefix and the region is marked
+    ///    degraded-only (`degraded_keep = c`);
+    /// 4. header corruption, or a flip below the salvage floor →
+    ///    [`QuarantineError`] (typed, downcastable) so the serving layer
+    ///    can evict just the owning sequence.
+    pub fn prepare_read(&mut self, id: RegionId, keep_bits: u32) -> anyhow::Result<u32> {
+        let region = &mut self.regions[id.0];
+        let keep = keep_bits.min(region.dtype.bits());
+        let mut eff = keep.min(region.degraded_keep);
+        let Some(ctx) = self.fault.as_mut() else {
+            return Ok(eff);
+        };
+        if region.layout != Layout::Proposed {
+            // the bare baseline has no checksums, no planes, no ladder
+            return Ok(eff);
+        }
+        let (step, owner) = (ctx.step, ctx.owner);
+        for fi in 0..region.frames.len() {
+            let addr = region.frames[fi].0;
+            let Some(class) = ctx.plan.decide(step, owner, addr) else {
+                continue;
+            };
+            if !ctx.applied.insert(addr) {
+                // this site already resolved this step; a salvage clamp
+                // persists through degraded_keep
+                eff = eff.min(region.degraded_keep);
+                continue;
+            }
+            self.recovery.faults_injected += 1;
+            match class {
+                FaultClass::Transient | FaultClass::LaneFault => {
+                    // the injected fault persists 1..=2 attempts, so the
+                    // bounded retry rung (MAX_RETRIES = 3) always clears
+                    // it within the same virtual step
+                    let attempts = 1 + ctx.plan.draw(step, owner, addr, 0x7E7A, 2);
+                    self.recovery.retries += attempts;
+                    ctx.retry_addrs.insert(addr);
+                }
+                FaultClass::HeaderFlip => {
+                    // flip a stored header byte; parity cannot cover the
+                    // header and a retry never clears stored corruption,
+                    // so the ladder lands on its last rung
+                    let frame = &mut region.frames[fi].1;
+                    let off = ctx.plan.draw(step, owner, addr, 0x4EAD, 12.min(frame.len() as u64))
+                        as usize;
+                    let mask = 1u8 << ctx.plan.draw(step, owner, addr, 0xB177, 8);
+                    if let Some(b) = frame.get_mut(off) {
+                        *b ^= mask;
+                    }
+                    return Err(anyhow::Error::new(QuarantineError {
+                        region: region.name.clone(),
+                        reason: format!("stored header corruption (frame {addr:#x})"),
+                    }));
+                }
+                FaultClass::PlaneFlip => {
+                    let (h, _) = decode_header(&region.frames[fi].1)?;
+                    let frame = &mut region.frames[fi].1;
+                    let nplanes = h.plane_len.len();
+                    let targets = nplanes + usize::from(h.parity);
+                    let stored_len = |t: usize| -> usize {
+                        if t < nplanes {
+                            h.plane_len[t].0 as usize
+                        } else {
+                            h.parity_plane_bytes()
+                        }
+                    };
+                    let mut t = match ctx.plan.flip_plane {
+                        Some(p) => (p as usize).min(targets - 1),
+                        None => ctx.plan.draw(step, owner, addr, 0x91A4, targets as u64) as usize,
+                    };
+                    // an empty plane has no byte to flip: advance
+                    // cyclically; if every plane is empty, nothing fired
+                    let mut spins = 0;
+                    while stored_len(t) == 0 && spins < targets {
+                        t = (t + 1) % targets;
+                        spins += 1;
+                    }
+                    if stored_len(t) == 0 {
+                        self.recovery.faults_injected -= 1;
+                        continue;
+                    }
+                    let plane_off = |t: usize| -> usize {
+                        h.header_bytes()
+                            + h.plane_len[..t.min(nplanes)]
+                                .iter()
+                                .map(|&(l, _)| l as usize)
+                                .sum::<usize>()
+                    };
+                    let off =
+                        plane_off(t) + ctx.plan.draw(step, owner, addr, 0x0FF5, stored_len(t) as u64)
+                            as usize;
+                    frame[off] ^= 1u8 << ctx.plan.draw(step, owner, addr, 0xB177, 8);
+                    if h.parity {
+                        // rung 2: rebuild the damaged plane as the XOR of
+                        // every other (zero-padded) plane + parity, splice
+                        // it in place, and verify against its checksum —
+                        // the healed frame IS the re-store
+                        let plen = h.parity_plane_bytes();
+                        let mut recon = vec![0u8; plen];
+                        for p in 0..targets {
+                            if p == t {
+                                continue;
+                            }
+                            let o = plane_off(p);
+                            for (i, &b) in frame[o..o + stored_len(p)].iter().enumerate() {
+                                recon[i] ^= b;
+                            }
+                        }
+                        let want_len = stored_len(t);
+                        let want_sum = if t < nplanes { h.plane_sum[t] } else { h.parity_sum };
+                        anyhow::ensure!(
+                            plane_checksum(&recon[..want_len]) == want_sum,
+                            "parity reconstruction of plane {t} failed its checksum"
+                        );
+                        let o = plane_off(t);
+                        frame[o..o + want_len].copy_from_slice(&recon[..want_len]);
+                        self.recovery.parity_repairs += 1;
+                    } else if t as u32 >= SALVAGE_FLOOR {
+                        // rung 3: the corruption sits beyond the planes a
+                        // hard-pressure read needs — serve the intact
+                        // prefix and mark the region degraded-only
+                        region.degraded_keep = region.degraded_keep.min(t as u32);
+                        eff = eff.min(region.degraded_keep);
+                        self.recovery.salvaged_reads += 1;
+                    } else {
+                        return Err(anyhow::Error::new(QuarantineError {
+                            region: region.name.clone(),
+                            reason: format!(
+                                "plane {t} corrupt below the salvage floor (frame {addr:#x})"
+                            ),
+                        }));
+                    }
+                }
+            }
+        }
+        Ok(eff)
     }
 
     fn alloc(&mut self, bytes: usize) -> u64 {
@@ -219,11 +421,11 @@ impl MemController {
     /// across the lane array.
     pub fn store_weights(&mut self, name: &str, t: &CodeTensor) -> RegionId {
         let codes_per_block = BLOCK_BYTES * 8 / t.dtype.bits() as usize;
-        let (layout, codec, dtype) = (self.layout, self.codec, t.dtype);
+        let (layout, codec, dtype, parity) = (self.layout, self.codec, t.dtype, self.parity);
         let chunks: Vec<&[u16]> = t.codes.chunks(codes_per_block).collect();
         let built: Vec<Vec<u8>> = self.lanes.run(&chunks, |lane, chunk| match layout {
             Layout::Proposed => {
-                build_frame_with(lane, FrameKind::Weights, dtype, codec, chunk, 0, &[], 0)
+                build_frame_with(lane, FrameKind::Weights, dtype, codec, chunk, 0, &[], 0, parity)
             }
             Layout::Traditional => build_traditional_frame(FrameKind::Weights, dtype, chunk),
         });
@@ -243,6 +445,7 @@ impl MemController {
             mode: DecorrelateMode::None,
             frames,
             frame_codes: codes_per_block,
+            degraded_keep: u32::MAX,
         });
         RegionId(self.regions.len() - 1)
     }
@@ -278,6 +481,7 @@ impl MemController {
             mode: self.mode,
             dtype,
             channels,
+            parity: self.parity,
         }
     }
 
@@ -309,6 +513,7 @@ impl MemController {
             mode: self.mode,
             frames,
             frame_codes: self.kv_group_tokens * channels,
+            degraded_keep: u32::MAX,
         });
         RegionId(self.regions.len() - 1)
     }
@@ -321,7 +526,9 @@ impl MemController {
     /// this; cumulative totals are updated exactly as `load` would.
     pub fn fetch_stats(&mut self, id: RegionId, keep_bits: u32) -> anyhow::Result<ReadStats> {
         let region = &self.regions[id.0];
-        let keep = keep_bits.min(region.dtype.bits());
+        // what-if accounting clamps like a real read (degraded regions
+        // fetch their salvaged prefix) but never draws new faults
+        let keep = keep_bits.min(region.dtype.bits()).min(region.degraded_keep);
         let mut stats = ReadStats::default();
         for (_, frame) in &region.frames {
             plan_frame_fetch(&mut stats, &self.engine, region.layout, frame, keep)?;
@@ -341,8 +548,8 @@ impl MemController {
         keep_bits: u32,
         mut mem: Option<&mut MemorySystem>,
     ) -> anyhow::Result<(Vec<u16>, ReadStats)> {
+        let keep = self.prepare_read(id, keep_bits)?;
         let region = &self.regions[id.0];
-        let keep = keep_bits.min(region.dtype.bits());
         let layout = region.layout;
         let mut stats = ReadStats::default();
         // plan first with no side effects, so a corrupt header cannot
@@ -363,6 +570,9 @@ impl MemController {
         if let Some(m) = mem.as_deref_mut() {
             for &(addr, bytes) in &ranges {
                 m.enqueue_range(addr, bytes, false, 0);
+                if self.fault_retry_pending(addr) {
+                    m.enqueue_retry(addr, bytes);
+                }
             }
         }
         let plan = RegionPlan { keep, layout, frames, total_m };
@@ -390,8 +600,8 @@ impl MemController {
         keep_bits: u32,
         dest: &mut [u16],
     ) -> anyhow::Result<ReadStats> {
+        let keep = self.prepare_read(id, keep_bits)?;
         let region = &self.regions[id.0];
-        let keep = keep_bits.min(region.dtype.bits());
         let mut stats = ReadStats::default();
         let mut frames: Vec<FramePlan<'_>> = Vec::with_capacity(region.frames.len());
         let mut total_m = 0usize;
@@ -439,11 +649,16 @@ impl MemController {
         //    only after the whole plan validates (same region/frame order
         //    per-region loads use), so a corrupt header cannot orphan
         //    earlier regions' commands.
+        // fault-recovery pre-pass (needs &mut self) before the immutable
+        // plan borrows below
+        let mut keeps = Vec::with_capacity(reqs.len());
+        for &(id, keep_bits) in reqs {
+            keeps.push(self.prepare_read(id, keep_bits)?);
+        }
         let mut plans: Vec<RegionPlan<'_>> = Vec::with_capacity(reqs.len());
         let mut ranges: Vec<(u64, u64)> = Vec::new();
-        for &(id, keep_bits) in reqs {
+        for (&(id, _), &keep) in reqs.iter().zip(&keeps) {
             let region = &self.regions[id.0];
-            let keep = keep_bits.min(region.dtype.bits());
             let mut frames = Vec::with_capacity(region.frames.len());
             let mut total_m = 0usize;
             for (addr, frame) in &region.frames {
@@ -466,6 +681,9 @@ impl MemController {
         if let Some(ms) = mem.as_deref_mut() {
             for &(addr, bytes) in &ranges {
                 ms.enqueue_range(addr, bytes, false, 0);
+                if self.fault_retry_pending(addr) {
+                    ms.enqueue_retry(addr, bytes);
+                }
             }
             stats.dram_cycles = ms.drain();
         }
@@ -658,6 +876,8 @@ pub struct KvFrameSpec {
     pub mode: DecorrelateMode,
     pub dtype: Dtype,
     pub channels: usize,
+    /// Append an XOR parity plane (single-plane repair; footprint cost).
+    pub parity: bool,
 }
 
 /// Build one KV group frame (`nt` tokens × `spec.channels`) on a lane —
@@ -680,6 +900,7 @@ pub fn build_kv_group_frame(lane: &mut Lane, spec: KvFrameSpec, nt: usize, chunk
                 spec.channels,
                 &betas,
                 mode_code(spec.mode),
+                spec.parity,
             )
         }
         Layout::Traditional => build_traditional_frame(FrameKind::KvCache, spec.dtype, chunk),
@@ -715,6 +936,7 @@ fn build_frame_with(
     channels: usize,
     betas: &[u16],
     mode: u8,
+    parity: bool,
 ) -> Vec<u8> {
     let pb = disaggregate(dtype, codes);
     let mut payload = Vec::new();
@@ -726,6 +948,22 @@ fn build_frame_with(
         plane_sum.push(plane_checksum(&payload[off..off + len as usize]));
         off += len as usize;
     }
+    // XOR of every stored plane payload, each zero-padded to the longest
+    // plane: any single damaged plane is the XOR of the others + this
+    let mut parity_plane = Vec::new();
+    let mut parity_sum = 0u8;
+    if parity {
+        let plen = plane_len.iter().map(|&(l, _)| l as usize).max().unwrap_or(0);
+        parity_plane = vec![0u8; plen];
+        let mut off = 0usize;
+        for &(len, _) in &plane_len {
+            for (i, &b) in payload[off..off + len as usize].iter().enumerate() {
+                parity_plane[i] ^= b;
+            }
+            off += len as usize;
+        }
+        parity_sum = plane_checksum(&parity_plane);
+    }
     let h = FrameHeader {
         kind,
         dtype,
@@ -735,9 +973,12 @@ fn build_frame_with(
         mode,
         plane_len,
         plane_sum,
+        parity,
+        parity_sum,
     };
     let mut frame = encode_header(&h, betas);
     frame.extend_from_slice(&payload);
+    frame.extend_from_slice(&parity_plane);
     frame
 }
 
@@ -754,6 +995,8 @@ fn build_traditional_frame(kind: FrameKind, dtype: Dtype, chunk: &[u16]) -> Vec<
             mode: 0,
             plane_len: vec![],
             plane_sum: vec![],
+            parity: false,
+            parity_sum: 0,
         },
         &[],
     );
@@ -1024,6 +1267,7 @@ mod tests {
                 mode: DecorrelateMode::ExpDelta,
                 dtype: Dtype::Bf16,
                 channels,
+                parity: false,
             };
             let mut lane = Lane::new(0);
             let frame = build_kv_group_frame(&mut lane, spec, tokens, &codes);
@@ -1355,5 +1599,137 @@ mod tests {
         assert!((e.throughput_bps() - 2.048e12).abs() < 1e9);
         let ns = e.process_ns(4096);
         assert!(ns > 60.0 && ns < 120.0, "ns={ns}");
+    }
+
+    #[test]
+    fn parity_frames_roundtrip_and_cost_only_footprint() {
+        // Parity on: loads at every precision return the same codes and
+        // move the same DRAM bytes as parity off; only stored bytes grow.
+        let t = weight_tensor(12_000, 31);
+        let kv_codes =
+            crate::synth::gen_kv_layer(48, 32, crate::synth::CorpusProfile::Book, 0.5, 8);
+        let mut plain = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 2);
+        let mut par = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 2);
+        par.parity = true;
+        let (wp, wq) = (plain.store_weights("w", &t), par.store_weights("w", &t));
+        let (kp, kq) = (
+            plain.store_kv("kv", Dtype::Bf16, 48, 32, &kv_codes),
+            par.store_kv("kv", Dtype::Bf16, 48, 32, &kv_codes),
+        );
+        assert!(par.region(wq).stored_bytes() > plain.region(wp).stored_bytes());
+        assert!(par.region(kq).stored_bytes() > plain.region(kp).stored_bytes());
+        for (a, b) in [(wp, wq), (kp, kq)] {
+            for keep in [0u32, 4, 11, 16] {
+                let (c0, s0) = plain.load(a, keep, None).unwrap();
+                let (c1, s1) = par.load(b, keep, None).unwrap();
+                assert_eq!(c1, c0, "keep={keep}");
+                // the parity plane is never fetched: the read prefix only
+                // grows by the 1-byte parity_sum header field per frame
+                assert_eq!(s1.dram_bytes, s0.dram_bytes + s0.frames, "keep={keep}");
+                assert_eq!(s1.logical_bytes, s0.logical_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn transient_faults_retry_on_the_dram_bus_and_resolve() {
+        use crate::memctrl::fault::{FaultClass, FaultPlan};
+        let t = weight_tensor(20_000, 41);
+        let mut mc = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+        let id = mc.store_weights("w", &t);
+        let (want, clean) = mc.load(id, 16, None).unwrap();
+        mc.install_faults(Arc::new(FaultPlan::always(5, FaultClass::Transient)), 1);
+        let mut mem = MemorySystem::new(DDR5_4800_PAPER.clone());
+        let (got, stats) = mc.load(id, 16, Some(&mut mem)).unwrap();
+        assert_eq!(got, want, "retried read must serve intact bytes");
+        assert_eq!(stats.dram_bytes, clean.dram_bytes, "accounting unchanged");
+        assert_eq!(mem.stats.retried_requests, clean.frames);
+        assert!(mc.recovery.retries >= clean.frames);
+        assert_eq!(mc.recovery.faults_injected, clean.frames);
+        assert_eq!(mc.recovery.parity_repairs + mc.recovery.salvaged_reads, 0);
+    }
+
+    #[test]
+    fn parity_repairs_plane_flips_in_place_to_identical_bytes() {
+        use crate::memctrl::fault::{FaultClass, FaultPlan};
+        let kv_codes =
+            crate::synth::gen_kv_layer(64, 32, crate::synth::CorpusProfile::Book, 0.5, 5);
+        // every plane index, including one past the end (the parity plane)
+        for flip_plane in [0u8, 1, 7, 12, 15, 16] {
+            let mut mc = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+            mc.parity = true;
+            let id = mc.store_kv("kv", Dtype::Bf16, 64, 32, &kv_codes);
+            let pristine: Vec<Vec<u8>> =
+                mc.region(id).frames().map(|(_, f)| f.to_vec()).collect();
+            let mut plan = FaultPlan::always(9, FaultClass::PlaneFlip);
+            plan.flip_plane = Some(flip_plane);
+            mc.install_faults(Arc::new(plan), 2);
+            let (got, _) = mc.load(id, 16, None).unwrap();
+            assert_eq!(got, kv_codes, "plane {flip_plane}: wrong codes");
+            let healed: Vec<Vec<u8>> =
+                mc.region(id).frames().map(|(_, f)| f.to_vec()).collect();
+            assert_eq!(healed, pristine, "plane {flip_plane}: heal not byte-exact");
+            assert_eq!(mc.recovery.parity_repairs, pristine.len() as u64);
+            assert_eq!(mc.region(id).degraded_keep(), u32::MAX, "no degrade with parity");
+        }
+    }
+
+    #[test]
+    fn salvage_serves_the_intact_prefix_and_marks_the_region() {
+        use crate::memctrl::fault::{FaultClass, FaultPlan};
+        let kv_codes =
+            crate::synth::gen_kv_layer(32, 16, crate::synth::CorpusProfile::Book, 0.5, 6);
+        let mut clean = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+        let cid = clean.store_kv("kv", Dtype::Bf16, 32, 16, &kv_codes);
+        let (want9, stats9) = clean.load(cid, 9, None).unwrap();
+        let (_, full_stats) = clean.load(cid, 16, None).unwrap();
+        let mut mc = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+        let id = mc.store_kv("kv", Dtype::Bf16, 32, 16, &kv_codes);
+        let mut plan = FaultPlan::always(3, FaultClass::PlaneFlip);
+        plan.flip_plane = Some(9);
+        mc.install_faults(Arc::new(plan), 4);
+        let (got, _) = mc.load(id, 16, None).unwrap();
+        assert_eq!(got, want9, "salvaged read == clean read clamped to plane 9");
+        assert_eq!(mc.region(id).degraded_keep(), 9);
+        assert!(mc.recovery.salvaged_reads > 0);
+        // the clamp persists once the fault context is gone
+        mc.fault = None;
+        let (again, stats) = mc.load(id, 16, None).unwrap();
+        assert_eq!(again, want9);
+        assert_eq!(stats.dram_bytes, stats9.dram_bytes);
+        assert!(stats.dram_bytes < full_stats.dram_bytes);
+    }
+
+    #[test]
+    fn quarantine_is_typed_and_only_fires_when_armed() {
+        use crate::memctrl::fault::{FaultClass, FaultPlan, QuarantineError};
+        let kv_codes =
+            crate::synth::gen_kv_layer(16, 16, crate::synth::CorpusProfile::Book, 0.5, 7);
+        for class in [FaultClass::HeaderFlip, FaultClass::PlaneFlip] {
+            let mut mc = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+            let id = mc.store_kv("kv", Dtype::Bf16, 16, 16, &kv_codes);
+            let mut plan = FaultPlan::always(11, class);
+            plan.flip_plane = Some(1); // below the salvage floor
+            mc.install_faults(Arc::new(plan), 3);
+            let err = mc.load(id, 16, None).unwrap_err();
+            assert!(
+                err.downcast_ref::<QuarantineError>().is_some(),
+                "{class:?} must quarantine, got: {err}"
+            );
+            assert!(mc.recovery.retries == 0, "stored corruption never retries");
+        }
+        // disarmed: the same stored corruption is a plain hard error
+        let mut mc = MemController::with_lanes(Layout::Proposed, Codec::Zstd, 1);
+        let id = mc.store_kv("kv", Dtype::Bf16, 16, 16, &kv_codes);
+        let mut plan = FaultPlan::always(11, FaultClass::HeaderFlip);
+        plan.flip_plane = None;
+        mc.install_faults(Arc::new(plan), 3);
+        let _ = mc.load(id, 16, None).unwrap_err(); // corrupt the header
+        mc.fault = None;
+        let err = mc.load(id, 16, None).unwrap_err();
+        assert!(
+            err.downcast_ref::<QuarantineError>().is_none(),
+            "disarmed corruption must stay a hard error"
+        );
     }
 }

@@ -1,0 +1,378 @@
+//! # Deterministic fault injection ([`FaultPlan`]) + recovery accounting
+//!
+//! Production-scale serving makes memory faults a *when*, not an *if*:
+//! bit flips in stored frames, corrupted headers, transient bus read
+//! failures, and flaky decode lanes. This module is the seeded,
+//! replayable model of those faults — the same discipline as the
+//! `CAMCTRC2` trace format: a [`FaultPlan`] is a pure function of
+//! `(seed, virtual step, owner, frame address)`, so the exact same
+//! faults fire at the exact same sites on every replay, at every lane
+//! count, in both batched and per-sequence fetch modes.
+//!
+//! ## Fault classes
+//!
+//! | class | what it models | persisted? | resolving rung |
+//! |---|---|---|---|
+//! | [`FaultClass::Transient`] | a failed DRAM bus transaction | no | bounded retry |
+//! | [`FaultClass::LaneFault`] | a decode lane producing garbage once | no | bounded retry (re-dispatch) |
+//! | [`FaultClass::PlaneFlip`] | a bit flip in a stored plane byte | yes | parity repair / salvage / quarantine |
+//! | [`FaultClass::HeaderFlip`] | a bit flip in a stored frame header | yes | quarantine |
+//!
+//! At most one class fires per `(step, owner, addr)` site: a single
+//! 16-bit draw is compared against the cumulative per-65536 rates in a
+//! fixed priority order (transient, lane, plane, header).
+//!
+//! ## Recovery ladder
+//!
+//! The ladder itself lives in `MemController::prepare_read` (see
+//! [`crate::memctrl`] module docs for the full contract); this module
+//! only defines the plan, the counters ([`RecoveryStats`]), the
+//! per-controller injection context ([`FaultCtx`]), and the typed
+//! quarantine error ([`QuarantineError`]) that lets the serving layer
+//! evict exactly one sequence instead of failing the batch.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::util::hash::Fnv1a;
+
+/// The plane-prefix floor below which a corrupt plane cannot be salvaged
+/// by clamping: the scheduler's hard pressure rung still needs 4 planes,
+/// so a read that cannot serve at least that prefix quarantines instead.
+pub const SALVAGE_FLOOR: u32 = 4;
+
+/// How many times a read retries a transiently-failing frame before the
+/// ladder would give up. Injected transient/lane faults persist for at
+/// most 2 attempts, so the bounded retry rung always resolves them.
+pub const MAX_RETRIES: u64 = 3;
+
+/// A seeded, replayable fault-injection plan (see module docs).
+///
+/// Rates are per 65 536 *sites*, where a site is one stored frame of one
+/// read in one virtual step; a rate of `65_536` (or more) fires at every
+/// site. Rates are cumulative across the class priority order, so keep
+/// their sum at or below 65 536 unless deliberately starving the later
+/// classes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Bit flip in a stored plane byte (persistent until repaired).
+    pub p_plane_flip: u32,
+    /// Bit flip in a stored frame header (persistent, unrepairable).
+    pub p_header_flip: u32,
+    /// Transient bus read failure (resolved by retry).
+    pub p_transient: u32,
+    /// Transient lane decode fault (resolved by retry / re-dispatch).
+    pub p_lane_fault: u32,
+    /// Test override: pin every plane flip to this plane index instead of
+    /// drawing it from the site hash (clamped to the frame's plane
+    /// count; with parity on, an index past the last data plane targets
+    /// the parity plane). `None` draws per site.
+    pub flip_plane: Option<u8>,
+}
+
+/// Which fault a site drew. Order is the priority order of the draw.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    Transient,
+    LaneFault,
+    PlaneFlip,
+    HeaderFlip,
+}
+
+const MAGIC: &[u8; 8] = b"CAMCFLT1";
+
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    // splitmix64 finalizer
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// A plan with one uniform rate across all four classes.
+    pub fn uniform(seed: u64, per_64k: u32) -> Self {
+        Self {
+            seed,
+            p_plane_flip: per_64k,
+            p_header_flip: per_64k,
+            p_transient: per_64k,
+            p_lane_fault: per_64k,
+            flip_plane: None,
+        }
+    }
+
+    /// A plan that fires only `class`, at every site.
+    pub fn always(seed: u64, class: FaultClass) -> Self {
+        let mut p = Self {
+            seed,
+            p_plane_flip: 0,
+            p_header_flip: 0,
+            p_transient: 0,
+            p_lane_fault: 0,
+            flip_plane: None,
+        };
+        match class {
+            FaultClass::Transient => p.p_transient = 65_536,
+            FaultClass::LaneFault => p.p_lane_fault = 65_536,
+            FaultClass::PlaneFlip => p.p_plane_flip = 65_536,
+            FaultClass::HeaderFlip => p.p_header_flip = 65_536,
+        }
+        p
+    }
+
+    #[inline]
+    fn site(&self, step: u64, owner: u64, addr: u64, salt: u64) -> u64 {
+        let mut x = mix(self.seed ^ 0xFA17_0000_0000_0001);
+        x = mix(x ^ step);
+        x = mix(x ^ owner.rotate_left(21));
+        x = mix(x ^ addr.rotate_left(42));
+        mix(x ^ salt)
+    }
+
+    /// Which fault class (if any) fires at this site. At most one class
+    /// fires: a single draw against cumulative thresholds in the fixed
+    /// priority order transient → lane → plane flip → header flip.
+    pub fn decide(&self, step: u64, owner: u64, addr: u64) -> Option<FaultClass> {
+        let draw = (self.site(step, owner, addr, 0xC1A5) & 0xFFFF) as u32;
+        let mut acc = 0u32;
+        for (p, class) in [
+            (self.p_transient, FaultClass::Transient),
+            (self.p_lane_fault, FaultClass::LaneFault),
+            (self.p_plane_flip, FaultClass::PlaneFlip),
+            (self.p_header_flip, FaultClass::HeaderFlip),
+        ] {
+            acc = acc.saturating_add(p);
+            if draw < acc {
+                return Some(class);
+            }
+        }
+        None
+    }
+
+    /// A deterministic per-site draw in `0..modulus` under an extra salt
+    /// (used for flip offsets, bit masks, and retry persistence).
+    pub fn draw(&self, step: u64, owner: u64, addr: u64, salt: u64, modulus: u64) -> u64 {
+        if modulus <= 1 {
+            return 0;
+        }
+        self.site(step, owner, addr, salt) % modulus
+    }
+
+    /// Serialize in the `CAMCTRC2` discipline: magic + LE fields + FNV-1a
+    /// digest, so a plan can ride alongside a recorded trace and replay
+    /// bit-exactly.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 8 + 4 * 4 + 2 + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        for p in [
+            self.p_plane_flip,
+            self.p_header_flip,
+            self.p_transient,
+            self.p_lane_fault,
+        ] {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        match self.flip_plane {
+            Some(p) => out.extend_from_slice(&[1, p]),
+            None => out.extend_from_slice(&[0, 0]),
+        }
+        let mut h = Fnv1a::new();
+        h.write(&out);
+        out.extend_from_slice(&h.finish().to_le_bytes());
+        out
+    }
+
+    /// Parse [`FaultPlan::to_bytes`] output; any flip or truncation is a
+    /// clean error.
+    pub fn from_bytes(data: &[u8]) -> anyhow::Result<Self> {
+        let body = 8 + 8 + 4 * 4 + 2;
+        anyhow::ensure!(data.len() == body + 8, "fault plan: bad length");
+        anyhow::ensure!(&data[..8] == MAGIC, "fault plan: bad magic");
+        let mut h = Fnv1a::new();
+        h.write(&data[..body]);
+        let want = u64::from_le_bytes(data[body..].try_into().unwrap());
+        anyhow::ensure!(h.finish() == want, "fault plan: digest mismatch");
+        let u32_at = |o: usize| u32::from_le_bytes(data[o..o + 4].try_into().unwrap());
+        let flip_plane = match data[body - 2] {
+            0 => None,
+            1 => Some(data[body - 1]),
+            _ => anyhow::bail!("fault plan: bad flip_plane tag"),
+        };
+        Ok(Self {
+            seed: u64::from_le_bytes(data[8..16].try_into().unwrap()),
+            p_plane_flip: u32_at(16),
+            p_header_flip: u32_at(20),
+            p_transient: u32_at(24),
+            p_lane_fault: u32_at(28),
+            flip_plane,
+        })
+    }
+}
+
+/// Per-controller recovery counters, bumped by the ladder as it resolves
+/// injected faults. The serving layer drains these per step into
+/// [`crate::coordinator::ServeMetrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Faults the plan fired and the ladder had to resolve.
+    pub faults_injected: u64,
+    /// Read attempts re-issued for transient bus / lane faults.
+    pub retries: u64,
+    /// Planes reconstructed in place from the XOR parity plane.
+    pub parity_repairs: u64,
+    /// Reads served clamped to the intact plane prefix of a damaged
+    /// frame (the page stays usable, degraded-only).
+    pub salvaged_reads: u64,
+}
+
+/// The per-controller injection context: which plan, whose frames, what
+/// virtual step, and what has already been applied this step (so the
+/// batched and per-sequence fetch paths inject identically even when a
+/// frame is planned twice in one step).
+#[derive(Debug, Clone)]
+pub struct FaultCtx {
+    pub plan: Arc<FaultPlan>,
+    /// Owner identity mixed into every site hash (the request id for KV
+    /// stores), so two sequences never share a fault schedule.
+    pub owner: u64,
+    pub step: u64,
+    /// Frame addresses whose site already resolved this step.
+    pub applied: BTreeSet<u64>,
+    /// Frame addresses whose resolution this step was a bus retry — the
+    /// DRAM-attached read paths re-enqueue these ranges.
+    pub retry_addrs: BTreeSet<u64>,
+}
+
+impl FaultCtx {
+    pub fn new(plan: Arc<FaultPlan>, owner: u64) -> Self {
+        Self {
+            plan,
+            owner,
+            step: 0,
+            applied: BTreeSet::new(),
+            retry_addrs: BTreeSet::new(),
+        }
+    }
+
+    /// Advance the virtual step; a new step gets a fresh fault draw per
+    /// site.
+    pub fn set_step(&mut self, step: u64) {
+        if step != self.step {
+            self.step = step;
+            self.applied.clear();
+            self.retry_addrs.clear();
+        }
+    }
+}
+
+/// The typed error carried up when the ladder's last rung fires: the
+/// affected region (one sequence's page) must be quarantined — evicted
+/// with a clean per-sequence error — while the rest of the batch, and
+/// all DRAM commands already enqueued, proceed unharmed. The serving
+/// layer downcasts for this type to distinguish "evict this sequence"
+/// from a genuine (non-injected) integrity failure, which stays fatal.
+#[derive(Debug, Clone)]
+pub struct QuarantineError {
+    pub region: String,
+    pub reason: String,
+}
+
+impl std::fmt::Display for QuarantineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "quarantine {}: {}", self.region, self.reason)
+    }
+}
+
+impl std::error::Error for QuarantineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_is_deterministic_and_single_class() {
+        let plan = FaultPlan::uniform(42, 9000);
+        let mut seen = [0usize; 4];
+        for step in 0..50u64 {
+            for addr in (0..4096u64).step_by(64) {
+                let a = plan.decide(step, 7, addr);
+                let b = plan.decide(step, 7, addr);
+                assert_eq!(a, b, "decide must be pure");
+                if let Some(c) = a {
+                    seen[match c {
+                        FaultClass::Transient => 0,
+                        FaultClass::LaneFault => 1,
+                        FaultClass::PlaneFlip => 2,
+                        FaultClass::HeaderFlip => 3,
+                    }] += 1;
+                }
+            }
+        }
+        // all four classes occur at a uniform rate over enough sites
+        assert!(seen.iter().all(|&n| n > 0), "class mix: {seen:?}");
+    }
+
+    #[test]
+    fn always_plans_fire_at_every_site() {
+        for class in [
+            FaultClass::Transient,
+            FaultClass::LaneFault,
+            FaultClass::PlaneFlip,
+            FaultClass::HeaderFlip,
+        ] {
+            let plan = FaultPlan::always(1, class);
+            for addr in [0u64, 64, 8192] {
+                assert_eq!(plan.decide(3, 9, addr), Some(class));
+            }
+        }
+    }
+
+    #[test]
+    fn owner_and_step_change_the_schedule() {
+        let plan = FaultPlan::uniform(7, 2000);
+        let fire = |step, owner| {
+            (0..20_000u64)
+                .step_by(64)
+                .filter(|&a| plan.decide(step, owner, a).is_some())
+                .collect::<Vec<_>>()
+        };
+        assert_ne!(fire(0, 1), fire(1, 1), "step must reseed the draw");
+        assert_ne!(fire(0, 1), fire(0, 2), "owner must reseed the draw");
+    }
+
+    #[test]
+    fn plan_bytes_roundtrip_and_detect_corruption() {
+        let plan = FaultPlan {
+            seed: 0xDEAD_BEEF,
+            p_plane_flip: 120,
+            p_header_flip: 30,
+            p_transient: 400,
+            p_lane_fault: 200,
+            flip_plane: Some(12),
+        };
+        let bytes = plan.to_bytes();
+        assert_eq!(FaultPlan::from_bytes(&bytes).unwrap(), plan);
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(FaultPlan::from_bytes(&bad).is_err(), "byte {i} undetected");
+        }
+        assert!(FaultPlan::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn fault_ctx_resets_per_step() {
+        let mut ctx = FaultCtx::new(Arc::new(FaultPlan::uniform(1, 100)), 5);
+        ctx.applied.insert(64);
+        ctx.retry_addrs.insert(64);
+        ctx.set_step(0); // same step: no reset
+        assert!(ctx.applied.contains(&64));
+        ctx.set_step(1);
+        assert!(ctx.applied.is_empty() && ctx.retry_addrs.is_empty());
+    }
+}

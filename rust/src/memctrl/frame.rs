@@ -12,9 +12,24 @@
 //!   [ plane_len: u16 × nplanes ]  (bit15 = raw flag)
 //!   [ plane_sum: u8 × nplanes ]   (checksum of each stored plane)
 //!   [ betas: u8 × channels ]      (KV frames only)
+//!   [ parity_sum: u8 ]            (parity frames only, see below)
 //!   [ head_sum: u8 ]              (checksum of the header itself)
-//!   [ plane 0 payload | plane 1 payload | ... ]
+//!   [ plane 0 payload | plane 1 payload | ... | parity plane? ]
 //! ```
+//!
+//! ## Optional XOR parity plane (geometry-versioned)
+//!
+//! When a frame is built with parity on ([`FrameHeader::parity`]), one
+//! extra plane — the byte-wise XOR of every stored plane payload, each
+//! zero-padded to the longest plane's stored length — is appended
+//! *after* the last data plane, and its checksum rides in the header as
+//! `parity_sum`. The flag lives in bit 7 of the mode byte, so parity
+//! frames are a versioned superset of the original geometry: old frames
+//! parse unchanged, and a parity frame can reconstruct any single
+//! corrupted plane in place (XOR of the other planes + parity). The
+//! parity plane sits beyond every prefix a read fetches —
+//! [`FrameHeader::prefix_bytes`] never includes it — so reads pay
+//! nothing; only stored footprint ([`FrameHeader::frame_bytes`]) grows.
 //!
 //! The two checksum fields are the controller's integrity net: `head_sum`
 //! is verified by [`decode_header`], so a flipped mode byte, inflated
@@ -66,24 +81,42 @@ pub struct FrameHeader {
     pub plane_len: Vec<(u32, bool)>,
     /// Per-plane checksum of the stored plane bytes (same order).
     pub plane_sum: Vec<u8>,
+    /// Whether an XOR parity plane trails the data planes (mode bit 7).
+    pub parity: bool,
+    /// Checksum of the stored parity plane bytes (0 when `!parity`).
+    pub parity_sum: u8,
 }
 
 impl FrameHeader {
     /// Serialized header size in bytes (incl. per-plane checksums and the
     /// trailing header checksum).
     pub fn header_bytes(&self) -> usize {
-        12 + self.plane_len.len() * 3 + self.channels + 1
+        12 + self.plane_len.len() * 3 + self.channels + usize::from(self.parity) + 1
     }
 
-    /// Total frame size.
+    /// Stored size of the trailing XOR parity plane (0 when `!parity`):
+    /// every plane payload is zero-padded to the longest plane before the
+    /// XOR, so the parity plane is exactly that long.
+    pub fn parity_plane_bytes(&self) -> usize {
+        if self.parity {
+            self.plane_len.iter().map(|&(l, _)| l as usize).max().unwrap_or(0)
+        } else {
+            0
+        }
+    }
+
+    /// Total frame size (incl. the parity plane when present).
     pub fn frame_bytes(&self) -> usize {
-        self.header_bytes() + self.plane_len.iter().map(|&(l, _)| l as usize).sum::<usize>()
+        self.header_bytes()
+            + self.plane_len.iter().map(|&(l, _)| l as usize).sum::<usize>()
+            + self.parity_plane_bytes()
     }
 
     /// Bytes that must be fetched for a top-`keep`-planes read:
     /// header + betas + the first `keep` plane payloads (they are stored
     /// contiguously, so this is ONE sequential DRAM range — the property
-    /// that makes partial fetches burst-friendly).
+    /// that makes partial fetches burst-friendly). The parity plane is
+    /// never part of a read prefix.
     pub fn prefix_bytes(&self, keep: u32) -> usize {
         let keep = (keep as usize).min(self.plane_len.len());
         self.header_bytes()
@@ -120,7 +153,8 @@ pub fn encode_header(h: &FrameHeader, betas: &[u16]) -> Vec<u8> {
         FrameKind::KvCache => 1,
     });
     out.push(dtype_code(h.dtype));
-    out.push(h.mode);
+    debug_assert!(h.mode <= 2, "mode bits collide with the parity flag");
+    out.push(h.mode | if h.parity { 0x80 } else { 0 });
     out.push(match h.codec {
         Codec::Store => 0,
         Codec::Lz4 => 1,
@@ -137,6 +171,9 @@ pub fn encode_header(h: &FrameHeader, betas: &[u16]) -> Vec<u8> {
     out.extend_from_slice(&h.plane_sum);
     for &b in betas {
         out.push(b as u8);
+    }
+    if h.parity {
+        out.push(h.parity_sum);
     }
     out.push(plane_checksum(&out));
     out
@@ -158,12 +195,15 @@ pub fn decode_header(data: &[u8]) -> anyhow::Result<(FrameHeader, Vec<u16>)> {
         2 => Codec::Zstd,
         c => anyhow::bail!("bad codec {c}"),
     };
-    let mode = data[2];
+    // bit 7 of the mode byte versions the geometry: parity frames carry
+    // one extra header byte and a trailing parity plane
+    let parity = data[2] & 0x80 != 0;
+    let mode = data[2] & 0x7F;
     anyhow::ensure!(mode <= 2, "bad decorrelate mode {mode}");
     let m = u32::from_le_bytes(data[4..8].try_into().unwrap()) as usize;
     let channels = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
     let nplanes = dtype.bits() as usize;
-    let need = 12 + nplanes * 3 + channels + 1;
+    let need = 12 + nplanes * 3 + channels + usize::from(parity) + 1;
     anyhow::ensure!(data.len() >= need, "frame header truncated");
     anyhow::ensure!(
         plane_checksum(&data[..need - 1]) == data[need - 1],
@@ -175,10 +215,12 @@ pub fn decode_header(data: &[u8]) -> anyhow::Result<(FrameHeader, Vec<u16>)> {
         plane_len.push(((v & 0x7FFF) as u32, v & 0x8000 != 0));
     }
     let plane_sum = data[12 + nplanes * 2..12 + nplanes * 3].to_vec();
-    let betas = data[12 + nplanes * 3..need - 1]
+    let betas_end = 12 + nplanes * 3 + channels;
+    let betas = data[12 + nplanes * 3..betas_end]
         .iter()
         .map(|&b| b as u16)
         .collect();
+    let parity_sum = if parity { data[betas_end] } else { 0 };
     Ok((
         FrameHeader {
             kind,
@@ -189,6 +231,8 @@ pub fn decode_header(data: &[u8]) -> anyhow::Result<(FrameHeader, Vec<u16>)> {
             mode,
             plane_len,
             plane_sum,
+            parity,
+            parity_sum,
         },
         betas,
     ))
@@ -240,6 +284,8 @@ mod tests {
                 mode: 1,
                 plane_len: (0..16).map(|i| (10 + i as u32 * 7, i % 3 == 0)).collect(),
                 plane_sum: (0..16).map(|i| (i as u8).wrapping_mul(37)).collect(),
+                parity: false,
+                parity_sum: 0,
             },
             (0..128u16).map(|i| i % 256).collect(),
         )
@@ -298,6 +344,33 @@ mod tests {
     }
 
     #[test]
+    fn parity_header_roundtrips_and_versions_the_geometry() {
+        let (mut h, betas) = sample_header();
+        h.parity = true;
+        h.parity_sum = 0x5A;
+        let enc = encode_header(&h, &betas);
+        // exactly one byte longer than the non-parity geometry
+        let (plain, _) = sample_header();
+        assert_eq!(enc.len(), plain.header_bytes() + 1);
+        assert_eq!(enc.len(), h.header_bytes());
+        let (h2, betas2) = decode_header(&enc).unwrap();
+        assert_eq!(h2, h);
+        assert_eq!(betas2, betas);
+        // footprint includes the parity plane (longest plane's length);
+        // read prefixes never do
+        let longest = h.plane_len.iter().map(|&(l, _)| l as usize).max().unwrap();
+        assert_eq!(h.parity_plane_bytes(), longest);
+        assert_eq!(h.frame_bytes(), plain.frame_bytes() + 1 + longest);
+        assert_eq!(h.prefix_bytes(16), h.frame_bytes() - longest);
+        // every single-byte flip still surfaces as a clean error
+        for i in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x01;
+            assert!(decode_header(&bad).is_err(), "flip at byte {i} undetected");
+        }
+    }
+
+    #[test]
     fn truncated_header_rejected() {
         let (h, betas) = sample_header();
         let enc = encode_header(&h, &betas);
@@ -316,6 +389,8 @@ mod tests {
             mode: 0,
             plane_len: (0..8).map(|_| (100u32, false)).collect(),
             plane_sum: vec![0x5A; 8],
+            parity: false,
+            parity_sum: 0,
         };
         let enc = encode_header(&h, &[]);
         let (h2, betas) = decode_header(&enc).unwrap();

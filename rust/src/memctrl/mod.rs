@@ -13,11 +13,60 @@
 //! silent wrong data (see `frame` for the precise guarantee).
 //! Traditional-layout frames are the deliberately-bare baseline: raw
 //! value-major bytes behind a 12-byte mini header, length-checked only.
+//!
+//! # Fault model and the self-healing read path
+//!
+//! At production scale the controller sits in the path of every read, so
+//! a single flipped bit must never become a full-batch outage. The
+//! [`fault`] module models four fault classes behind a seeded, replayable
+//! [`FaultPlan`] (transient bus failures, transient lane decode faults,
+//! stored plane-byte flips, stored header flips), injected at one
+//! well-defined seam: `MemController::prepare_read`, which every read
+//! path (`load`, `load_into`, `fetch_group`, and the pagestore fetch
+//! paths) runs per region *before* planning any DRAM traffic.
+//!
+//! ## The recovery ladder
+//!
+//! `prepare_read` resolves every injected fault through exactly one rung,
+//! tried in this order:
+//!
+//! 1. **Bounded retry** — transient bus/lane faults persist at most
+//!    [`MAX_RETRIES`]−1 deterministic re-reads; the read retries within
+//!    the same virtual step (attached DRAM re-enqueues the same range,
+//!    counted in `SimStats::retried_requests`) and serves intact bytes.
+//! 2. **Parity repair** — with the optional XOR parity plane on
+//!    (`MemController::parity`, geometry-versioned in the frame header),
+//!    any single corrupted plane — including the parity plane itself —
+//!    is reconstructed in place from the XOR of the others, verified
+//!    against its stored checksum, and the healed frame is re-stored.
+//! 3. **Plane-prefix salvage** — without parity, if the corruption lies
+//!    in plane `c` with `c >=` [`SALVAGE_FLOOR`] (the hard pressure
+//!    rung's need), the read is served clamped to the intact prefix and
+//!    the region is marked degraded-only (`degraded_keep`): the page
+//!    stays usable at reduced precision, which is exactly the dynamic-
+//!    quantization degrade path the bit-plane layout buys.
+//! 4. **Quarantine** — header corruption, or plane corruption below the
+//!    salvage floor, raises a typed [`QuarantineError`]: the serving
+//!    layer evicts just the owning sequence with a clean per-sequence
+//!    error while the rest of the batch — and every DRAM command already
+//!    enqueued — proceeds unharmed.
+//!
+//! Injection is a pure function of `(seed, virtual step, owner, frame
+//! address)` and runs at *plan* time on the scheduling thread, so the
+//! whole ladder — schedule, recovery actions, served bytes — is
+//! bit-identical at every lane count and in both batched and
+//! per-sequence fetch modes. Genuine (non-injected) checksum failures
+//! still surface as hard errors: the ladder only arms for faults the
+//! plan injected.
 pub mod controller;
+pub mod fault;
 pub mod frame;
 
 pub use controller::{
     build_kv_group_frame, read_frame_into, EngineModel, KvFrameSpec, Layout, MemController,
     ReadStats, Region, RegionId, BLOCK_BYTES,
+};
+pub use fault::{
+    FaultClass, FaultCtx, FaultPlan, QuarantineError, RecoveryStats, MAX_RETRIES, SALVAGE_FLOOR,
 };
 pub use frame::{FrameHeader, FrameKind};

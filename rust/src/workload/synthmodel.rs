@@ -26,6 +26,8 @@
 //!   the trajectory. Quality-sensitive experiments use the real
 //!   [`crate::runtime::model::TinyLm`].
 
+use std::cell::RefCell;
+
 use crate::fmt::minifloat::BF16;
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta};
@@ -39,6 +41,18 @@ pub fn bf16_canon(x: f32) -> f32 {
     BF16.decode(BF16.encode(x))
 }
 
+/// [`SynthLm::attend_readout`]'s per-call working buffers, folded into
+/// the model so the steady-state decode step allocates nothing. Sized
+/// lazily on first use; capacity persists across steps and sequences
+/// (the buffers are fully overwritten or cleared per layer, so reuse
+/// never leaks state between calls).
+#[derive(Default)]
+struct AttendScratch {
+    qbar: Vec<f32>,
+    scores: Vec<f32>,
+    readout: Vec<f32>,
+}
+
 /// A seeded synthetic decode backend (see module docs).
 pub struct SynthLm {
     pub meta: ModelMeta,
@@ -46,6 +60,10 @@ pub struct SynthLm {
     /// Per-channel magnitude scales (BF16-representable): gives KV pages
     /// the cross-token channel coherence the clustering path exploits.
     scales: Vec<f32>,
+    /// Interior-mutable so `attend_readout` keeps its `&self` contract
+    /// (the serve loop decodes on one thread; `RefCell` costs nothing and
+    /// makes any accidental reentrancy a loud panic, not silent aliasing).
+    scratch: RefCell<AttendScratch>,
 }
 
 impl SynthLm {
@@ -55,7 +73,12 @@ impl SynthLm {
         let scales = (0..row)
             .map(|_| bf16_canon(2f32.powf(r.normal() as f32)))
             .collect();
-        Self { meta, seed, scales }
+        Self {
+            meta,
+            seed,
+            scales,
+            scratch: RefCell::new(AttendScratch::default()),
+        }
     }
 
     /// A small model shape for tests, examples, and benches
@@ -137,9 +160,12 @@ impl SynthLm {
         let npages = pos.div_ceil(PAGE_TOKENS);
         let page_active = |p: usize| mask.get(p).map_or(true, |&mv| mv > -1e8);
         let mut h = Fnv1a::new();
-        let mut qbar = vec![0.0f32; row];
-        let mut scores: Vec<f32> = Vec::new();
-        let mut readout = vec![0.0f32; row];
+        let mut sc = self.scratch.borrow_mut();
+        let AttendScratch { qbar, scores, readout } = &mut *sc;
+        if qbar.len() != row {
+            qbar.resize(row, 0.0);
+            readout.resize(row, 0.0);
+        }
         for l in 0..m.layers {
             // group-mean query per KV channel (the page scorer's reduction)
             qbar.iter_mut().for_each(|q| *q = 0.0);
@@ -172,7 +198,7 @@ impl SynthLm {
                 continue;
             }
             let mut z = 0.0f32;
-            for &s in &scores {
+            for &s in scores.iter() {
                 z += (s - mx).exp();
             }
             // pass 2: value-weighted readout, same token order

@@ -3,10 +3,19 @@
 //! `Err`s — no panics, no silent wrong data. The stored-frame guarantees
 //! rest on the per-plane + header checksums in `memctrl::frame`; the
 //! trace guarantees on the trailing FNV-1a digest in `workload::trace`.
+//!
+//! The recovery matrix at the bottom drives the *self-healing* side of
+//! the same contract: every `memctrl::fault` class, under every codec ×
+//! lane count × parity setting, must resolve on exactly its documented
+//! ladder rung (retry / parity repair / plane-prefix salvage /
+//! quarantine) with counters identical at every lane count.
+
+use std::sync::Arc;
 
 use camc::compress::Codec;
-use camc::coordinator::KvPageStore;
-use camc::memctrl::Layout;
+use camc::coordinator::{DecodeArena, KvPageStore};
+use camc::engine::LaneArray;
+use camc::memctrl::{FaultClass, FaultPlan, Layout, RegionId, SALVAGE_FLOOR};
 use camc::runtime::model::{KvState, ModelMeta};
 use camc::util::check::check;
 use camc::util::rng::Xoshiro256;
@@ -167,4 +176,151 @@ fn truncated_and_extended_trace_files_error_cleanly() {
     assert!(Trace::from_bytes(&longer).is_err(), "trailing byte undetected");
     // and the pristine bytes still round-trip
     assert_eq!(Trace::from_bytes(&bytes).unwrap(), t);
+}
+
+/// One synced single-page store (pos 16 = exactly one stored page, no raw
+/// tail) on an isolated `lanes`-wide pool, parity set before the sync so
+/// the frames carry (or don't carry) the XOR parity plane.
+fn synced_store(codec: Codec, lanes: usize, parity: bool) -> KvPageStore {
+    let meta = tiny_meta();
+    let kv = kv_filled(&meta, 16, 3);
+    let mut s = KvPageStore::with_shared(
+        &meta,
+        Layout::Proposed,
+        codec,
+        Arc::new(LaneArray::new(lanes)),
+    );
+    s.mc.parity = parity;
+    s.sync(&kv, &meta);
+    assert_eq!(s.len(), 1);
+    s
+}
+
+/// Fault-free reference codes for page 0 at plane prefix `keep`.
+fn pristine_codes(codec: Codec, parity: bool, keep: u32) -> Vec<u16> {
+    let mut s = synced_store(codec, 1, parity);
+    let mut arena = DecodeArena::new();
+    let out = s.fetch_pages(&[keep], &mut arena).unwrap();
+    assert!(out.quarantine.is_none());
+    arena.codes(out.pages[0].1).to_vec()
+}
+
+#[test]
+fn recovery_matrix_resolves_every_fault_class_on_its_documented_rung() {
+    // fault class × codec × {1,8,32} lanes × parity on/off. Each cell
+    // must land on exactly one ladder rung, never panic, and produce
+    // counters (and codes, where the read survives) identical at every
+    // lane count — lanes change where a frame decodes, never what the
+    // ladder does.
+    let cases: Vec<(&str, FaultPlan)> = vec![
+        ("transient", FaultPlan::always(11, FaultClass::Transient)),
+        ("lane", FaultPlan::always(12, FaultClass::LaneFault)),
+        ("plane-high", {
+            let mut p = FaultPlan::always(13, FaultClass::PlaneFlip);
+            p.flip_plane = Some(12); // above SALVAGE_FLOOR: salvageable
+            p
+        }),
+        ("plane-low", {
+            let mut p = FaultPlan::always(14, FaultClass::PlaneFlip);
+            p.flip_plane = Some(1); // below SALVAGE_FLOOR: fatal sans parity
+            p
+        }),
+        ("header", FaultPlan::always(15, FaultClass::HeaderFlip)),
+    ];
+    for codec in [Codec::Lz4, Codec::Zstd] {
+        for parity in [false, true] {
+            let full = pristine_codes(codec, parity, 16);
+            for (name, plan) in &cases {
+                let tag = format!("{codec} parity={parity} {name}");
+                let plan = Arc::new(plan.clone());
+                let mut baseline: Option<((u64, u64, u64, u64), Option<String>, Option<Vec<u16>>)> =
+                    None;
+                for lanes in [1usize, 8, 32] {
+                    let mut s = synced_store(codec, lanes, parity);
+                    s.mc.install_faults(Arc::clone(&plan), 1);
+                    let mut arena = DecodeArena::new();
+                    let out = s
+                        .fetch_pages(&[16], &mut arena)
+                        .unwrap_or_else(|e| panic!("{tag} {lanes} lanes: hard error {e}"));
+                    let r = &s.mc.recovery;
+                    let counters = (r.faults_injected, r.retries, r.parity_repairs, r.salvaged_reads);
+                    assert!(r.faults_injected > 0, "{tag}: plan never fired");
+                    let codes = if out.quarantine.is_none() {
+                        Some(arena.codes(out.pages[0].1).to_vec())
+                    } else {
+                        assert!(out.pages.is_empty(), "{tag}: quarantined read served data");
+                        None
+                    };
+                    match *name {
+                        "transient" | "lane" => {
+                            // rung 1: bounded retry clears it; stored bytes
+                            // untouched, so the read is byte-pristine
+                            assert!(out.quarantine.is_none(), "{tag}: retry rung quarantined");
+                            assert!(r.retries >= r.faults_injected, "{tag}: no retries");
+                            assert_eq!(r.parity_repairs, 0, "{tag}");
+                            assert_eq!(r.salvaged_reads, 0, "{tag}");
+                            assert_eq!(codes.as_ref(), Some(&full), "{tag}: codes diverged");
+                        }
+                        "plane-high" if parity => {
+                            // rung 2: every flipped plane healed in place
+                            assert!(out.quarantine.is_none(), "{tag}");
+                            assert_eq!(r.parity_repairs, r.faults_injected, "{tag}: unhealed");
+                            assert_eq!(r.salvaged_reads, 0, "{tag}");
+                            assert_eq!(r.retries, 0, "{tag}");
+                            assert_eq!(codes.as_ref(), Some(&full), "{tag}: repair not byte-exact");
+                            let dk = s.mc.region(RegionId(0)).degraded_keep();
+                            assert_eq!(dk, u32::MAX, "{tag}: repair must not degrade");
+                        }
+                        "plane-high" => {
+                            // rung 3: serve the intact prefix, mark the
+                            // region degraded-only
+                            assert!(out.quarantine.is_none(), "{tag}");
+                            assert_eq!(r.salvaged_reads, r.faults_injected, "{tag}: unsalvaged");
+                            assert_eq!(r.parity_repairs, 0, "{tag}");
+                            let dk = s.mc.region(RegionId(0)).degraded_keep();
+                            assert_eq!(dk, 12, "{tag}: salvage must clamp to the flipped plane");
+                            assert!(dk >= SALVAGE_FLOOR, "{tag}");
+                            let clamped = pristine_codes(codec, parity, dk);
+                            assert_eq!(
+                                codes.as_ref(),
+                                Some(&clamped),
+                                "{tag}: salvaged read must equal the pristine clamped view"
+                            );
+                        }
+                        "plane-low" if parity => {
+                            // parity turns the fatal low-plane flip into a
+                            // rung-2 repair
+                            assert!(out.quarantine.is_none(), "{tag}");
+                            assert_eq!(r.parity_repairs, r.faults_injected, "{tag}: unhealed");
+                            assert_eq!(codes.as_ref(), Some(&full), "{tag}: repair not byte-exact");
+                        }
+                        "plane-low" => {
+                            // rung 4: below the salvage floor nothing milder
+                            // helps — the read quarantines, cleanly
+                            assert!(out.quarantine.is_some(), "{tag}: expected quarantine");
+                            assert_eq!(r.retries, 0, "{tag}");
+                            assert_eq!(r.parity_repairs, 0, "{tag}");
+                            assert_eq!(r.salvaged_reads, 0, "{tag}");
+                        }
+                        "header" => {
+                            // rung 4 always: parity never covers the header
+                            assert!(out.quarantine.is_some(), "{tag}: expected quarantine");
+                            assert_eq!(r.retries, 0, "{tag}");
+                            assert_eq!(r.parity_repairs, 0, "{tag}");
+                            assert_eq!(r.salvaged_reads, 0, "{tag}");
+                        }
+                        other => unreachable!("unknown case {other}"),
+                    }
+                    let cell = (counters, out.quarantine.clone(), codes);
+                    match &baseline {
+                        None => baseline = Some(cell),
+                        Some(b) => assert_eq!(
+                            b, &cell,
+                            "{tag}: outcome diverged between 1 and {lanes} lanes"
+                        ),
+                    }
+                }
+            }
+        }
+    }
 }

@@ -185,6 +185,40 @@ fn worker_panic_propagates_to_submitting_call_site() {
 }
 
 #[test]
+fn worker_panic_keeps_its_payload_and_spares_the_default_pool() {
+    // The robustness contract for the process-wide pool: a panic inside
+    // one batch closure fails exactly that batch's submit site — with the
+    // ORIGINAL payload, not a generic "worker panicked" count — and the
+    // shared `default_pool()` remains serviceable for every later caller.
+    let pool = camc::engine::default_pool();
+    let items: Vec<usize> = (0..256).collect();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(&items, |_lane, &i| {
+            if i == 77 {
+                panic!("original payload {i}");
+            }
+            i
+        })
+    }));
+    let payload = res.expect_err("worker panic must surface to the submitter");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .expect("panic payload must be the original message");
+    assert!(
+        msg.contains("original payload 77"),
+        "payload must survive verbatim, got: {msg}"
+    );
+    // the same shared pool serves subsequent batches byte-identically
+    let want: Vec<usize> = items.iter().map(|&i| i.wrapping_mul(31)).collect();
+    assert_eq!(pool.run(&items, |_lane, &i| i.wrapping_mul(31)), want);
+    // a fresh handle (same singleton) is serviceable too
+    let again = camc::engine::default_pool();
+    assert_eq!(again.run(&items, |_lane, &i| i + 3)[200], 203);
+}
+
+#[test]
 fn scratch_entry_points_match_oneshot_across_blocks() {
     // One scratch reused across a realistic mixed diet of plane payloads.
     let mut scratch = CodecScratch::new();
