@@ -30,8 +30,24 @@ fn main() {
             let kv = gen_kv_layer(tok, ch, profile, frac, 100 + l as u64);
             let base_l = plane_major_ratio(Dtype::Bf16, &kv, Codec::Lz4, 4096);
             let base_z = plane_major_ratio(Dtype::Bf16, &kv, Codec::Zstd, 4096);
-            let ours_l = cluster_ratio(Dtype::Bf16, tok, ch, &kv, 16, DecorrelateMode::ExpDelta, Codec::Lz4);
-            let ours_z = cluster_ratio(Dtype::Bf16, tok, ch, &kv, 16, DecorrelateMode::ExpDelta, Codec::Zstd);
+            let ours_l = cluster_ratio(
+                Dtype::Bf16,
+                tok,
+                ch,
+                &kv,
+                16,
+                DecorrelateMode::ExpDelta,
+                Codec::Lz4,
+            );
+            let ours_z = cluster_ratio(
+                Dtype::Bf16,
+                tok,
+                ch,
+                &kv,
+                16,
+                DecorrelateMode::ExpDelta,
+                Codec::Zstd,
+            );
             for (t, v) in totals.iter_mut().zip([base_l, base_z, ours_l, ours_z]) {
                 *t += v / layers as f64;
             }
@@ -61,7 +77,9 @@ fn main() {
             &["corpus", "layer", "baseline ZSTD", "ours ZSTD", "gain"],
         );
         for corpus in ["wiki", "book"] {
-            let toks = read_u16_stream(std::path::Path::new(&format!("artifacts/corpus_{corpus}.bin"))).unwrap();
+            let toks =
+                read_u16_stream(std::path::Path::new(&format!("artifacts/corpus_{corpus}.bin")))
+                    .unwrap();
             let mut kv = KvState::new(&lm.meta);
             let mask = vec![0.0f32; lm.meta.n_pages];
             for &t in toks.iter().take(lm.meta.max_seq) {
@@ -75,7 +93,15 @@ fn main() {
                     codes.extend(kv.k[off..off + row].iter().map(|&x| BF16.encode(x) as u16));
                 }
                 let base = plane_major_ratio(Dtype::Bf16, &codes, Codec::Zstd, 4096);
-                let ours = cluster_ratio(Dtype::Bf16, lm.meta.max_seq, row, &codes, 16, DecorrelateMode::ExpDelta, Codec::Zstd);
+                let ours = cluster_ratio(
+                    Dtype::Bf16,
+                    lm.meta.max_seq,
+                    row,
+                    &codes,
+                    16,
+                    DecorrelateMode::ExpDelta,
+                    Codec::Zstd,
+                );
                 tab.row(&[
                     corpus.into(),
                     l.to_string(),

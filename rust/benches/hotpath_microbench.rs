@@ -214,7 +214,13 @@ fn main() {
     let kv_codes = gen_kv_layer(16, 1024, CorpusProfile::Book, 0.5, 3);
     let kv = KvGroup::new(Dtype::Bf16, 16, 1024, kv_codes);
     let kc = time(
-        || { std::hint::black_box(ClusteredBlock::compress(&kv, DecorrelateMode::ExpDelta, Codec::Zstd)); },
+        || {
+            std::hint::black_box(ClusteredBlock::compress(
+                &kv,
+                DecorrelateMode::ExpDelta,
+                Codec::Zstd,
+            ));
+        },
         16,
     );
     let kv_bytes = (16 * 1024 * 2) as f64;
@@ -306,7 +312,8 @@ fn main() {
     // beat per-batch thread spawn/join there — and must not lose to the
     // serial path — for serve() to benefit (CI gates on the latter via
     // --check).
-    let mut small_rows: Vec<(usize, f64, f64, f64)> = Vec::new(); // (nb, serial, pooled, spawn/join)
+    // (nb, serial, pooled, spawn/join)
+    let mut small_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
     let mut pooled_ok = true;
     {
         let la8 = LaneArray::new(8);
@@ -445,7 +452,12 @@ fn main() {
             let mut kvs: Vec<KvState> = (1..=nseq as u64).map(mk_kv).collect();
             let mut stores: Vec<KvPageStore> = (0..nseq)
                 .map(|_| {
-                    KvPageStore::with_shared(&meta, Layout::Proposed, Codec::Zstd, Arc::clone(&lanes))
+                    KvPageStore::with_shared(
+                        &meta,
+                        Layout::Proposed,
+                        Codec::Zstd,
+                        Arc::clone(&lanes),
+                    )
                 })
                 .collect();
             let engines: Vec<PolicyEngine> = (0..nseq)

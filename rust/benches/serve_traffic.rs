@@ -11,10 +11,13 @@
 //! fixed-slot admission at equal byte budget, if the compressed budget
 //! fails to sustain more concurrency than the byte-equal uncompressed
 //! budget, if the zero-materialization view path's per-step host copy
-//! bytes stop beating the materializing copy-plan baseline, or if the
+//! bytes stop beating the materializing copy-plan baseline, if the
 //! fault-injection row pair stops resolving every recovery-ladder rung
-//! with fault-untouched sequences byte-identical to the fault-free run
-//! (the regressions CI gates on).
+//! with fault-untouched sequences byte-identical to the fault-free run,
+//! or if the predictive prefetch engine stops serving a byte-identical
+//! schedule with hit rate > 0 and a modeled overlapped step-fetch
+//! latency below the synchronous model at 8+ concurrent actives (the
+//! regressions CI gates on).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -60,7 +63,8 @@ fn main() {
     let budget: u64 = 6 * 16 * 1024;
 
     let mut json: BTreeMap<String, Json> = BTreeMap::new();
-    let run = |cfg: &SchedConfig| -> (SchedOutcome, ServeMetrics, f64) { run_with(&lm, &trace, cfg) };
+    let run =
+        |cfg: &SchedConfig| -> (SchedOutcome, ServeMetrics, f64) { run_with(&lm, &trace, cfg) };
     let capped = |mut cfg: SchedConfig| -> SchedConfig {
         cfg.max_steps = horizon;
         cfg
@@ -146,6 +150,34 @@ fn main() {
     let (np_unaffected, np_identical) = survivors(&f_np, &base_np);
     let (pa_unaffected, pa_identical) = survivors(&f_pa, &base_pa);
 
+    // prefetch row: the same slack-budget digest run with the predictive
+    // prefetch engine on. The serve must stay byte-identical to `base_np`
+    // (schedule + responses — tests/prefetch_parity.rs pins the full
+    // matrix; the bench re-proves it on the bench workload), while the
+    // modeled overlapped step-fetch latency undercuts the synchronous
+    // model wherever 8+ sequences are concurrently active.
+    let (pre, prem, _) = run(&SchedConfig {
+        prefetch: true,
+        ..digests(false, None)
+    });
+    let prefetch_identical = pre.events == base_np.events
+        && pre.responses.len() == base_np.responses.len()
+        && pre.responses.iter().zip(&base_np.responses).all(|(a, b)| {
+            a.id == b.id
+                && a.tokens == b.tokens
+                && a.mean_nll == b.mean_nll
+                && a.kv_pages_digest == b.kv_pages_digest
+                && a.read_digest == b.read_digest
+                && a.kv_fetched_bytes == b.kv_fetched_bytes
+        });
+    let mean_8plus = |ns: f64| -> f64 {
+        if prem.steps_8plus == 0 {
+            0.0
+        } else {
+            ns / prem.steps_8plus as f64
+        }
+    };
+
     let evicts = |o: &SchedOutcome| {
         o.events
             .iter()
@@ -213,6 +245,16 @@ fn main() {
         fpam.parity_repairs,
         pa_identical,
         pa_unaffected,
+    );
+    println!(
+        "prefetch: {:.0}% hit rate ({} issued, {} wasted B) — step fetch {:.0} ns sync vs {:.0} ns overlapped at 8+ active ({} steps), byte-identical: {}",
+        prem.prefetch_hit_rate() * 100.0,
+        prem.prefetch_issued,
+        prem.prefetch_wasted_bytes,
+        mean_8plus(prem.sync_fetch_ns_8plus),
+        mean_8plus(prem.overlapped_fetch_ns_8plus),
+        prem.steps_8plus,
+        prefetch_identical,
     );
 
     json.insert(
@@ -305,6 +347,34 @@ fn main() {
     json.insert(
         "fault-run unaffected byte-identical (parity)".into(),
         Json::Num(pa_identical as f64),
+    );
+    json.insert(
+        "prefetch hit rate".into(),
+        Json::Num((prem.prefetch_hit_rate() * 1000.0).round() / 1000.0),
+    );
+    json.insert(
+        "prefetch issued pages".into(),
+        Json::Num(prem.prefetch_issued as f64),
+    );
+    json.insert(
+        "prefetch wasted bytes".into(),
+        Json::Num(prem.prefetch_wasted_bytes as f64),
+    );
+    json.insert(
+        "step fetch ns at 8plus (sync model)".into(),
+        Json::Num(mean_8plus(prem.sync_fetch_ns_8plus).round()),
+    );
+    json.insert(
+        "step fetch ns at 8plus (overlapped)".into(),
+        Json::Num(mean_8plus(prem.overlapped_fetch_ns_8plus).round()),
+    );
+    json.insert(
+        "step fetch ns mean (sync model)".into(),
+        Json::Num(prem.mean_sync_fetch_ns().round()),
+    );
+    json.insert(
+        "step fetch ns mean (overlapped)".into(),
+        Json::Num(prem.mean_overlapped_fetch_ns().round()),
     );
 
     let npaths = json.len();
@@ -407,6 +477,30 @@ fn main() {
             );
             ok = false;
         }
+        // prefetch gates: speculation must be invisible (byte-identical
+        // serve), must actually hit, and must shrink the modeled
+        // step-blocking fetch latency where 8+ sequences are active
+        if !prefetch_identical {
+            eprintln!("CHECK FAILED: prefetch-on serve diverged from the synchronous run");
+            ok = false;
+        }
+        if prem.steps_8plus == 0 {
+            eprintln!(
+                "CHECK FAILED: bench workload never reached 8 concurrent actives — the overlap gate is vacuous"
+            );
+            ok = false;
+        }
+        if prem.prefetch_hit_rate() <= 0.0 {
+            eprintln!("CHECK FAILED: prefetch hit rate is zero");
+            ok = false;
+        }
+        if prem.overlapped_fetch_ns_8plus >= prem.sync_fetch_ns_8plus {
+            eprintln!(
+                "CHECK FAILED: overlapped step fetch {} ns >= synchronous model {} ns at 8+ actives",
+                prem.overlapped_fetch_ns_8plus, prem.sync_fetch_ns_8plus
+            );
+            ok = false;
+        }
         if !ok {
             std::process::exit(1);
         }
@@ -427,6 +521,13 @@ fn main() {
             np_unaffected,
             pa_identical,
             pa_unaffected
+        );
+        println!(
+            "check ✓ prefetch byte-identical at {:.0}% hit rate, step fetch {:.0} -> {:.0} ns at 8+ active ({} steps)",
+            prem.prefetch_hit_rate() * 100.0,
+            mean_8plus(prem.sync_fetch_ns_8plus),
+            mean_8plus(prem.overlapped_fetch_ns_8plus),
+            prem.steps_8plus
         );
         println!(
             "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}, batched fetch served {} >= per-seq {} in {} vs {} dispatches",

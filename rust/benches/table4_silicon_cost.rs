@@ -13,7 +13,15 @@ fn main() {
     let m = SiliconModel::calibrated();
     let mut tab = Table::new(
         "Table IV — silicon cost @ 2 GHz, 32 lanes (ASAP7 7 nm)",
-        &["engine", "block bits", "SL area mm2", "SL power mW", "tot area mm2", "tot power mW", "SL Gbps"],
+        &[
+            "engine",
+            "block bits",
+            "SL area mm2",
+            "SL power mW",
+            "tot area mm2",
+            "tot power mW",
+            "SL Gbps",
+        ],
     );
     for codec in [Codec::Lz4, Codec::Zstd] {
         for bits in [16384u64, 32768, 65536] {
@@ -34,7 +42,8 @@ fn main() {
     let mut dev = 0.0f64;
     for p in TABLE4_POINTS {
         dev = dev.max((m.sl_area_mm2(p.engine, p.block_bits) - p.sl_area_mm2).abs());
-        dev = dev.max(((m.sl_power_mw(p.engine, p.block_bits) - p.sl_power_mw) / p.sl_power_mw).abs());
+        dev = dev
+            .max(((m.sl_power_mw(p.engine, p.block_bits) - p.sl_power_mw) / p.sl_power_mw).abs());
     }
     println!("max deviation from the paper's six published points: {dev:.2e}");
     println!("aggregate throughput: {} Gbps = 2 TB/s", m.total_gbps(32));

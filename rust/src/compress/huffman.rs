@@ -394,7 +394,11 @@ impl Decoder {
             return Ok(());
         }
         if self.lookup.is_empty() {
-            return if n == 0 { Ok(()) } else { Err(HufError("empty table")) };
+            return if n == 0 {
+                Ok(())
+            } else {
+                Err(HufError("empty table"))
+            };
         }
         for _ in 0..n {
             // Single-probe decode: peek MAX_CODE_LEN bits (zero-padded at

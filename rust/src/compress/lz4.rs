@@ -81,7 +81,11 @@ pub fn compress_into(src: &[u8], scratch: &mut Lz4Scratch, dst: &mut Vec<u8>) {
         // find a match at i
         let h = hash4(read_u32(src, i));
         let e = table[h];
-        let cand = if EpochTable::live(e, epoch) { e as u32 as usize } else { 0 };
+        let cand = if EpochTable::live(e, epoch) {
+            e as u32 as usize
+        } else {
+            0
+        };
         table[h] = epoch | (i + 1) as u64;
         let found = cand > 0 && {
             let c = cand - 1;

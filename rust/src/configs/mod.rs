@@ -55,7 +55,11 @@ impl ModelConfig {
         // SwiGLU ffn: gate, up (d*ff), down (ff*d) — per expert
         let ffn = 3 * d * ff * self.experts as u64;
         // router
-        let router = if self.experts > 1 { d * self.experts as u64 } else { 0 };
+        let router = if self.experts > 1 {
+            d * self.experts as u64
+        } else {
+            0
+        };
         // norms: 2 per layer + final
         let norms = l * 2 * d + d;
         let emb = v * d * if self.tie_embeddings { 1 } else { 2 };
@@ -80,7 +84,11 @@ impl ModelConfig {
         let l = self.layers as u64;
         let attn = d * (heads * dh) + 2 * d * (kvh * dh) + (heads * dh) * d;
         let ffn = 3 * d * ff * self.active_experts as u64;
-        let router = if self.experts > 1 { d * self.experts as u64 } else { 0 };
+        let router = if self.experts > 1 {
+            d * self.experts as u64
+        } else {
+            0
+        };
         let norms = l * 2 * d + d;
         l * (attn + ffn + router) + norms + v * d
     }

@@ -54,6 +54,37 @@ pub struct ServeMetrics {
     pub parity_repairs: u64,
     pub salvaged_reads: u64,
     pub quarantined_seqs: u64,
+    /// Prefetch-engine accounting (see `coordinator::scheduler`'s
+    /// prefetch contract): stored pages fetched speculatively for the
+    /// next step (`prefetch_issued`), how many the next step's real plan
+    /// consumed as-is (`prefetch_hits`), planned stored-page reads the
+    /// speculation did not cover and the synchronous fallback served
+    /// (`prefetch_misses` — new admissions and resumed sequences are
+    /// never speculated, so a run with mid-stream arrivals legitimately
+    /// counts misses), and the DRAM bytes of discarded speculative
+    /// fetches (`prefetch_wasted_bytes` — 0 on a clean completed run;
+    /// nonzero only under forced mispredicts or a truncated horizon).
+    /// All four are the ONLY metrics allowed to differ between a
+    /// prefetched and a synchronous serve of the same trace.
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub prefetch_wasted_bytes: u64,
+    /// Modeled fetch latency on the step critical path, summed over
+    /// steps, ns (see `ReadStats::modeled_fetch_ns`): `sync_fetch_ns`
+    /// charges every planned read as if fetched synchronously inside the
+    /// step; `overlapped_fetch_ns` charges only what actually blocked
+    /// the step — the prefetch misses (the two are equal when prefetch
+    /// is off). `fetch_latency_steps` counts the steps summed over.
+    pub sync_fetch_ns: f64,
+    pub overlapped_fetch_ns: f64,
+    pub fetch_latency_steps: u64,
+    /// The same latency pair restricted to steps that fetched for >= 8
+    /// concurrently active sequences — the contended regime the serve
+    /// bench gates on — plus that regime's step count.
+    pub sync_fetch_ns_8plus: f64,
+    pub overlapped_fetch_ns_8plus: f64,
+    pub steps_8plus: u64,
     latencies_ms: Vec<f64>,
     /// Time-to-first-token per request, virtual steps.
     ttft_steps: Vec<u64>,
@@ -109,6 +140,50 @@ impl ServeMetrics {
             0.0
         } else {
             self.host_copy_bytes as f64 / self.steps as f64
+        }
+    }
+
+    /// Record one step's modeled fetch-latency pair (see the field docs):
+    /// `active` is the batch size the step fetched for, `sync_ns` the
+    /// synchronous-model figure over every planned read, `overlapped_ns`
+    /// the share that actually blocked the step.
+    pub fn record_step_fetch_latency(&mut self, active: usize, sync_ns: f64, overlapped_ns: f64) {
+        self.sync_fetch_ns += sync_ns;
+        self.overlapped_fetch_ns += overlapped_ns;
+        self.fetch_latency_steps += 1;
+        if active >= 8 {
+            self.sync_fetch_ns_8plus += sync_ns;
+            self.overlapped_fetch_ns_8plus += overlapped_ns;
+            self.steps_8plus += 1;
+        }
+    }
+
+    /// Fraction of planned stored-page reads served from the prefetch
+    /// (0 when nothing was planned or prefetch is off).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let total = self.prefetch_hits + self.prefetch_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean modeled synchronous fetch latency per step, ns.
+    pub fn mean_sync_fetch_ns(&self) -> f64 {
+        if self.fetch_latency_steps == 0 {
+            0.0
+        } else {
+            self.sync_fetch_ns / self.fetch_latency_steps as f64
+        }
+    }
+
+    /// Mean modeled step-blocking (overlapped) fetch latency per step, ns.
+    pub fn mean_overlapped_fetch_ns(&self) -> f64 {
+        if self.fetch_latency_steps == 0 {
+            0.0
+        } else {
+            self.overlapped_fetch_ns / self.fetch_latency_steps as f64
         }
     }
 
@@ -238,6 +313,27 @@ mod tests {
         assert_eq!(m.host_copy_bytes, 1024);
         m.steps = 4;
         assert!((m.host_copy_bytes_per_step() - 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefetch_and_latency_accounting_accumulates() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.prefetch_hit_rate(), 0.0);
+        assert_eq!(m.mean_sync_fetch_ns(), 0.0);
+        assert_eq!(m.mean_overlapped_fetch_ns(), 0.0);
+        m.prefetch_issued += 4;
+        m.prefetch_hits += 3;
+        m.prefetch_misses += 1;
+        assert!((m.prefetch_hit_rate() - 0.75).abs() < 1e-12);
+        // one uncontended step, one 8-active step
+        m.record_step_fetch_latency(2, 100.0, 40.0);
+        m.record_step_fetch_latency(8, 300.0, 60.0);
+        assert_eq!(m.fetch_latency_steps, 2);
+        assert!((m.mean_sync_fetch_ns() - 200.0).abs() < 1e-12);
+        assert!((m.mean_overlapped_fetch_ns() - 50.0).abs() < 1e-12);
+        assert_eq!(m.steps_8plus, 1);
+        assert!((m.sync_fetch_ns_8plus - 300.0).abs() < 1e-12);
+        assert!((m.overlapped_fetch_ns_8plus - 60.0).abs() < 1e-12);
     }
 
     #[test]

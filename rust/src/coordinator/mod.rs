@@ -14,8 +14,8 @@ pub use footprint::{footprint_curve, FootprintPoint};
 pub use kvmanager::{degrade_f32, KvViewPlan, PageView, PolicyEngine, PolicyPlan};
 pub use metrics::{ServeMetrics, TenantStats};
 pub use pagestore::{
-    fetch_sequences, span_k_base, span_v_base, sync_sequences, ArenaSpan, DecodeArena,
-    FetchOutcome, KvPageStore,
+    fetch_sequences, prefetch_sequences, span_k_base, span_v_base, sync_sequences, ArenaSpan,
+    DecodeArena, FetchOutcome, KvPageStore, PrefetchedPage, SeqPrefetch,
 };
 pub use scheduler::{
     fixed_slots_for_budget, materialize_read, serve_trace, Admission, EventKind, FetchMode,

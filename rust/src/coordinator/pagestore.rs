@@ -19,6 +19,21 @@
 //! of pages times a fresh `Vec` each. [`FetchOutcome`] carries spans, not
 //! buffers; resolve them against the arena with [`FetchOutcome::decoded`]
 //! / [`DecodeArena::codes`].
+//!
+//! ### Double-buffered arenas (the prefetch lifecycle)
+//!
+//! The prefetch engine (`coordinator::scheduler`) runs TWO arenas in an
+//! A/B swap. While step N's attention reads arena A, the speculative
+//! fetch for step N+1 ([`prefetch_sequences`]) resets and fills the
+//! *shadow* arena B. At step N+1 the scheduler swaps the two: B becomes
+//! the live arena — prefetched spans stay valid, hits are consumed in
+//! place, and the synchronous fallback for mispredicted pages appends
+//! its spans to the SAME buffer (a grow-only arena never invalidates
+//! earlier spans) — while A, whose spans died with step N, becomes the
+//! next shadow. A discarded speculative span is therefore dropped at the
+//! very next swap's reset: nothing stale survives into a later step, and
+//! no span ever dangles (the mirror of the failed-read drain discipline
+//! on the DRAM side).
 
 use std::sync::Arc;
 
@@ -585,6 +600,127 @@ pub fn fetch_sequences(
     Ok(outcomes)
 }
 
+/// One stored page fetched speculatively for the NEXT decode step by
+/// [`prefetch_sequences`]: the span already decoded into the shadow
+/// arena, the plan bits the prediction requested, and this page's share
+/// of the read accounting — held back until (and unless) the next step's
+/// real plan consumes the page.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchedPage {
+    pub page: usize,
+    /// Requested plan bits (pre-ladder precision). A hit requires the
+    /// real plan to request exactly these bits — the decoded span is a
+    /// pure function of `(stored frames, bits)`, so equal bits means a
+    /// byte-identical span.
+    pub bits: u32,
+    pub span: ArenaSpan,
+    /// This page's controller accounting, NOT yet folded into the store's
+    /// totals: the consumer accounts a hit at consume time (so metrics
+    /// stay bit-identical to the synchronous schedule) and a discarded
+    /// page only ever surfaces as wasted bytes. `dispatches` stays 0; the
+    /// consumer charges the dispatch shape of the fetch mode it serves.
+    pub stats: ReadStats,
+}
+
+/// One sequence's share of a speculative next-step fetch.
+#[derive(Debug, Default)]
+pub struct SeqPrefetch {
+    pub pages: Vec<PrefetchedPage>,
+    /// Set when the recovery-ladder pre-pass quarantined the sequence
+    /// while speculating: the fault draw belongs to the step being
+    /// predicted, so the consuming step surfaces exactly this quarantine
+    /// (no pages were speculated for the sequence).
+    pub quarantine: Option<String>,
+}
+
+/// Speculatively fetch the *predicted* next-step reads of every surviving
+/// sequence into the shadow `arena` — [`fetch_sequences`] with three
+/// deliberate differences. (1) Nothing is accounted to the stores or the
+/// caller's metrics: accounting rides per page in [`PrefetchedPage`] and
+/// lands only when the next step consumes the page, so the metric stream
+/// is bit-identical to a synchronous serve. (2) Raw sub-page tails are
+/// skipped — they live on chip, there is nothing to overlap; the
+/// consuming step accounts them where the synchronous path does. (3) The
+/// recovery-ladder pre-pass runs against the PREDICTED step's fault draw
+/// (the caller sets the fault step to N+1 first): a fault on a
+/// speculated page resolves here, exactly once — the consuming step's
+/// re-visit of the same site (hit or mispredict-refetch) is a no-op by
+/// `FaultCtx`'s per-step dedup, which is what keeps `RecoveryStats`
+/// identical to the synchronous schedule even when a mispredicted
+/// prefetch is discarded and refetched.
+pub fn prefetch_sequences(
+    seqs: &mut [(&mut KvPageStore, &[u32])],
+    lanes: &LaneArray,
+    arena: &mut DecodeArena,
+) -> anyhow::Result<Vec<SeqPrefetch>> {
+    let mut outcomes: Vec<SeqPrefetch> = seqs.iter().map(|_| SeqPrefetch::default()).collect();
+    let mut keeps: Vec<Vec<u32>> = Vec::with_capacity(seqs.len());
+    for (si, (store, bits)) in seqs.iter_mut().enumerate() {
+        let mut ks = vec![0u32; bits.len()];
+        for (p, &bits_p) in bits.iter().enumerate() {
+            if bits_p == 0 || p >= store.pages.len() {
+                continue;
+            }
+            match store.mc.prepare_read(store.pages[p], bits_p) {
+                Ok(k) => ks[p] = k,
+                Err(e) => {
+                    if e.downcast_ref::<QuarantineError>().is_some() {
+                        outcomes[si].quarantine = Some(e.to_string());
+                        break;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        keeps.push(ks);
+    }
+    // plan per page with per-page accounting (a speculative page must be
+    // individually consumable or discardable)
+    let mut plans: Vec<RegionPlan<'_>> = Vec::new();
+    let mut keys: Vec<(usize, usize, u32, ReadStats)> = Vec::new();
+    for (si, (store, bits)) in seqs.iter().enumerate() {
+        let store: &KvPageStore = store;
+        if outcomes[si].quarantine.is_some() {
+            continue;
+        }
+        for (p, &bits_p) in bits.iter().enumerate() {
+            if bits_p == 0 || p >= store.pages.len() {
+                continue; // masked page, or on-chip raw tail: never speculated
+            }
+            let region = store.mc.region(store.pages[p]);
+            let keep = keeps[si][p];
+            let mut stats = ReadStats::default();
+            let mut frames = Vec::new();
+            let mut total_m = 0usize;
+            for (_, frame) in region.frames() {
+                let (_, fp) =
+                    plan_frame_fetch(&mut stats, &store.mc.engine, region.layout, frame, keep)?;
+                total_m += fp.m;
+                frames.push(fp);
+            }
+            plans.push(RegionPlan {
+                keep,
+                layout: region.layout,
+                frames,
+                total_m,
+            });
+            keys.push((si, p, bits_p, stats));
+        }
+    }
+    let spans: Vec<ArenaSpan> = plans.iter().map(|pl| arena.alloc(pl.total_m)).collect();
+    for (&(si, page, bits, stats), &span) in keys.iter().zip(&spans) {
+        outcomes[si].pages.push(PrefetchedPage {
+            page,
+            bits,
+            span,
+            stats,
+        });
+    }
+    let dests = arena.slices_mut(&spans);
+    run_decode_dispatch(lanes, plans, dests)?;
+    Ok(outcomes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -628,6 +764,67 @@ mod tests {
             }
         }
         kv
+    }
+
+    #[test]
+    fn prefetch_matches_synchronous_fetch_per_page() {
+        // A speculative fetch must decode byte-identical codes and carry
+        // the same per-page accounting the synchronous path produces for
+        // the same plan — the invariant that lets the scheduler consume
+        // a hit in place of the real fetch.
+        let m = meta();
+        let kvs: Vec<KvState> = [48usize, 64, 40].iter().map(|&pos| kv_filled(&m, pos)).collect();
+        let lanes = LaneArray::new(2);
+        let mut mk = |_: &KvState| KvPageStore::new(&m, Layout::Proposed, Codec::Zstd);
+        let mut spec_stores: Vec<KvPageStore> = kvs.iter().map(&mut mk).collect();
+        let mut sync_stores: Vec<KvPageStore> = kvs.iter().map(&mut mk).collect();
+        for (ps, kv) in spec_stores.iter_mut().chain(sync_stores.iter_mut()).zip(
+            kvs.iter().chain(kvs.iter()),
+        ) {
+            ps.sync(kv, &m);
+        }
+        let plans: Vec<Vec<u32>> = vec![vec![16, 8, 4, 16], vec![8, 8, 8, 8], vec![0, 16, 4, 0]];
+        let mut shadow = DecodeArena::new();
+        let pf = {
+            let mut seqs: Vec<(&mut KvPageStore, &[u32])> = spec_stores
+                .iter_mut()
+                .zip(plans.iter())
+                .map(|(s, b)| (s, b.as_slice()))
+                .collect();
+            prefetch_sequences(&mut seqs, &lanes, &mut shadow).unwrap()
+        };
+        let mut arena = DecodeArena::new();
+        for ((store, plan), sp) in sync_stores.iter_mut().zip(&plans).zip(&pf) {
+            arena.reset();
+            let o = store.fetch_pages(plan, &mut arena).unwrap();
+            assert!(o.quarantine.is_none() && sp.quarantine.is_none());
+            // stored pages only (the 40-pos store has a raw tail at page
+            // 2... no: 40 tokens = 2 stored pages + tail; bits[2]=4 is a
+            // tail page and must NOT be speculated)
+            let stored: Vec<usize> = o
+                .pages
+                .iter()
+                .map(|&(p, _)| p)
+                .filter(|&p| p < store.len())
+                .collect();
+            assert_eq!(sp.pages.iter().map(|pg| pg.page).collect::<Vec<_>>(), stored);
+            let mut merged = ReadStats::default();
+            for pg in &sp.pages {
+                assert_eq!(arena.codes(o.span_for(pg.page).unwrap()), shadow.codes(pg.span));
+                assert_eq!(pg.stats.dispatches, 0);
+                merged.merge(&pg.stats);
+            }
+            assert_eq!(merged.dram_bytes, o.stats.dram_bytes);
+            assert_eq!(merged.logical_bytes, o.stats.logical_bytes);
+            assert_eq!(merged.frames, o.stats.frames);
+            assert_eq!(merged.engine_ns.to_bits(), o.stats.engine_ns.to_bits());
+            // speculation accounts nothing to the store until consumed
+            assert_eq!(spec_stores_total_frames(&spec_stores), 0);
+        }
+    }
+
+    fn spec_stores_total_frames(stores: &[KvPageStore]) -> u64 {
+        stores.iter().map(|s| s.mc.total.frames).sum()
     }
 
     #[test]

@@ -39,21 +39,61 @@
 //! trace + seed yields a bit-identical schedule, responses, and
 //! step-domain latency metrics at any lane count (property-tested at
 //! 1/2/8/32 lanes, both admissions, both fetch modes).
+//!
+//! ## The prefetch contract
+//!
+//! Decode is autoregressive, so step N's state determines step N+1's
+//! reads almost completely. With [`SchedConfig::prefetch`] on, the loop
+//! exploits that: after step N finishes (retirement and the pressure
+//! ladder included), it *predicts* step N+1's read plan and speculatively
+//! runs the whole fetch — recovery-ladder pre-pass, frame planning, and
+//! lane decode into the shadow arena (see `pagestore`'s double-buffer
+//! lifecycle) — so the bytes are already decoded when step N+1 consumes
+//! them, and only mispredicted pages pay a synchronous fetch.
+//!
+//! **Prediction inputs** — a pure function of step-N virtual state: the
+//! surviving active set (post-retire, post-evict), each sequence's
+//! advanced `KvState` (the same positions step N+1's planner will see),
+//! and the pressure clamp step 8 just computed for the next step. The
+//! prediction runs the SAME `plan_pressured_into` the next step runs, so
+//! for a surviving sequence it is exact by construction.
+//!
+//! **Invalidation rules** — a speculated page is consumed only if the
+//! real plan requests the page at exactly the predicted bit count;
+//! anything else invalidates just that page and falls back to the
+//! synchronous fetch path: a pressure rung that moved, a sequence that
+//! was never speculated (admitted or resumed this step), a quarantine
+//! (surfaced from the speculative pre-pass exactly as the synchronous
+//! fetch would), or a forced chaos mispredict
+//! ([`SchedConfig::prefetch_chaos`]). Discarded spans die at the next
+//! arena swap; discarded DRAM bytes are accounted to
+//! `prefetch_wasted_bytes` and nowhere else.
+//!
+//! **Determinism** — the speculative pre-pass runs against step N+1's
+//! fault draw (`FaultCtx::set_step(N+1)` before speculating), and
+//! `FaultCtx`'s per-step site dedup makes the consuming step's re-visit
+//! of the same sites a no-op, so faults on prefetched reads resolve on
+//! the recovery ladder exactly once. Schedule, responses, `read_digest`,
+//! events, and every metric except the four `prefetch_*` counters and
+//! the overlapped-latency figures are bit-identical to the synchronous
+//! path at every lane count, fetch mode, and codec — including under
+//! pressure, evict/resume, faults, and forced mispredicts
+//! (`tests/prefetch_parity.rs` pins all of this).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::kvmanager::{degrade_f32, KvViewPlan, PolicyEngine};
 use super::metrics::ServeMetrics;
 use super::pagestore::{
-    fetch_sequences, page_raw_bytes, span_codes, span_k_base, span_v_base, sync_sequences,
-    DecodeArena, FetchOutcome, KvPageStore,
+    fetch_sequences, page_raw_bytes, prefetch_sequences, span_codes, span_k_base, span_v_base,
+    sync_sequences, DecodeArena, FetchOutcome, KvPageStore, SeqPrefetch,
 };
 use crate::compress::Codec;
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
-use crate::memctrl::{FaultPlan, Layout, QuarantineError, RecoveryStats};
+use crate::memctrl::{FaultPlan, Layout, QuarantineError, ReadStats, RecoveryStats};
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta, TinyLm};
 use crate::util::hash::Fnv1a;
@@ -348,6 +388,20 @@ pub struct SchedConfig {
     /// arms the plan with the request id as owner, so no two sequences
     /// share a fault schedule and the whole run replays bit-exactly.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Speculatively fetch each surviving sequence's predicted next-step
+    /// reads into a shadow arena while the current step's views are being
+    /// consumed (see the module docs' prefetch contract). Changes ONLY
+    /// the `prefetch_*` counters and the overlapped-latency figures —
+    /// schedule, responses, and all other metrics stay bit-identical.
+    pub prefetch: bool,
+    /// Forced-mispredict validation knob: every `prefetch_chaos`-th step
+    /// the prediction runs with a deliberately wrong pressure clamp, so
+    /// the speculated bits mismatch the real plan and the whole step
+    /// falls back to the synchronous fetch (discard + refetch). The
+    /// clamp perturbation preserves WHICH pages are planned — only their
+    /// bit counts move — so fault-site draws stay identical to the
+    /// synchronous schedule even mid-chaos. 0 = off.
+    pub prefetch_chaos: u64,
 }
 
 impl SchedConfig {
@@ -365,6 +419,8 @@ impl SchedConfig {
             collect_digests: false,
             parity: false,
             faults: None,
+            prefetch: false,
+            prefetch_chaos: 0,
         }
     }
 
@@ -461,6 +517,11 @@ struct Seq {
     store: KvPageStore,
     /// Reusable per-step read plan (lazy views; see [`KvViewPlan`]).
     plan: KvViewPlan,
+    /// Second plan buffer for the prefetch engine's next-step prediction
+    /// (never aliased with `plan`: the prediction runs at the end of step
+    /// N, the real plan overwrites `plan` at step N+1). Unused with
+    /// [`SchedConfig::prefetch`] off.
+    predicted: KvViewPlan,
     produced: Vec<u16>,
     nll_sum: f64,
     fetched: u64,
@@ -554,6 +615,13 @@ pub fn serve_trace<M: StepModel>(
     let mut dense_k: Vec<f32> = Vec::new();
     let mut dense_v: Vec<f32> = Vec::new();
     let mut step_fetched: Vec<u64> = Vec::new();
+    // prefetch engine state (see the module docs' prefetch contract):
+    // the shadow arena — B of the A/B double buffer — and the
+    // speculative outcomes keyed by request id, issued at the end of one
+    // step for `prefetch_step` (always the step about to consume them)
+    let mut shadow = DecodeArena::new();
+    let mut prefetch: BTreeMap<u64, SeqPrefetch> = BTreeMap::new();
+    let mut prefetch_step: u64 = 0;
 
     while next_req < n || !pending.is_empty() || !active.is_empty() || !swapped.is_empty() {
         if cfg.max_steps > 0 && step >= cfg.max_steps {
@@ -690,36 +758,202 @@ pub fn serve_trace<M: StepModel>(
         // the step arena — coalesced into ONE cross-sequence lane
         // dispatch (Batched), or one load per page (PerSequence, the
         // reference). Identical bytes move either way; the stored pages
-        // a step attends over are exactly what this fetch decoded.
-        arena.reset();
-        let mut outs: Vec<FetchOutcome> = match cfg.fetch {
-            FetchMode::Batched => {
-                let outs = {
+        // a step attends over are exactly what this fetch decoded. With
+        // prefetch on, the arena double buffer swaps first: the shadow
+        // arena speculated at the end of the last step goes live (its
+        // spans stay valid), predicted pages the real plan confirms are
+        // consumed in place, and only the residue — mispredicts, raw
+        // tails, never-speculated sequences — pays a synchronous fetch
+        // appended to the same arena.
+        let mut taken: Vec<SeqPrefetch> = Vec::new();
+        if cfg.prefetch {
+            std::mem::swap(&mut arena, &mut shadow);
+            debug_assert!(prefetch.is_empty() || prefetch_step == step);
+            taken = active
+                .iter()
+                .map(|s| prefetch.remove(&s.req.id).unwrap_or_default())
+                .collect();
+            // a speculated sequence can only leave `active` at its
+            // consuming step (retire/evict run before speculation), so
+            // nothing remains here — drain defensively as waste
+            for (_, o) in std::mem::take(&mut prefetch) {
+                debug_assert!(false, "speculation outlived its sequence");
+                for pg in o.pages {
+                    metrics.prefetch_wasted_bytes += pg.stats.dram_bytes;
+                }
+            }
+            if taken.iter().all(|t| t.pages.is_empty() && t.quarantine.is_none()) {
+                arena.reset(); // nothing was speculated: plain synchronous step
+            }
+        } else {
+            arena.reset();
+        }
+        // the share of this step's reads that actually blocked it (the
+        // synchronous fallback); equals the full fetch with prefetch off
+        let mut step_block = ReadStats::default();
+        let mut outs: Vec<FetchOutcome> = if cfg.prefetch {
+            // 4a. split each sequence's real plan into prefetch hits and
+            // synchronous residue. A hit requires exact bits at a stored
+            // page; raw tails and quarantined sequences never hit.
+            let mut hit_idx: Vec<Vec<usize>> = Vec::with_capacity(active.len());
+            let mut miss_bits: Vec<Vec<u32>> = Vec::with_capacity(active.len());
+            for (s, pf) in active.iter().zip(&taken) {
+                let mut hits = Vec::new();
+                let mut mb = vec![0u32; s.plan.page_bits.len()];
+                if pf.quarantine.is_none() {
+                    let stored = s.store.len();
+                    for (p, &b) in s.plan.page_bits.iter().enumerate() {
+                        if b == 0 {
+                            continue;
+                        }
+                        match pf.pages.iter().position(|pg| pg.page == p && pg.bits == b) {
+                            Some(i) if p < stored => hits.push(i),
+                            _ => {
+                                if p < stored {
+                                    metrics.prefetch_misses += 1;
+                                }
+                                mb[p] = b;
+                            }
+                        }
+                    }
+                }
+                hit_idx.push(hits);
+                miss_bits.push(mb);
+            }
+            // 4b. synchronous fallback for the residue, appended to the
+            // live arena (grow-only: earlier spans stay valid). Sites the
+            // speculation already visited re-resolve as no-ops (FaultCtx
+            // per-step dedup), so the ladder runs exactly once per site.
+            let any = miss_bits.iter().any(|m| m.iter().any(|&b| b != 0));
+            let mut fb: Vec<FetchOutcome> = match cfg.fetch {
+                FetchMode::Batched if any => {
                     let mut seqs: Vec<(&mut KvPageStore, &[u32])> = active
                         .iter_mut()
-                        .map(|s| {
-                            let Seq { store, plan, .. } = s;
-                            (store, plan.page_bits.as_slice())
-                        })
+                        .zip(miss_bits.iter())
+                        .map(|(s, mb)| (&mut s.store, mb.as_slice()))
                         .collect();
                     fetch_sequences(&mut seqs, &lanes, &mut arena)?
-                };
-                let frames: u64 = outs.iter().map(|o| o.stats.frames).sum();
-                let bytes: u64 = outs.iter().map(|o| o.dram_bytes_total()).sum();
-                metrics.record_fetch(frames, u64::from(frames > 0), bytes);
-                outs
-            }
-            FetchMode::PerSequence => {
-                let mut v = Vec::with_capacity(active.len());
-                for s in active.iter_mut() {
-                    let Seq { store, plan, .. } = s;
-                    let o = store.fetch_pages(&plan.page_bits, &mut arena)?;
-                    metrics.record_fetch(o.stats.frames, o.stats.dispatches, o.dram_bytes_total());
-                    v.push(o);
                 }
-                v
+                FetchMode::PerSequence if any => {
+                    let mut v = Vec::with_capacity(active.len());
+                    for (s, mb) in active.iter_mut().zip(miss_bits.iter()) {
+                        v.push(s.store.fetch_pages(mb, &mut arena)?);
+                    }
+                    v
+                }
+                _ => active.iter().map(|_| FetchOutcome::default()).collect(),
+            };
+            // 4c. assemble per-sequence outcomes: consumed hits account
+            // now (their speculative stats are exactly what the
+            // synchronous fetch would have produced), the fallback share accounted
+            // itself, and a quarantine from either pass voids the
+            // sequence's fetch exactly as the synchronous path does.
+            let mut outs: Vec<FetchOutcome> = Vec::with_capacity(active.len());
+            for (si, (pf, mut fbo)) in taken.drain(..).zip(fb.drain(..)).enumerate() {
+                let s = &mut active[si];
+                if let Some(q) = pf.quarantine.or(fbo.quarantine.take()) {
+                    for pg in &pf.pages {
+                        metrics.prefetch_wasted_bytes += pg.stats.dram_bytes;
+                    }
+                    outs.push(FetchOutcome {
+                        quarantine: Some(q),
+                        ..FetchOutcome::default()
+                    });
+                    continue;
+                }
+                let mut o = FetchOutcome::default();
+                let used = &hit_idx[si];
+                let mut hit_stats = ReadStats::default();
+                for &i in used {
+                    let pg = &pf.pages[i];
+                    o.pages.push((pg.page, pg.span));
+                    let mut st = pg.stats;
+                    if matches!(cfg.fetch, FetchMode::PerSequence) {
+                        // the dispatch a per-page load would have charged
+                        st.dispatches = 1;
+                    }
+                    hit_stats.merge(&st);
+                }
+                metrics.prefetch_hits += used.len() as u64;
+                for (i, pg) in pf.pages.iter().enumerate() {
+                    if !used.contains(&i) {
+                        metrics.prefetch_wasted_bytes += pg.stats.dram_bytes;
+                    }
+                }
+                o.stats.merge(&hit_stats);
+                o.stats.merge(&fbo.stats);
+                o.raw_tail_bytes = fbo.raw_tail_bytes;
+                o.pages.extend(fbo.pages.iter().copied());
+                s.store.mc.account_read(hit_stats);
+                step_block.merge(&fbo.stats);
+                outs.push(o);
+            }
+            // logical fetch accounting, in the synchronous schedule's
+            // dispatch shape — bit-identical to the prefetch-off run
+            match cfg.fetch {
+                FetchMode::Batched => {
+                    let frames: u64 = outs.iter().map(|o| o.stats.frames).sum();
+                    let bytes: u64 = outs.iter().map(|o| o.dram_bytes_total()).sum();
+                    metrics.record_fetch(frames, u64::from(frames > 0), bytes);
+                }
+                FetchMode::PerSequence => {
+                    for o in &outs {
+                        metrics.record_fetch(
+                            o.stats.frames,
+                            o.stats.dispatches,
+                            o.dram_bytes_total(),
+                        );
+                    }
+                }
+            }
+            outs
+        } else {
+            match cfg.fetch {
+                FetchMode::Batched => {
+                    let outs = {
+                        let mut seqs: Vec<(&mut KvPageStore, &[u32])> = active
+                            .iter_mut()
+                            .map(|s| {
+                                let Seq { store, plan, .. } = s;
+                                (store, plan.page_bits.as_slice())
+                            })
+                            .collect();
+                        fetch_sequences(&mut seqs, &lanes, &mut arena)?
+                    };
+                    let frames: u64 = outs.iter().map(|o| o.stats.frames).sum();
+                    let bytes: u64 = outs.iter().map(|o| o.dram_bytes_total()).sum();
+                    metrics.record_fetch(frames, u64::from(frames > 0), bytes);
+                    outs
+                }
+                FetchMode::PerSequence => {
+                    let mut v = Vec::with_capacity(active.len());
+                    for s in active.iter_mut() {
+                        let Seq { store, plan, .. } = s;
+                        let o = store.fetch_pages(&plan.page_bits, &mut arena)?;
+                        metrics
+                            .record_fetch(o.stats.frames, o.stats.dispatches, o.dram_bytes_total());
+                        v.push(o);
+                    }
+                    v
+                }
             }
         };
+        // modeled step-latency pair: what a fully synchronous fetch of
+        // this step's plan costs on the critical path vs what actually
+        // blocked the step (the residue only, with prefetch on)
+        if !active.is_empty() {
+            let mut step_sync = ReadStats::default();
+            for o in &outs {
+                step_sync.merge(&o.stats);
+            }
+            let sync_ns = step_sync.modeled_fetch_ns();
+            let overlapped_ns = if cfg.prefetch {
+                step_block.modeled_fetch_ns()
+            } else {
+                sync_ns
+            };
+            metrics.record_step_fetch_latency(active.len(), sync_ns, overlapped_ns);
+        }
         // recovery bookkeeping: fold every sequence's ladder counters into
         // the run metrics (including sequences about to be quarantined),
         // then evict exactly the quarantined sequences — their outcomes
@@ -744,8 +978,16 @@ pub fn serve_trace<M: StepModel>(
         }
         step_fetched.clear();
         step_fetched.extend(outs.iter().map(|o| o.dram_bytes_total()));
-        // the decoded page codes are this step's host-side read volume
-        metrics.record_host_copy((arena.len() * 2) as u64);
+        // the decoded page codes are this step's host-side read volume —
+        // counted over the spans the step consumes (== the arena's whole
+        // volume on a synchronous step; a discarded speculative span is
+        // waste, not a host copy, so it never lands here)
+        let consumed_codes: usize = outs
+            .iter()
+            .flat_map(|o| o.pages.iter())
+            .map(|&(_, span)| span.len)
+            .sum();
+        metrics.record_host_copy((consumed_codes * 2) as u64);
 
         // 5. one decode step per active sequence (round-robin batching):
         // attention consumes the fetched views, making the fetched bytes
@@ -891,7 +1133,58 @@ pub fn serve_trace<M: StepModel>(
             };
         }
 
+        // 9. speculate the next step (see the module docs' prefetch
+        // contract): predict each survivor's plan with the clamp stage 8
+        // just computed — the exact inputs the next step's planner will
+        // see — and run the whole fetch into the shadow arena. The fault
+        // step advances to step+1 FIRST, so speculative ladder work is
+        // the next step's draw, resolved early and exactly once.
+        if cfg.prefetch && !active.is_empty() {
+            let next_step = step + 1;
+            let chaos = cfg.prefetch_chaos > 0 && next_step % cfg.prefetch_chaos == 0;
+            // the chaos clamp moves bit counts without changing which
+            // pages are planned (masked pages stay masked), so fault-site
+            // visits stay schedule-identical even mid-chaos
+            let predicted_clamp = if chaos {
+                match clamp {
+                    Some(4) => Some(8),
+                    Some(_) => Some(4),
+                    None => Some(8),
+                }
+            } else {
+                clamp
+            };
+            shadow.reset();
+            for s in active.iter_mut() {
+                s.store.mc.set_fault_step(next_step);
+                let Seq { engine, kv, predicted, .. } = s;
+                engine.plan_pressured_into(kv, meta, predicted_clamp, predicted);
+            }
+            let pf = {
+                let mut seqs: Vec<(&mut KvPageStore, &[u32])> = active
+                    .iter_mut()
+                    .map(|s| {
+                        let Seq { store, predicted, .. } = s;
+                        (store, predicted.page_bits.as_slice())
+                    })
+                    .collect();
+                prefetch_sequences(&mut seqs, &lanes, &mut shadow)?
+            };
+            for (s, o) in active.iter().zip(pf) {
+                metrics.prefetch_issued += o.pages.len() as u64;
+                prefetch.insert(s.req.id, o);
+            }
+            prefetch_step = next_step;
+        }
+
         step += 1;
+    }
+    // a truncated horizon (max_steps) can leave the final speculation
+    // unconsumed — surface it as waste, never as a silent leak
+    for (_, o) in prefetch {
+        for pg in o.pages {
+            metrics.prefetch_wasted_bytes += pg.stats.dram_bytes;
+        }
     }
     out.steps = step;
     Ok(out)
@@ -975,6 +1268,7 @@ fn admit(
         engine: PolicyEngine::with_shared(req.policy.clone(), Arc::clone(lanes)),
         store,
         plan: KvViewPlan::new(),
+        predicted: KvViewPlan::new(),
         produced: Vec::new(),
         nll_sum: 0.0,
         fetched: 0,
@@ -1243,6 +1537,43 @@ mod tests {
                             m.fetch_dispatches <= bm.fetch_dispatches,
                             "{tag}: batched fetch must not dispatch more"
                         );
+                    }
+                    // Speculation must be invisible: prefetch-on (clean
+                    // and chaos-perturbed) reproduces the synchronous
+                    // schedule, responses, and fetch-domain metrics
+                    // bit-for-bit. A clean completed run also proves
+                    // drain hygiene — every speculated span was consumed
+                    // (no orphaned arena spans or queue entries).
+                    for chaos in [0u64, 3] {
+                        let pcfg = SchedConfig {
+                            prefetch: true,
+                            prefetch_chaos: chaos,
+                            ..cfg.clone()
+                        };
+                        let (p, pm) = run(&trace, &pcfg, lanes, 7);
+                        let ptag = format!("{tag}/prefetch chaos={chaos}");
+                        assert_eq!(p.events, base.events, "{ptag}: schedule diverged");
+                        assert_eq!(p.pressure_steps, base.pressure_steps, "{ptag}");
+                        assert_eq!(
+                            p.responses.iter().map(key).collect::<Vec<_>>(),
+                            base.responses.iter().map(key).collect::<Vec<_>>(),
+                            "{ptag}: responses diverged"
+                        );
+                        assert_eq!(pm.fetched_bytes, m.fetched_bytes, "{ptag}");
+                        assert_eq!(pm.fetch_frames, m.fetch_frames, "{ptag}");
+                        assert_eq!(pm.fetch_dispatches, m.fetch_dispatches, "{ptag}");
+                        assert_eq!(pm.host_copy_bytes, m.host_copy_bytes, "{ptag}");
+                        assert!(pm.prefetch_issued > 0, "{ptag}: speculation never armed");
+                        if chaos == 0 {
+                            assert_eq!(
+                                pm.prefetch_wasted_bytes, 0,
+                                "{ptag}: clean run left speculated-but-unconsumed spans"
+                            );
+                            assert_eq!(
+                                pm.prefetch_hits, pm.prefetch_issued,
+                                "{ptag}: clean run must consume every speculated page"
+                            );
+                        }
                     }
                 }
             }

@@ -355,8 +355,18 @@ impl MemorySystem {
     /// `retried_requests` tick per call so fault-free and faulty runs are
     /// distinguishable in [`SimStats`].
     pub fn enqueue_retry(&mut self, base: u64, bytes: u64) -> u64 {
+        self.enqueue_retry_tagged(base, bytes, 0)
+    }
+
+    /// [`enqueue_retry`](Self::enqueue_retry) with caller-correlated burst
+    /// tags: cycle-interleaved readers
+    /// ([`fetch_group`](crate::memctrl::MemController::fetch_group)) tag a
+    /// retry's bursts into the frame they re-read, so the frame's modeled
+    /// completion time honestly includes the retry traffic. Returns the
+    /// next free tag, exactly like [`enqueue_range`](Self::enqueue_range).
+    pub fn enqueue_retry_tagged(&mut self, base: u64, bytes: u64, first_tag: u64) -> u64 {
         self.stats.retried_requests += 1;
-        self.enqueue_range(base, bytes, false, 0)
+        self.enqueue_range(base, bytes, false, first_tag)
     }
 
     /// Drain all queues; returns the cycle when the last data beat lands.
@@ -756,7 +766,12 @@ mod tests {
         }
     }
 
-    fn pending_at(map: &crate::dram::addrmap::AddrMap, cfg: &Ddr5Config, byte_addr: u64, step: u64) -> Pending {
+    fn pending_at(
+        map: &crate::dram::addrmap::AddrMap,
+        cfg: &Ddr5Config,
+        byte_addr: u64,
+        step: u64,
+    ) -> Pending {
         let addr = map.decode(byte_addr);
         Pending {
             addr,

@@ -519,7 +519,11 @@ mod tests {
             let blocks: Vec<Vec<u16>> = (0..nblocks)
                 .map(|_| g.u16s(600))
                 .collect();
-            let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+            let codec = if g.rng.next_f64() < 0.5 {
+                Codec::Lz4
+            } else {
+                Codec::Zstd
+            };
             let work = |lane: &mut Lane, codes: &Vec<u16>| {
                 let pb = disaggregate(Dtype::Bf16, codes);
                 let mut payload = Vec::new();

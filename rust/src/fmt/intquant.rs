@@ -55,7 +55,11 @@ pub fn dequantize_int(q: &GroupQuant) -> Vec<f32> {
         .iter()
         .enumerate()
         .map(|(i, &c)| {
-            let raw = if c & sign_bit != 0 { (c | ext) as i16 } else { c as i16 };
+            let raw = if c & sign_bit != 0 {
+                (c | ext) as i16
+            } else {
+                c as i16
+            };
             let scale = BF16.decode(q.scales[i / q.group_size] as u32);
             raw as f32 * scale
         })

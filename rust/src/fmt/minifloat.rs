@@ -119,7 +119,11 @@ impl MiniFloat {
         let e_bits = self.exp_bits;
         let m_bits = self.man_bits;
         let code = code & ((1u64 << self.bits()) - 1) as u32;
-        let sign = if (code >> (e_bits + m_bits)) & 1 == 1 { -1.0f64 } else { 1.0 };
+        let sign = if (code >> (e_bits + m_bits)) & 1 == 1 {
+            -1.0f64
+        } else {
+            1.0
+        };
         let e_field = ((code >> m_bits) & ((1 << e_bits) - 1)) as i32;
         let man = (code & ((1u32 << m_bits).wrapping_sub(1))) as u64;
         let bias = self.bias();
@@ -284,7 +288,8 @@ mod tests {
                     2f64.powi(1 - f.bias() - f.man_bits as i32)
                 } else {
                     let e = (x.abs() as f64).log2().floor() as i32;
-                    2f64.powi(e - f.man_bits as i32).max(2f64.powi(1 - f.bias() - f.man_bits as i32))
+                    2f64.powi(e - f.man_bits as i32)
+                        .max(2f64.powi(1 - f.bias() - f.man_bits as i32))
                 };
                 let err = (x as f64 - y as f64).abs();
                 if err > 0.5001 * ulp {

@@ -65,12 +65,60 @@ impl Quad {
 
 /// Paper Table IV, single-lane columns.
 pub const TABLE4_POINTS: [DesignPoint; 6] = [
-    DesignPoint { engine: Codec::Lz4, block_bits: 16384, lanes: 32, clock_ghz: 2.0, sl_area_mm2: 0.05669, sl_power_mw: 696.515, sl_gbps: 512.0 },
-    DesignPoint { engine: Codec::Lz4, block_bits: 32768, lanes: 32, clock_ghz: 2.0, sl_area_mm2: 0.07557, sl_power_mw: 885.258, sl_gbps: 512.0 },
-    DesignPoint { engine: Codec::Lz4, block_bits: 65536, lanes: 32, clock_ghz: 2.0, sl_area_mm2: 0.15106, sl_power_mw: 1640.233, sl_gbps: 512.0 },
-    DesignPoint { engine: Codec::Zstd, block_bits: 16384, lanes: 32, clock_ghz: 2.0, sl_area_mm2: 0.08357, sl_power_mw: 1363.715, sl_gbps: 512.0 },
-    DesignPoint { engine: Codec::Zstd, block_bits: 32768, lanes: 32, clock_ghz: 2.0, sl_area_mm2: 0.10245, sl_power_mw: 1552.458, sl_gbps: 512.0 },
-    DesignPoint { engine: Codec::Zstd, block_bits: 65536, lanes: 32, clock_ghz: 2.0, sl_area_mm2: 0.17794, sl_power_mw: 2307.433, sl_gbps: 512.0 },
+    DesignPoint {
+        engine: Codec::Lz4,
+        block_bits: 16384,
+        lanes: 32,
+        clock_ghz: 2.0,
+        sl_area_mm2: 0.05669,
+        sl_power_mw: 696.515,
+        sl_gbps: 512.0,
+    },
+    DesignPoint {
+        engine: Codec::Lz4,
+        block_bits: 32768,
+        lanes: 32,
+        clock_ghz: 2.0,
+        sl_area_mm2: 0.07557,
+        sl_power_mw: 885.258,
+        sl_gbps: 512.0,
+    },
+    DesignPoint {
+        engine: Codec::Lz4,
+        block_bits: 65536,
+        lanes: 32,
+        clock_ghz: 2.0,
+        sl_area_mm2: 0.15106,
+        sl_power_mw: 1640.233,
+        sl_gbps: 512.0,
+    },
+    DesignPoint {
+        engine: Codec::Zstd,
+        block_bits: 16384,
+        lanes: 32,
+        clock_ghz: 2.0,
+        sl_area_mm2: 0.08357,
+        sl_power_mw: 1363.715,
+        sl_gbps: 512.0,
+    },
+    DesignPoint {
+        engine: Codec::Zstd,
+        block_bits: 32768,
+        lanes: 32,
+        clock_ghz: 2.0,
+        sl_area_mm2: 0.10245,
+        sl_power_mw: 1552.458,
+        sl_gbps: 512.0,
+    },
+    DesignPoint {
+        engine: Codec::Zstd,
+        block_bits: 65536,
+        lanes: 32,
+        clock_ghz: 2.0,
+        sl_area_mm2: 0.17794,
+        sl_power_mw: 2307.433,
+        sl_gbps: 512.0,
+    },
 ];
 
 /// The paper's lane-total power convention: 32 lanes × 10% activity.

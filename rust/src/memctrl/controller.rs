@@ -67,6 +67,12 @@ impl EngineModel {
     }
 }
 
+/// Modeled controller fabric bandwidth in bytes per nanosecond (the
+/// paper's 8 TB/s target) — the analytic DRAM stream rate used by
+/// [`ReadStats::modeled_fetch_ns`] when no [`MemorySystem`] times a read
+/// (the serve loop's latency model).
+pub const MODELED_DRAM_BYTES_PER_NS: f64 = 8192.0;
+
 /// Per-read accounting.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ReadStats {
@@ -85,10 +91,32 @@ pub struct ReadStats {
     /// per-region [`MemController::load`]s cost N. Header-only
     /// [`MemController::fetch_stats`] costs 0.
     pub dispatches: u64,
+    /// Cycle-interleaved critical-path latency of a DRAM-timed group
+    /// read, ns: with per-frame burst tags, each frame's decode is
+    /// modeled to start at that frame's own last data beat instead of
+    /// after the whole group drains, and this is the max over frames of
+    /// (frame DRAM finish + frame engine time). 0 when no
+    /// [`MemorySystem`] timed the read (see
+    /// [`MemController::fetch_group`]).
+    pub overlapped_ns: f64,
+    /// Pages fetched speculatively for the *next* step by the serve
+    /// loop's prefetch engine (see `coordinator::scheduler`); the three
+    /// counters below classify how the next step consumed them. All four
+    /// stay 0 on synchronous reads.
+    pub prefetch_issued: u64,
+    /// Speculative pages the next step's real plan consumed as-is.
+    pub prefetch_hits: u64,
+    /// Planned stored-page reads the speculation did not cover (rung
+    /// moved, new admission, chaos) — served by the synchronous fallback.
+    pub prefetch_misses: u64,
+    /// DRAM bytes of speculative fetches that were discarded.
+    pub prefetch_wasted_bytes: u64,
 }
 
 impl ReadStats {
     /// Accumulate another read's accounting into this one.
+    /// `overlapped_ns` folds as a max — merged reads model concurrent
+    /// issue, so the group's critical path is the slowest member's.
     pub fn merge(&mut self, o: &ReadStats) {
         self.logical_bytes += o.logical_bytes;
         self.dram_bytes += o.dram_bytes;
@@ -96,12 +124,35 @@ impl ReadStats {
         self.engine_ns += o.engine_ns;
         self.frames += o.frames;
         self.dispatches += o.dispatches;
+        self.overlapped_ns = self.overlapped_ns.max(o.overlapped_ns);
+        self.prefetch_issued += o.prefetch_issued;
+        self.prefetch_hits += o.prefetch_hits;
+        self.prefetch_misses += o.prefetch_misses;
+        self.prefetch_wasted_bytes += o.prefetch_wasted_bytes;
     }
-    /// End-to-end load latency in ns given the DRAM clock: DRAM time and
-    /// engine time overlap (the engine streams blocks as they arrive), so
-    /// the total is max(dram, engine) + one pipeline fill.
+    /// End-to-end load latency in ns given the DRAM clock. When a
+    /// cycle-interleaved read modeled per-frame completion
+    /// (`overlapped_ns` > 0) that figure IS the critical path; otherwise
+    /// fall back to the coarse whole-read model: DRAM time and engine
+    /// time overlap (the engine streams blocks as they arrive), so the
+    /// total is max(dram, engine) + one pipeline fill.
     pub fn latency_ns(&self, t_ck: f64) -> f64 {
+        if self.overlapped_ns > 0.0 {
+            return self.overlapped_ns;
+        }
         let dram_ns = self.dram_cycles as f64 * t_ck * 1e9;
+        dram_ns.max(self.engine_ns) + 60.0
+    }
+    /// Modeled wall time of this read on the serve loop's critical path
+    /// when no [`MemorySystem`] timed it: DRAM streaming at the
+    /// [`MODELED_DRAM_BYTES_PER_NS`] fabric rate overlapped with engine
+    /// decompression, plus one pipeline fill. 0 when the read touched no
+    /// frames (nothing was on the fetch path).
+    pub fn modeled_fetch_ns(&self) -> f64 {
+        if self.frames == 0 {
+            return 0.0;
+        }
+        let dram_ns = self.dram_bytes as f64 / MODELED_DRAM_BYTES_PER_NS;
         dram_ns.max(self.engine_ns) + 60.0
     }
 }
@@ -361,9 +412,8 @@ impl MemController {
                                 .map(|&(l, _)| l as usize)
                                 .sum::<usize>()
                     };
-                    let off =
-                        plane_off(t) + ctx.plan.draw(step, owner, addr, 0x0FF5, stored_len(t) as u64)
-                            as usize;
+                    let off = plane_off(t)
+                        + ctx.plan.draw(step, owner, addr, 0x0FF5, stored_len(t) as u64) as usize;
                     frame[off] ^= 1u8 << ctx.plan.draw(step, owner, addr, 0xB177, 8);
                     if h.parity {
                         // rung 2: rebuild the damaged plane as the XOR of
@@ -382,7 +432,11 @@ impl MemController {
                             }
                         }
                         let want_len = stored_len(t);
-                        let want_sum = if t < nplanes { h.plane_sum[t] } else { h.parity_sum };
+                        let want_sum = if t < nplanes {
+                            h.plane_sum[t]
+                        } else {
+                            h.parity_sum
+                        };
                         anyhow::ensure!(
                             plane_checksum(&recon[..want_len]) == want_sum,
                             "parity reconstruction of plane {t} failed its checksum"
@@ -453,7 +507,14 @@ impl MemController {
     /// Store a KV tensor (token-major, `tokens × channels`). Groups of
     /// `kv_group_tokens` tokens form one frame (the paper's Fig 6
     /// pipeline), built in parallel across the lane array.
-    pub fn store_kv(&mut self, name: &str, dtype: Dtype, tokens: usize, channels: usize, codes: &[u16]) -> RegionId {
+    pub fn store_kv(
+        &mut self,
+        name: &str,
+        dtype: Dtype,
+        tokens: usize,
+        channels: usize,
+        codes: &[u16],
+    ) -> RegionId {
         assert_eq!(codes.len(), tokens * channels);
         let gt = self.kv_group_tokens;
         let spec = self.kv_frame_spec(dtype, channels);
@@ -657,14 +718,20 @@ impl MemController {
         }
         let mut plans: Vec<RegionPlan<'_>> = Vec::with_capacity(reqs.len());
         let mut ranges: Vec<(u64, u64)> = Vec::new();
+        // per-frame engine time, captured as deltas around the planner —
+        // the cycle-interleaved latency model below pairs each frame's
+        // DRAM completion with ITS decode cost, not the group total's
+        let mut frame_engine_ns: Vec<f64> = Vec::new();
         for (&(id, _), &keep) in reqs.iter().zip(&keeps) {
             let region = &self.regions[id.0];
             let mut frames = Vec::with_capacity(region.frames.len());
             let mut total_m = 0usize;
             for (addr, frame) in &region.frames {
+                let before_ns = stats.engine_ns;
                 let (fetch_bytes, fp) =
                     plan_frame_fetch(&mut stats, &self.engine, region.layout, frame, keep)?;
                 ranges.push((*addr, fetch_bytes as u64));
+                frame_engine_ns.push(stats.engine_ns - before_ns);
                 total_m += fp.m;
                 frames.push(fp);
             }
@@ -677,15 +744,44 @@ impl MemController {
         }
         // 2. time the whole group's DRAM traffic (one drain) — BEFORE the
         //    decode dispatch, so a decode error cannot leave orphaned
-        //    commands to pollute the next read's timing
+        //    commands to pollute the next read's timing. Each frame's
+        //    bursts (retry traffic included) carry their own tag range, so
+        //    the drain yields per-frame completion cycles and the modeled
+        //    critical path interleaves DRAM with lane decode per frame —
+        //    frame f's decode starts at f's last data beat, not at the
+        //    whole group's — instead of the old enqueue-all-then-drain
+        //    max() over the group.
         if let Some(ms) = mem.as_deref_mut() {
+            let _ = ms.take_completions(); // stale tags from earlier reads
+            let mut tag_ranges: Vec<(u64, u64)> = Vec::with_capacity(ranges.len());
+            let mut next_tag = 1u64; // tag 0 = untracked legacy traffic
             for &(addr, bytes) in &ranges {
-                ms.enqueue_range(addr, bytes, false, 0);
+                let first = next_tag;
+                next_tag = ms.enqueue_range(addr, bytes, false, first);
                 if self.fault_retry_pending(addr) {
-                    ms.enqueue_retry(addr, bytes);
+                    next_tag = ms.enqueue_retry_tagged(addr, bytes, next_tag);
                 }
+                tag_ranges.push((first, next_tag));
             }
             stats.dram_cycles = ms.drain();
+            let mut finish = vec![0u64; tag_ranges.len()];
+            for c in ms.take_completions() {
+                if c.tag == 0 {
+                    continue;
+                }
+                // tag ranges are contiguous and ascending: the owning
+                // frame is the last range starting at or before the tag
+                let i = tag_ranges.partition_point(|&(first, _)| first <= c.tag) - 1;
+                if c.tag < tag_ranges[i].1 {
+                    finish[i] = finish[i].max(c.finish);
+                }
+            }
+            let t_ck_ns = ms.cfg.t_ck() * 1e9;
+            stats.overlapped_ns = finish
+                .iter()
+                .zip(&frame_engine_ns)
+                .map(|(&f, &e)| f as f64 * t_ck_ns + e)
+                .fold(0.0f64, f64::max);
         }
         // 3. one dispatch decodes the whole group straight into the views
         let outs = decode_plans_into(&self.lanes, plans)?;
@@ -703,11 +799,13 @@ impl MemController {
     }
 
     /// Fold a completed read into the cumulative totals. `dram_cycles` is
-    /// an absolute drain timestamp (not a duration), so it is excluded —
-    /// `total` tracks bytes, frames, engine time, and dispatches.
+    /// an absolute drain timestamp (not a duration) and `overlapped_ns` a
+    /// per-read critical path, so both are excluded — `total` tracks
+    /// bytes, frames, engine time, dispatches, and prefetch counters.
     fn accumulate_total(&mut self, stats: &ReadStats) {
         let mut s = *stats;
         s.dram_cycles = 0;
+        s.overlapped_ns = 0.0;
         self.total.merge(&s);
     }
 }
@@ -884,7 +982,12 @@ pub struct KvFrameSpec {
 /// the [`MemController::store_kv`] work item, exposed so the serve loop
 /// can batch groups from many sequences into a single lane dispatch
 /// (see [`crate::coordinator::pagestore::sync_sequences`]).
-pub fn build_kv_group_frame(lane: &mut Lane, spec: KvFrameSpec, nt: usize, chunk: &[u16]) -> Vec<u8> {
+pub fn build_kv_group_frame(
+    lane: &mut Lane,
+    spec: KvFrameSpec,
+    nt: usize,
+    chunk: &[u16],
+) -> Vec<u8> {
     match spec.layout {
         Layout::Proposed => {
             // channel-major + delta + planes
@@ -1260,7 +1363,11 @@ mod tests {
                 0.5,
                 g.case_seed,
             );
-            let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+            let codec = if g.rng.next_f64() < 0.5 {
+                Codec::Lz4
+            } else {
+                Codec::Zstd
+            };
             let spec = KvFrameSpec {
                 layout: Layout::Proposed,
                 codec,
@@ -1443,6 +1550,22 @@ mod tests {
             gs.dram_cycles,
             s1.dram_cycles + s2.dram_cycles
         );
+        // cycle-interleaved model: per-frame completion times exist, the
+        // critical path is positive, and never exceeds the fully-serial
+        // bound (all DRAM then all decode). The untagged per-region load
+        // path keeps the coarse model (overlapped_ns stays 0).
+        let t_ck = mem.cfg.t_ck();
+        assert!(gs.overlapped_ns > 0.0);
+        let serial_ns = gs.dram_cycles as f64 * t_ck * 1e9 + gs.engine_ns;
+        assert!(
+            gs.overlapped_ns <= serial_ns,
+            "interleaved {} vs serial bound {}",
+            gs.overlapped_ns,
+            serial_ns
+        );
+        assert_eq!(s1.overlapped_ns, 0.0);
+        // latency_ns now reports the interleaved figure for tagged reads
+        assert_eq!(gs.latency_ns(t_ck), gs.overlapped_ns);
     }
 
     #[test]

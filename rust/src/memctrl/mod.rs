@@ -64,7 +64,7 @@ pub mod frame;
 
 pub use controller::{
     build_kv_group_frame, read_frame_into, EngineModel, KvFrameSpec, Layout, MemController,
-    ReadStats, Region, RegionId, BLOCK_BYTES,
+    ReadStats, Region, RegionId, BLOCK_BYTES, MODELED_DRAM_BYTES_PER_NS,
 };
 pub use fault::{
     FaultClass, FaultCtx, FaultPlan, QuarantineError, RecoveryStats, MAX_RETRIES, SALVAGE_FLOOR,

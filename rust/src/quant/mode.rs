@@ -102,7 +102,13 @@ impl RouterSim {
 
     /// Simulate `tokens × components` routing decisions; returns the
     /// fraction of weight traffic at each menu level.
-    pub fn simulate(&self, base: Dtype, tokens: usize, components: usize, seed: u64) -> PrecisionDist {
+    pub fn simulate(
+        &self,
+        base: Dtype,
+        tokens: usize,
+        components: usize,
+        seed: u64,
+    ) -> PrecisionDist {
         let menu = precision_menu(base);
         let mut counts = vec![0u64; menu.len()];
         let mut pinned = 0u64;

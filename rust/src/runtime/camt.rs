@@ -92,7 +92,11 @@ pub fn parse_camt(buf: &[u8]) -> anyhow::Result<Vec<CamtTensor>> {
         for _ in 0..ndim {
             shape.push(c.u32()? as usize);
         }
-        let n: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+        let n: usize = if ndim == 0 {
+            1
+        } else {
+            shape.iter().product()
+        };
         let data = match code {
             0 => {
                 let raw = c.take(n * 4)?;

@@ -45,7 +45,12 @@ impl Default for WeightProfile {
 }
 
 /// Generate one weight matrix (`rows × cols`, row-major) as f32.
-pub fn gen_matrix(rows: usize, cols: usize, prof: &WeightProfile, rng: &mut Xoshiro256) -> Vec<f32> {
+pub fn gen_matrix(
+    rows: usize,
+    cols: usize,
+    prof: &WeightProfile,
+    rng: &mut Xoshiro256,
+) -> Vec<f32> {
     // per-output-channel (row) scales
     let scales: Vec<f64> = (0..rows)
         .map(|_| prof.base_rms * 2f64.powf(rng.normal() * prof.channel_spread))
@@ -145,7 +150,11 @@ pub fn encode_checkpoint(tensors: &[SynthTensor], dtype: Dtype) -> CodeTensor {
                     // 3 octaves of headroom below E4M3 max, as AutoFP8's
                     // conservative margins leave; calibrated so lossless
                     // savings land at the paper's ~8% (Table III).
-                    let scale = if amax == 0.0 { 1.0 } else { 240.0 / amax / 8.0 };
+                    let scale = if amax == 0.0 {
+                        1.0
+                    } else {
+                        240.0 / amax / 8.0
+                    };
                     codes.extend(row.iter().map(|&x| FP8_E4M3.encode(x * scale) as u16));
                 }
             }

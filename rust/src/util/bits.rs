@@ -223,7 +223,11 @@ mod tests {
                 .map(|_| {
                     let bits = 1 + g.rng.index(57) as u32;
                     let v = g.rng.next_u64() & ((1u64 << bits) - 1).max(1).wrapping_sub(0);
-                    let v = if bits == 64 { v } else { v & ((1u64 << bits) - 1) };
+                    let v = if bits == 64 {
+                        v
+                    } else {
+                        v & ((1u64 << bits) - 1)
+                    };
                     (v, bits)
                 })
                 .collect();

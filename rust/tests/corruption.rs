@@ -13,13 +13,16 @@
 use std::sync::Arc;
 
 use camc::compress::Codec;
-use camc::coordinator::{DecodeArena, KvPageStore};
+use camc::coordinator::{
+    serve_trace, DecodeArena, KvPageStore, SchedConfig, ServeMetrics, TrafficResponse,
+};
 use camc::engine::LaneArray;
 use camc::memctrl::{FaultClass, FaultPlan, Layout, RegionId, SALVAGE_FLOOR};
+use camc::quant::policy::KvPolicy;
 use camc::runtime::model::{KvState, ModelMeta};
 use camc::util::check::check;
 use camc::util::rng::Xoshiro256;
-use camc::workload::{ArrivalProcess, Trace, WorkloadSpec};
+use camc::workload::{ArrivalProcess, LengthDist, SynthLm, TenantSpec, Trace, WorkloadSpec};
 
 fn tiny_meta() -> ModelMeta {
     ModelMeta {
@@ -243,7 +246,8 @@ fn recovery_matrix_resolves_every_fault_class_on_its_documented_rung() {
                         .fetch_pages(&[16], &mut arena)
                         .unwrap_or_else(|e| panic!("{tag} {lanes} lanes: hard error {e}"));
                     let r = &s.mc.recovery;
-                    let counters = (r.faults_injected, r.retries, r.parity_repairs, r.salvaged_reads);
+                    let counters =
+                        (r.faults_injected, r.retries, r.parity_repairs, r.salvaged_reads);
                     assert!(r.faults_injected > 0, "{tag}: plan never fired");
                     let codes = if out.quarantine.is_none() {
                         Some(arena.codes(out.pages[0].1).to_vec())
@@ -320,6 +324,111 @@ fn recovery_matrix_resolves_every_fault_class_on_its_documented_rung() {
                         ),
                     }
                 }
+            }
+        }
+    }
+}
+
+/// Everything deterministic about a served response (wall time excluded).
+fn response_key(r: &TrafficResponse) -> (u64, Vec<u16>, u64, u64, u64, u64, u32, u64) {
+    (
+        r.id,
+        r.tokens.clone(),
+        r.mean_nll.to_bits(),
+        r.kv_fetched_bytes,
+        r.kv_pages_digest,
+        r.read_digest,
+        r.evictions,
+        r.recovered_faults,
+    )
+}
+
+#[test]
+fn speculative_fetch_resolves_faults_exactly_once() {
+    // The prefetch engine runs the recovery ladder at *plan* time, one
+    // virtual step early (the fault step advances before speculation, so
+    // speculative reads take the next step's draws). The synchronous
+    // revisit of the same sites must then be a no-op: a full contended
+    // serve under an aggressive fault plan — with speculation on, and
+    // with chaos forcing discard-and-refetch of speculated regions —
+    // counts EXACTLY the recovery actions of the synchronous reference,
+    // and serves byte-identical responses. A double-resolved (or
+    // skipped) fault site would show up in any of these counters.
+    let spec = WorkloadSpec {
+        arrival: ArrivalProcess::Poisson { rate: 2.0 },
+        tenants: vec![TenantSpec {
+            name: "t".into(),
+            weight: 1.0,
+            policy: KvPolicy::Full,
+            prompt: LengthDist::Fixed(16),
+            output: LengthDist::Fixed(32),
+        }],
+        n_requests: 16,
+        vocab: 256,
+        max_seq: 128,
+    };
+    let trace = Trace::generate(&spec, 23);
+    // rates high enough that every rung fires mid-serve (mirrors the
+    // scheduler's own fault-determinism test)
+    let plan = Arc::new(FaultPlan {
+        seed: 77,
+        p_plane_flip: 220,
+        p_header_flip: 17,
+        p_transient: 80,
+        p_lane_fault: 40,
+        flip_plane: None,
+    });
+    let serve = |prefetch: bool, chaos: u64, parity: bool| {
+        let lm = SynthLm::tiny(9);
+        let la = Arc::new(LaneArray::new(8));
+        let mut m = ServeMetrics::default();
+        let cfg = SchedConfig {
+            collect_digests: true,
+            parity,
+            prefetch,
+            prefetch_chaos: chaos,
+            faults: Some(Arc::clone(&plan)),
+            ..SchedConfig::compressed(1 << 20)
+        };
+        let out = serve_trace(&lm, &trace, &cfg, la, &mut m).expect("serve_trace");
+        (out, m)
+    };
+    for parity in [false, true] {
+        let (base, bm) = serve(false, 0, parity);
+        assert!(bm.faults_injected > 0, "parity={parity}: plan never fired");
+        assert!(bm.retries > 0, "parity={parity}: no transient faults drawn");
+        for chaos in [0u64, 3] {
+            let (o, m) = serve(true, chaos, parity);
+            let tag = format!("parity={parity}/chaos={chaos}");
+            assert_eq!(o.events, base.events, "{tag}: schedule diverged");
+            assert_eq!(
+                o.responses.iter().map(response_key).collect::<Vec<_>>(),
+                base.responses.iter().map(response_key).collect::<Vec<_>>(),
+                "{tag}: responses diverged"
+            );
+            assert_eq!(
+                (
+                    m.faults_injected,
+                    m.retries,
+                    m.parity_repairs,
+                    m.salvaged_reads,
+                    m.quarantined_seqs
+                ),
+                (
+                    bm.faults_injected,
+                    bm.retries,
+                    bm.parity_repairs,
+                    bm.salvaged_reads,
+                    bm.quarantined_seqs
+                ),
+                "{tag}: recovery actions diverged — a fault site resolved \
+                 twice (or not at all) across the speculative/synchronous seam"
+            );
+            assert!(m.prefetch_issued > 0, "{tag}: speculation never armed");
+            if chaos > 0 {
+                // discarded speculation re-fetched the same sites — the
+                // counter identity above proves the revisit was a no-op
+                assert!(m.prefetch_wasted_bytes > 0, "{tag}: chaos never discarded");
             }
         }
     }

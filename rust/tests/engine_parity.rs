@@ -230,7 +230,13 @@ fn scratch_entry_points_match_oneshot_across_blocks() {
             0 => vec![0u8; n],                                  // constant plane
             1 => (0..n).map(|_| r.next_u64() as u8).collect(),  // noise plane
             _ => (0..n)
-                .map(|_| if r.next_f64() < 0.9 { 0 } else { (r.next_u64() % 16) as u8 })
+                .map(|_| {
+                    if r.next_f64() < 0.9 {
+                        0
+                    } else {
+                        (r.next_u64() % 16) as u8
+                    }
+                })
                 .collect(), // skewed plane
         };
         for codec in [Codec::Lz4, Codec::Zstd] {

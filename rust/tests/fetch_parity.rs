@@ -33,7 +33,11 @@ fn fetch_group_differential_vs_per_region_loads() {
     // byte-identical to per-region loads, and weight reads must equal
     // plane-truncation of the source codes.
     check("fetch_group_differential", 14, |g| {
-        let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+        let codec = if g.rng.next_f64() < 0.5 {
+            Codec::Lz4
+        } else {
+            Codec::Zstd
+        };
         let nw = g.usize_in(1, 8000);
         let w = weight_codes(nw, g.case_seed);
         let wt = camc::fmt::CodeTensor::new(Dtype::Bf16, w.clone(), vec![nw]);
@@ -161,7 +165,11 @@ fn fetch_sequences_differential_vs_fetch_pages() {
     // pages, identical physical accounting.
     check("fetch_sequences_differential", 10, |g| {
         let meta = tiny_meta();
-        let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+        let codec = if g.rng.next_f64() < 0.5 {
+            Codec::Lz4
+        } else {
+            Codec::Zstd
+        };
         let nseq = g.usize_in(1, 5);
         let positions: Vec<usize> = (0..nseq).map(|_| g.usize_in(1, 120)).collect();
         let kvs: Vec<KvState> = positions
@@ -235,7 +243,8 @@ fn fetch_sequences_is_idempotent_and_stateless() {
     let meta = tiny_meta();
     let kv = kv_filled(&meta, 100, 7);
     let lanes = Arc::new(LaneArray::new(4));
-    let mut store = KvPageStore::with_shared(&meta, Layout::Proposed, Codec::Zstd, Arc::clone(&lanes));
+    let mut store =
+        KvPageStore::with_shared(&meta, Layout::Proposed, Codec::Zstd, Arc::clone(&lanes));
     store.sync(&kv, &meta);
     let digest = store.frames_digest();
     let bits = vec![8u32; 7];

@@ -78,7 +78,11 @@ fn view_values_match_materialized_values_property() {
     // same views — random positions, policies, codecs, pressure clamps.
     check("view_vs_materialized_values", 12, |g| {
         let meta = tiny_meta();
-        let codec = if g.rng.next_f64() < 0.5 { Codec::Lz4 } else { Codec::Zstd };
+        let codec = if g.rng.next_f64() < 0.5 {
+            Codec::Lz4
+        } else {
+            Codec::Zstd
+        };
         let pos = g.usize_in(1, 120);
         let kv = kv_filled(&meta, pos, g.case_seed);
         let policy = match g.rng.index(3) {
