@@ -2,12 +2,19 @@
 //! through the compressed-capacity-aware continuous-batching scheduler,
 //! entirely hermetic (synthetic decode backend — no artifacts, no XLA).
 //!
-//!     cargo run --release --example serve_traffic
+//!     cargo run --release --example serve_traffic [-- --trace-out <path>] [-- --trace-bin <path>]
 //!
 //! Prints the compressed-vs-uncompressed capacity comparison (same byte
 //! budget, strictly more concurrent sequences with compression on), the
 //! pressure/eviction schedule, per-tenant throughput, and TTFT/TBT/e2e
 //! latency percentiles in deterministic virtual-step units.
+//!
+//! `--trace-out <path>` additionally serves the compressed run with the
+//! flight recorder on and writes the event stream as Perfetto/Chrome
+//! trace-event JSON (open in <https://ui.perfetto.dev>); `--trace-bin
+//! <path>` writes the same recording in the compact `CAMCEVT1` binary
+//! form. The recorder is observer-effect-free, so the traced run serves
+//! the byte-identical schedule the table above reports.
 
 use std::sync::Arc;
 
@@ -15,10 +22,20 @@ use camc::coordinator::{
     fixed_slots_for_budget, serve_trace, EventKind, SchedConfig, ServeMetrics,
 };
 use camc::engine::LaneArray;
+use camc::obs::RecorderCfg;
 use camc::report::Table;
 use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
 
 fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let flag = |name: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let trace_out = flag("--trace-out");
+    let trace_bin = flag("--trace-bin");
+
     let lm = SynthLm::tiny(2026);
     let spec = WorkloadSpec::chat_plus_batch(
         ArrivalProcess::Poisson { rate: 1.2 },
@@ -127,5 +144,36 @@ fn main() -> anyhow::Result<()> {
         "capacity check ✓ compressed admission sustained {comp} concurrent sequences \
          vs {uncomp} uncompressed / {fixed} fixed-slot under one {budget}-byte budget"
     );
+
+    // optional flight-recorder export: re-serve the compressed run with
+    // the recorder on (byte-identical schedule — the recorder is never
+    // read) and dump the event stream
+    if trace_out.is_some() || trace_bin.is_some() {
+        let lanes = Arc::new(LaneArray::with_default_lanes());
+        let mut m = ServeMetrics::default();
+        let cfg = SchedConfig {
+            record: Some(RecorderCfg::default()),
+            ..SchedConfig::compressed(budget)
+        };
+        let traced = serve_trace(&lm, &trace, &cfg, lanes, &mut m)?;
+        let flight = traced
+            .flight
+            .expect("recorder-on serve returns a flight recording");
+        if let Some(p) = &trace_out {
+            std::fs::write(p, flight.to_perfetto())?;
+            println!(
+                "wrote Perfetto trace: {p} ({} events — open in ui.perfetto.dev)",
+                flight.events.len()
+            );
+        }
+        if let Some(p) = &trace_bin {
+            std::fs::write(p, flight.to_bytes())?;
+            println!(
+                "wrote CAMCEVT1 recording: {p} ({} events, digest {:016x})",
+                flight.events.len(),
+                flight.digest()
+            );
+        }
+    }
     Ok(())
 }

@@ -16,7 +16,6 @@
 //! slower than the materializing copy plan (the regressions CI gates
 //! on).
 
-use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -28,8 +27,7 @@ use camc::engine::{Lane, LaneArray};
 use camc::fmt::minifloat::BF16;
 use camc::fmt::Dtype;
 use camc::kvcluster::{ClusteredBlock, DecorrelateMode, KvGroup};
-use camc::report::json::Json;
-use camc::report::Table;
+use camc::report::{BenchReport, Table};
 use camc::synth::{gen_kv_layer, CorpusProfile};
 use camc::util::humanfmt;
 use camc::util::rng::Xoshiro256;
@@ -46,14 +44,14 @@ fn time<F: FnMut()>(mut f: F, iters: usize) -> f64 {
 
 struct Bench {
     tab: Table,
-    json: BTreeMap<String, Json>,
+    report: BenchReport,
 }
 
 impl Bench {
     fn new() -> Self {
         Self {
             tab: Table::new("hot paths", &["path", "unit", "time", "throughput"]),
-            json: BTreeMap::new(),
+            report: BenchReport::new(),
         }
     }
 
@@ -65,8 +63,7 @@ impl Bench {
             humanfmt::nanos(secs * 1e9),
             humanfmt::rate(bytes / secs),
         ]);
-        self.json
-            .insert(path.to_string(), Json::Num((bytes / secs).round()));
+        self.report.insert(path, (bytes / secs).round());
     }
 }
 
@@ -762,9 +759,9 @@ fn main() {
         humanfmt::nanos(wall * 1e9),
         format!("{:.1} Mcyc/s", cycles as f64 / wall / 1e6),
     ]);
-    b.json.insert(
-        "dram_sim_streaming_cycles_per_sec".into(),
-        Json::Num((cycles as f64 / wall).round()),
+    b.report.insert(
+        "dram_sim_streaming_cycles_per_sec",
+        (cycles as f64 / wall).round(),
     );
 
     b.tab.print();
@@ -792,11 +789,8 @@ fn main() {
         );
     }
 
-    let npaths = b.json.len();
-    let json = Json::Obj(b.json);
-    std::fs::write("BENCH_hotpath.json", json.to_string() + "\n")
-        .expect("write BENCH_hotpath.json");
-    println!("\nwrote BENCH_hotpath.json ({npaths} paths)");
+    println!();
+    b.report.write("BENCH_hotpath.json");
 
     if check && !pooled_ok {
         eprintln!("CHECK FAILED: pooled small-batch dispatch is slower than serial");

@@ -14,10 +14,16 @@
 //! bytes stop beating the materializing copy-plan baseline, if the
 //! fault-injection row pair stops resolving every recovery-ladder rung
 //! with fault-untouched sequences byte-identical to the fault-free run,
-//! or if the predictive prefetch engine stops serving a byte-identical
+//! if the predictive prefetch engine stops serving a byte-identical
 //! schedule with hit rate > 0 and a modeled overlapped step-fetch
-//! latency below the synchronous model at 8+ concurrent actives (the
-//! regressions CI gates on).
+//! latency below the synchronous model at 8+ concurrent actives, or if
+//! the flight recorder stops being invisible (recorder-on must serve
+//! the byte-identical schedule of the recorder-off run, recorder-off
+//! must leave no recording) or the per-tenant attribution stops summing
+//! exactly to the global fetch/host-copy counters (the regressions CI
+//! gates on). Also writes the recorder-on run's event stream as
+//! `FLIGHT_serve.trace.json` (Perfetto) + `FLIGHT_serve.bin`
+//! (`CAMCEVT1`) for the CI flight-recorder artifact.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -25,12 +31,12 @@ use std::time::Instant;
 
 use camc::coordinator::{
     fixed_slots_for_budget, serve_trace, EventKind, FetchMode, MaterializedRef, SchedConfig,
-    SchedOutcome, ServeMetrics, StepModel, TrafficResponse,
+    SchedOutcome, ServeMetrics, StepModel, TenantUsage, TrafficResponse,
 };
 use camc::engine::LaneArray;
 use camc::memctrl::FaultPlan;
-use camc::report::json::Json;
-use camc::report::Table;
+use camc::obs::RecorderCfg;
+use camc::report::{BenchReport, Table};
 use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
 
 fn run_with<M: StepModel>(
@@ -62,7 +68,7 @@ fn main() {
     // a KV tier worth ~6 worst-case raw sequences
     let budget: u64 = 6 * 16 * 1024;
 
-    let mut json: BTreeMap<String, Json> = BTreeMap::new();
+    let mut report = BenchReport::new();
     let run =
         |cfg: &SchedConfig| -> (SchedOutcome, ServeMetrics, f64) { run_with(&lm, &trace, cfg) };
     let capped = |mut cfg: SchedConfig| -> SchedConfig {
@@ -121,7 +127,7 @@ fn main() {
     // parity changes every stored frame (and so every fault-site address):
     // each faulty row compares against the fault-free run of its OWN
     // geometry
-    let (base_np, _, _) = run(&digests(false, None));
+    let (base_np, base_npm, _) = run(&digests(false, None));
     let (base_pa, _, _) = run(&digests(true, None));
     let (f_np, fnpm, _) = run(&digests(false, Some(Arc::clone(&plan))));
     let (f_pa, fpam, _) = run(&digests(true, Some(Arc::clone(&plan))));
@@ -160,16 +166,19 @@ fn main() {
         prefetch: true,
         ..digests(false, None)
     });
-    let prefetch_identical = pre.events == base_np.events
-        && pre.responses.len() == base_np.responses.len()
-        && pre.responses.iter().zip(&base_np.responses).all(|(a, b)| {
-            a.id == b.id
-                && a.tokens == b.tokens
-                && a.mean_nll == b.mean_nll
-                && a.kv_pages_digest == b.kv_pages_digest
-                && a.read_digest == b.read_digest
-                && a.kv_fetched_bytes == b.kv_fetched_bytes
-        });
+    let same_serve = |a: &SchedOutcome, b: &SchedOutcome| -> bool {
+        a.events == b.events
+            && a.responses.len() == b.responses.len()
+            && a.responses.iter().zip(&b.responses).all(|(x, y)| {
+                x.id == y.id
+                    && x.tokens == y.tokens
+                    && x.mean_nll == y.mean_nll
+                    && x.kv_pages_digest == y.kv_pages_digest
+                    && x.read_digest == y.read_digest
+                    && x.kv_fetched_bytes == y.kv_fetched_bytes
+            })
+    };
+    let prefetch_identical = same_serve(&pre, &base_np);
     let mean_8plus = |ns: f64| -> f64 {
         if prem.steps_8plus == 0 {
             0.0
@@ -177,6 +186,36 @@ fn main() {
             ns / prem.steps_8plus as f64
         }
     };
+
+    // flight-recorder row: the same digest run with the recorder on. The
+    // recorder is written to, never read — recorder-on must serve a
+    // byte-identical schedule and responses, recorder-off must leave no
+    // recording behind, and the per-tenant attribution must sum
+    // bit-exactly to the global fetch/host-copy counters (the
+    // conservation law tests/obs_parity.rs pins across the full matrix).
+    let (fr, frm, _) = run(&SchedConfig {
+        record: Some(RecorderCfg::default()),
+        ..digests(false, None)
+    });
+    let recorder_identical = same_serve(&fr, &base_np)
+        && frm.fetched_bytes == base_npm.fetched_bytes
+        && frm.fetch_frames == base_npm.fetch_frames
+        && frm.fetch_dispatches == base_npm.fetch_dispatches
+        && frm.host_copy_bytes == base_npm.host_copy_bytes
+        && frm.attributed == base_npm.attributed
+        && frm.tenant_usage == base_npm.tenant_usage;
+    let flight = fr
+        .flight
+        .as_ref()
+        .expect("recorder-on serve returns a flight recording");
+    let mut tenant_sum = TenantUsage::default();
+    for u in frm.tenant_usage.values() {
+        tenant_sum.add(u);
+    }
+    let conserved = frm.attributed.dram_bytes == frm.fetched_bytes
+        && frm.attributed.lane_frames == frm.fetch_frames
+        && frm.attributed.host_copy_bytes == frm.host_copy_bytes
+        && tenant_sum == frm.attributed;
 
     let evicts = |o: &SchedOutcome| {
         o.events
@@ -256,131 +295,130 @@ fn main() {
         prem.steps_8plus,
         prefetch_identical,
     );
-
-    json.insert(
-        "serve_traffic steps_per_sec".into(),
-        Json::Num((full.steps as f64 / wall).round()),
-    );
-    json.insert(
-        "serve_traffic tokens_per_sec".into(),
-        Json::Num(fm.tokens_per_sec(wall).round()),
-    );
-    json.insert(
-        "served sequences (pressure, compressed)".into(),
-        Json::Num(co.responses.len() as f64),
-    );
-    json.insert(
-        "served sequences (budget, uncompressed)".into(),
-        Json::Num(un.responses.len() as f64),
-    );
-    json.insert(
-        "served sequences (fixed-slot)".into(),
-        Json::Num(fx.responses.len() as f64),
-    );
-    json.insert(
-        "peak concurrency (compressed)".into(),
-        Json::Num(co.peak_active as f64),
-    );
-    json.insert(
-        "peak concurrency (uncompressed)".into(),
-        Json::Num(un.peak_active as f64),
-    );
-    json.insert(
-        "evictions (compressed)".into(),
-        Json::Num(evicts(&co) as f64),
-    );
-    json.insert("ttft p99 steps".into(), Json::Num(cm.ttft_steps_p(0.99)));
-    json.insert("tbt p99 steps".into(), Json::Num(cm.tbt_steps_p(0.99)));
-    json.insert("e2e p99 steps".into(), Json::Num(cm.e2e_steps_p(0.99)));
-    json.insert(
-        "served sequences (batched fetch)".into(),
-        Json::Num(co.responses.len() as f64),
-    );
-    json.insert(
-        "served sequences (per-seq fetch)".into(),
-        Json::Num(ps.responses.len() as f64),
-    );
-    json.insert(
-        "fetch frames per dispatch (batched)".into(),
-        Json::Num((cm.fetch_frames_per_dispatch() * 10.0).round() / 10.0),
-    );
-    json.insert(
-        "fetch frames per dispatch (per-seq)".into(),
-        Json::Num((psm.fetch_frames_per_dispatch() * 10.0).round() / 10.0),
-    );
-    json.insert(
-        "kv fetched bytes (batched)".into(),
-        Json::Num(cm.fetched_bytes as f64),
-    );
-    json.insert(
-        "host copy bytes per step (view)".into(),
-        Json::Num(cm.host_copy_bytes_per_step().round()),
-    );
-    json.insert(
-        "host copy bytes per step (materialized)".into(),
-        Json::Num(matm.host_copy_bytes_per_step().round()),
-    );
-    json.insert(
-        "recovery faults injected (no parity)".into(),
-        Json::Num(fnpm.faults_injected as f64),
-    );
-    json.insert(
-        "recovery retries (no parity)".into(),
-        Json::Num(fnpm.retries as f64),
-    );
-    json.insert(
-        "recovery salvaged reads (no parity)".into(),
-        Json::Num(fnpm.salvaged_reads as f64),
-    );
-    json.insert(
-        "recovery parity repairs (parity)".into(),
-        Json::Num(fpam.parity_repairs as f64),
-    );
-    json.insert(
-        "recovery quarantined seqs (no parity)".into(),
-        Json::Num(fnpm.quarantined_seqs as f64),
-    );
-    json.insert(
-        "fault-run unaffected byte-identical (no parity)".into(),
-        Json::Num(np_identical as f64),
-    );
-    json.insert(
-        "fault-run unaffected byte-identical (parity)".into(),
-        Json::Num(pa_identical as f64),
-    );
-    json.insert(
-        "prefetch hit rate".into(),
-        Json::Num((prem.prefetch_hit_rate() * 1000.0).round() / 1000.0),
-    );
-    json.insert(
-        "prefetch issued pages".into(),
-        Json::Num(prem.prefetch_issued as f64),
-    );
-    json.insert(
-        "prefetch wasted bytes".into(),
-        Json::Num(prem.prefetch_wasted_bytes as f64),
-    );
-    json.insert(
-        "step fetch ns at 8plus (sync model)".into(),
-        Json::Num(mean_8plus(prem.sync_fetch_ns_8plus).round()),
-    );
-    json.insert(
-        "step fetch ns at 8plus (overlapped)".into(),
-        Json::Num(mean_8plus(prem.overlapped_fetch_ns_8plus).round()),
-    );
-    json.insert(
-        "step fetch ns mean (sync model)".into(),
-        Json::Num(prem.mean_sync_fetch_ns().round()),
-    );
-    json.insert(
-        "step fetch ns mean (overlapped)".into(),
-        Json::Num(prem.mean_overlapped_fetch_ns().round()),
+    println!(
+        "flight recorder: {} events ({} dropped), digest {:016x} — invisible: {}, attribution conserved: {} ({} tenants, {:.0} pJ modeled DRAM)",
+        flight.events.len(),
+        flight.dropped(),
+        flight.digest(),
+        recorder_identical,
+        conserved,
+        frm.tenant_usage.len(),
+        frm.attributed.energy_pj(),
     );
 
-    let npaths = json.len();
-    std::fs::write("BENCH_serve.json", Json::Obj(json).to_string() + "\n")
-        .expect("write BENCH_serve.json");
-    println!("wrote BENCH_serve.json ({npaths} paths)");
+    report.insert(
+        "serve_traffic steps_per_sec",
+        (full.steps as f64 / wall).round(),
+    );
+    report.insert(
+        "serve_traffic tokens_per_sec",
+        fm.tokens_per_sec(wall).round(),
+    );
+    report.insert(
+        "served sequences (pressure, compressed)",
+        co.responses.len() as f64,
+    );
+    report.insert(
+        "served sequences (budget, uncompressed)",
+        un.responses.len() as f64,
+    );
+    report.insert("served sequences (fixed-slot)", fx.responses.len() as f64);
+    report.insert("peak concurrency (compressed)", co.peak_active as f64);
+    report.insert("peak concurrency (uncompressed)", un.peak_active as f64);
+    report.insert("evictions (compressed)", evicts(&co) as f64);
+    report.insert("ttft p99 steps", cm.ttft_steps_p(0.99));
+    report.insert("tbt p99 steps", cm.tbt_steps_p(0.99));
+    report.insert("e2e p99 steps", cm.e2e_steps_p(0.99));
+    report.insert(
+        "served sequences (batched fetch)",
+        co.responses.len() as f64,
+    );
+    report.insert(
+        "served sequences (per-seq fetch)",
+        ps.responses.len() as f64,
+    );
+    report.insert(
+        "fetch frames per dispatch (batched)",
+        (cm.fetch_frames_per_dispatch() * 10.0).round() / 10.0,
+    );
+    report.insert(
+        "fetch frames per dispatch (per-seq)",
+        (psm.fetch_frames_per_dispatch() * 10.0).round() / 10.0,
+    );
+    report.insert("kv fetched bytes (batched)", cm.fetched_bytes as f64);
+    report.insert(
+        "host copy bytes per step (view)",
+        cm.host_copy_bytes_per_step().round(),
+    );
+    report.insert(
+        "host copy bytes per step (materialized)",
+        matm.host_copy_bytes_per_step().round(),
+    );
+    report.insert(
+        "recovery faults injected (no parity)",
+        fnpm.faults_injected as f64,
+    );
+    report.insert("recovery retries (no parity)", fnpm.retries as f64);
+    report.insert(
+        "recovery salvaged reads (no parity)",
+        fnpm.salvaged_reads as f64,
+    );
+    report.insert("recovery parity repairs (parity)", fpam.parity_repairs as f64);
+    report.insert(
+        "recovery quarantined seqs (no parity)",
+        fnpm.quarantined_seqs as f64,
+    );
+    report.insert(
+        "fault-run unaffected byte-identical (no parity)",
+        np_identical as f64,
+    );
+    report.insert(
+        "fault-run unaffected byte-identical (parity)",
+        pa_identical as f64,
+    );
+    report.insert(
+        "prefetch hit rate",
+        (prem.prefetch_hit_rate() * 1000.0).round() / 1000.0,
+    );
+    report.insert("prefetch issued pages", prem.prefetch_issued as f64);
+    report.insert("prefetch wasted bytes", prem.prefetch_wasted_bytes as f64);
+    report.insert(
+        "step fetch ns at 8plus (sync model)",
+        mean_8plus(prem.sync_fetch_ns_8plus).round(),
+    );
+    report.insert(
+        "step fetch ns at 8plus (overlapped)",
+        mean_8plus(prem.overlapped_fetch_ns_8plus).round(),
+    );
+    report.insert(
+        "step fetch ns mean (sync model)",
+        prem.mean_sync_fetch_ns().round(),
+    );
+    report.insert(
+        "step fetch ns mean (overlapped)",
+        prem.mean_overlapped_fetch_ns().round(),
+    );
+    report.insert("flight recorder events", flight.events.len() as f64);
+    report.insert(
+        "flight recorder invisible",
+        recorder_identical as u64 as f64,
+    );
+    report.insert("tenant attribution conserved", conserved as u64 as f64);
+    report.insert("tenants attributed", frm.tenant_usage.len() as f64);
+    report.insert("attributed dram bytes", frm.attributed.dram_bytes as f64);
+    report.insert(
+        "attributed modeled energy pj",
+        frm.attributed.energy_pj().round(),
+    );
+
+    std::fs::write("FLIGHT_serve.bin", flight.to_bytes()).expect("write FLIGHT_serve.bin");
+    std::fs::write("FLIGHT_serve.trace.json", flight.to_perfetto())
+        .expect("write FLIGHT_serve.trace.json");
+    println!(
+        "wrote FLIGHT_serve.trace.json + FLIGHT_serve.bin ({} events)",
+        flight.events.len()
+    );
+    report.write("BENCH_serve.json");
 
     if check {
         let mut ok = true;
@@ -501,6 +539,34 @@ fn main() {
             );
             ok = false;
         }
+        // flight-recorder gates: the recorder must be invisible
+        // (recorder-on byte-identical to recorder-off, recorder-off run
+        // returns no recording), must actually capture the serve, and
+        // the per-tenant attribution must conserve exactly
+        if !recorder_identical {
+            eprintln!("CHECK FAILED: recorder-on serve diverged from the recorder-off run");
+            ok = false;
+        }
+        if base_np.flight.is_some() || co.flight.is_some() {
+            eprintln!("CHECK FAILED: recorder-off run returned a flight recording");
+            ok = false;
+        }
+        if flight.events.is_empty() {
+            eprintln!("CHECK FAILED: recorder-on run captured no events");
+            ok = false;
+        }
+        if !conserved {
+            eprintln!(
+                "CHECK FAILED: tenant attribution does not conserve (attributed {} dram B / {} frames / {} host B vs globals {} / {} / {})",
+                frm.attributed.dram_bytes,
+                frm.attributed.lane_frames,
+                frm.attributed.host_copy_bytes,
+                frm.fetched_bytes,
+                frm.fetch_frames,
+                frm.host_copy_bytes
+            );
+            ok = false;
+        }
         if !ok {
             std::process::exit(1);
         }
@@ -528,6 +594,12 @@ fn main() {
             mean_8plus(prem.sync_fetch_ns_8plus),
             mean_8plus(prem.overlapped_fetch_ns_8plus),
             prem.steps_8plus
+        );
+        println!(
+            "check ✓ flight recorder invisible ({} events, digest {:016x}); attribution conserved across {} tenants",
+            flight.events.len(),
+            flight.digest(),
+            frm.tenant_usage.len()
         );
         println!(
             "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}, batched fetch served {} >= per-seq {} in {} vs {} dispatches",

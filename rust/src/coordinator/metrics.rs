@@ -10,11 +10,71 @@
 
 use std::collections::BTreeMap;
 
+use crate::configs::ddr5::DDR5_4800_PAPER;
+use crate::dram::modeled_read_energy_fj;
+use crate::memctrl::{modeled_dram_ps, modeled_lane_ps};
+
 /// Per-tenant counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct TenantStats {
     pub requests: u64,
     pub tokens_out: u64,
+}
+
+/// Per-tenant × per-component resource attribution: who moved which
+/// bytes and what they cost in modeled time and energy. All integer
+/// domains (bytes, picoseconds, femtojoules) so the per-tenant entries
+/// sum *bit-exactly* to [`ServeMetrics::attributed`] — the conservation
+/// law tests and the serve bench gate on — and are reproducible across
+/// lane counts and fetch modes.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantUsage {
+    /// DRAM bytes moved by this tenant's decode-side fetches (stored
+    /// pages + raw tails) — sums to [`ServeMetrics::fetched_bytes`].
+    pub dram_bytes: u64,
+    /// Frames this tenant's fetches pushed through the lane engine —
+    /// sums to [`ServeMetrics::fetch_frames`].
+    pub lane_frames: u64,
+    /// Host-side bytes materialized for this tenant (arena codes + dense
+    /// copies) — sums to [`ServeMetrics::host_copy_bytes`].
+    pub host_copy_bytes: u64,
+    /// Modeled DRAM-service time, integer picoseconds
+    /// (`memctrl::modeled_dram_ps`).
+    pub dram_ps: u64,
+    /// Modeled lane-decode time, integer picoseconds
+    /// (`memctrl::modeled_lane_ps`).
+    pub lane_ps: u64,
+    /// Modeled DRAM read + activation energy, integer femtojoules
+    /// (`dram::modeled_read_energy_fj` on the paper's DDR5-4800 config).
+    pub energy_fj: u64,
+}
+
+impl TenantUsage {
+    /// Accumulate another usage record (the summation the conservation
+    /// law is stated over).
+    pub fn add(&mut self, o: &TenantUsage) {
+        self.dram_bytes += o.dram_bytes;
+        self.lane_frames += o.lane_frames;
+        self.host_copy_bytes += o.host_copy_bytes;
+        self.dram_ps += o.dram_ps;
+        self.lane_ps += o.lane_ps;
+        self.energy_fj += o.energy_fj;
+    }
+
+    /// Modeled DRAM energy, picojoules.
+    pub fn energy_pj(&self) -> f64 {
+        self.energy_fj as f64 / 1000.0
+    }
+
+    /// Modeled DRAM-service time, ns.
+    pub fn dram_ns(&self) -> f64 {
+        self.dram_ps as f64 / 1000.0
+    }
+
+    /// Modeled lane-decode time, ns.
+    pub fn lane_ns(&self) -> f64 {
+        self.lane_ps as f64 / 1000.0
+    }
 }
 
 #[derive(Debug, Default)]
@@ -94,6 +154,16 @@ pub struct ServeMetrics {
     e2e_steps: Vec<u64>,
     /// Per-tenant throughput accounting.
     pub tenants: BTreeMap<u32, TenantStats>,
+    /// Per-tenant × per-component attribution (bandwidth, modeled time,
+    /// modeled energy). Conservation law: the entries sum bit-exactly to
+    /// [`ServeMetrics::attributed`], whose byte/frame counters in turn
+    /// equal the pre-existing globals (`fetched_bytes`, `fetch_frames`,
+    /// `host_copy_bytes`) — asserted in tests and gated in the serve
+    /// bench.
+    pub tenant_usage: BTreeMap<u32, TenantUsage>,
+    /// Exact sum of every [`ServeMetrics::tenant_usage`] entry,
+    /// accumulated from the same per-sequence summands.
+    pub attributed: TenantUsage,
 }
 
 impl ServeMetrics {
@@ -156,6 +226,51 @@ impl ServeMetrics {
             self.overlapped_fetch_ns_8plus += overlapped_ns;
             self.steps_8plus += 1;
         }
+    }
+
+    /// Attribute one sequence's share of a step fetch (`bytes` DRAM
+    /// bytes across `frames` frames) to its tenant, deriving the modeled
+    /// DRAM/lane time and DRAM energy from the same analytic models the
+    /// serve loop's latency figures use. Called at exactly the
+    /// [`ServeMetrics::record_fetch`] sites so
+    /// [`TenantUsage::dram_bytes`] conserves against
+    /// [`ServeMetrics::fetched_bytes`].
+    pub fn attribute_fetch(&mut self, tenant: u32, bytes: u64, frames: u64) {
+        let u = TenantUsage {
+            dram_bytes: bytes,
+            lane_frames: frames,
+            host_copy_bytes: 0,
+            dram_ps: modeled_dram_ps(bytes),
+            lane_ps: modeled_lane_ps(bytes, frames),
+            energy_fj: modeled_read_energy_fj(&DDR5_4800_PAPER, bytes),
+        };
+        self.tenant_usage.entry(tenant).or_default().add(&u);
+        self.attributed.add(&u);
+    }
+
+    /// Attribute host-side materialized bytes to a tenant (the
+    /// per-tenant split of [`ServeMetrics::record_host_copy`]).
+    pub fn attribute_host_copy(&mut self, tenant: u32, bytes: u64) {
+        let u = TenantUsage {
+            host_copy_bytes: bytes,
+            ..TenantUsage::default()
+        };
+        self.tenant_usage.entry(tenant).or_default().add(&u);
+        self.attributed.add(&u);
+    }
+
+    /// DRAM bytes attributed to `tenant` (0 for an unknown tenant).
+    pub fn tenant_bandwidth_bytes(&self, tenant: u32) -> u64 {
+        self.tenant_usage
+            .get(&tenant)
+            .map_or(0, |u| u.dram_bytes)
+    }
+
+    /// Modeled DRAM energy attributed to `tenant`, picojoules.
+    pub fn tenant_energy_pj(&self, tenant: u32) -> f64 {
+        self.tenant_usage
+            .get(&tenant)
+            .map_or(0.0, TenantUsage::energy_pj)
     }
 
     /// Fraction of planned stored-page reads served from the prefetch
@@ -253,7 +368,9 @@ fn percentile_f64(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN-safe total order (NaN sorts above +inf), so a NaN
+    // wall-clock sample can never panic the sort.
+    v.sort_by(|a, b| a.total_cmp(b));
     let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
     v[idx]
 }
@@ -334,6 +451,68 @@ mod tests {
         assert_eq!(m.steps_8plus, 1);
         assert!((m.sync_fetch_ns_8plus - 300.0).abs() < 1e-12);
         assert!((m.overlapped_fetch_ns_8plus - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // single sample: every quantile is that sample
+        assert_eq!(percentile_f64(&[42.0], 0.0), 42.0);
+        assert_eq!(percentile_f64(&[42.0], 0.5), 42.0);
+        assert_eq!(percentile_f64(&[42.0], 1.0), 42.0);
+        // q = 0 / q = 1 hit min / max
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(percentile_f64(&xs, 0.0), 1.0);
+        assert_eq!(percentile_f64(&xs, 1.0), 3.0);
+        // all-equal input
+        assert_eq!(percentile_f64(&[7.0; 9], 0.99), 7.0);
+        // NaN input must not panic; NaN sorts above +inf under total_cmp,
+        // so finite quantiles stay finite
+        let with_nan = [2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(percentile_f64(&with_nan, 0.0), 1.0);
+        assert!(percentile_f64(&with_nan, 1.0).is_nan());
+        assert!(percentile_f64(&with_nan, 0.5).is_finite());
+    }
+
+    #[test]
+    fn attribution_conserves_and_splits_per_tenant() {
+        let mut m = ServeMetrics::default();
+        // mirror the serve loop: record_* for globals, attribute_* for
+        // the per-tenant split, same summands
+        m.record_fetch(4, 1, 4096);
+        m.attribute_fetch(0, 4096, 4);
+        m.record_fetch(2, 1, 1024);
+        m.attribute_fetch(1, 1024, 2);
+        m.record_fetch(0, 0, 96); // raw-tail-only fetch, no frames
+        m.attribute_fetch(0, 96, 0);
+        m.record_host_copy(512);
+        m.attribute_host_copy(0, 500);
+        m.attribute_host_copy(1, 12);
+
+        // conservation against the pre-existing globals
+        assert_eq!(m.attributed.dram_bytes, m.fetched_bytes);
+        assert_eq!(m.attributed.lane_frames, m.fetch_frames);
+        assert_eq!(m.attributed.host_copy_bytes, m.host_copy_bytes);
+        // per-tenant entries sum bit-exactly to the attributed totals
+        let mut sum = TenantUsage::default();
+        for u in m.tenant_usage.values() {
+            sum.add(u);
+        }
+        assert_eq!(sum, m.attributed);
+
+        // component split sanity: the frameless raw-tail fetch pays DRAM
+        // time but no lane time; framed fetches pay both
+        assert_eq!(m.tenant_usage[&0].dram_bytes, 4096 + 96);
+        assert_eq!(m.tenant_bandwidth_bytes(0), 4096 + 96);
+        assert_eq!(m.tenant_bandwidth_bytes(7), 0);
+        assert!(m.tenant_usage[&0].lane_ps > 0);
+        assert!(m.tenant_usage[&1].lane_ps > 0);
+        assert!(m.tenant_usage[&0].dram_ps > m.tenant_usage[&1].dram_ps);
+        assert!(m.tenant_energy_pj(0) > m.tenant_energy_pj(1));
+        assert_eq!(m.tenant_energy_pj(7), 0.0);
+        assert!((m.attributed.energy_pj()
+            - (m.tenant_energy_pj(0) + m.tenant_energy_pj(1)))
+        .abs()
+            < 1e-9);
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod server;
 
 pub use footprint::{footprint_curve, FootprintPoint};
 pub use kvmanager::{degrade_f32, KvViewPlan, PageView, PolicyEngine, PolicyPlan};
-pub use metrics::{ServeMetrics, TenantStats};
+pub use metrics::{ServeMetrics, TenantStats, TenantUsage};
 pub use pagestore::{
     fetch_sequences, prefetch_sequences, span_k_base, span_v_base, sync_sequences, ArenaSpan,
     DecodeArena, FetchOutcome, KvPageStore, PrefetchedPage, SeqPrefetch,

@@ -489,6 +489,13 @@ impl FetchOutcome {
         self.pages.iter().map(move |&(p, span)| (p, arena.codes(span)))
     }
 
+    /// Host-side bytes the decoder consumes from this fetch's arena
+    /// spans (u16 codes → 2 bytes each) — the per-sequence share of the
+    /// step's arena volume, used for host-copy attribution.
+    pub fn consumed_code_bytes(&self) -> u64 {
+        self.pages.iter().map(|&(_, s)| s.len as u64).sum::<u64>() * 2
+    }
+
     /// This fetch's span for stored page `p`, if it was fetched.
     pub fn span_for(&self, page: usize) -> Option<ArenaSpan> {
         self.pages

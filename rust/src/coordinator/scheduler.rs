@@ -93,7 +93,10 @@ use super::pagestore::{
 use crate::compress::Codec;
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
-use crate::memctrl::{FaultPlan, Layout, QuarantineError, ReadStats, RecoveryStats};
+use crate::memctrl::{
+    modeled_dram_ps, modeled_lane_ps, FaultPlan, Layout, QuarantineError, ReadStats, RecoveryStats,
+};
+use crate::obs::{EventKind as ObsKind, FlightRecording, Recorder, RecorderCfg, NO_SEQ};
 use crate::quant::policy::PAGE_TOKENS;
 use crate::runtime::model::{KvState, ModelMeta, TinyLm};
 use crate::util::hash::Fnv1a;
@@ -402,6 +405,12 @@ pub struct SchedConfig {
     /// bit counts move — so fault-site draws stay identical to the
     /// synchronous schedule even mid-chaos. 0 = off.
     pub prefetch_chaos: u64,
+    /// Flight recorder (see `obs`): `Some` drains a deterministic
+    /// virtual-time event stream into [`SchedOutcome::flight`]. The
+    /// recorder may never influence a decision — a recorder-on serve is
+    /// bit-identical to recorder-off; `None` records nothing and costs
+    /// nothing.
+    pub record: Option<RecorderCfg>,
 }
 
 impl SchedConfig {
@@ -421,6 +430,7 @@ impl SchedConfig {
             faults: None,
             prefetch: false,
             prefetch_chaos: 0,
+            record: None,
         }
     }
 
@@ -508,6 +518,9 @@ pub struct SchedOutcome {
     /// Decode-steps spent at each pressure level (none / 8-plane soft /
     /// 4-plane hard clamp).
     pub pressure_steps: [u64; 3],
+    /// The drained flight recording when [`SchedConfig::record`] was
+    /// `Some`; `None` otherwise.
+    pub flight: Option<FlightRecording>,
 }
 
 struct Seq {
@@ -558,6 +571,11 @@ struct Swapped {
     image: SwapImage,
 }
 
+/// Nominal decode tick of the flight recorder's modeled clock,
+/// picoseconds — keeps virtual time monotone across fetch-free steps.
+/// Purely observational (the clock never feeds back into a decision).
+const STEP_TICK_PS: u64 = 1000;
+
 /// Serve a trace to completion (or to `cfg.max_steps`). Requests must be
 /// sorted by `arrival_step` (as [`Trace::generate`] produces).
 pub fn serve_trace<M: StepModel>(
@@ -601,7 +619,11 @@ pub fn serve_trace<M: StepModel>(
         peak_active: 0,
         steps: 0,
         pressure_steps: [0; 3],
+        flight: None,
     };
+    // flight recorder (see `obs`): written to, never read — every record
+    // site below is a skipped `if let` when cfg.record is None
+    let mut rec: Option<Recorder> = cfg.record.as_ref().map(|rc| Recorder::new(rc.capacity));
     let mut step: u64 = 0;
     let mut admit_counter: u64 = 0;
     // pressure clamp applied to this step's reads (set by last step's
@@ -626,6 +648,9 @@ pub fn serve_trace<M: StepModel>(
     while next_req < n || !pending.is_empty() || !active.is_empty() || !swapped.is_empty() {
         if cfg.max_steps > 0 && step >= cfg.max_steps {
             break;
+        }
+        if let Some(r) = rec.as_mut() {
+            r.begin_step(step);
         }
         // 1. open-loop arrivals
         while next_req < n && trace.requests[next_req].arrival_step <= step {
@@ -692,6 +717,9 @@ pub fn serve_trace<M: StepModel>(
                                     id: seq.req.id,
                                     kind: EventKind::Resume,
                                 });
+                                if let Some(r) = rec.as_mut() {
+                                    r.push(seq.req.id, ObsKind::Resume);
+                                }
                                 committed += committed_bytes(&seq, meta, ratio);
                                 active.push(seq);
                             }
@@ -704,13 +732,16 @@ pub fn serve_trace<M: StepModel>(
                                 {
                                     return Err(e);
                                 }
-                                drain_recovery(metrics, &mut seq);
+                                drain_recovery(metrics, &mut rec, &mut seq);
                                 metrics.quarantined_seqs += 1;
                                 out.events.push(SchedEvent {
                                     step,
                                     id: seq.req.id,
                                     kind: EventKind::Quarantine,
                                 });
+                                if let Some(r) = rec.as_mut() {
+                                    r.push(seq.req.id, ObsKind::Quarantine);
+                                }
                             }
                         }
                         continue;
@@ -726,6 +757,9 @@ pub fn serve_trace<M: StepModel>(
                             id: req.id,
                             kind: EventKind::Admit,
                         });
+                        if let Some(r) = rec.as_mut() {
+                            r.push(req.id, ObsKind::Admit);
+                        }
                         committed += need;
                         active.push(admit(req, meta, cfg, &lanes, admit_counter, step));
                         admit_counter += 1;
@@ -800,6 +834,7 @@ pub fn serve_trace<M: StepModel>(
             for (s, pf) in active.iter().zip(&taken) {
                 let mut hits = Vec::new();
                 let mut mb = vec![0u32; s.plan.page_bits.len()];
+                let mut misses = 0u32;
                 if pf.quarantine.is_none() {
                     let stored = s.store.len();
                     for (p, &b) in s.plan.page_bits.iter().enumerate() {
@@ -811,10 +846,16 @@ pub fn serve_trace<M: StepModel>(
                             _ => {
                                 if p < stored {
                                     metrics.prefetch_misses += 1;
+                                    misses += 1;
                                 }
                                 mb[p] = b;
                             }
                         }
+                    }
+                }
+                if let Some(r) = rec.as_mut() {
+                    if misses > 0 {
+                        r.push(s.req.id, ObsKind::PrefetchMiss { pages: misses });
                     }
                 }
                 hit_idx.push(hits);
@@ -852,8 +893,12 @@ pub fn serve_trace<M: StepModel>(
             for (si, (pf, mut fbo)) in taken.drain(..).zip(fb.drain(..)).enumerate() {
                 let s = &mut active[si];
                 if let Some(q) = pf.quarantine.or(fbo.quarantine.take()) {
-                    for pg in &pf.pages {
-                        metrics.prefetch_wasted_bytes += pg.stats.dram_bytes;
+                    let wasted: u64 = pf.pages.iter().map(|pg| pg.stats.dram_bytes).sum();
+                    metrics.prefetch_wasted_bytes += wasted;
+                    if let Some(r) = rec.as_mut() {
+                        if wasted > 0 {
+                            r.push(s.req.id, ObsKind::PrefetchDiscard { bytes: wasted });
+                        }
                     }
                     outs.push(FetchOutcome {
                         quarantine: Some(q),
@@ -875,9 +920,19 @@ pub fn serve_trace<M: StepModel>(
                     hit_stats.merge(&st);
                 }
                 metrics.prefetch_hits += used.len() as u64;
+                let mut wasted = 0u64;
                 for (i, pg) in pf.pages.iter().enumerate() {
                     if !used.contains(&i) {
-                        metrics.prefetch_wasted_bytes += pg.stats.dram_bytes;
+                        wasted += pg.stats.dram_bytes;
+                    }
+                }
+                metrics.prefetch_wasted_bytes += wasted;
+                if let Some(r) = rec.as_mut() {
+                    if !used.is_empty() {
+                        r.push(s.req.id, ObsKind::PrefetchHit { pages: used.len() as u32 });
+                    }
+                    if wasted > 0 {
+                        r.push(s.req.id, ObsKind::PrefetchDiscard { bytes: wasted });
                     }
                 }
                 o.stats.merge(&hit_stats);
@@ -938,6 +993,27 @@ pub fn serve_trace<M: StepModel>(
                 }
             }
         };
+        // per-tenant attribution, over exactly the outcomes the
+        // record_fetch accounting above summed (same outs, same totals),
+        // so the tenant entries conserve bit-exactly against
+        // fetched_bytes / fetch_frames
+        for (s, o) in active.iter().zip(&outs) {
+            metrics.attribute_fetch(s.req.tenant, o.dram_bytes_total(), o.stats.frames);
+        }
+        // flight-recorder fetch timeline: the step's aggregate DRAM
+        // service vs lane decode intervals, and the virtual clock advance
+        // they imply. Integer bytes/frames only — identical across lane
+        // counts, fetch modes, and prefetch on/off (the logical fetch is
+        // schedule-deterministic).
+        if let Some(r) = rec.as_mut() {
+            let bytes: u64 = outs.iter().map(|o| o.dram_bytes_total()).sum();
+            let frames: u64 = outs.iter().map(|o| o.stats.frames).sum();
+            if bytes > 0 || frames > 0 {
+                r.push(NO_SEQ, ObsKind::FetchDram { bytes, frames });
+                r.push(NO_SEQ, ObsKind::FetchLanes { bytes, frames });
+            }
+            r.advance_ps(modeled_dram_ps(bytes).max(modeled_lane_ps(bytes, frames)));
+        }
         // modeled step-latency pair: what a fully synchronous fetch of
         // this step's plan costs on the critical path vs what actually
         // blocked the step (the residue only, with prefetch on)
@@ -961,7 +1037,7 @@ pub fn serve_trace<M: StepModel>(
         // reads proceed unharmed. swap_remove at descending indices keeps
         // `active` and `outs` aligned for the decode zip below.
         for s in active.iter_mut() {
-            drain_recovery(metrics, s);
+            drain_recovery(metrics, &mut rec, s);
         }
         for i in (0..outs.len()).rev() {
             if outs[i].quarantine.is_none() {
@@ -975,6 +1051,9 @@ pub fn serve_trace<M: StepModel>(
                 id: s.req.id,
                 kind: EventKind::Quarantine,
             });
+            if let Some(r) = rec.as_mut() {
+                r.push(s.req.id, ObsKind::Quarantine);
+            }
         }
         step_fetched.clear();
         step_fetched.extend(outs.iter().map(|o| o.dram_bytes_total()));
@@ -988,6 +1067,12 @@ pub fn serve_trace<M: StepModel>(
             .map(|&(_, span)| span.len)
             .sum();
         metrics.record_host_copy((consumed_codes * 2) as u64);
+        // per-tenant split of the arena volume just recorded: the
+        // per-sequence consumed-code bytes sum to exactly consumed_codes*2
+        for (s, o) in active.iter().zip(&outs) {
+            metrics.attribute_host_copy(s.req.tenant, o.consumed_code_bytes());
+        }
+        let mut step_host_copy = (consumed_codes * 2) as u64;
 
         // 5. one decode step per active sequence (round-robin batching):
         // attention consumes the fetched views, making the fetched bytes
@@ -1006,7 +1091,10 @@ pub fn serve_trace<M: StepModel>(
             } else {
                 let views = KvViews { plan: &s.plan, fetch, arena: &arena };
                 materialize_read(&views, &s.kv, meta, &mut dense_k, &mut dense_v);
-                metrics.record_host_copy(((dense_k.len() + dense_v.len()) * 4) as u64);
+                let dense_bytes = ((dense_k.len() + dense_v.len()) * 4) as u64;
+                metrics.record_host_copy(dense_bytes);
+                metrics.attribute_host_copy(s.req.tenant, dense_bytes);
+                step_host_copy += dense_bytes;
                 lm.decode(
                     &mut s.kv,
                     KvRead::Dense { k: &dense_k, v: &dense_v },
@@ -1039,6 +1127,11 @@ pub fn serve_trace<M: StepModel>(
             metrics.steps += 1;
         }
         drop(outs);
+        if let Some(r) = rec.as_mut() {
+            if step_host_copy > 0 {
+                r.push(NO_SEQ, ObsKind::HostCopy { bytes: step_host_copy });
+            }
+        }
 
         // 6. cross-sequence page sync: one lane dispatch per step
         {
@@ -1067,6 +1160,9 @@ pub fn serve_trace<M: StepModel>(
                     id: s.req.id,
                     kind: EventKind::Finish,
                 });
+                if let Some(r) = rec.as_mut() {
+                    r.push(s.req.id, ObsKind::Finish);
+                }
                 let wall = s.started.elapsed().as_secs_f64() * 1e3;
                 let ttft = s
                     .first_token_step
@@ -1121,9 +1217,13 @@ pub fn serve_trace<M: StepModel>(
                     id: victim.req.id,
                     kind: EventKind::Evict,
                 });
+                if let Some(r) = rec.as_mut() {
+                    r.push(victim.req.id, ObsKind::Evict);
+                }
                 swapped.push_back(swap_out(victim, meta, cfg.codec));
             }
             let frac = usage as f64 / budget as f64;
+            let prev_clamp = clamp;
             clamp = if frac > cfg.pressure_hard {
                 Some(4)
             } else if frac > cfg.pressure_soft {
@@ -1131,6 +1231,16 @@ pub fn serve_trace<M: StepModel>(
             } else {
                 None
             };
+            if let Some(r) = rec.as_mut() {
+                if clamp != prev_clamp {
+                    let level = match clamp {
+                        None => 0,
+                        Some(8) => 1,
+                        Some(_) => 2,
+                    };
+                    r.push(NO_SEQ, ObsKind::Pressure { level });
+                }
+            }
         }
 
         // 9. speculate the next step (see the module docs' prefetch
@@ -1172,20 +1282,39 @@ pub fn serve_trace<M: StepModel>(
             };
             for (s, o) in active.iter().zip(pf) {
                 metrics.prefetch_issued += o.pages.len() as u64;
+                if let Some(r) = rec.as_mut() {
+                    if !o.pages.is_empty() {
+                        let bytes: u64 = o.pages.iter().map(|pg| pg.stats.dram_bytes).sum();
+                        r.push(
+                            s.req.id,
+                            ObsKind::PrefetchIssue { pages: o.pages.len() as u32, bytes },
+                        );
+                    }
+                }
                 prefetch.insert(s.req.id, o);
             }
             prefetch_step = next_step;
         }
 
+        // one nominal decode tick keeps the modeled clock monotone even
+        // on fetch-free steps
+        if let Some(r) = rec.as_mut() {
+            r.advance_ps(STEP_TICK_PS);
+        }
         step += 1;
     }
     // a truncated horizon (max_steps) can leave the final speculation
     // unconsumed — surface it as waste, never as a silent leak
-    for (_, o) in prefetch {
-        for pg in o.pages {
-            metrics.prefetch_wasted_bytes += pg.stats.dram_bytes;
+    for (id, o) in prefetch {
+        let wasted: u64 = o.pages.iter().map(|pg| pg.stats.dram_bytes).sum();
+        metrics.prefetch_wasted_bytes += wasted;
+        if let Some(r) = rec.as_mut() {
+            if wasted > 0 {
+                r.push(id, ObsKind::PrefetchDiscard { bytes: wasted });
+            }
         }
     }
+    out.flight = rec.map(Recorder::into_recording);
     out.steps = step;
     Ok(out)
 }
@@ -1357,13 +1486,29 @@ fn swap_out(mut seq: Seq, meta: &ModelMeta, codec: Codec) -> Swapped {
 }
 
 /// Fold a sequence's controller recovery counters into the run metrics —
-/// delta since the last drain, so the fold is idempotent per site.
-fn drain_recovery(metrics: &mut ServeMetrics, s: &mut Seq) {
+/// delta since the last drain, so the fold is idempotent per site. A
+/// non-zero delta is also the sequence's recovery-rung record for the
+/// step, pushed to the flight recorder when one is on.
+fn drain_recovery(metrics: &mut ServeMetrics, rec: &mut Option<Recorder>, s: &mut Seq) {
     let now = s.store.mc.recovery;
-    metrics.faults_injected += now.faults_injected - s.recovery_seen.faults_injected;
-    metrics.retries += now.retries - s.recovery_seen.retries;
-    metrics.parity_repairs += now.parity_repairs - s.recovery_seen.parity_repairs;
-    metrics.salvaged_reads += now.salvaged_reads - s.recovery_seen.salvaged_reads;
+    let d = now.delta(&s.recovery_seen);
+    metrics.faults_injected += d.faults_injected;
+    metrics.retries += d.retries;
+    metrics.parity_repairs += d.parity_repairs;
+    metrics.salvaged_reads += d.salvaged_reads;
+    if let Some(r) = rec.as_mut() {
+        if !d.is_empty() {
+            r.push(
+                s.req.id,
+                ObsKind::Recovery {
+                    faults: d.faults_injected as u32,
+                    retries: d.retries as u32,
+                    parity_repairs: d.parity_repairs as u32,
+                    salvaged: d.salvaged_reads as u32,
+                },
+            );
+        }
+    }
     s.recovery_seen = now;
 }
 

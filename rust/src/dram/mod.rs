@@ -7,4 +7,6 @@ pub mod bank;
 pub mod sim;
 
 pub use addrmap::{AddrMap, Address};
-pub use sim::{Completion, EnergyBreakdown, MemorySystem, Request, SimStats};
+pub use sim::{
+    modeled_read_energy_fj, Completion, EnergyBreakdown, MemorySystem, Request, SimStats,
+};

@@ -248,6 +248,24 @@ impl EnergyBreakdown {
     }
 }
 
+/// Analytic DRAM read energy for moving `bytes` when no simulated
+/// [`MemorySystem`] counted bursts (the serve loop's latency model): the
+/// read bursts the transfer implies plus the row activations they touch,
+/// mirroring the read + activation surface the paper's Fig 10 reports
+/// (what [`SimStats::energy_pj`] computes from simulated counters).
+/// Integer femtojoules, so per-tenant attribution sums conserve
+/// bit-exactly and are reproducible across lane counts.
+pub fn modeled_read_energy_fj(cfg: &Ddr5Config, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    let read_fj_per_burst = (cfg.read_energy_pj() * 1000.0) as u64;
+    let act_fj_per_row = (cfg.act_energy_pj() * 1000.0) as u64;
+    let bursts = bytes.div_ceil(cfg.burst_bytes() as u64);
+    let rows = bytes.div_ceil(cfg.row_bytes as u64);
+    bursts * read_fj_per_burst + rows * act_fj_per_row
+}
+
 struct Channel {
     banks: Vec<Bank>, // bankgroups * banks_per_group
     rank: RankTiming,

@@ -17,6 +17,7 @@ pub mod memctrl;
 pub mod hwmodel;
 pub mod quant;
 pub mod report;
+pub mod obs;
 pub mod runtime;
 pub mod workload;
 pub mod coordinator;

@@ -73,6 +73,32 @@ impl EngineModel {
 /// (the serve loop's latency model).
 pub const MODELED_DRAM_BYTES_PER_NS: f64 = 8192.0;
 
+/// One pipeline fill of the analytic latency model, ns — the additive
+/// term in [`ReadStats::modeled_fetch_ns`] / [`ReadStats::latency_ns`].
+pub const MODELED_PIPELINE_FILL_NS: f64 = 60.0;
+
+/// DRAM share of the analytic fetch model in exact integer picoseconds:
+/// streaming `bytes` at the [`MODELED_DRAM_BYTES_PER_NS`] fabric rate.
+/// The integer form exists so per-tenant attribution sums conserve
+/// bit-exactly and flight-recorder payloads digest identically across
+/// lane counts (see `obs`).
+pub fn modeled_dram_ps(bytes: u64) -> u64 {
+    // 8192 bytes per ns => 1000 ps per 8192 bytes.
+    bytes * 1000 / 8192
+}
+
+/// Lane-decode share of the analytic fetch model in exact integer
+/// picoseconds: [`EngineModel::default`]'s aggregate rate (32 lanes ×
+/// 512 Gbps = 2048 bytes/ns) plus one pipeline fill; 0 when the fetch
+/// touched no frames. The engine model is a fixed analytic constant, so
+/// this is independent of the runtime lane-array width.
+pub fn modeled_lane_ps(bytes: u64, frames: u64) -> u64 {
+    if frames == 0 {
+        return 0;
+    }
+    (MODELED_PIPELINE_FILL_NS as u64) * 1000 + bytes * 1000 / 2048
+}
+
 /// Per-read accounting.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ReadStats {
@@ -141,7 +167,7 @@ impl ReadStats {
             return self.overlapped_ns;
         }
         let dram_ns = self.dram_cycles as f64 * t_ck * 1e9;
-        dram_ns.max(self.engine_ns) + 60.0
+        dram_ns.max(self.engine_ns) + MODELED_PIPELINE_FILL_NS
     }
     /// Modeled wall time of this read on the serve loop's critical path
     /// when no [`MemorySystem`] timed it: DRAM streaming at the
@@ -153,7 +179,7 @@ impl ReadStats {
             return 0.0;
         }
         let dram_ns = self.dram_bytes as f64 / MODELED_DRAM_BYTES_PER_NS;
-        dram_ns.max(self.engine_ns) + 60.0
+        dram_ns.max(self.engine_ns) + MODELED_PIPELINE_FILL_NS
     }
 }
 

@@ -230,6 +230,25 @@ pub struct RecoveryStats {
     pub salvaged_reads: u64,
 }
 
+impl RecoveryStats {
+    /// Counter-wise difference against an earlier snapshot `seen` — the
+    /// rungs climbed since. Counters are monotone, so this never
+    /// underflows for a genuine earlier snapshot.
+    pub fn delta(&self, seen: &RecoveryStats) -> RecoveryStats {
+        RecoveryStats {
+            faults_injected: self.faults_injected - seen.faults_injected,
+            retries: self.retries - seen.retries,
+            parity_repairs: self.parity_repairs - seen.parity_repairs,
+            salvaged_reads: self.salvaged_reads - seen.salvaged_reads,
+        }
+    }
+
+    /// True when every counter is zero (nothing to drain or record).
+    pub fn is_empty(&self) -> bool {
+        *self == RecoveryStats::default()
+    }
+}
+
 /// The per-controller injection context: which plan, whose frames, what
 /// virtual step, and what has already been applied this step (so the
 /// batched and per-sequence fetch paths inject identically even when a

@@ -63,8 +63,9 @@ pub mod fault;
 pub mod frame;
 
 pub use controller::{
-    build_kv_group_frame, read_frame_into, EngineModel, KvFrameSpec, Layout, MemController,
-    ReadStats, Region, RegionId, BLOCK_BYTES, MODELED_DRAM_BYTES_PER_NS,
+    build_kv_group_frame, modeled_dram_ps, modeled_lane_ps, read_frame_into, EngineModel,
+    KvFrameSpec, Layout, MemController, ReadStats, Region, RegionId, BLOCK_BYTES,
+    MODELED_DRAM_BYTES_PER_NS, MODELED_PIPELINE_FILL_NS,
 };
 pub use fault::{
     FaultClass, FaultCtx, FaultPlan, QuarantineError, RecoveryStats, MAX_RETRIES, SALVAGE_FLOOR,

@@ -1,0 +1,418 @@
+//! Flight-recording digest, binary format (`CAMCEVT1`), and
+//! Perfetto/Chrome trace-event export.
+//!
+//! Binary layout (all integers little-endian):
+//!
+//! ```text
+//! magic   "CAMCEVT1"                     8 bytes
+//! count   u32                            number of records
+//! records step u64 · t_ps u64 · seq u64 · tag u8 · payload (per tag)
+//! digest  u64                            FNV-1a over everything above
+//! ```
+//!
+//! The parser rejects truncation, bit flips (digest mismatch), trailing
+//! bytes, and unknown tags — the same discipline as `CAMCTRC2` traces.
+
+use std::collections::BTreeMap;
+
+use super::{Event, EventKind, FlightRecording, NO_SEQ};
+use crate::memctrl::{modeled_dram_ps, modeled_lane_ps};
+use crate::report::json::Json;
+use crate::util::hash::fnv1a64;
+
+const MAGIC: &[u8; 8] = b"CAMCEVT1";
+
+fn encode_record(e: &Event, out: &mut Vec<u8>) {
+    out.extend_from_slice(&e.step.to_le_bytes());
+    out.extend_from_slice(&e.t_ps.to_le_bytes());
+    out.extend_from_slice(&e.seq.to_le_bytes());
+    match e.kind {
+        EventKind::Admit => out.push(0),
+        EventKind::Evict => out.push(1),
+        EventKind::Resume => out.push(2),
+        EventKind::Finish => out.push(3),
+        EventKind::Quarantine => out.push(4),
+        EventKind::Pressure { level } => {
+            out.push(5);
+            out.push(level);
+        }
+        EventKind::FetchDram { bytes, frames } => {
+            out.push(6);
+            out.extend_from_slice(&bytes.to_le_bytes());
+            out.extend_from_slice(&frames.to_le_bytes());
+        }
+        EventKind::FetchLanes { bytes, frames } => {
+            out.push(7);
+            out.extend_from_slice(&bytes.to_le_bytes());
+            out.extend_from_slice(&frames.to_le_bytes());
+        }
+        EventKind::HostCopy { bytes } => {
+            out.push(8);
+            out.extend_from_slice(&bytes.to_le_bytes());
+        }
+        EventKind::Recovery {
+            faults,
+            retries,
+            parity_repairs,
+            salvaged,
+        } => {
+            out.push(9);
+            out.extend_from_slice(&faults.to_le_bytes());
+            out.extend_from_slice(&retries.to_le_bytes());
+            out.extend_from_slice(&parity_repairs.to_le_bytes());
+            out.extend_from_slice(&salvaged.to_le_bytes());
+        }
+        EventKind::PrefetchIssue { pages, bytes } => {
+            out.push(10);
+            out.extend_from_slice(&pages.to_le_bytes());
+            out.extend_from_slice(&bytes.to_le_bytes());
+        }
+        EventKind::PrefetchHit { pages } => {
+            out.push(11);
+            out.extend_from_slice(&pages.to_le_bytes());
+        }
+        EventKind::PrefetchMiss { pages } => {
+            out.push(12);
+            out.extend_from_slice(&pages.to_le_bytes());
+        }
+        EventKind::PrefetchDiscard { bytes } => {
+            out.push(13);
+            out.extend_from_slice(&bytes.to_le_bytes());
+        }
+        EventKind::Dropped { count } => {
+            out.push(14);
+            out.extend_from_slice(&count.to_le_bytes());
+        }
+    }
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.off + n > self.data.len() {
+            return Err(format!("truncated at byte {}", self.off));
+        }
+        let s = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+impl FlightRecording {
+    /// FNV-1a digest of the full encoded stream (advisories included) —
+    /// identical across lane counts and fetch modes at a fixed prefetch
+    /// setting.
+    pub fn digest(&self) -> u64 {
+        fnv1a64(&self.record_bytes(false))
+    }
+
+    /// FNV-1a digest of the schedule-deterministic core: prefetch
+    /// advisories are skipped, so this digest is also identical across
+    /// prefetch on/off (the event-stream mirror of the "`prefetch_*`
+    /// counters are the only permitted divergence" metrics contract).
+    pub fn schedule_digest(&self) -> u64 {
+        fnv1a64(&self.record_bytes(true))
+    }
+
+    fn record_bytes(&self, skip_advisory: bool) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.events.len() * 32);
+        for e in &self.events {
+            if skip_advisory && e.kind.is_advisory() {
+                continue;
+            }
+            encode_record(e, &mut out);
+        }
+        out
+    }
+
+    /// Serialize as `CAMCEVT1` (see the module docs for the layout).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.events.len() * 32);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.events.len() as u32).to_le_bytes());
+        for e in &self.events {
+            encode_record(e, &mut out);
+        }
+        let digest = fnv1a64(&out);
+        out.extend_from_slice(&digest.to_le_bytes());
+        out
+    }
+
+    /// Parse a `CAMCEVT1` buffer, rejecting truncation, corruption
+    /// (digest mismatch), unknown tags, and trailing bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            return Err("too short for CAMCEVT1".into());
+        }
+        let (body, digest_bytes) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(digest_bytes.try_into().unwrap());
+        if fnv1a64(body) != want {
+            return Err("digest mismatch (corrupt flight recording)".into());
+        }
+        if &body[..MAGIC.len()] != MAGIC {
+            return Err("bad magic (not a CAMCEVT1 flight recording)".into());
+        }
+        let mut rd = Reader {
+            data: body,
+            off: MAGIC.len(),
+        };
+        let n = rd.u32()? as usize;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let step = rd.u64()?;
+            let t_ps = rd.u64()?;
+            let seq = rd.u64()?;
+            let kind = match rd.u8()? {
+                0 => EventKind::Admit,
+                1 => EventKind::Evict,
+                2 => EventKind::Resume,
+                3 => EventKind::Finish,
+                4 => EventKind::Quarantine,
+                5 => EventKind::Pressure { level: rd.u8()? },
+                6 => EventKind::FetchDram {
+                    bytes: rd.u64()?,
+                    frames: rd.u64()?,
+                },
+                7 => EventKind::FetchLanes {
+                    bytes: rd.u64()?,
+                    frames: rd.u64()?,
+                },
+                8 => EventKind::HostCopy { bytes: rd.u64()? },
+                9 => EventKind::Recovery {
+                    faults: rd.u32()?,
+                    retries: rd.u32()?,
+                    parity_repairs: rd.u32()?,
+                    salvaged: rd.u32()?,
+                },
+                10 => EventKind::PrefetchIssue {
+                    pages: rd.u32()?,
+                    bytes: rd.u64()?,
+                },
+                11 => EventKind::PrefetchHit { pages: rd.u32()? },
+                12 => EventKind::PrefetchMiss { pages: rd.u32()? },
+                13 => EventKind::PrefetchDiscard { bytes: rd.u64()? },
+                14 => EventKind::Dropped { count: rd.u64()? },
+                t => return Err(format!("unknown event tag {t}")),
+            };
+            events.push(Event {
+                step,
+                t_ps,
+                seq,
+                kind,
+            });
+        }
+        if rd.off != body.len() {
+            return Err(format!("trailing bytes after record {n}"));
+        }
+        Ok(FlightRecording { events })
+    }
+
+    /// Export as Perfetto / Chrome trace-event JSON. Modeled time maps to
+    /// trace timestamps (`ts`, microseconds); component work (DRAM
+    /// service, lane decode, host copy, scheduler) lands on pid 0 tracks,
+    /// per-sequence lifecycle / recovery / prefetch records on pid 1 with
+    /// one thread per sequence.
+    pub fn to_perfetto(&self) -> String {
+        const PID_COMPONENTS: u64 = 0;
+        const PID_SEQUENCES: u64 = 1;
+        const TID_DRAM: u64 = 1;
+        const TID_LANES: u64 = 2;
+        const TID_HOST: u64 = 3;
+        const TID_SCHED: u64 = 4;
+        let us = |ps: u64| ps as f64 / 1e6;
+
+        let meta = |name: &str, pid: u64, tid: Option<u64>, label: &str| {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(name.into()));
+            m.insert("ph".into(), Json::Str("M".into()));
+            m.insert("pid".into(), Json::Num(pid as f64));
+            if let Some(t) = tid {
+                m.insert("tid".into(), Json::Num(t as f64));
+            }
+            let mut args = BTreeMap::new();
+            args.insert("name".into(), Json::Str(label.into()));
+            m.insert("args".into(), Json::Obj(args));
+            Json::Obj(m)
+        };
+        let mut evs = vec![
+            meta("process_name", PID_COMPONENTS, None, "components"),
+            meta("thread_name", PID_COMPONENTS, Some(TID_DRAM), "dram"),
+            meta("thread_name", PID_COMPONENTS, Some(TID_LANES), "lanes"),
+            meta("thread_name", PID_COMPONENTS, Some(TID_HOST), "host-copy"),
+            meta("thread_name", PID_COMPONENTS, Some(TID_SCHED), "scheduler"),
+            meta("process_name", PID_SEQUENCES, None, "sequences"),
+        ];
+
+        for e in &self.events {
+            let mut m = BTreeMap::new();
+            let mut args = BTreeMap::new();
+            args.insert("step".into(), Json::Num(e.step as f64));
+            // complete ("X") span on a component track, or an instant ("i")
+            let (name, pid, tid, dur_ps) = match e.kind {
+                EventKind::Admit => ("admit", PID_SEQUENCES, e.seq, None),
+                EventKind::Evict => ("evict", PID_SEQUENCES, e.seq, None),
+                EventKind::Resume => ("resume", PID_SEQUENCES, e.seq, None),
+                EventKind::Finish => ("finish", PID_SEQUENCES, e.seq, None),
+                EventKind::Quarantine => ("quarantine", PID_SEQUENCES, e.seq, None),
+                EventKind::Pressure { level } => {
+                    args.insert("level".into(), Json::Num(level as f64));
+                    ("pressure", PID_COMPONENTS, TID_SCHED, None)
+                }
+                EventKind::FetchDram { bytes, frames } => {
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    args.insert("frames".into(), Json::Num(frames as f64));
+                    (
+                        "dram",
+                        PID_COMPONENTS,
+                        TID_DRAM,
+                        Some(modeled_dram_ps(bytes)),
+                    )
+                }
+                EventKind::FetchLanes { bytes, frames } => {
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    args.insert("frames".into(), Json::Num(frames as f64));
+                    (
+                        "lanes",
+                        PID_COMPONENTS,
+                        TID_LANES,
+                        Some(modeled_lane_ps(bytes, frames)),
+                    )
+                }
+                EventKind::HostCopy { bytes } => {
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    ("host-copy", PID_COMPONENTS, TID_HOST, None)
+                }
+                EventKind::Recovery {
+                    faults,
+                    retries,
+                    parity_repairs,
+                    salvaged,
+                } => {
+                    args.insert("faults".into(), Json::Num(faults as f64));
+                    args.insert("retries".into(), Json::Num(retries as f64));
+                    args.insert("parity_repairs".into(), Json::Num(parity_repairs as f64));
+                    args.insert("salvaged".into(), Json::Num(salvaged as f64));
+                    ("recovery", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::PrefetchIssue { pages, bytes } => {
+                    args.insert("pages".into(), Json::Num(pages as f64));
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    ("prefetch-issue", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::PrefetchHit { pages } => {
+                    args.insert("pages".into(), Json::Num(pages as f64));
+                    ("prefetch-hit", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::PrefetchMiss { pages } => {
+                    args.insert("pages".into(), Json::Num(pages as f64));
+                    ("prefetch-miss", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::PrefetchDiscard { bytes } => {
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    ("prefetch-discard", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::Dropped { count } => {
+                    args.insert("count".into(), Json::Num(count as f64));
+                    ("dropped", PID_COMPONENTS, TID_SCHED, None)
+                }
+            };
+            let tid = if e.seq == NO_SEQ && pid == PID_SEQUENCES {
+                TID_SCHED
+            } else {
+                tid
+            };
+            m.insert("name".into(), Json::Str(name.into()));
+            m.insert("pid".into(), Json::Num(pid as f64));
+            m.insert("tid".into(), Json::Num(tid as f64));
+            m.insert("ts".into(), Json::Num(us(e.t_ps)));
+            match dur_ps {
+                Some(d) => {
+                    m.insert("ph".into(), Json::Str("X".into()));
+                    m.insert("dur".into(), Json::Num(us(d)));
+                }
+                None => {
+                    m.insert("ph".into(), Json::Str("i".into()));
+                    m.insert("s".into(), Json::Str("t".into()));
+                }
+            }
+            m.insert("args".into(), Json::Obj(args));
+            evs.push(Json::Obj(m));
+        }
+
+        let mut top = BTreeMap::new();
+        top.insert("traceEvents".into(), Json::Arr(evs));
+        top.insert("displayTimeUnit".into(), Json::Str("ns".into()));
+        Json::Obj(top).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FlightRecording {
+        FlightRecording {
+            events: vec![
+                Event {
+                    step: 0,
+                    t_ps: 0,
+                    seq: 3,
+                    kind: EventKind::Admit,
+                },
+                Event {
+                    step: 1,
+                    t_ps: 2_500,
+                    seq: NO_SEQ,
+                    kind: EventKind::FetchDram {
+                        bytes: 8192,
+                        frames: 4,
+                    },
+                },
+                Event {
+                    step: 1,
+                    t_ps: 2_500,
+                    seq: 3,
+                    kind: EventKind::PrefetchHit { pages: 2 },
+                },
+                Event {
+                    step: 2,
+                    t_ps: 9_000,
+                    seq: 3,
+                    kind: EventKind::Finish,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn schedule_digest_skips_advisories_only() {
+        let full = sample();
+        let mut core = full.clone();
+        core.events.retain(|e| !e.kind.is_advisory());
+        assert_eq!(full.schedule_digest(), core.digest());
+        assert_ne!(full.digest(), full.schedule_digest());
+    }
+
+    #[test]
+    fn perfetto_is_valid_json_with_one_row_per_event() {
+        let rec = sample();
+        let s = rec.to_perfetto();
+        let parsed = Json::parse(&s).expect("perfetto export parses");
+        let evs = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 6 metadata rows + 4 records
+        assert_eq!(evs.len(), 6 + rec.events.len());
+    }
+}

@@ -1,0 +1,335 @@
+//! Deterministic flight recorder: virtual-time event tracing for the
+//! serve loop.
+//!
+//! # Recorder contract
+//!
+//! [`Recorder`] is a fixed-capacity, allocation-free ring buffer of typed
+//! [`Event`]s. Capacity comes from
+//! [`crate::coordinator::SchedConfig::record`]; when that knob is `None`
+//! the serve loop constructs no recorder and every record site is a
+//! skipped `if let` — zero events, zero allocation, zero dispatch
+//! overhead.
+//!
+//! What is recorded, per virtual step:
+//!
+//! - **scheduler lifecycle** — admission, resume, finish, eviction,
+//!   quarantine, and pressure-rung moves ([`EventKind::Pressure`]);
+//! - **fetch timeline** — the step's aggregate DRAM-service interval vs
+//!   lane-decode interval ([`EventKind::FetchDram`] /
+//!   [`EventKind::FetchLanes`], bytes + frames from the controller's
+//!   cycle-interleaved issue model) and host-copy volume;
+//! - **recovery-ladder rungs** — per-sequence retry / parity-repair /
+//!   salvage / fault deltas ([`EventKind::Recovery`]);
+//! - **prefetch advisories** — issue / hit / miss / discard.
+//!
+//! Every record is stamped with the virtual step and modeled time
+//! ([`Event::t_ps`], integer picoseconds derived from the same analytic
+//! model as `ReadStats::modeled_fetch_ns`) — never wall clock.
+//!
+//! # Determinism guarantee
+//!
+//! Every payload is an integer (bytes, frames, counts) computed from
+//! virtual-step state, so the drained stream is bit-reproducible across
+//! runs, lane counts, and fetch modes. Prefetch advisories are the one
+//! permitted divergence between prefetch on/off (the mirror of the
+//! `prefetch_*` metrics contract): [`FlightRecording::schedule_digest`]
+//! skips them and is identical across {1, 8, 32} lanes × both fetch modes
+//! × prefetch on/off; [`FlightRecording::digest`] covers the full stream
+//! and is identical across lanes and fetch modes at a fixed prefetch
+//! setting. Both properties are enforced by `tests/obs_parity.rs`.
+//!
+//! # Observer-effect rule
+//!
+//! The recorder may never influence a decision. It is written to, never
+//! read, inside the serve loop; a recorder-on serve is bit-identical
+//! (schedule, responses, read/page digests, all pre-existing metrics) to
+//! a recorder-off serve. On overflow the oldest record is dropped and the
+//! drop count is itself recorded deterministically: draining a ring that
+//! overflowed yields a leading [`EventKind::Dropped`] record stamped like
+//! the oldest surviving record.
+//!
+//! # Export
+//!
+//! [`FlightRecording`] exports to Perfetto/Chrome trace-event JSON
+//! ([`FlightRecording::to_perfetto`]; virtual time as trace timestamps,
+//! tracks per sequence and per component) and to a compact versioned
+//! binary format ([`FlightRecording::to_bytes`], `CAMCEVT1` magic +
+//! trailing FNV-1a digest, the same discipline as `CAMCTRC2` traces).
+
+mod export;
+
+/// Sequence id stamped on run-scoped records (pressure rungs, step fetch
+/// intervals, overflow markers) that belong to no one sequence.
+pub const NO_SEQ: u64 = u64::MAX;
+
+/// Flight-recorder knob carried by
+/// [`crate::coordinator::SchedConfig::record`]: ring capacity in records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecorderCfg {
+    /// Max records held; the oldest is dropped (and counted) on overflow.
+    pub capacity: usize,
+}
+
+impl Default for RecorderCfg {
+    fn default() -> Self {
+        RecorderCfg { capacity: 1 << 16 }
+    }
+}
+
+/// One flight-recorder record: what happened ([`EventKind`]), to whom
+/// (`seq`, or [`NO_SEQ`] for run-scoped records), stamped with the
+/// virtual step and modeled time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Virtual step the record was emitted on.
+    pub step: u64,
+    /// Modeled time at the start of that step, integer picoseconds
+    /// (10⁻³ ns) — derived from the analytic fetch-latency model, never
+    /// wall clock.
+    pub t_ps: u64,
+    /// Owning sequence id, or [`NO_SEQ`].
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+/// Typed flight-recorder event payloads. All fields are integers so the
+/// encoded stream digests identically across lane counts and fetch modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Sequence admitted into the active batch.
+    Admit,
+    /// Sequence evicted to the paused pool (pressure ladder exhausted).
+    Evict,
+    /// Sequence swapped back in from the paused pool.
+    Resume,
+    /// Sequence retired at its target decode length.
+    Finish,
+    /// Recovery ladder exhausted: sequence quarantined and dropped.
+    Quarantine,
+    /// The pressure rung for the next step changed. 0 = no clamp,
+    /// 1 = soft clamp (8 bit-planes), 2 = hard clamp (4 bit-planes).
+    Pressure { level: u8 },
+    /// One step's aggregate DRAM-service interval: bytes moved from DRAM
+    /// (stored pages + raw tails) and frames touched.
+    FetchDram { bytes: u64, frames: u64 },
+    /// One step's aggregate lane-decode interval over the same fetch.
+    FetchLanes { bytes: u64, frames: u64 },
+    /// One step's host-side copy volume (consumed arena codes + any
+    /// dense materialization).
+    HostCopy { bytes: u64 },
+    /// Recovery-ladder rungs climbed by one sequence this step (deltas,
+    /// only emitted when non-zero).
+    Recovery {
+        faults: u32,
+        retries: u32,
+        parity_repairs: u32,
+        salvaged: u32,
+    },
+    /// Prefetch advisory: pages speculatively fetched for the next step.
+    PrefetchIssue { pages: u32, bytes: u64 },
+    /// Prefetch advisory: predicted pages consumed without a DRAM touch.
+    PrefetchHit { pages: u32 },
+    /// Prefetch advisory: pages that had to be refetched synchronously.
+    PrefetchMiss { pages: u32 },
+    /// Prefetch advisory: speculated DRAM bytes discarded unconsumed
+    /// (mispredict, precision mismatch, quarantine, chaos, or end of run).
+    PrefetchDiscard { bytes: u64 },
+    /// Synthesized on drain when the ring overflowed: `count` oldest
+    /// records were dropped.
+    Dropped { count: u64 },
+}
+
+impl EventKind {
+    /// Prefetch advisories — the only records allowed to differ between
+    /// prefetch on/off, excluded from [`FlightRecording::schedule_digest`].
+    pub fn is_advisory(&self) -> bool {
+        matches!(
+            self,
+            EventKind::PrefetchIssue { .. }
+                | EventKind::PrefetchHit { .. }
+                | EventKind::PrefetchMiss { .. }
+                | EventKind::PrefetchDiscard { .. }
+        )
+    }
+}
+
+/// Fixed-capacity ring buffer the serve loop records into. See the
+/// module docs for the contract; see [`FlightRecording`] for the drained
+/// result.
+#[derive(Debug)]
+pub struct Recorder {
+    buf: Vec<Event>,
+    /// Ring capacity (`Vec::capacity` may over-allocate, so the limit is
+    /// held explicitly — overflow semantics must be exact).
+    cap: usize,
+    /// Oldest-record index once the ring has wrapped.
+    start: usize,
+    dropped: u64,
+    step: u64,
+    t_ps: u64,
+}
+
+impl Recorder {
+    /// A recorder holding at most `capacity` records (min 1). The buffer
+    /// is preallocated here; [`Recorder::push`] never allocates.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Recorder {
+            buf: Vec::with_capacity(cap),
+            cap,
+            start: 0,
+            dropped: 0,
+            step: 0,
+            t_ps: 0,
+        }
+    }
+
+    /// Stamp subsequent records with virtual step `step`.
+    pub fn begin_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// Advance the modeled clock by `ps` picoseconds.
+    pub fn advance_ps(&mut self, ps: u64) {
+        self.t_ps += ps;
+    }
+
+    /// Current modeled time, picoseconds.
+    pub fn t_ps(&self) -> u64 {
+        self.t_ps
+    }
+
+    /// Record one event, dropping the oldest record if the ring is full.
+    pub fn push(&mut self, seq: u64, kind: EventKind) {
+        let e = Event {
+            step: self.step,
+            t_ps: self.t_ps,
+            seq,
+            kind,
+        };
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.start] = e;
+            self.start = (self.start + 1) % self.buf.len();
+            self.dropped += 1;
+        }
+    }
+
+    /// Records dropped to overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain into an ordered [`FlightRecording`]. If the ring overflowed,
+    /// the stream leads with a synthesized [`EventKind::Dropped`] record
+    /// carrying the drop count, stamped like the oldest surviving record
+    /// so the marker itself is deterministic.
+    pub fn into_recording(self) -> FlightRecording {
+        let mut events = Vec::with_capacity(self.buf.len() + 1);
+        if self.dropped > 0 {
+            let oldest = self.buf[self.start];
+            events.push(Event {
+                step: oldest.step,
+                t_ps: oldest.t_ps,
+                seq: NO_SEQ,
+                kind: EventKind::Dropped {
+                    count: self.dropped,
+                },
+            });
+        }
+        events.extend_from_slice(&self.buf[self.start..]);
+        events.extend_from_slice(&self.buf[..self.start]);
+        FlightRecording { events }
+    }
+}
+
+/// The drained, ordered event stream of one serve. Digest, export, and
+/// parse live in [`obs::export`](self) — see the module docs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlightRecording {
+    /// Records in emission order (oldest first); a leading
+    /// [`EventKind::Dropped`] marks ring overflow.
+    pub events: Vec<Event>,
+}
+
+impl FlightRecording {
+    /// Records dropped to ring overflow (0 unless the stream leads with
+    /// a [`EventKind::Dropped`] marker).
+    pub fn dropped(&self) -> u64 {
+        match self.events.first() {
+            Some(Event {
+                kind: EventKind::Dropped { count },
+                ..
+            }) => *count,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_and_records_drop_count() {
+        let mut r = Recorder::new(4);
+        for step in 0..6u64 {
+            r.begin_step(step);
+            r.advance_ps(10);
+            r.push(step, EventKind::Admit);
+        }
+        assert_eq!(r.dropped(), 2);
+        let rec = r.into_recording();
+        // leading Dropped marker + the 4 newest records
+        assert_eq!(rec.events.len(), 5);
+        assert_eq!(rec.dropped(), 2);
+        let first = rec.events[0];
+        assert_eq!(first.kind, EventKind::Dropped { count: 2 });
+        assert_eq!(first.seq, NO_SEQ);
+        // stamped like the oldest survivor (step 2)
+        assert_eq!(first.step, 2);
+        assert_eq!(first.t_ps, rec.events[1].t_ps);
+        let steps: Vec<u64> = rec.events[1..].iter().map(|e| e.step).collect();
+        assert_eq!(steps, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn overflow_marker_is_deterministic() {
+        let mk = || {
+            let mut r = Recorder::new(3);
+            for step in 0..9u64 {
+                r.begin_step(step);
+                r.push(step % 2, EventKind::HostCopy { bytes: step * 7 });
+                r.advance_ps(100);
+            }
+            r.into_recording()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.dropped(), 6);
+    }
+
+    #[test]
+    fn no_overflow_no_marker() {
+        let mut r = Recorder::new(8);
+        r.push(0, EventKind::Admit);
+        r.push(0, EventKind::Finish);
+        let rec = r.into_recording();
+        assert_eq!(rec.events.len(), 2);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn advisory_split_matches_prefetch_family() {
+        assert!(EventKind::PrefetchIssue { pages: 1, bytes: 2 }.is_advisory());
+        assert!(EventKind::PrefetchHit { pages: 1 }.is_advisory());
+        assert!(EventKind::PrefetchMiss { pages: 1 }.is_advisory());
+        assert!(EventKind::PrefetchDiscard { bytes: 2 }.is_advisory());
+        assert!(!EventKind::Admit.is_advisory());
+        assert!(!EventKind::FetchDram { bytes: 1, frames: 1 }.is_advisory());
+        assert!(!EventKind::Dropped { count: 1 }.is_advisory());
+    }
+}

@@ -113,6 +113,46 @@ impl Json {
     }
 }
 
+/// Accumulator for the flat `BENCH_*.json` reports the bench binaries
+/// emit: a `path -> number` map serialized as one compact JSON object
+/// with a trailing newline (the shape the CI perf-trajectory tooling
+/// collects and diffs across commits).
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    paths: BTreeMap<String, Json>,
+}
+
+impl BenchReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one metric under `path`.
+    pub fn insert(&mut self, path: &str, value: f64) {
+        self.paths.insert(path.to_string(), Json::Num(value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+
+    /// The serialized report body (compact object + trailing newline).
+    pub fn render(&self) -> String {
+        Json::Obj(self.paths.clone()).to_string() + "\n"
+    }
+
+    /// Write the report to `path` and print the standard
+    /// `wrote <path> (<n> paths)` line the bench logs share.
+    pub fn write(&self, path: &str) {
+        std::fs::write(path, self.render()).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path} ({} paths)", self.paths.len());
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -326,6 +366,16 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn bench_report_renders_flat_object() {
+        let mut r = BenchReport::new();
+        assert!(r.is_empty());
+        r.insert("b path", 2.0);
+        r.insert("a path", 1.0);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.render(), "{\"a path\":1,\"b path\":2}\n");
     }
 
     #[test]

@@ -3,5 +3,5 @@
 pub mod json;
 pub mod table;
 
-pub use json::Json;
+pub use json::{BenchReport, Json};
 pub use table::Table;

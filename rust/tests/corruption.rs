@@ -1,8 +1,10 @@
 //! Corruption-injection tests: flipped or truncated bytes in stored
-//! compressed pages and in serialized `Trace` files must surface as clean
-//! `Err`s — no panics, no silent wrong data. The stored-frame guarantees
-//! rest on the per-plane + header checksums in `memctrl::frame`; the
-//! trace guarantees on the trailing FNV-1a digest in `workload::trace`.
+//! compressed pages, in serialized `Trace` files, and in `CAMCEVT1`
+//! flight recordings must surface as clean `Err`s — no panics, no silent
+//! wrong data. The stored-frame guarantees rest on the per-plane + header
+//! checksums in `memctrl::frame`; the trace and flight-recording
+//! guarantees on the trailing FNV-1a digests in `workload::trace` and
+//! `obs`.
 //!
 //! The recovery matrix at the bottom drives the *self-healing* side of
 //! the same contract: every `memctrl::fault` class, under every codec ×
@@ -18,6 +20,7 @@ use camc::coordinator::{
 };
 use camc::engine::LaneArray;
 use camc::memctrl::{FaultClass, FaultPlan, Layout, RegionId, SALVAGE_FLOOR};
+use camc::obs::{EventKind, FlightRecording, Recorder, NO_SEQ};
 use camc::quant::policy::KvPolicy;
 use camc::runtime::model::{KvState, ModelMeta};
 use camc::util::check::check;
@@ -432,4 +435,84 @@ fn speculative_fetch_resolves_faults_exactly_once() {
             }
         }
     }
+}
+
+/// A recording exercising every `obs` event tag, both real and
+/// run-scoped (`NO_SEQ`) owners, and a nonzero virtual clock — every
+/// `CAMCEVT1` encoder branch appears in the byte stream below.
+fn sample_recording() -> FlightRecording {
+    let mut r = Recorder::new(64);
+    r.begin_step(3);
+    r.push(7, EventKind::Admit);
+    r.push(8, EventKind::Resume);
+    r.advance_ps(1250);
+    r.push(NO_SEQ, EventKind::FetchDram { bytes: 4096, frames: 9 });
+    r.push(NO_SEQ, EventKind::FetchLanes { bytes: 4096, frames: 9 });
+    r.push(
+        7,
+        EventKind::Recovery { faults: 1, retries: 2, parity_repairs: 0, salvaged: 1 },
+    );
+    r.push(NO_SEQ, EventKind::HostCopy { bytes: 513 });
+    r.push(9, EventKind::Quarantine);
+    r.push(7, EventKind::Finish);
+    r.push(8, EventKind::Evict);
+    r.push(NO_SEQ, EventKind::Pressure { level: 2 });
+    r.push(7, EventKind::PrefetchIssue { pages: 3, bytes: 768 });
+    r.begin_step(4);
+    r.push(7, EventKind::PrefetchHit { pages: 2 });
+    r.push(7, EventKind::PrefetchMiss { pages: 1 });
+    r.push(7, EventKind::PrefetchDiscard { bytes: 256 });
+    r.push(NO_SEQ, EventKind::Dropped { count: 11 });
+    r.into_recording()
+}
+
+#[test]
+fn flight_recording_bytes_roundtrip() {
+    let rec = sample_recording();
+    assert_eq!(rec.events.len(), 16);
+    let bytes = rec.to_bytes();
+    let back = FlightRecording::from_bytes(&bytes).unwrap();
+    assert_eq!(back, rec);
+    assert_eq!(back.digest(), rec.digest());
+    assert_eq!(back.schedule_digest(), rec.schedule_digest());
+    // the advisory records are real, so the two digests split
+    assert_ne!(rec.digest(), rec.schedule_digest());
+}
+
+#[test]
+fn flipped_bytes_in_flight_recordings_error_cleanly() {
+    // The trailing FNV-1a digest makes ANY single-byte flip a clean
+    // parse error — a corrupted recording must never silently replay as
+    // an incident timeline nobody flew.
+    let bytes = sample_recording().to_bytes();
+    for i in 0..bytes.len() {
+        for mask in [0x01u8, 0x80] {
+            let mut bad = bytes.clone();
+            bad[i] ^= mask;
+            assert!(
+                FlightRecording::from_bytes(&bad).is_err(),
+                "recording byte {i} flip {mask:#04x} undetected"
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_and_extended_flight_recordings_error_cleanly() {
+    let rec = sample_recording();
+    let bytes = rec.to_bytes();
+    for cut in 0..bytes.len() {
+        assert!(
+            FlightRecording::from_bytes(&bytes[..cut]).is_err(),
+            "truncation to {cut} parsed"
+        );
+    }
+    let mut longer = bytes.clone();
+    longer.push(0);
+    assert!(
+        FlightRecording::from_bytes(&longer).is_err(),
+        "trailing byte undetected"
+    );
+    // and the pristine bytes still round-trip
+    assert_eq!(FlightRecording::from_bytes(&bytes).unwrap(), rec);
 }

@@ -1,0 +1,392 @@
+//! Observer-effect suite for the flight recorder (`obs`): a serve with
+//! the recorder on must be bit-identical — schedule, responses, stored
+//! page/readout digests, and every pre-existing metric — to the same
+//! serve with the recorder off, across {1, 8, 32} lanes × both fetch
+//! modes × prefetch on/off; a recorder-off serve returns no recording.
+//! The drained event stream is itself deterministic:
+//! `schedule_digest()` (prefetch advisories skipped) is identical
+//! across the entire matrix, and the full `digest()` is identical
+//! across lanes and fetch modes at a fixed prefetch setting — including
+//! under injected faults, where the recovery-ladder rungs land in the
+//! stream. The per-tenant attribution carried by `ServeMetrics`
+//! conserves bit-exactly: the tenant entries sum to `attributed`, whose
+//! counters equal the global fetch/host-copy totals.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use camc::coordinator::{
+    serve_trace, FetchMode, SchedConfig, SchedOutcome, ServeMetrics, TenantUsage, TrafficResponse,
+};
+use camc::engine::LaneArray;
+use camc::memctrl::FaultPlan;
+use camc::obs::{EventKind, FlightRecording, RecorderCfg};
+use camc::quant::policy::KvPolicy;
+use camc::workload::arrival::ArrivalProcess;
+use camc::workload::lengths::LengthDist;
+use camc::workload::synthmodel::SynthLm;
+use camc::workload::tenant::{TenantSpec, WorkloadSpec};
+use camc::workload::trace::Trace;
+
+fn dense_spec(n: usize, rate: f64, prompt: usize, output: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: ArrivalProcess::Poisson { rate },
+        tenants: vec![TenantSpec {
+            name: "t".into(),
+            weight: 1.0,
+            policy: KvPolicy::Full,
+            prompt: LengthDist::Fixed(prompt),
+            output: LengthDist::Fixed(output),
+        }],
+        n_requests: n,
+        vocab: 256,
+        max_seq: 128,
+    }
+}
+
+fn two_tenant_spec(n: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: ArrivalProcess::Poisson { rate: 8.0 },
+        tenants: vec![
+            TenantSpec {
+                name: "chat".into(),
+                weight: 0.6,
+                policy: KvPolicy::Full,
+                prompt: LengthDist::Fixed(16),
+                output: LengthDist::Fixed(48),
+            },
+            TenantSpec {
+                name: "batch".into(),
+                weight: 0.4,
+                policy: KvPolicy::Full,
+                prompt: LengthDist::Fixed(16),
+                output: LengthDist::Fixed(32),
+            },
+        ],
+        n_requests: n,
+        vocab: 256,
+        max_seq: 128,
+    }
+}
+
+/// Everything deterministic about a response (wall time excluded).
+fn key(r: &TrafficResponse) -> (u64, Vec<u16>, u64, u64, u64, u64, u32, u64) {
+    (
+        r.id,
+        r.tokens.clone(),
+        r.mean_nll.to_bits(),
+        r.kv_fetched_bytes,
+        r.kv_pages_digest,
+        r.read_digest,
+        r.evictions,
+        r.recovered_faults,
+    )
+}
+
+fn serve(
+    lm: &SynthLm,
+    trace: &Trace,
+    cfg: &SchedConfig,
+    lanes: usize,
+) -> (SchedOutcome, ServeMetrics) {
+    let la = Arc::new(LaneArray::new(lanes));
+    let mut m = ServeMetrics::default();
+    let cfg = SchedConfig { collect_digests: true, ..cfg.clone() };
+    let out = serve_trace(lm, trace, &cfg, la, &mut m).expect("serve_trace");
+    (out, m)
+}
+
+/// Recorder-on vs recorder-off: schedule, responses, and every metric
+/// (the per-tenant attribution included) must match bit-exactly.
+fn assert_observer_free(
+    tag: &str,
+    off: &(SchedOutcome, ServeMetrics),
+    on: &(SchedOutcome, ServeMetrics),
+) {
+    let ((base, bm), (o, m)) = (off, on);
+    assert!(base.flight.is_none(), "{tag}: recorder-off run recorded");
+    assert!(o.flight.is_some(), "{tag}: recorder-on run lost its recording");
+    assert_eq!(o.events, base.events, "{tag}: schedule diverged");
+    assert_eq!(o.peak_active, base.peak_active, "{tag}");
+    assert_eq!(o.steps, base.steps, "{tag}");
+    assert_eq!(o.pressure_steps, base.pressure_steps, "{tag}");
+    assert_eq!(
+        o.responses.iter().map(key).collect::<Vec<_>>(),
+        base.responses.iter().map(key).collect::<Vec<_>>(),
+        "{tag}: responses diverged"
+    );
+    assert_eq!(m.steps, bm.steps, "{tag}");
+    assert_eq!(m.fetched_bytes, bm.fetched_bytes, "{tag}: fetched bytes");
+    assert_eq!(m.fetch_frames, bm.fetch_frames, "{tag}: fetched frames");
+    assert_eq!(m.fetch_dispatches, bm.fetch_dispatches, "{tag}: dispatches");
+    assert_eq!(m.host_copy_bytes, bm.host_copy_bytes, "{tag}: host copies");
+    assert_eq!(m.faults_injected, bm.faults_injected, "{tag}: faults");
+    assert_eq!(m.retries, bm.retries, "{tag}: retries");
+    assert_eq!(m.parity_repairs, bm.parity_repairs, "{tag}: repairs");
+    assert_eq!(m.salvaged_reads, bm.salvaged_reads, "{tag}: salvages");
+    assert_eq!(m.quarantined_seqs, bm.quarantined_seqs, "{tag}: quarantines");
+    assert_eq!(m.prefetch_issued, bm.prefetch_issued, "{tag}: prefetch");
+    assert_eq!(m.prefetch_hits, bm.prefetch_hits, "{tag}: prefetch hits");
+    assert_eq!(m.prefetch_misses, bm.prefetch_misses, "{tag}: misses");
+    assert_eq!(
+        m.prefetch_wasted_bytes, bm.prefetch_wasted_bytes,
+        "{tag}: waste"
+    );
+    assert_eq!(m.sync_fetch_ns.to_bits(), bm.sync_fetch_ns.to_bits(), "{tag}");
+    assert_eq!(
+        m.overlapped_fetch_ns.to_bits(),
+        bm.overlapped_fetch_ns.to_bits(),
+        "{tag}"
+    );
+    assert_eq!(m.tenants, bm.tenants, "{tag}: per-tenant stats");
+    assert_eq!(m.tenant_usage, bm.tenant_usage, "{tag}: attribution");
+    assert_eq!(m.attributed, bm.attributed, "{tag}: attribution totals");
+}
+
+/// The conservation law: tenant entries sum bit-exactly to `attributed`,
+/// whose byte/frame counters equal the pre-existing globals.
+fn assert_conserved(tag: &str, m: &ServeMetrics) {
+    assert_eq!(
+        m.attributed.dram_bytes, m.fetched_bytes,
+        "{tag}: dram bytes not conserved"
+    );
+    assert_eq!(
+        m.attributed.lane_frames, m.fetch_frames,
+        "{tag}: lane frames not conserved"
+    );
+    assert_eq!(
+        m.attributed.host_copy_bytes, m.host_copy_bytes,
+        "{tag}: host-copy bytes not conserved"
+    );
+    let mut sum = TenantUsage::default();
+    for u in m.tenant_usage.values() {
+        sum.add(u);
+    }
+    assert_eq!(sum, m.attributed, "{tag}: tenant sum != attributed");
+}
+
+fn flight(run: &(SchedOutcome, ServeMetrics)) -> &FlightRecording {
+    run.0.flight.as_ref().expect("recorder-on run records")
+}
+
+#[test]
+fn recorder_is_observer_free_and_stream_digests_are_deterministic() {
+    // The acceptance matrix: a budget tight enough to clamp AND force
+    // evict/resume cycles, served at {1, 8, 32} lanes × both fetch
+    // modes × prefetch on/off — recorder-on bit-identical to
+    // recorder-off everywhere, one schedule digest across the whole
+    // matrix, one full digest per prefetch setting.
+    let lm = SynthLm::tiny(5);
+    let trace = Trace::generate(&dense_spec(8, 8.0, 16, 48), 31);
+    let budget = 9500u64;
+    let mut schedule_digests = BTreeSet::new();
+    let mut full_digests = [BTreeSet::new(), BTreeSet::new()];
+    for prefetch in [false, true] {
+        for fetch in [FetchMode::Batched, FetchMode::PerSequence] {
+            for lanes in [1usize, 8, 32] {
+                let cfg = SchedConfig {
+                    fetch,
+                    prefetch,
+                    ..SchedConfig::compressed(budget)
+                };
+                let tag = format!("{fetch:?}/{lanes} lanes/prefetch={prefetch}");
+                let off = serve(&lm, &trace, &cfg, lanes);
+                let on = serve(
+                    &lm,
+                    &trace,
+                    &SchedConfig {
+                        record: Some(RecorderCfg::default()),
+                        ..cfg
+                    },
+                    lanes,
+                );
+                assert_observer_free(&tag, &off, &on);
+                assert_conserved(&tag, &on.1);
+                assert_conserved(&tag, &off.1);
+                let f = flight(&on);
+                assert!(!f.events.is_empty(), "{tag}: empty recording");
+                assert_eq!(f.dropped(), 0, "{tag}: unexpectedly overflowed");
+                schedule_digests.insert(f.schedule_digest());
+                full_digests[usize::from(prefetch)].insert(f.digest());
+            }
+        }
+    }
+    assert_eq!(
+        schedule_digests.len(),
+        1,
+        "schedule digest must be identical across the entire matrix: {schedule_digests:?}"
+    );
+    for (i, d) in full_digests.iter().enumerate() {
+        assert_eq!(
+            d.len(),
+            1,
+            "full digest must be identical across lanes/fetch modes at prefetch={}: {d:?}",
+            i == 1
+        );
+    }
+    // prefetch on records advisory events (speculation is proven to arm
+    // on this workload), so the full digests differ across the two
+    // settings — else the advisory split is vacuous
+    assert_ne!(full_digests[0], full_digests[1]);
+}
+
+#[test]
+fn recording_covers_lifecycle_fetch_and_pressure() {
+    let lm = SynthLm::tiny(5);
+    let trace = Trace::generate(&dense_spec(8, 8.0, 16, 48), 31);
+    let cfg = SchedConfig {
+        record: Some(RecorderCfg::default()),
+        ..SchedConfig::compressed(9500)
+    };
+    let (out, m) = serve(&lm, &trace, &cfg, 8);
+    let f = out.flight.as_ref().expect("recording");
+    // virtual time is monotone and never wall clock
+    assert!(f.events.windows(2).all(|w| w[0].t_ps <= w[1].t_ps));
+    // every request admits and finishes in the stream
+    let admitted: BTreeSet<u64> = f
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Admit)
+        .map(|e| e.seq)
+        .collect();
+    let finished: BTreeSet<u64> = f
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Finish)
+        .map(|e| e.seq)
+        .collect();
+    let ids: BTreeSet<u64> = out.responses.iter().map(|r| r.id).collect();
+    assert_eq!(admitted, ids);
+    assert_eq!(finished, ids);
+    // the tight budget exercises eviction, resume, and the pressure rung
+    for kind in [EventKind::Evict, EventKind::Resume] {
+        assert!(
+            f.events.iter().any(|e| e.kind == kind),
+            "missing {kind:?} in the stream"
+        );
+    }
+    assert!(f
+        .events
+        .iter()
+        .any(|e| matches!(e.kind, EventKind::Pressure { level } if level > 0)));
+    // the fetch timeline pairs DRAM service with lane decode each step
+    let dram = f
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::FetchDram { .. }))
+        .count();
+    let lanes_ev = f
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::FetchLanes { .. }))
+        .count();
+    assert!(dram > 0);
+    assert_eq!(dram, lanes_ev);
+    assert!(f
+        .events
+        .iter()
+        .any(|e| matches!(e.kind, EventKind::HostCopy { .. })));
+    // the recorded DRAM intervals sum to exactly the run's fetch traffic
+    // (swap-in reads are response-side accounting, not fetch events)
+    let recorded: u64 = f
+        .events
+        .iter()
+        .map(|e| match e.kind {
+            EventKind::FetchDram { bytes, .. } => bytes,
+            _ => 0,
+        })
+        .sum();
+    assert_eq!(recorded, m.fetched_bytes);
+    // round-trips through the CAMCEVT1 binary form
+    let back = FlightRecording::from_bytes(&f.to_bytes()).expect("round-trip");
+    assert_eq!(&back, f);
+    assert_eq!(back.digest(), f.digest());
+}
+
+#[test]
+fn recovery_rungs_land_in_the_stream_and_digest_identically() {
+    // Injected faults climb the recovery ladder; the per-sequence rung
+    // deltas must appear as Recovery records whose totals equal the run
+    // metrics — and the stream digest stays identical across lanes and
+    // fetch modes (fault draws are virtual-site state, not timing).
+    let lm = SynthLm::tiny(9);
+    let trace = Trace::generate(&dense_spec(16, 2.0, 16, 32), 23);
+    let plan = Arc::new(FaultPlan {
+        seed: 77,
+        p_plane_flip: 220,
+        p_header_flip: 17,
+        p_transient: 80,
+        p_lane_fault: 40,
+        flip_plane: None,
+    });
+    let mut digests = BTreeSet::new();
+    for fetch in [FetchMode::Batched, FetchMode::PerSequence] {
+        for lanes in [1usize, 8, 32] {
+            let cfg = SchedConfig {
+                fetch,
+                parity: true,
+                faults: Some(Arc::clone(&plan)),
+                record: Some(RecorderCfg::default()),
+                ..SchedConfig::compressed(1 << 20)
+            };
+            let tag = format!("{fetch:?}/{lanes} lanes");
+            let (out, m) = serve(&lm, &trace, &cfg, lanes);
+            assert!(m.faults_injected > 0, "{tag}: fault plan never fired");
+            assert!(m.retries > 0, "{tag}: no transient retries");
+            assert!(m.parity_repairs > 0, "{tag}: parity on must repair");
+            let f = out.flight.as_ref().expect("recording");
+            let (mut faults, mut retries, mut repairs, mut salvaged) = (0u64, 0u64, 0u64, 0u64);
+            for e in &f.events {
+                if let EventKind::Recovery {
+                    faults: fa,
+                    retries: re,
+                    parity_repairs: pr,
+                    salvaged: sa,
+                } = e.kind
+                {
+                    faults += u64::from(fa);
+                    retries += u64::from(re);
+                    repairs += u64::from(pr);
+                    salvaged += u64::from(sa);
+                }
+            }
+            assert_eq!(faults, m.faults_injected, "{tag}: fault rungs");
+            assert_eq!(retries, m.retries, "{tag}: retry rungs");
+            assert_eq!(repairs, m.parity_repairs, "{tag}: repair rungs");
+            assert_eq!(salvaged, m.salvaged_reads, "{tag}: salvage rungs");
+            digests.insert(f.digest());
+        }
+    }
+    assert_eq!(
+        digests.len(),
+        1,
+        "fault-run stream digest must be identical across lanes/fetch modes: {digests:?}"
+    );
+}
+
+#[test]
+fn tenant_attribution_splits_bandwidth_and_energy() {
+    // Two tenants with different output lengths: every tenant the trace
+    // actually serves must be attributed, the split must be non-trivial,
+    // and the public accessors must agree with the raw entries.
+    let lm = SynthLm::tiny(5);
+    let trace = Trace::generate(&two_tenant_spec(16), 31);
+    let (out, m) = serve(&lm, &trace, &SchedConfig::compressed(1 << 20), 8);
+    assert_conserved("two-tenant", &m);
+    let served: BTreeSet<u32> = out.responses.iter().map(|r| r.tenant).collect();
+    assert_eq!(served.len(), 2, "seed must mix both tenants");
+    assert_eq!(m.tenant_usage.keys().copied().collect::<BTreeSet<_>>(), served);
+    for (&t, u) in &m.tenant_usage {
+        assert!(u.dram_bytes > 0, "tenant {t} moved no DRAM bytes");
+        assert!(u.host_copy_bytes > 0, "tenant {t} copied no host bytes");
+        assert!(u.dram_ps > 0 && u.lane_ps > 0 && u.energy_fj > 0);
+        assert_eq!(m.tenant_bandwidth_bytes(t), u.dram_bytes);
+        assert_eq!(m.tenant_energy_pj(t).to_bits(), u.energy_pj().to_bits());
+        // the modeled components are consistent derivations of the bytes
+        assert_eq!(u.dram_ns(), u.dram_ps as f64 / 1000.0);
+        assert_eq!(u.lane_ns(), u.lane_ps as f64 / 1000.0);
+    }
+    // unknown tenants read as zero, not a panic
+    assert_eq!(m.tenant_bandwidth_bytes(99), 0);
+    assert_eq!(m.tenant_energy_pj(99), 0.0);
+}
