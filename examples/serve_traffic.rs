@@ -3,11 +3,21 @@
 //! entirely hermetic (synthetic decode backend — no artifacts, no XLA).
 //!
 //!     cargo run --release --example serve_traffic [-- --trace-out <path>] [-- --trace-bin <path>]
+//!         [-- --shared-prefix <tokens>] [-- --shared-prob <permille>]
 //!
 //! Prints the compressed-vs-uncompressed capacity comparison (same byte
 //! budget, strictly more concurrent sequences with compression on), the
 //! pressure/eviction schedule, per-tenant throughput, and TTFT/TBT/e2e
 //! latency percentiles in deterministic virtual-step units.
+//!
+//! `--shared-prefix <tokens>` gives the chat tenant a shared
+//! system-prompt family of that many tokens (joined with probability
+//! `--shared-prob` per-mille, default 900) and appends a
+//! sharing-on-vs-off comparison at the same compressed budget: with
+//! content-addressed page sharing on, the identical prefix pages are
+//! stored once and each sequence is charged only its unique compressed
+//! bytes, so the dedup'd capacity converts into served sequences.
+//! Prefixes shorter than one KV page (16 tokens) never dedup.
 //!
 //! `--trace-out <path>` additionally serves the compressed run with the
 //! flight recorder on and writes the event stream as Perfetto/Chrome
@@ -24,7 +34,7 @@ use camc::coordinator::{
 use camc::engine::LaneArray;
 use camc::obs::RecorderCfg;
 use camc::report::Table;
-use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
+use camc::workload::{ArrivalProcess, LengthDist, PrefixFamily, SynthLm, Trace, WorkloadSpec};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -35,13 +45,33 @@ fn main() -> anyhow::Result<()> {
     };
     let trace_out = flag("--trace-out");
     let trace_bin = flag("--trace-bin");
+    let shared_prefix: usize = flag("--shared-prefix")
+        .map(|v| v.parse().expect("--shared-prefix takes a token count"))
+        .unwrap_or(0);
+    let shared_prob: u32 = flag("--shared-prob")
+        .map(|v| v.parse().expect("--shared-prob takes a per-mille 0..=1000"))
+        .unwrap_or(900);
 
     let lm = SynthLm::tiny(2026);
-    let spec = WorkloadSpec::chat_plus_batch(
+    let mut spec = WorkloadSpec::chat_plus_batch(
         ArrivalProcess::Poisson { rate: 1.2 },
         48,
         lm.meta.max_seq,
     );
+    if shared_prefix > 0 {
+        // reshape the chat prompts so the family prefix covers whole KV
+        // pages of most members (sharing needs full identical pages)
+        spec.tenants[0].prompt = LengthDist::Uniform {
+            lo: 16,
+            hi: shared_prefix.max(16),
+        };
+        spec.shared_prefixes.push(PrefixFamily {
+            tenant: 0,
+            tokens: shared_prefix,
+            prob: shared_prob,
+            seed: 11,
+        });
+    }
     let trace = Trace::generate(&spec, 7);
     println!(
         "trace: {} requests over {} virtual steps, tenants: {}",
@@ -144,6 +174,53 @@ fn main() -> anyhow::Result<()> {
         "capacity check ✓ compressed admission sustained {comp} concurrent sequences \
          vs {uncomp} uncompressed / {fixed} fixed-slot under one {budget}-byte budget"
     );
+
+    // shared-prefix comparison: the same trace and compressed budget,
+    // with and without content-addressed page sharing
+    if shared_prefix > 0 {
+        let mut shr = Table::new(
+            "content-addressed page sharing (same compressed budget)",
+            &[
+                "sharing",
+                "served",
+                "peak conc",
+                "dedup pages",
+                "bytes saved",
+                "unique bytes",
+            ],
+        );
+        let mut served = Vec::new();
+        for sharing in [false, true] {
+            let lanes = Arc::new(LaneArray::with_default_lanes());
+            let mut m = ServeMetrics::default();
+            let cfg = SchedConfig {
+                sharing,
+                ..SchedConfig::compressed(budget)
+            };
+            let out = serve_trace(&lm, &trace, &cfg, lanes, &mut m)?;
+            shr.row(&[
+                if sharing { "on" } else { "off" }.into(),
+                out.responses.len().to_string(),
+                out.peak_active.to_string(),
+                m.dedup_pages.to_string(),
+                m.dedup_bytes_saved.to_string(),
+                m.unique_bytes.to_string(),
+            ]);
+            served.push((out.responses.len(), m.dedup_bytes_saved));
+        }
+        shr.print();
+        let (off_served, _) = served[0];
+        let (on_served, saved) = served[1];
+        assert!(
+            on_served >= off_served && saved > 0,
+            "sharing must dedup bytes and serve at least as many sequences \
+             ({on_served} vs {off_served}, {saved} B saved)"
+        );
+        println!(
+            "sharing check ✓ {saved} B of shared-prefix pages stored once; \
+             served {on_served} vs {off_served} without sharing"
+        );
+    }
 
     // optional flight-recorder export: re-serve the compressed run with
     // the recorder on (byte-identical schedule — the recorder is never

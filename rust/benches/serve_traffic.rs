@@ -19,9 +19,13 @@
 //! latency below the synchronous model at 8+ concurrent actives, or if
 //! the flight recorder stops being invisible (recorder-on must serve
 //! the byte-identical schedule of the recorder-off run, recorder-off
-//! must leave no recording) or the per-tenant attribution stops summing
-//! exactly to the global fetch/host-copy counters (the regressions CI
-//! gates on). Also writes the recorder-on run's event stream as
+//! must leave no recording), if the per-tenant attribution stops summing
+//! exactly to the global fetch/host-copy counters, or if
+//! content-addressed page sharing serves fewer sequences than
+//! sharing-off at equal budget on the shared-prefix mix, stops
+//! deduplicating bytes there, or stops being bit-identical to
+//! sharing-off on the prefix-free mix (the regressions CI gates on).
+//! Also writes the recorder-on run's event stream as
 //! `FLIGHT_serve.trace.json` (Perfetto) + `FLIGHT_serve.bin`
 //! (`CAMCEVT1`) for the CI flight-recorder artifact.
 
@@ -37,7 +41,7 @@ use camc::engine::LaneArray;
 use camc::memctrl::FaultPlan;
 use camc::obs::RecorderCfg;
 use camc::report::{BenchReport, Table};
-use camc::workload::{ArrivalProcess, SynthLm, Trace, WorkloadSpec};
+use camc::workload::{ArrivalProcess, LengthDist, PrefixFamily, SynthLm, Trace, WorkloadSpec};
 
 fn run_with<M: StepModel>(
     lm: &M,
@@ -217,6 +221,44 @@ fn main() {
         && frm.attributed.host_copy_bytes == frm.host_copy_bytes
         && tenant_sum == frm.attributed;
 
+    // content-addressed sharing row pair: the same chat+batch mix with
+    // the chat tenant reshaped prefix-heavy — prompts of 16..=32 tokens,
+    // 90% of them opening with one shared 32-token system-prompt family
+    // (>= one full KV page of identical content per member) — served
+    // sharing-on vs sharing-off at the SAME compressed budget and
+    // horizon. Sharing charges each sequence only its unique compressed
+    // bytes, so the shared prefix stops double-billing admission: the
+    // dedup'd capacity converts directly into served sequences. The
+    // prefix-free leg re-proves invisibility on the bench trace itself:
+    // sharing-on must stay byte-identical to `base_np` with zero dedup
+    // activity (tests/sharing_parity.rs pins the full matrix).
+    let mut shared_spec = spec.clone();
+    shared_spec.tenants[0].prompt = LengthDist::Uniform { lo: 16, hi: 32 };
+    shared_spec.shared_prefixes = vec![PrefixFamily {
+        tenant: 0,
+        tokens: 32,
+        prob: 900,
+        seed: 11,
+    }];
+    let shared_trace = Trace::generate(&shared_spec, 7);
+    let sharing_cfg = |sharing: bool| -> SchedConfig {
+        capped(SchedConfig {
+            sharing,
+            collect_digests: true,
+            ..SchedConfig::compressed(budget)
+        })
+    };
+    let (sh_off, _, _) = run_with(&lm, &shared_trace, &sharing_cfg(false));
+    let (sh_on, shm, _) = run_with(&lm, &shared_trace, &sharing_cfg(true));
+    let (sh_base, shbm, _) = run(&SchedConfig {
+        sharing: true,
+        ..digests(false, None)
+    });
+    let sharing_invisible = same_serve(&sh_base, &base_np)
+        && shbm.dedup_pages == 0
+        && shbm.dedup_bytes_saved == 0
+        && shbm.cow_copies == 0;
+
     let evicts = |o: &SchedOutcome| {
         o.events
             .iter()
@@ -304,6 +346,16 @@ fn main() {
         conserved,
         frm.tenant_usage.len(),
         frm.attributed.energy_pj(),
+    );
+    println!(
+        "prefix sharing: served {} vs {} without, {} pages dedup'd ({} B saved, {} B unique, {} CoW) — prefix-free bit-identical: {}",
+        sh_on.responses.len(),
+        sh_off.responses.len(),
+        shm.dedup_pages,
+        shm.dedup_bytes_saved,
+        shm.unique_bytes,
+        shm.cow_copies,
+        sharing_invisible,
     );
 
     report.insert(
@@ -397,6 +449,25 @@ fn main() {
     report.insert(
         "step fetch ns mean (overlapped)",
         prem.mean_overlapped_fetch_ns().round(),
+    );
+    report.insert(
+        "shared-prefix served (sharing)",
+        sh_on.responses.len() as f64,
+    );
+    report.insert(
+        "shared-prefix served (no sharing)",
+        sh_off.responses.len() as f64,
+    );
+    report.insert("shared-prefix dedup pages", shm.dedup_pages as f64);
+    report.insert(
+        "shared-prefix dedup_bytes_saved",
+        shm.dedup_bytes_saved as f64,
+    );
+    report.insert("shared-prefix unique_bytes", shm.unique_bytes as f64);
+    report.insert("shared-prefix cow copies", shm.cow_copies as f64);
+    report.insert(
+        "sharing invisible on prefix-free mix",
+        sharing_invisible as u64 as f64,
     );
     report.insert("flight recorder events", flight.events.len() as f64);
     report.insert(
@@ -567,6 +638,33 @@ fn main() {
             );
             ok = false;
         }
+        // sharing gates: on the prefix-heavy mix dedup must actually
+        // reclaim capacity and that capacity must convert into at least
+        // as many served sequences as sharing-off at the same budget; on
+        // the prefix-free mix sharing must be invisible (byte-identical
+        // serve, zero dedup activity)
+        if sh_on.responses.len() < sh_off.responses.len() {
+            eprintln!(
+                "CHECK FAILED: sharing served {} sequences, sharing-off served {} (equal budget, shared-prefix mix)",
+                sh_on.responses.len(),
+                sh_off.responses.len()
+            );
+            ok = false;
+        }
+        if shm.dedup_bytes_saved == 0 || shm.dedup_pages == 0 {
+            eprintln!(
+                "CHECK FAILED: shared-prefix mix deduplicated {} pages / {} bytes — content addressing never fired",
+                shm.dedup_pages, shm.dedup_bytes_saved
+            );
+            ok = false;
+        }
+        if !sharing_invisible {
+            eprintln!(
+                "CHECK FAILED: sharing-on diverged from sharing-off on the prefix-free mix ({} dedup pages, {} B saved, {} CoW)",
+                shbm.dedup_pages, shbm.dedup_bytes_saved, shbm.cow_copies
+            );
+            ok = false;
+        }
         if !ok {
             std::process::exit(1);
         }
@@ -600,6 +698,14 @@ fn main() {
             flight.events.len(),
             flight.digest(),
             frm.tenant_usage.len()
+        );
+        println!(
+            "check ✓ prefix sharing served {} >= {} at equal budget ({} pages / {} B dedup'd, {} B unique); invisible on prefix-free mix",
+            sh_on.responses.len(),
+            sh_off.responses.len(),
+            shm.dedup_pages,
+            shm.dedup_bytes_saved,
+            shm.unique_bytes
         );
         println!(
             "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}, batched fetch served {} >= per-seq {} in {} vs {} dispatches",

@@ -130,6 +130,21 @@ pub struct ServeMetrics {
     pub prefetch_hits: u64,
     pub prefetch_misses: u64,
     pub prefetch_wasted_bytes: u64,
+    /// Content-addressed sharing accounting (see `coordinator::sharing`;
+    /// folded from the serve-wide `PageIndex` at end of run, all zero
+    /// with `SchedConfig::sharing` off or on a prefix-free workload):
+    /// `dedup_pages` counts page commits served by an existing identical
+    /// frame set instead of a new allocation, `dedup_bytes_saved` their
+    /// compressed bytes (the capacity the dedup reclaimed), and
+    /// `cow_copies` shared pages that diverged and went private
+    /// (copy-on-write — an unrepaired salvage mutated stored bytes), and
+    /// `unique_bytes` the stored bytes of distinct page content (first
+    /// commits) — `unique_bytes + dedup_bytes_saved` is what the run
+    /// would have stored with sharing off.
+    pub dedup_pages: u64,
+    pub dedup_bytes_saved: u64,
+    pub cow_copies: u64,
+    pub unique_bytes: u64,
     /// Modeled fetch latency on the step critical path, summed over
     /// steps, ns (see `ReadStats::modeled_fetch_ns`): `sync_fetch_ns`
     /// charges every planned read as if fetched synchronously inside the

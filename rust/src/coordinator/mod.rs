@@ -9,6 +9,7 @@ pub mod metrics;
 pub mod pagestore;
 pub mod scheduler;
 pub mod server;
+pub mod sharing;
 
 pub use footprint::{footprint_curve, FootprintPoint};
 pub use kvmanager::{degrade_f32, KvViewPlan, PageView, PolicyEngine, PolicyPlan};
@@ -23,3 +24,4 @@ pub use scheduler::{
     StepOutput, TrafficResponse,
 };
 pub use server::{serve, spawn, Request, Response};
+pub use sharing::{PageIndex, PageKey, ShareEvent, ShareEventKind, SharedStats};

@@ -34,9 +34,51 @@
 //! very next swap's reset: nothing stale survives into a later step, and
 //! no span ever dangles (the mirror of the failed-read drain discipline
 //! on the DRAM side).
+//!
+//! ## The sharing / copy-on-write contract
+//!
+//! When a store is attached to a serve-wide [`PageIndex`] (see
+//! [`KvPageStore::attach_sharing`]), every page it commits is
+//! content-addressed: identical compressed bytes under an identical
+//! build spec (codec + layout + decorrelation + parity + geometry, the
+//! [`PageKey`] `meta`) resolve to ONE shared frame set, refcounted by
+//! the index. The rules, in the same spirit as the prefetch contract in
+//! `coordinator::scheduler`:
+//!
+//! - **Who may share.** Only *finalized* pages — frames produced by
+//!   [`KvPageStore::commit_page`] under the store's
+//!   [`KvPageStore::frame_spec`]. The raw on-chip tail is never shared
+//!   (it is per-sequence working state), and a digest hit whose bytes
+//!   differ (a true collision) stays private. Addresses are still
+//!   allocated per sequence, so sharing never changes any address,
+//!   read plan, decoded byte, or digest — it changes only which
+//!   allocation backs the bytes.
+//! - **When CoW triggers.** Any in-place mutation of stored bytes goes
+//!   through `Arc::make_mut` in the controller — fault injection,
+//!   parity heal, salvage — so the mutating sequence silently gets a
+//!   private copy and every other sharer keeps reading the shared
+//!   bytes. [`KvPageStore::reconcile_sharing`] then classifies the
+//!   detached copy: byte-identical to the shared frames (a parity heal
+//!   restored the original planes) re-shares in place — the frame is
+//!   healed ONCE for all sharers; diverged bytes (an unrepaired
+//!   salvage) release the key with a `Cow` event and the page stays
+//!   private for good. Divergence therefore copies exactly once.
+//! - **Who is charged.** Admission/pressure/eviction charge each
+//!   sequence its [`KvPageStore::charged_footprint_bytes`]: the lowest
+//!   live request id among a page's sharers (the index `owner`) pays
+//!   the full compressed bytes, every other sharer pays zero — so the
+//!   sum of charges across sequences equals the physical bytes stored,
+//!   and freeing is exact: the last dropper's release frees the entry.
+//! - **Who owns fault accounting.** Fault sites key on
+//!   `(step, owner request id, frame addr)` and land on the *reading*
+//!   sequence's private copy, so recovery counters, quarantines, and
+//!   degraded-keep clamps belong to the faulted sequence alone —
+//!   quarantine evicts only the faulted owner; other sharers never see
+//!   its corruption.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::coordinator::sharing::{PageIndex, PageKey};
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::fmt::Dtype;
@@ -132,6 +174,12 @@ pub struct KvPageStore {
     pub page_raw_bytes: usize,
     channels: usize,
     layers: usize,
+    /// Serve-wide content-address index + this sequence's request id,
+    /// when prefix sharing is on (see the module-level contract).
+    sharing: Option<(Arc<Mutex<PageIndex>>, u64)>,
+    /// Per page: the index key while the page is shared (`None` =
+    /// private — sharing off, collision, or CoW-diverged).
+    page_keys: Vec<Option<PageKey>>,
 }
 
 /// Raw bytes of one full KV page (K+V, bf16, all layers) for a model —
@@ -197,7 +245,35 @@ impl KvPageStore {
             page_raw_bytes: page_raw_bytes(meta),
             channels: meta.n_kv_heads * meta.d_head,
             layers: meta.layers,
+            sharing: None,
+            page_keys: Vec::new(),
         }
+    }
+
+    /// Opt this sequence into content-addressed page sharing: every page
+    /// committed from here on is interned in `index` under `seq` (the
+    /// request id, which doubles as the charging tiebreaker — see the
+    /// module-level contract). Attach before any page commits.
+    pub fn attach_sharing(&mut self, index: Arc<Mutex<PageIndex>>, seq: u64) {
+        debug_assert!(self.pages.is_empty(), "attach sharing before any page commits");
+        self.sharing = Some((index, seq));
+    }
+
+    /// The index key of stored page `p` while it is shared (`None` =
+    /// private page or sharing off).
+    pub fn page_key(&self, p: usize) -> Option<PageKey> {
+        self.page_keys.get(p).copied().flatten()
+    }
+
+    /// Build-spec digest folded into every [`PageKey`]: two pages share
+    /// only under identical codec/layout/decorrelation/parity config AND
+    /// identical geometry (rows × channels, group-token chunking).
+    fn share_meta(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.write(format!("{:?}", self.frame_spec()).as_bytes());
+        h.write(&(self.page_rows() as u64).to_le_bytes());
+        h.write(&(self.mc.kv_group_tokens as u64).to_le_bytes());
+        h.finish()
     }
 
     /// Number of stored (completed) pages.
@@ -236,14 +312,32 @@ impl KvPageStore {
     }
 
     /// Register page `p` from frames pre-built under
-    /// [`KvPageStore::frame_spec`]. Pages must commit in order.
+    /// [`KvPageStore::frame_spec`]. Pages must commit in order. With
+    /// sharing attached the frames are interned first: a content hit
+    /// registers the index's shared `Arc`s instead of this build (the
+    /// dedup — both allocations held the same bytes, so nothing
+    /// observable changes), a miss publishes this build for later
+    /// sequences.
     pub fn commit_page(&mut self, p: usize, built: Vec<Vec<u8>>) {
         assert_eq!(p, self.pages.len(), "pages commit in order");
         let rows = self.page_rows();
-        let id =
-            self.mc
-                .register_kv_region(&format!("page{p}"), Dtype::Bf16, rows, self.channels, built);
+        let built: Vec<Arc<Vec<u8>>> = built.into_iter().map(Arc::new).collect();
+        let (built, key) = match &self.sharing {
+            Some((index, seq)) => {
+                let key = PageKey::new(&built, self.share_meta());
+                index.lock().unwrap().intern(*seq, key, built)
+            }
+            None => (built, None),
+        };
+        let id = self.mc.register_kv_region_arcs(
+            &format!("page{p}"),
+            Dtype::Bf16,
+            rows,
+            self.channels,
+            built,
+        );
         self.pages.push(id);
+        self.page_keys.push(key);
     }
 
     /// BF16 codes of page `p` (the canonical [`span_codes`] order).
@@ -280,6 +374,53 @@ impl KvPageStore {
         let tail_tokens = kv.pos.saturating_sub(self.len() * PAGE_TOKENS);
         let tail_raw = tail_tokens * self.channels * 2 * 2 * self.layers; // K+V bf16
         self.stored_bytes() + tail_raw as u64
+    }
+
+    /// Whether this store pays for stored page `p`: private pages always
+    /// charge their owner; a shared page charges only the index-elected
+    /// owner (lowest live request id among sharers), so charges sum to
+    /// the physical bytes across the serve (see the module contract).
+    fn pays_for(&self, p: usize) -> bool {
+        let (Some((index, seq)), Some(key)) = (&self.sharing, self.page_key(p)) else {
+            return true;
+        };
+        index.lock().unwrap().owner(&key) == Some(*seq)
+    }
+
+    /// Stored bytes this sequence is *charged* for under sharing —
+    /// [`KvPageStore::stored_bytes`] minus shared pages another sharer
+    /// pays for. Identical to the physical figure when sharing is off
+    /// (the single code path the scheduler's admission/pressure math
+    /// uses in both modes).
+    pub fn charged_stored_bytes(&self) -> u64 {
+        if self.sharing.is_none() {
+            return self.stored_bytes();
+        }
+        self.pages
+            .iter()
+            .enumerate()
+            .filter(|&(p, _)| self.pays_for(p))
+            .map(|(_, &id)| self.mc.region(id).stored_bytes())
+            .sum()
+    }
+
+    /// [`KvPageStore::footprint_bytes`] with shared pages charged to
+    /// their index owner only — what admission, pressure, and eviction
+    /// key on when sharing is enabled. The raw on-chip tail is always
+    /// private and always charged.
+    pub fn charged_footprint_bytes(&self, kv: &KvState) -> u64 {
+        self.charged_footprint_split(kv).0
+    }
+
+    /// The charged/deferred split of this sequence's physical footprint:
+    /// `(unique_bytes, shared_bytes)` where `unique_bytes` is what this
+    /// sequence is charged (private pages + owned shared pages + raw
+    /// tail) and `shared_bytes` is what other sharers pay for. The pair
+    /// always sums to [`KvPageStore::footprint_bytes`].
+    pub fn charged_footprint_split(&self, kv: &KvState) -> (u64, u64) {
+        let physical = self.footprint_bytes(kv);
+        let charged = physical - self.stored_bytes() + self.charged_stored_bytes();
+        (charged, physical - charged)
     }
 
     /// Decode stored page `p` back to its BF16 codes through the
@@ -392,6 +533,74 @@ impl KvPageStore {
             }
         }
         total
+    }
+
+    /// Classify every copy-on-write detachment the recovery ladder made
+    /// since the last call (see the module contract): a detached frame
+    /// set whose bytes still equal the shared ones (a parity heal
+    /// restored the original planes) is re-pointed at the shared `Arc`s
+    /// — healed once for all sharers, no event; diverged bytes (an
+    /// unrepaired salvage) release the key with a `Cow` event and the
+    /// page stays private. The scheduler runs this once per step for
+    /// every live sequence when sharing is on.
+    pub fn reconcile_sharing(&mut self) {
+        let Some((index, seq)) = self.sharing.clone() else {
+            return;
+        };
+        for p in 0..self.pages.len() {
+            let Some(key) = self.page_keys[p] else {
+                continue;
+            };
+            let id = self.pages[p];
+            let mut idx = index.lock().unwrap();
+            let (detached, diverged, shared_arcs) = {
+                let Some(shared) = idx.frames(&key) else {
+                    continue;
+                };
+                let mut detached = false;
+                let mut diverged = false;
+                for ((_, mine), theirs) in self.mc.region(id).frame_arcs().iter().zip(shared) {
+                    if !Arc::ptr_eq(mine, theirs) {
+                        detached = true;
+                        if **mine != **theirs {
+                            diverged = true;
+                        }
+                    }
+                }
+                let arcs = if detached && !diverged { shared.to_vec() } else { Vec::new() };
+                (detached, diverged, arcs)
+            };
+            if !detached {
+                continue;
+            }
+            if diverged {
+                idx.detach(seq, &key);
+                self.page_keys[p] = None;
+            } else {
+                drop(idx);
+                let region = self.mc.region_mut(id);
+                for (fi, arc) in shared_arcs.into_iter().enumerate() {
+                    region.reshare_frame(fi, arc);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for KvPageStore {
+    /// Release every shared page on the way out — finish, quarantine,
+    /// and drop-after-resume all end here, so refcounts conserve and the
+    /// last dropper frees the index entry. An evicted sequence keeps its
+    /// store alive inside the scheduler's swap state, so refcounts
+    /// round-trip evict/resume untouched.
+    fn drop(&mut self) {
+        let Some((index, seq)) = self.sharing.take() else {
+            return;
+        };
+        let mut idx = index.lock().unwrap();
+        for key in self.page_keys.iter().flatten() {
+            idx.release(seq, key, false);
+        }
     }
 }
 

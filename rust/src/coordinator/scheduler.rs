@@ -81,7 +81,7 @@
 //! (`tests/prefetch_parity.rs` pins all of this).
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::kvmanager::{degrade_f32, KvViewPlan, PolicyEngine};
@@ -90,6 +90,7 @@ use super::pagestore::{
     fetch_sequences, page_raw_bytes, prefetch_sequences, span_codes, span_k_base, span_v_base,
     sync_sequences, DecodeArena, FetchOutcome, KvPageStore, SeqPrefetch,
 };
+use super::sharing::{PageIndex, ShareEventKind};
 use crate::compress::Codec;
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
@@ -411,6 +412,17 @@ pub struct SchedConfig {
     /// bit-identical to recorder-off; `None` records nothing and costs
     /// nothing.
     pub record: Option<RecorderCfg>,
+    /// Content-addressed page sharing (see `pagestore`'s sharing/CoW
+    /// contract): every sequence's finalized compressed pages intern in
+    /// one serve-wide [`PageIndex`], identical pages are stored once and
+    /// refcounted, and admission/pressure/eviction charge each sequence
+    /// only its *unique* bytes
+    /// ([`KvPageStore::charged_footprint_bytes`]). On a workload with no
+    /// shared prefixes this is bit-identical to sharing off (addresses,
+    /// reads, digests, schedule — `tests/sharing_parity.rs` pins it);
+    /// on prefix-heavy mixes it admits strictly more concurrency from
+    /// the same budget.
+    pub sharing: bool,
 }
 
 impl SchedConfig {
@@ -431,6 +443,7 @@ impl SchedConfig {
             prefetch: false,
             prefetch_chaos: 0,
             record: None,
+            sharing: false,
         }
     }
 
@@ -624,6 +637,10 @@ pub fn serve_trace<M: StepModel>(
     // flight recorder (see `obs`): written to, never read — every record
     // site below is a skipped `if let` when cfg.record is None
     let mut rec: Option<Recorder> = cfg.record.as_ref().map(|rc| Recorder::new(rc.capacity));
+    // serve-wide content-address index (see `pagestore`'s sharing/CoW
+    // contract); every admitted sequence's store attaches to it
+    let share_index: Option<Arc<Mutex<PageIndex>>> =
+        cfg.sharing.then(|| Arc::new(Mutex::new(PageIndex::default())));
     let mut step: u64 = 0;
     let mut admit_counter: u64 = 0;
     // pressure clamp applied to this step's reads (set by last step's
@@ -761,7 +778,15 @@ pub fn serve_trace<M: StepModel>(
                             r.push(req.id, ObsKind::Admit);
                         }
                         committed += need;
-                        active.push(admit(req, meta, cfg, &lanes, admit_counter, step));
+                        active.push(admit(
+                            req,
+                            meta,
+                            cfg,
+                            &lanes,
+                            share_index.as_ref(),
+                            admit_counter,
+                            step,
+                        ));
                         admit_counter += 1;
                         continue;
                     }
@@ -1055,6 +1080,18 @@ pub fn serve_trace<M: StepModel>(
                 r.push(s.req.id, ObsKind::Quarantine);
             }
         }
+        // sharing reconcile (see `pagestore`'s contract): classify every
+        // copy-on-write detachment this step's reads made — a parity
+        // heal re-shares (healed once for all sharers), true divergence
+        // releases the key with a `Cow` event. Runs AFTER quarantine
+        // removal so a quarantined sequence's corrupted private copy is
+        // released by its drop, never misclassified as CoW, and BEFORE
+        // retirement/pressure so the charged footprints below are exact.
+        if share_index.is_some() {
+            for s in active.iter_mut() {
+                s.store.reconcile_sharing();
+            }
+        }
         step_fetched.clear();
         step_fetched.extend(outs.iter().map(|o| o.dram_bytes_total()));
         // the decoded page codes are this step's host-side read volume —
@@ -1196,12 +1233,15 @@ pub fn serve_trace<M: StepModel>(
         }
 
         // 8. pressure ladder for the *next* step: degrade first, then
-        // evict youngest-admitted until the measured footprint fits
+        // evict youngest-admitted until the measured footprint fits.
+        // Footprints are *charged* bytes: identical to the physical
+        // figure with sharing off, and each shared page billed to one
+        // owner with sharing on — the dedup capacity win.
         if let Admission::CompressedBudget { bytes: budget } = cfg.admission {
             let budget = budget.max(1);
             let mut usage: u64 = active
                 .iter()
-                .map(|s| s.store.footprint_bytes(&s.kv))
+                .map(|s| s.store.charged_footprint_bytes(&s.kv))
                 .sum();
             while usage > budget && active.len() > 1 {
                 let vi = active
@@ -1211,7 +1251,7 @@ pub fn serve_trace<M: StepModel>(
                     .expect("non-empty")
                     .0;
                 let victim = active.swap_remove(vi);
-                usage -= victim.store.footprint_bytes(&victim.kv);
+                usage -= victim.store.charged_footprint_bytes(&victim.kv);
                 out.events.push(SchedEvent {
                     step,
                     id: victim.req.id,
@@ -1296,6 +1336,23 @@ pub fn serve_trace<M: StepModel>(
             prefetch_step = next_step;
         }
 
+        // drain the step's share/unshare/CoW events (intern at page
+        // sync, release at retirement, CoW at reconcile — all on this
+        // thread, so the order is deterministic) into the flight
+        // recorder, stamped at this step's virtual time
+        if let Some(ix) = &share_index {
+            let evs = ix.lock().unwrap().drain_events();
+            if let Some(r) = rec.as_mut() {
+                for ev in &evs {
+                    let kind = match ev.kind {
+                        ShareEventKind::Share => ObsKind::Share { bytes: ev.bytes },
+                        ShareEventKind::Unshare => ObsKind::Unshare { bytes: ev.bytes },
+                        ShareEventKind::Cow => ObsKind::Cow { bytes: ev.bytes },
+                    };
+                    r.push(ev.seq, kind);
+                }
+            }
+        }
         // one nominal decode tick keeps the modeled clock monotone even
         // on fetch-free steps
         if let Some(r) = rec.as_mut() {
@@ -1313,6 +1370,15 @@ pub fn serve_trace<M: StepModel>(
                 r.push(id, ObsKind::PrefetchDiscard { bytes: wasted });
             }
         }
+    }
+    // fold the run's dedup accounting into the metrics (cumulative over
+    // the whole serve; zero with sharing off)
+    if let Some(ix) = &share_index {
+        let st = ix.lock().unwrap().stats();
+        metrics.dedup_pages = st.dedup_pages;
+        metrics.dedup_bytes_saved = st.dedup_bytes_saved;
+        metrics.cow_copies = st.cow_copies;
+        metrics.unique_bytes = st.unique_bytes;
     }
     out.flight = rec.map(Recorder::into_recording);
     out.steps = step;
@@ -1360,21 +1426,25 @@ fn reserve_bytes(req: &TrafficRequest, meta: &ModelMeta, ratio: f64) -> u64 {
     )
 }
 
-/// What a live sequence holds against the budget: its measured footprint,
-/// floored by its reservation (so a young sequence cannot be double-
-/// admitted against before it grows).
+/// What a live sequence holds against the budget: its measured *charged*
+/// footprint (shared pages billed to their index owner only — identical
+/// to the physical footprint with sharing off), floored by its
+/// reservation (so a young sequence cannot be double-admitted against
+/// before it grows).
 fn committed_bytes(s: &Seq, meta: &ModelMeta, ratio: f64) -> u64 {
     s.store
-        .footprint_bytes(&s.kv)
+        .charged_footprint_bytes(&s.kv)
         .max(reserve_bytes(&s.req, meta, ratio))
 }
 
 /// The bytes a swapped-out sequence will occupy the moment it resumes:
-/// its compressed stored pages plus the raw sub-page tail (both known
-/// exactly — no projection involved).
+/// its charged stored pages plus the raw sub-page tail (both known
+/// exactly — no projection involved). Refcounts survive the swap tier
+/// untouched, so pages another resident sharer pays for stay free to
+/// resume.
 fn swapped_footprint(sw: &Swapped, meta: &ModelMeta) -> u64 {
     let token_raw = page_raw_bytes(meta) / PAGE_TOKENS;
-    sw.seq.store.stored_bytes() + (sw.image.tail_tokens * token_raw) as u64
+    sw.seq.store.charged_stored_bytes() + (sw.image.tail_tokens * token_raw) as u64
 }
 
 fn admit(
@@ -1382,11 +1452,17 @@ fn admit(
     meta: &ModelMeta,
     cfg: &SchedConfig,
     lanes: &Arc<LaneArray>,
+    share_index: Option<&Arc<Mutex<PageIndex>>>,
     admitted_order: u64,
     step: u64,
 ) -> Seq {
     let mut store = KvPageStore::with_shared(meta, cfg.layout, cfg.codec, Arc::clone(lanes));
     store.mc.parity = cfg.parity;
+    if let Some(ix) = share_index {
+        // the request id doubles as the charging tiebreaker (lowest live
+        // sharer pays) — see `pagestore`'s sharing contract
+        store.attach_sharing(Arc::clone(ix), req.id);
+    }
     if let Some(plan) = &cfg.faults {
         // the request id keys the fault schedule: replayable, and never
         // shared between sequences
@@ -1613,6 +1689,7 @@ mod tests {
             n_requests: n,
             vocab: 256,
             max_seq: 128,
+            shared_prefixes: vec![],
         }
     }
 
@@ -1887,13 +1964,14 @@ mod tests {
         let req = TrafficRequest {
             id: 0,
             tenant: 0,
+            family: u32::MAX,
             arrival_step: 0,
             prompt: (0..8u16).collect(),
             max_new_tokens: 64,
             policy: KvPolicy::Full,
         };
         let cfg = SchedConfig::compressed(1 << 30);
-        let mut seq = admit(req, &meta, &cfg, &lanes, 0, 0);
+        let mut seq = admit(req, &meta, &cfg, &lanes, None, 0, 0);
         // run 41 steps: 2 complete pages + 9-token tail
         for i in 0..41 {
             let tok = if i < 8 { i as u16 } else { 7 };

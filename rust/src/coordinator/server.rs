@@ -70,6 +70,7 @@ pub fn serve<M: StepModel>(
                 TrafficRequest {
                     id: r.id,
                     tenant: 0,
+                    family: u32::MAX,
                     arrival_step: 0,
                     prompt: r.prompt,
                     max_new_tokens: r.max_new_tokens,

@@ -1,0 +1,344 @@
+//! # Content-addressed page sharing ([`PageIndex`])
+//!
+//! The cross-request concurrency multiplier: real chat traffic is
+//! dominated by shared system prompts and few-shot prefixes, so two
+//! sequences whose prompts open identically produce byte-identical
+//! finalized compressed KV pages — and those pages should be *stored
+//! once*. This module is the cross-sequence index that makes that true:
+//! a map from page content (FNV-1a digest over the page's frame bytes +
+//! the geometry/codec/parity spec that built them) to the one shared set
+//! of frame `Arc`s, refcounted by sharer.
+//!
+//! The index is deliberately dumb and deterministic:
+//!
+//! - **Interning** ([`PageIndex::intern`]): a store committing a
+//!   finalized page offers its freshly built frames under a
+//!   [`PageKey`]. On a hit the full bytes are compared (a digest
+//!   collision must never alias two different pages — on mismatch the
+//!   page simply stays private), the committer joins the sharer set, and
+//!   it gets back the *existing* `Arc`s — the new frames are dropped and
+//!   `dedup_bytes_saved` grows by their stored size. On a miss the
+//!   offered frames become the shared entry with the committer as sole
+//!   sharer.
+//! - **Copy-on-write** happens *outside* the index, at the one seam that
+//!   ever mutates stored bytes: `MemController::prepare_read` goes
+//!   through `Arc::make_mut`, so a sharer whose frame is mutated
+//!   (fault injection, parity heal) silently detaches onto a private
+//!   copy. The store's reconcile pass detects the detached `Arc` by
+//!   pointer comparison and either re-shares it (bytes still identical —
+//!   a parity heal restores the exact original plane) or releases it
+//!   here as a CoW divergence ([`PageIndex::detach`], counted in
+//!   `cow_copies`, copied exactly once per divergence).
+//! - **Release** ([`PageIndex::release`]): a sharer dropping a page
+//!   (sequence finished, quarantined, or its store dropped) leaves the
+//!   sharer set; the *last* dropper removes the entry and the shared
+//!   frames die with their final `Arc` (`freed_frames` — freed exactly
+//!   once, never while referenced).
+//!
+//! Ordering is deterministic everywhere: `BTreeMap`/`BTreeSet` keyed by
+//! content and request id, and the scheduler drives every index
+//! operation from its own single-threaded loop (the `Mutex` only guards
+//! the handle shared across per-sequence stores, it is never contended
+//! across steps). The charged-bytes rule the scheduler uses for
+//! admission/pressure lives with the sharers: the *minimum request id*
+//! in a sharer set owns (pays for) the page; everyone else rides free
+//! ([`PageIndex::owner`]). Ownership re-resolves deterministically when
+//! the owner releases.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use crate::util::hash::Fnv1a;
+
+/// Content address of one finalized compressed KV page: a digest over
+/// the frame bytes plus everything that determined them (total stored
+/// length, frame count, and a digest of the geometry/codec/parity spec),
+/// so pages built under different configs can never alias even on a
+/// digest collision — and a genuine collision is caught by the full
+/// byte comparison at intern time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PageKey {
+    /// FNV-1a over the concatenated frame bytes.
+    pub digest: u64,
+    /// Total stored bytes across the page's frames.
+    pub len: u64,
+    /// Number of frames in the page.
+    pub frames: u32,
+    /// Digest of the building spec (layout/codec/mode/dtype/channels/
+    /// parity + token count) — see [`PageKey::new`].
+    pub meta: u64,
+}
+
+impl PageKey {
+    /// Key a finalized page by its frame bytes + build spec digest.
+    pub fn new(built: &[Arc<Vec<u8>>], meta: u64) -> PageKey {
+        let mut h = Fnv1a::new();
+        let mut len = 0u64;
+        for f in built {
+            h.write(f);
+            len += f.len() as u64;
+        }
+        PageKey {
+            digest: h.finish(),
+            len,
+            frames: built.len() as u32,
+            meta,
+        }
+    }
+}
+
+/// What happened to a sharer at the index, drained per virtual step by
+/// the scheduler and stamped into the flight recorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShareEventKind {
+    /// A committed page matched an existing entry: stored once, new
+    /// sharer joined (`bytes` = stored bytes NOT duplicated).
+    Share,
+    /// A sharer left an entry it actually shared (finish/quarantine/
+    /// drop); `bytes` is the entry's stored size. Sole-sharer releases
+    /// are silent — only genuine sharing transitions are observable.
+    Unshare,
+    /// A sharer's frames diverged from the shared entry (mutation under
+    /// `Arc::make_mut`) and it now holds a private copy (`bytes`
+    /// copied, exactly once per divergence).
+    Cow,
+}
+
+/// One sharing-lifecycle event (see [`ShareEventKind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShareEvent {
+    /// Request id of the sharer the event happened to.
+    pub seq: u64,
+    pub kind: ShareEventKind,
+    pub bytes: u64,
+}
+
+/// Dedup accounting, folded into `ServeMetrics` at end of serve.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SharedStats {
+    /// Page commits that matched an existing entry (stored once).
+    pub dedup_pages: u64,
+    /// Stored bytes those commits did NOT duplicate.
+    pub dedup_bytes_saved: u64,
+    /// Divergences: sharers that went private on a mutated copy.
+    pub cow_copies: u64,
+    /// Entries whose last sharer released (frames freed exactly once).
+    pub freed_entries: u64,
+    /// Stored bytes of first commits — distinct page content admitted to
+    /// the index. Commits conserve: every tracked commit lands in
+    /// exactly one of `unique_bytes` (new content) or
+    /// `dedup_bytes_saved` (existing content), so the pair splits the
+    /// run's committed bytes into unique vs shared.
+    pub unique_bytes: u64,
+}
+
+struct PageEntry {
+    frames: Vec<Arc<Vec<u8>>>,
+    /// Request ids currently sharing this page. The minimum id is the
+    /// page's charged owner.
+    sharers: BTreeSet<u64>,
+}
+
+/// The cross-sequence content-addressed page index (see module docs).
+#[derive(Default)]
+pub struct PageIndex {
+    entries: BTreeMap<PageKey, PageEntry>,
+    stats: SharedStats,
+    events: Vec<ShareEvent>,
+}
+
+impl PageIndex {
+    /// Offer a freshly built page for sharing. Returns the frames the
+    /// committer must register (the existing shared `Arc`s on a dedup
+    /// hit, the offered ones otherwise) and the key to release later —
+    /// `None` when the page cannot be tracked (digest collision with
+    /// different bytes: the page stays private, correctness first).
+    pub fn intern(
+        &mut self,
+        seq: u64,
+        key: PageKey,
+        built: Vec<Arc<Vec<u8>>>,
+    ) -> (Vec<Arc<Vec<u8>>>, Option<PageKey>) {
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                // guard the digest: a hit only counts when the bytes
+                // agree exactly
+                let same = e.frames.len() == built.len()
+                    && e.frames.iter().zip(&built).all(|(a, b)| a == b);
+                if !same {
+                    return (built, None);
+                }
+                e.sharers.insert(seq);
+                self.stats.dedup_pages += 1;
+                self.stats.dedup_bytes_saved += key.len;
+                self.events.push(ShareEvent {
+                    seq,
+                    kind: ShareEventKind::Share,
+                    bytes: key.len,
+                });
+                (e.frames.clone(), Some(key))
+            }
+            None => {
+                self.stats.unique_bytes += key.len;
+                let mut sharers = BTreeSet::new();
+                sharers.insert(seq);
+                self.entries.insert(
+                    key,
+                    PageEntry {
+                        frames: built.clone(),
+                        sharers,
+                    },
+                );
+                (built, Some(key))
+            }
+        }
+    }
+
+    /// The request id charged for this page: the minimum sharer.
+    pub fn owner(&self, key: &PageKey) -> Option<u64> {
+        self.entries
+            .get(key)
+            .and_then(|e| e.sharers.first().copied())
+    }
+
+    /// The shared frame `Arc`s of an entry (for the reconcile pass's
+    /// pointer comparison / re-share).
+    pub fn frames(&self, key: &PageKey) -> Option<&[Arc<Vec<u8>>]> {
+        self.entries.get(key).map(|e| e.frames.as_slice())
+    }
+
+    /// Drop `seq` from an entry's sharer set; the last sharer out
+    /// removes the entry (the shared frames die with their final
+    /// `Arc`). `cow` marks the release as a copy-on-write divergence
+    /// (the sharer keeps serving from its private copy).
+    pub fn release(&mut self, seq: u64, key: &PageKey, cow: bool) {
+        let Some(e) = self.entries.get_mut(key) else {
+            return;
+        };
+        let was_shared = e.sharers.len() >= 2;
+        if !e.sharers.remove(&seq) {
+            return;
+        }
+        // Lifecycle events — and the CoW copy count — exist only for
+        // pages that were actually shared at the transition. A sole
+        // sharer releasing (or diverging from) its own entry duplicated
+        // nothing and is invisible, which is what keeps a sharing-on
+        // serve of a prefix-free workload bit-identical to sharing-off:
+        // no dedup hit, no event, ever.
+        if was_shared {
+            self.events.push(ShareEvent {
+                seq,
+                kind: if cow {
+                    ShareEventKind::Cow
+                } else {
+                    ShareEventKind::Unshare
+                },
+                bytes: key.len,
+            });
+            if cow {
+                self.stats.cow_copies += 1;
+            }
+        }
+        if e.sharers.is_empty() {
+            self.entries.remove(key);
+            self.stats.freed_entries += 1;
+        }
+    }
+
+    /// [`PageIndex::release`] flagged as a divergence.
+    pub fn detach(&mut self, seq: u64, key: &PageKey) {
+        self.release(seq, key, true);
+    }
+
+    /// Cumulative dedup accounting.
+    pub fn stats(&self) -> SharedStats {
+        self.stats
+    }
+
+    /// Drain the pending lifecycle events (scheduler: once per step).
+    pub fn drain_events(&mut self) -> Vec<ShareEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Live shared entries.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total sharer references across all live entries — the invariant
+    /// tests pin this against the sum of per-store shared pages.
+    pub fn total_sharers(&self) -> u64 {
+        self.entries.values().map(|e| e.sharers.len() as u64).sum()
+    }
+
+    /// Sharer count of one entry (0 when absent).
+    pub fn refcount(&self, key: &PageKey) -> u64 {
+        self.entries.get(key).map_or(0, |e| e.sharers.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames(bytes: &[u8]) -> Vec<Arc<Vec<u8>>> {
+        vec![Arc::new(bytes.to_vec())]
+    }
+
+    #[test]
+    fn intern_dedups_and_last_release_frees() {
+        let mut ix = PageIndex::default();
+        let a = frames(&[1, 2, 3, 4]);
+        let key = PageKey::new(&a, 7);
+        let (fa, ka) = ix.intern(10, key, a);
+        assert_eq!(ka, Some(key));
+        assert_eq!(ix.stats().dedup_pages, 0, "first commit is not a dedup");
+        assert_eq!(ix.stats().unique_bytes, 4, "first commit is unique bytes");
+        let (fb, kb) = ix.intern(11, key, frames(&[1, 2, 3, 4]));
+        assert_eq!(kb, Some(key));
+        assert!(Arc::ptr_eq(&fa[0], &fb[0]), "hit must return the shared Arc");
+        assert_eq!(ix.stats().dedup_pages, 1);
+        assert_eq!(ix.stats().dedup_bytes_saved, 4);
+        assert_eq!(ix.stats().unique_bytes, 4, "a hit adds no unique bytes");
+        assert_eq!(ix.refcount(&key), 2);
+        assert_eq!(ix.owner(&key), Some(10), "minimum sharer id owns");
+        ix.release(10, &key, false);
+        assert_eq!(ix.refcount(&key), 1);
+        assert_eq!(ix.owner(&key), Some(11), "ownership transfers to new min");
+        assert_eq!(ix.stats().freed_entries, 0, "entry still referenced");
+        ix.release(11, &key, false);
+        assert_eq!(ix.entries(), 0);
+        assert_eq!(ix.stats().freed_entries, 1, "last drop frees exactly once");
+        ix.release(11, &key, false); // double release is a no-op
+        assert_eq!(ix.stats().freed_entries, 1);
+    }
+
+    #[test]
+    fn digest_collision_with_different_bytes_stays_private() {
+        let mut ix = PageIndex::default();
+        let a = frames(&[9, 9]);
+        let key = PageKey::new(&a, 1);
+        ix.intern(1, key, a);
+        // same key offered with different bytes (simulated collision)
+        let (f, k) = ix.intern(2, key, frames(&[8, 8]));
+        assert!(k.is_none(), "collision must not share");
+        assert_eq!(*f[0], vec![8, 8], "committer keeps its own bytes");
+        assert_eq!(ix.refcount(&key), 1);
+    }
+
+    #[test]
+    fn detach_counts_cow_once_and_keeps_entry_for_others() {
+        let mut ix = PageIndex::default();
+        let key = PageKey::new(&frames(&[5; 8]), 0);
+        ix.intern(1, key, frames(&[5; 8]));
+        ix.intern(2, key, frames(&[5; 8]));
+        ix.detach(2, &key);
+        assert_eq!(ix.stats().cow_copies, 1);
+        assert_eq!(ix.refcount(&key), 1, "other sharer keeps the entry");
+        ix.detach(2, &key); // already detached: no-op
+        assert_eq!(ix.stats().cow_copies, 1, "divergence copies exactly once");
+        let evs = ix.drain_events();
+        assert_eq!(evs.len(), 2, "one share + one cow");
+        assert!(ix.drain_events().is_empty());
+    }
+}

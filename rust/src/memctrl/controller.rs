@@ -197,8 +197,13 @@ pub struct Region {
     pub channels: usize,
     pub mode: DecorrelateMode,
     /// Frame byte offsets (within the controller's address space) and the
-    /// serialized frames.
-    frames: Vec<(u64, Vec<u8>)>,
+    /// serialized frames. Frames are behind `Arc` so finalized pages with
+    /// identical content can be stored once across sequences (see
+    /// `coordinator::sharing`); any in-place mutation of stored bytes —
+    /// fault injection, parity heal — goes through [`Arc::make_mut`], so
+    /// a sharer that diverges gets a private copy (copy-on-write) while
+    /// everyone else keeps reading the shared bytes.
+    frames: Vec<(u64, Arc<Vec<u8>>)>,
     /// Codes per frame.
     pub frame_codes: usize,
     /// Plane-prefix ceiling after a salvage: reads clamp to this many
@@ -217,6 +222,23 @@ impl Region {
     /// of the lane-parallel write path against the serial one.
     pub fn frames(&self) -> impl Iterator<Item = (u64, &[u8])> + '_ {
         self.frames.iter().map(|(a, f)| (*a, f.as_slice()))
+    }
+
+    /// The stored frames with their `Arc` handles — the sharing layer
+    /// (`coordinator::sharing`) compares these by pointer to detect a
+    /// copy-on-write divergence and to re-share a healed frame.
+    pub fn frame_arcs(&self) -> &[(u64, Arc<Vec<u8>>)] {
+        &self.frames
+    }
+
+    /// Point frame `fi` back at a shared handle (same address, and the
+    /// caller must have verified the bytes are identical) — the
+    /// re-share half of the sharing layer's reconcile pass: a parity
+    /// heal restores the exact original plane bytes, so the healed
+    /// private copy can be dropped in favor of the shared frame.
+    pub fn reshare_frame(&mut self, fi: usize, frame: Arc<Vec<u8>>) {
+        debug_assert_eq!(*self.frames[fi].1, *frame, "reshare requires identical bytes");
+        self.frames[fi].1 = frame;
     }
 
     /// Logical bytes at full precision.
@@ -333,6 +355,12 @@ impl MemController {
         &self.regions[id.0]
     }
 
+    /// Mutable region access for the sharing layer's reconcile pass
+    /// (re-pointing a healed frame back at its shared `Arc`).
+    pub fn region_mut(&mut self, id: RegionId) -> &mut Region {
+        &mut self.regions[id.0]
+    }
+
     /// Resolve a read's effective plane prefix through the self-healing
     /// ladder, BEFORE any DRAM command is planned — every read path
     /// (`load`, `load_into`, `fetch_group`, and the pagestore fetches)
@@ -391,8 +419,11 @@ impl MemController {
                 FaultClass::HeaderFlip => {
                     // flip a stored header byte; parity cannot cover the
                     // header and a retry never clears stored corruption,
-                    // so the ladder lands on its last rung
-                    let frame = &mut region.frames[fi].1;
+                    // so the ladder lands on its last rung. make_mut:
+                    // corruption lands on THIS owner's private copy — a
+                    // frame shared across sequences stays intact for the
+                    // other sharers (quarantine evicts only the owner)
+                    let frame = Arc::make_mut(&mut region.frames[fi].1);
                     let off = ctx.plan.draw(step, owner, addr, 0x4EAD, 12.min(frame.len() as u64))
                         as usize;
                     let mask = 1u8 << ctx.plan.draw(step, owner, addr, 0xB177, 8);
@@ -406,7 +437,12 @@ impl MemController {
                 }
                 FaultClass::PlaneFlip => {
                     let (h, _) = decode_header(&region.frames[fi].1)?;
-                    let frame = &mut region.frames[fi].1;
+                    // CoW: the flip (and any in-place parity heal below)
+                    // mutates a private copy when the frame is shared —
+                    // a successful heal restores the exact original
+                    // bytes, so the sharing layer's reconcile pass can
+                    // re-attach the healed copy to the shared frame
+                    let frame = Arc::make_mut(&mut region.frames[fi].1);
                     let nplanes = h.plane_len.len();
                     let targets = nplanes + usize::from(h.parity);
                     let stored_len = |t: usize| -> usize {
@@ -512,7 +548,7 @@ impl MemController {
         let mut frames = Vec::with_capacity(built.len());
         for frame in built {
             let addr = self.alloc(frame.len());
-            frames.push((addr, frame));
+            frames.push((addr, Arc::new(frame)));
         }
         self.regions.push(Region {
             name: name.to_string(),
@@ -583,6 +619,30 @@ impl MemController {
         tokens: usize,
         channels: usize,
         built: Vec<Vec<u8>>,
+    ) -> RegionId {
+        self.register_kv_region_arcs(
+            name,
+            dtype,
+            tokens,
+            channels,
+            built.into_iter().map(Arc::new).collect(),
+        )
+    }
+
+    /// [`MemController::register_kv_region`] taking already-shared frame
+    /// handles — the content-addressed dedup path: a page interned in the
+    /// cross-sequence [`crate::coordinator::sharing::PageIndex`] registers
+    /// the SAME `Arc`s another sequence's store already holds, so the
+    /// frame bytes exist once. Addresses are still allocated from this
+    /// controller's own bump allocator exactly as an unshared registration
+    /// would, so sharing never changes any address or digest.
+    pub fn register_kv_region_arcs(
+        &mut self,
+        name: &str,
+        dtype: Dtype,
+        tokens: usize,
+        channels: usize,
+        built: Vec<Arc<Vec<u8>>>,
     ) -> RegionId {
         let mut frames = Vec::with_capacity(built.len());
         for frame in built {

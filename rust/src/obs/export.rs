@@ -83,6 +83,18 @@ fn encode_record(e: &Event, out: &mut Vec<u8>) {
             out.push(14);
             out.extend_from_slice(&count.to_le_bytes());
         }
+        EventKind::Share { bytes } => {
+            out.push(15);
+            out.extend_from_slice(&bytes.to_le_bytes());
+        }
+        EventKind::Unshare { bytes } => {
+            out.push(16);
+            out.extend_from_slice(&bytes.to_le_bytes());
+        }
+        EventKind::Cow { bytes } => {
+            out.push(17);
+            out.extend_from_slice(&bytes.to_le_bytes());
+        }
     }
 }
 
@@ -205,6 +217,9 @@ impl FlightRecording {
                 12 => EventKind::PrefetchMiss { pages: rd.u32()? },
                 13 => EventKind::PrefetchDiscard { bytes: rd.u64()? },
                 14 => EventKind::Dropped { count: rd.u64()? },
+                15 => EventKind::Share { bytes: rd.u64()? },
+                16 => EventKind::Unshare { bytes: rd.u64()? },
+                17 => EventKind::Cow { bytes: rd.u64()? },
                 t => return Err(format!("unknown event tag {t}")),
             };
             events.push(Event {
@@ -327,6 +342,18 @@ impl FlightRecording {
                 EventKind::Dropped { count } => {
                     args.insert("count".into(), Json::Num(count as f64));
                     ("dropped", PID_COMPONENTS, TID_SCHED, None)
+                }
+                EventKind::Share { bytes } => {
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    ("share", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::Unshare { bytes } => {
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    ("unshare", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::Cow { bytes } => {
+                    args.insert("bytes".into(), Json::Num(bytes as f64));
+                    ("cow", PID_SEQUENCES, e.seq, None)
                 }
             };
             let tid = if e.seq == NO_SEQ && pid == PID_SEQUENCES {

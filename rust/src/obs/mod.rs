@@ -137,6 +137,20 @@ pub enum EventKind {
     /// Synthesized on drain when the ring overflowed: `count` oldest
     /// records were dropped.
     Dropped { count: u64 },
+    /// Sharing: a committed page deduplicated against an existing
+    /// identical frame set (`bytes` = compressed bytes saved). Emitted
+    /// only on a content hit — the first commit of any content is
+    /// silent, so a prefix-free sharing-on run records no share events.
+    Share { bytes: u64 },
+    /// Sharing: a sequence released its reference to a page it actually
+    /// shared (retirement, quarantine, or drop); `bytes` = the page's
+    /// compressed bytes. Sole-sharer releases are silent (no sharing
+    /// transition happened), so sharing-on runs of prefix-free traffic
+    /// record nothing extra.
+    Unshare { bytes: u64 },
+    /// Sharing: a shared page diverged (copy-on-write — an unrepaired
+    /// salvage mutated stored bytes) and went private to its mutator.
+    Cow { bytes: u64 },
 }
 
 impl EventKind {

@@ -21,5 +21,5 @@ pub mod trace;
 pub use arrival::ArrivalProcess;
 pub use lengths::LengthDist;
 pub use synthmodel::{bf16_canon, SynthLm};
-pub use tenant::{TenantSpec, WorkloadSpec};
-pub use trace::{Trace, TrafficRequest};
+pub use tenant::{PrefixFamily, TenantSpec, WorkloadSpec};
+pub use trace::{Trace, TrafficRequest, NO_FAMILY};

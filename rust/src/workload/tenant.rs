@@ -24,6 +24,28 @@ pub struct TenantSpec {
     pub output: LengthDist,
 }
 
+/// A shared-prompt family: a deterministic token prefix that a fraction
+/// of one tenant's requests open with (a system prompt, a few-shot
+/// template, a RAG header). Requests drawn into the same family share
+/// their first `tokens` prompt tokens verbatim, which is what makes
+/// content-addressed page sharing (`SchedConfig::sharing`) find whole
+/// identical compressed pages across requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixFamily {
+    /// Index into the spec's tenant list this family applies to.
+    pub tenant: u32,
+    /// Length of the shared prefix in tokens. Prefixes shorter than one
+    /// KV page (16 tokens) never produce a full identical page, so
+    /// sharing-oriented workloads want `tokens >= 16`.
+    pub tokens: usize,
+    /// Per-mille probability that a request of this tenant joins the
+    /// family (0..=1000).
+    pub prob: u32,
+    /// Seed for the family's prefix tokens — two families with different
+    /// seeds get different (deterministic) prefixes.
+    pub seed: u64,
+}
+
 /// A complete workload description: arrival process + tenant mix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
@@ -35,6 +57,11 @@ pub struct WorkloadSpec {
     pub vocab: usize,
     /// Hard cap on `prompt + output` per request (the model's context).
     pub max_seq: usize,
+    /// Shared-prompt families (empty for fully independent prompts).
+    /// Family membership is drawn from an rng stream separate from the
+    /// base trace stream, so adding families never perturbs the arrival
+    /// steps, lengths, or non-prefix tokens of an existing seed.
+    pub shared_prefixes: Vec<PrefixFamily>,
 }
 
 impl WorkloadSpec {
@@ -101,6 +128,7 @@ impl WorkloadSpec {
             n_requests,
             vocab: 256,
             max_seq,
+            shared_prefixes: vec![],
         }
     }
 }

@@ -8,11 +8,12 @@
 //! self-describing and versioned:
 //!
 //! ```text
-//!   magic  "CAMCTRC2"                              (8 B)
+//!   magic  "CAMCTRC3"                              (8 B)
 //!   seed   u64le
 //!   n      u32le
 //!   n x request:
-//!     id u64le, tenant u32le, arrival_step u64le, max_new u32le,
+//!     id u64le, tenant u32le, family u32le (u32::MAX = none),
+//!     arrival_step u64le, max_new u32le,
 //!     policy (tag u8: 0 full | 1 window u32 | 2 quest u32
 //!             | 3 dynquant: ntiers u8, ntiers x (pages u32, dtype u8)),
 //!     prompt_len u32le, prompt_len x u16le tokens
@@ -29,9 +30,12 @@ use crate::quant::policy::{KvPolicy, PageTier};
 use crate::util::hash::fnv1a64;
 use crate::util::rng::Xoshiro256;
 
-use super::tenant::WorkloadSpec;
+use super::tenant::{PrefixFamily, WorkloadSpec};
 
-const MAGIC: &[u8; 8] = b"CAMCTRC2";
+const MAGIC: &[u8; 8] = b"CAMCTRC3";
+
+/// Sentinel for [`TrafficRequest::family`]: not in any prefix family.
+pub const NO_FAMILY: u32 = u32::MAX;
 
 /// One request in a traffic trace.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,6 +43,12 @@ pub struct TrafficRequest {
     pub id: u64,
     /// Index into the generating spec's tenant list.
     pub tenant: u32,
+    /// Index into the generating spec's `shared_prefixes` list, or
+    /// [`NO_FAMILY`] (`u32::MAX`) when the request opens with independent
+    /// tokens. Members of one family share their leading prompt tokens
+    /// verbatim — the workload-level ground truth page sharing dedups
+    /// against.
+    pub family: u32,
     /// Virtual step at which the request arrives (open loop).
     pub arrival_step: u64,
     pub prompt: Vec<u16>,
@@ -85,12 +95,14 @@ impl Trace {
             requests.push(TrafficRequest {
                 id: i as u64,
                 tenant: ti as u32,
+                family: NO_FAMILY,
                 arrival_step,
                 prompt,
                 max_new_tokens: max_new,
                 policy: t.policy.clone(),
             });
         }
+        apply_prefix_families(spec, seed, &mut requests);
         Trace { seed, requests }
     }
 
@@ -103,6 +115,7 @@ impl Trace {
         for r in &self.requests {
             out.extend_from_slice(&r.id.to_le_bytes());
             out.extend_from_slice(&r.tenant.to_le_bytes());
+            out.extend_from_slice(&r.family.to_le_bytes());
             out.extend_from_slice(&r.arrival_step.to_le_bytes());
             out.extend_from_slice(&(r.max_new_tokens as u32).to_le_bytes());
             write_policy(&mut out, &r.policy);
@@ -134,6 +147,7 @@ impl Trace {
         for _ in 0..n {
             let id = rd.u64()?;
             let tenant = rd.u32()?;
+            let family = rd.u32()?;
             let arrival_step = rd.u64()?;
             let max_new_tokens = rd.u32()? as usize;
             let policy = read_policy(&mut rd)?;
@@ -145,6 +159,7 @@ impl Trace {
             requests.push(TrafficRequest {
                 id,
                 tenant,
+                family,
                 arrival_step,
                 prompt,
                 max_new_tokens,
@@ -164,6 +179,52 @@ impl Trace {
     /// Read a trace from a file.
     pub fn read(path: impl AsRef<std::path::Path>) -> anyhow::Result<Trace> {
         Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// The deterministic token prefix of one family (independent of the
+/// trace seed — only `family.seed` and the vocab matter, so the same
+/// family spec yields the same prefix across traces).
+fn family_prefix(f: &PrefixFamily, vocab: usize) -> Vec<u16> {
+    let mut rng = Xoshiro256::new(f.seed ^ 0x9e37_79b9_7f4a_7c15);
+    (0..f.tokens)
+        .map(|_| rng.below(vocab as u64) as u16)
+        .collect()
+}
+
+/// Draw family membership and stamp shared prefixes over member prompts.
+///
+/// Membership is drawn from a *separate* rng stream (`seed ^ const`), not
+/// the base generation stream: a spec with `shared_prefixes: vec![]`
+/// produces byte-identical traces before and after this feature existed,
+/// and adding a family never perturbs arrivals, lengths, or the
+/// non-prefix tokens of other requests at the same seed.
+fn apply_prefix_families(spec: &WorkloadSpec, seed: u64, requests: &mut [TrafficRequest]) {
+    if spec.shared_prefixes.is_empty() {
+        return;
+    }
+    let prefixes: Vec<Vec<u16>> = spec
+        .shared_prefixes
+        .iter()
+        .map(|f| family_prefix(f, spec.vocab))
+        .collect();
+    let mut rng = Xoshiro256::new(seed ^ 0x5348_4152_4544_5046); // "SHAREDPF"
+    for r in requests.iter_mut() {
+        for (fi, f) in spec.shared_prefixes.iter().enumerate() {
+            assert!(f.prob <= 1000, "family prob is per-mille (0..=1000)");
+            if f.tenant != r.tenant {
+                continue;
+            }
+            // One draw per (request, matching family) — first hit wins.
+            if rng.below(1000) >= f.prob as u64 {
+                continue;
+            }
+            r.family = fi as u32;
+            let pre = &prefixes[fi];
+            let n = pre.len().min(r.prompt.len());
+            r.prompt[..n].copy_from_slice(&pre[..n]);
+            break;
+        }
     }
 }
 
@@ -297,9 +358,49 @@ mod tests {
         assert!(Trace::from_bytes(&longer).is_err(), "trailing bytes");
         let mut bad_tag = bytes;
         // policy tag of request 0 sits right after the fixed header fields
-        let off = 8 + 8 + 4 + 8 + 4 + 8 + 4;
+        let off = 8 + 8 + 4 + 8 + 4 + 4 + 8 + 4;
         bad_tag[off] = 9;
         assert!(Trace::from_bytes(&bad_tag).is_err(), "unknown policy tag");
+    }
+
+    #[test]
+    fn prefix_families_share_tokens_without_perturbing_the_base_trace() {
+        let base = spec();
+        let mut fam = base.clone();
+        fam.shared_prefixes = vec![PrefixFamily {
+            tenant: 0,
+            tokens: 16,
+            prob: 700,
+            seed: 99,
+        }];
+        let a = Trace::generate(&base, 21);
+        let b = Trace::generate(&fam, 21);
+        // families ride a separate rng stream: arrivals, lengths, and
+        // every non-member prompt are untouched
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (ra, rb) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(ra.arrival_step, rb.arrival_step);
+            assert_eq!(ra.max_new_tokens, rb.max_new_tokens);
+            assert_eq!(ra.prompt.len(), rb.prompt.len());
+            assert_eq!(ra.tenant, rb.tenant);
+            if rb.family == NO_FAMILY {
+                assert_eq!(ra.prompt, rb.prompt);
+            } else {
+                assert_eq!(rb.tenant, 0, "family applies to its tenant only");
+            }
+        }
+        // members exist and share their leading tokens verbatim
+        let members: Vec<_> = b.requests.iter().filter(|r| r.family == 0).collect();
+        assert!(members.len() >= 2, "prob 700 on the majority tenant");
+        let lead = |r: &TrafficRequest| r.prompt[..r.prompt.len().min(16)].to_vec();
+        let first = lead(members[0]);
+        for m in &members {
+            let l = lead(m);
+            assert_eq!(l[..], first[..l.len().min(first.len())]);
+        }
+        // and the family trace round-trips through CAMCTRC3
+        let back = Trace::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(b, back);
     }
 
     #[test]

@@ -12,11 +12,11 @@
 //! ladder rung (retry / parity repair / plane-prefix salvage /
 //! quarantine) with counters identical at every lane count.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use camc::compress::Codec;
 use camc::coordinator::{
-    serve_trace, DecodeArena, KvPageStore, SchedConfig, ServeMetrics, TrafficResponse,
+    serve_trace, DecodeArena, KvPageStore, PageIndex, SchedConfig, ServeMetrics, TrafficResponse,
 };
 use camc::engine::LaneArray;
 use camc::memctrl::{FaultClass, FaultPlan, Layout, RegionId, SALVAGE_FLOOR};
@@ -25,7 +25,9 @@ use camc::quant::policy::KvPolicy;
 use camc::runtime::model::{KvState, ModelMeta};
 use camc::util::check::check;
 use camc::util::rng::Xoshiro256;
-use camc::workload::{ArrivalProcess, LengthDist, SynthLm, TenantSpec, Trace, WorkloadSpec};
+use camc::workload::{
+    ArrivalProcess, LengthDist, PrefixFamily, SynthLm, TenantSpec, Trace, WorkloadSpec,
+};
 
 fn tiny_meta() -> ModelMeta {
     ModelMeta {
@@ -184,6 +186,48 @@ fn truncated_and_extended_trace_files_error_cleanly() {
     assert_eq!(Trace::from_bytes(&bytes).unwrap(), t);
 }
 
+fn family_trace() -> Trace {
+    let mut spec = WorkloadSpec::chat_plus_batch(ArrivalProcess::Poisson { rate: 0.7 }, 12, 128);
+    spec.shared_prefixes = vec![PrefixFamily {
+        tenant: 0,
+        tokens: 16,
+        prob: 1000,
+        seed: 5,
+    }];
+    Trace::generate(&spec, 77)
+}
+
+#[test]
+fn family_stamped_traces_roundtrip_and_reject_corruption() {
+    // `CAMCTRC3` carries the family column; the digest discipline must
+    // be as airtight for family-stamped traces as for plain ones — any
+    // flipped or truncated byte is a clean parse error.
+    let t = family_trace();
+    assert!(
+        t.requests.iter().any(|r| r.family == 0),
+        "prob 1000 on the majority tenant must stamp members"
+    );
+    let bytes = t.to_bytes();
+    assert_eq!(&bytes[..8], b"CAMCTRC3");
+    assert_eq!(Trace::from_bytes(&bytes).unwrap(), t);
+    for i in 0..bytes.len() {
+        for mask in [0x01u8, 0x80] {
+            let mut bad = bytes.clone();
+            bad[i] ^= mask;
+            assert!(
+                Trace::from_bytes(&bad).is_err(),
+                "family trace byte {i} flip {mask:#04x} undetected"
+            );
+        }
+    }
+    for cut in 0..bytes.len() {
+        assert!(
+            Trace::from_bytes(&bytes[..cut]).is_err(),
+            "family trace truncated to {cut} parsed"
+        );
+    }
+}
+
 /// One synced single-page store (pos 16 = exactly one stored page, no raw
 /// tail) on an isolated `lanes`-wide pool, parity set before the sync so
 /// the frames carry (or don't carry) the XOR parity plane.
@@ -332,6 +376,147 @@ fn recovery_matrix_resolves_every_fault_class_on_its_documented_rung() {
     }
 }
 
+/// Two stores attached to one `PageIndex`, both synced from the same
+/// filled cache — commit-time content addressing dedups their page 0
+/// onto one shared frame set (refcount 2).
+fn shared_pair(
+    codec: Codec,
+    parity: bool,
+    index: &Arc<Mutex<PageIndex>>,
+) -> (KvPageStore, KvPageStore) {
+    let meta = tiny_meta();
+    let kv = kv_filled(&meta, 16, 3);
+    let lanes = Arc::new(LaneArray::new(8));
+    let mk = |seq: u64| {
+        let mut s = KvPageStore::with_shared(&meta, Layout::Proposed, codec, Arc::clone(&lanes));
+        s.mc.parity = parity;
+        s.attach_sharing(Arc::clone(index), seq);
+        s.sync(&kv, &meta);
+        assert_eq!(s.len(), 1);
+        s
+    };
+    let a = mk(1);
+    let b = mk(2);
+    let ix = index.lock().unwrap();
+    assert_eq!(ix.stats().dedup_pages, 1, "second sync must dedup page 0");
+    assert_eq!(ix.refcount(&a.page_key(0).unwrap()), 2);
+    drop(ix);
+    (a, b)
+}
+
+#[test]
+fn parity_heal_on_shared_frame_repairs_once_for_all_sharers() {
+    // Rung 2 on a shared frame: the flip lands on the reader's private
+    // CoW copy, parity heals it byte-exactly, and reconcile folds the
+    // healed copy back onto the shared frame — a single repair, both
+    // sharers read identical bytes, and the entry keeps both sharers
+    // (no CoW charged for a fault that left no divergence).
+    let index = Arc::new(Mutex::new(PageIndex::default()));
+    let (mut a, mut b) = shared_pair(Codec::Zstd, true, &index);
+    let key = a.page_key(0).unwrap();
+    let mut plan = FaultPlan::always(13, FaultClass::PlaneFlip);
+    plan.flip_plane = Some(12);
+    a.mc.install_faults(Arc::new(plan), 1);
+    let mut arena = DecodeArena::new();
+    let out = a.fetch_pages(&[16], &mut arena).unwrap();
+    assert!(out.quarantine.is_none(), "parity must heal the flip");
+    let healed = arena.codes(out.pages[0].1).to_vec();
+    assert!(a.mc.recovery.faults_injected > 0, "plan never fired");
+    assert_eq!(
+        a.mc.recovery.parity_repairs, a.mc.recovery.faults_injected,
+        "every flip must resolve as exactly one parity repair"
+    );
+    assert_eq!(healed, pristine_codes(Codec::Zstd, true, 16), "repair not byte-exact");
+    a.reconcile_sharing();
+    {
+        let ix = index.lock().unwrap();
+        assert_eq!(ix.stats().cow_copies, 0, "heal must not be billed as CoW");
+        assert_eq!(ix.refcount(&key), 2, "healed copy re-shares");
+    }
+    assert_eq!(a.page_key(0), Some(key));
+    // the other sharer never saw the fault and reads the same bytes
+    let mut arena_b = DecodeArena::new();
+    let out_b = b.fetch_pages(&[16], &mut arena_b).unwrap();
+    assert!(out_b.quarantine.is_none());
+    assert_eq!(b.mc.recovery.faults_injected, 0);
+    assert_eq!(arena_b.codes(out_b.pages[0].1).to_vec(), healed);
+}
+
+#[test]
+fn unhealable_fault_on_shared_frame_quarantines_only_the_faulted_sharer() {
+    // Rung 4 on a shared frame: the header flip corrupts the reader's
+    // private copy only, so the OTHER sharer keeps serving pristine
+    // bytes. Dropping the quarantined store (the scheduler's removal
+    // path) releases its refcount without freeing the still-referenced
+    // entry; the last drop frees it exactly once.
+    let index = Arc::new(Mutex::new(PageIndex::default()));
+    let (mut a, mut b) = shared_pair(Codec::Lz4, false, &index);
+    let key = b.page_key(0).unwrap();
+    a.mc
+        .install_faults(Arc::new(FaultPlan::always(15, FaultClass::HeaderFlip)), 1);
+    let mut arena = DecodeArena::new();
+    let out = a.fetch_pages(&[16], &mut arena).unwrap();
+    assert!(out.quarantine.is_some(), "header flip must quarantine the reader");
+    drop(a);
+    {
+        let ix = index.lock().unwrap();
+        assert_eq!(ix.refcount(&key), 1, "survivor still holds the entry");
+        assert_eq!(ix.stats().freed_entries, 0, "entry must not free while referenced");
+        assert_eq!(ix.stats().cow_copies, 0);
+    }
+    let mut arena_b = DecodeArena::new();
+    let out_b = b.fetch_pages(&[16], &mut arena_b).unwrap();
+    assert!(out_b.quarantine.is_none(), "survivor must keep serving");
+    assert_eq!(
+        arena_b.codes(out_b.pages[0].1).to_vec(),
+        pristine_codes(Codec::Lz4, false, 16)
+    );
+    drop(b);
+    let ix = index.lock().unwrap();
+    assert_eq!(ix.entries(), 0, "last drop frees the entry");
+    assert_eq!(ix.stats().freed_entries, 1, "and frees it exactly once");
+}
+
+#[test]
+fn salvage_on_shared_frame_cow_detaches_only_the_degraded_sharer() {
+    // Rung 3 keeps the plane corruption in the reader's copy (reads
+    // clamp to the intact prefix) — that is true divergence: reconcile
+    // detaches it as a CoW copy exactly once, while the other sharer
+    // keeps serving full precision from the shared frame.
+    let index = Arc::new(Mutex::new(PageIndex::default()));
+    let (mut a, mut b) = shared_pair(Codec::Zstd, false, &index);
+    let key = b.page_key(0).unwrap();
+    let mut plan = FaultPlan::always(13, FaultClass::PlaneFlip);
+    plan.flip_plane = Some(12);
+    a.mc.install_faults(Arc::new(plan), 1);
+    let mut arena = DecodeArena::new();
+    let out = a.fetch_pages(&[16], &mut arena).unwrap();
+    assert!(out.quarantine.is_none(), "plane 12 is above the salvage floor");
+    assert_eq!(a.mc.recovery.salvaged_reads, a.mc.recovery.faults_injected);
+    assert_eq!(a.mc.region(RegionId(0)).degraded_keep(), 12);
+    assert_eq!(
+        arena.codes(out.pages[0].1).to_vec(),
+        pristine_codes(Codec::Zstd, false, 12),
+        "salvaged read must equal the pristine clamped view"
+    );
+    a.reconcile_sharing();
+    a.reconcile_sharing(); // divergence copies exactly once: a no-op repeat
+    {
+        let ix = index.lock().unwrap();
+        assert_eq!(ix.stats().cow_copies, 1, "divergence must CoW exactly once");
+        assert_eq!(ix.refcount(&key), 1);
+    }
+    assert_eq!(a.page_key(0), None, "detached page is private now");
+    let mut arena_b = DecodeArena::new();
+    let out_b = b.fetch_pages(&[16], &mut arena_b).unwrap();
+    assert!(out_b.quarantine.is_none());
+    assert_eq!(
+        arena_b.codes(out_b.pages[0].1).to_vec(),
+        pristine_codes(Codec::Zstd, false, 16),
+        "the surviving sharer keeps full precision"
+    );
+}
+
 /// Everything deterministic about a served response (wall time excluded).
 fn response_key(r: &TrafficResponse) -> (u64, Vec<u16>, u64, u64, u64, u64, u32, u64) {
     (
@@ -369,6 +554,7 @@ fn speculative_fetch_resolves_faults_exactly_once() {
         n_requests: 16,
         vocab: 256,
         max_seq: 128,
+        shared_prefixes: vec![],
     };
     let trace = Trace::generate(&spec, 23);
     // rates high enough that every rung fires mid-serve (mirrors the
@@ -462,6 +648,9 @@ fn sample_recording() -> FlightRecording {
     r.push(7, EventKind::PrefetchHit { pages: 2 });
     r.push(7, EventKind::PrefetchMiss { pages: 1 });
     r.push(7, EventKind::PrefetchDiscard { bytes: 256 });
+    r.push(8, EventKind::Share { bytes: 2048 });
+    r.push(8, EventKind::Unshare { bytes: 2048 });
+    r.push(7, EventKind::Cow { bytes: 1024 });
     r.push(NO_SEQ, EventKind::Dropped { count: 11 });
     r.into_recording()
 }
@@ -469,7 +658,7 @@ fn sample_recording() -> FlightRecording {
 #[test]
 fn flight_recording_bytes_roundtrip() {
     let rec = sample_recording();
-    assert_eq!(rec.events.len(), 16);
+    assert_eq!(rec.events.len(), 19);
     let bytes = rec.to_bytes();
     let back = FlightRecording::from_bytes(&bytes).unwrap();
     assert_eq!(back, rec);

@@ -41,6 +41,7 @@ fn dense_spec(n: usize, rate: f64, prompt: usize, output: usize) -> WorkloadSpec
         n_requests: n,
         vocab: 256,
         max_seq: 128,
+        shared_prefixes: vec![],
     }
 }
 
@@ -66,6 +67,7 @@ fn two_tenant_spec(n: usize) -> WorkloadSpec {
         n_requests: n,
         vocab: 256,
         max_seq: 128,
+        shared_prefixes: vec![],
     }
 }
 

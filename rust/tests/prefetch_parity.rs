@@ -38,6 +38,7 @@ fn dense_spec(n: usize, rate: f64, prompt: usize, output: usize) -> WorkloadSpec
         n_requests: n,
         vocab: 256,
         max_seq: 128,
+        shared_prefixes: vec![],
     }
 }
 

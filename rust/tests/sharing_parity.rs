@@ -1,0 +1,426 @@
+//! Sharing-parity differential suite for content-addressed page sharing
+//! (`SchedConfig::sharing`): on a prefix-free workload a sharing-on
+//! serve must be **bit-identical** to sharing-off — responses, tokens,
+//! read digests, stored-frame digests, schedule events, every fetch
+//! metric, and the full flight-recording digests — across codecs ×
+//! {1, 8, 32} lanes × fetch modes × prefetch on/off, under a budget
+//! tight enough to engage the pressure clamp and force evict/resume
+//! cycles. Dedup only ever changes which *physical* frames back a page,
+//! never an address, a byte read, or a scheduling decision.
+//!
+//! On prefix-heavy mixes the payoff side is pinned as a property:
+//! random shared-prefix workloads never serve *fewer* sequences with
+//! sharing enabled at equal compressed budget. The refcount machinery
+//! itself is pinned by a random-lifecycle conservation property:
+//! sharer counts always equal the references the live stores hold, no
+//! frame frees while referenced, charges sum to the physical unique
+//! bytes, and every entry frees exactly once.
+
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
+
+use camc::compress::Codec;
+use camc::coordinator::{
+    serve_trace, EventKind, FetchMode, KvPageStore, PageIndex, SchedConfig, SchedOutcome,
+    ServeMetrics, TrafficResponse,
+};
+use camc::engine::LaneArray;
+use camc::memctrl::Layout;
+use camc::obs::RecorderCfg;
+use camc::quant::policy::KvPolicy;
+use camc::runtime::model::{KvState, ModelMeta};
+use camc::util::check::check;
+use camc::util::rng::Xoshiro256;
+use camc::workload::arrival::ArrivalProcess;
+use camc::workload::lengths::LengthDist;
+use camc::workload::synthmodel::SynthLm;
+use camc::workload::tenant::{PrefixFamily, TenantSpec, WorkloadSpec};
+use camc::workload::trace::Trace;
+
+/// Prefix-free reference workload: uniform random prompts never collide
+/// on a full 16-token page, so sharing-on must be a pure no-op.
+fn dense_spec(n: usize, rate: f64, prompt: usize, output: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: ArrivalProcess::Poisson { rate },
+        tenants: vec![TenantSpec {
+            name: "t".into(),
+            weight: 1.0,
+            policy: KvPolicy::Full,
+            prompt: LengthDist::Fixed(prompt),
+            output: LengthDist::Fixed(output),
+        }],
+        n_requests: n,
+        vocab: 256,
+        max_seq: 128,
+        shared_prefixes: vec![],
+    }
+}
+
+/// Prefix-heavy mix: one family whose 32-token prefix covers the whole
+/// prompt range, so members' finalized pages dedup across requests.
+fn prefix_spec(n: usize, rate: f64, prob: u32, fam_seed: u64) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: ArrivalProcess::Poisson { rate },
+        tenants: vec![TenantSpec {
+            name: "chat".into(),
+            weight: 1.0,
+            policy: KvPolicy::Full,
+            prompt: LengthDist::Uniform { lo: 16, hi: 32 },
+            output: LengthDist::Uniform { lo: 8, hi: 24 },
+        }],
+        n_requests: n,
+        vocab: 256,
+        max_seq: 128,
+        shared_prefixes: vec![PrefixFamily {
+            tenant: 0,
+            tokens: 32,
+            prob,
+            seed: fam_seed,
+        }],
+    }
+}
+
+/// Everything deterministic about a response (wall time excluded).
+fn key(r: &TrafficResponse) -> (u64, Vec<u16>, u64, u64, u64, u64, u32, u64) {
+    (
+        r.id,
+        r.tokens.clone(),
+        r.mean_nll.to_bits(),
+        r.kv_fetched_bytes,
+        r.kv_pages_digest,
+        r.read_digest,
+        r.evictions,
+        r.recovered_faults,
+    )
+}
+
+fn serve(
+    lm: &SynthLm,
+    trace: &Trace,
+    cfg: &SchedConfig,
+    lanes: usize,
+) -> (SchedOutcome, ServeMetrics) {
+    let la = Arc::new(LaneArray::new(lanes));
+    let mut m = ServeMetrics::default();
+    let cfg = SchedConfig { collect_digests: true, ..cfg.clone() };
+    let out = serve_trace(lm, trace, &cfg, la, &mut m).expect("serve_trace");
+    (out, m)
+}
+
+/// The integer-domain halves of both runs must match exactly (including
+/// the prefetch counters — both runs share the prefetch setting); the
+/// f64 latency sums tolerate last-bit merge-order drift only.
+fn assert_serve_identical(
+    tag: &str,
+    off: &(SchedOutcome, ServeMetrics),
+    on: &(SchedOutcome, ServeMetrics),
+) {
+    let ((base, bm), (o, m)) = (off, on);
+    assert_eq!(o.events, base.events, "{tag}: schedule diverged");
+    assert_eq!(o.peak_active, base.peak_active, "{tag}");
+    assert_eq!(o.steps, base.steps, "{tag}");
+    assert_eq!(o.pressure_steps, base.pressure_steps, "{tag}");
+    assert_eq!(
+        o.responses.iter().map(key).collect::<Vec<_>>(),
+        base.responses.iter().map(key).collect::<Vec<_>>(),
+        "{tag}: responses diverged"
+    );
+    assert_eq!(m.steps, bm.steps, "{tag}");
+    assert_eq!(m.fetched_bytes, bm.fetched_bytes, "{tag}: fetched bytes");
+    assert_eq!(m.fetch_frames, bm.fetch_frames, "{tag}: fetched frames");
+    assert_eq!(m.fetch_dispatches, bm.fetch_dispatches, "{tag}: dispatches");
+    assert_eq!(m.host_copy_bytes, bm.host_copy_bytes, "{tag}: host copies");
+    assert_eq!(m.tenants, bm.tenants, "{tag}: per-tenant stats");
+    assert_eq!(m.fetch_latency_steps, bm.fetch_latency_steps, "{tag}");
+    assert_eq!(m.prefetch_issued, bm.prefetch_issued, "{tag}: prefetch issued");
+    assert_eq!(m.prefetch_hits, bm.prefetch_hits, "{tag}: prefetch hits");
+    assert_eq!(m.prefetch_misses, bm.prefetch_misses, "{tag}: prefetch misses");
+    assert_eq!(
+        m.prefetch_wasted_bytes, bm.prefetch_wasted_bytes,
+        "{tag}: prefetch waste"
+    );
+    let rel = (m.sync_fetch_ns - bm.sync_fetch_ns).abs() / bm.sync_fetch_ns.max(1.0);
+    assert!(
+        rel < 1e-9,
+        "{tag}: modeled sync latency drifted: {} vs {}",
+        m.sync_fetch_ns,
+        bm.sync_fetch_ns
+    );
+}
+
+#[test]
+fn sharing_is_bit_identical_on_prefix_free_traffic() {
+    // The acceptance matrix: with a budget tight enough to clamp AND
+    // force evict/resume cycles (pinned non-vacuous below), sharing-on
+    // equals sharing-off bit-for-bit at every codec, fetch mode, lane
+    // count, and prefetch setting — including the flight recording's
+    // full and schedule digests — and never finds a single page to
+    // dedup on uniform random prompts.
+    let lm = SynthLm::tiny(5);
+    let trace = Trace::generate(&dense_spec(8, 8.0, 16, 48), 31);
+    let budget = 9500u64;
+    for codec in [Codec::Zstd, Codec::Lz4] {
+        for fetch in [FetchMode::Batched, FetchMode::PerSequence] {
+            for prefetch in [false, true] {
+                let cfg = SchedConfig {
+                    codec,
+                    fetch,
+                    prefetch,
+                    record: Some(RecorderCfg::default()),
+                    ..SchedConfig::compressed(budget)
+                };
+                let base = serve(&lm, &trace, &cfg, 1);
+                assert_eq!(base.0.responses.len(), 8, "all requests complete");
+                assert!(
+                    base.0.events.iter().any(|e| e.kind == EventKind::Evict),
+                    "{codec}/{fetch:?}: budget must force evictions or the test is vacuous"
+                );
+                assert!(
+                    base.0.pressure_steps[1] + base.0.pressure_steps[2] > 0,
+                    "{codec}/{fetch:?}: budget must engage the pressure clamp"
+                );
+                for lanes in [1usize, 8, 32] {
+                    let scfg = SchedConfig { sharing: true, ..cfg.clone() };
+                    let sh = serve(&lm, &trace, &scfg, lanes);
+                    let tag = format!("{codec}/{fetch:?}/prefetch={prefetch}/{lanes} lanes");
+                    assert_serve_identical(&tag, &base, &sh);
+                    // the event-stream witness: recordings digest equal,
+                    // both as recorded and as the schedule core (lane
+                    // counts never move the digest — pinned elsewhere)
+                    let bf = base.0.flight.as_ref().expect("recorder on");
+                    let sf = sh.0.flight.as_ref().expect("recorder on");
+                    assert_eq!(sf.digest(), bf.digest(), "{tag}: flight digest diverged");
+                    assert_eq!(
+                        sf.schedule_digest(),
+                        bf.schedule_digest(),
+                        "{tag}: schedule digest diverged"
+                    );
+                    let m = &sh.1;
+                    assert_eq!(
+                        (m.dedup_pages, m.dedup_bytes_saved, m.cow_copies),
+                        (0, 0, 0),
+                        "{tag}: prefix-free traffic must never dedup"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharing_never_serves_fewer_sequences_property() {
+    // The payoff property at equal budget: on random shared-prefix
+    // workloads, within a fixed virtual-step horizon, sharing-on
+    // completes at least as many sequences as sharing-off — charging
+    // each sequence only its unique bytes can only free capacity. The
+    // accumulated dedup count keeps the property non-vacuous.
+    let dedup_total = Cell::new(0u64);
+    check("sharing_never_serves_fewer", 12, |g| {
+        let lm = SynthLm::tiny(5);
+        let n = 8 + g.rng.index(9);
+        let rate = 4.0 + g.rng.next_f64() * 6.0;
+        let prob = 700 + (g.rng.index(4) as u32) * 100;
+        let trace = Trace::generate(&prefix_spec(n, rate, prob, g.case_seed ^ 0xf), g.case_seed);
+        let budget = [9500u64, 12 * 1024, 16 * 1024][g.rng.index(3)];
+        let horizon = 48 + g.rng.index(5) as u64 * 16;
+        let cfg = SchedConfig {
+            max_steps: horizon,
+            ..SchedConfig::compressed(budget)
+        };
+        let (off, _) = serve(&lm, &trace, &cfg, 8);
+        let on_cfg = SchedConfig { sharing: true, ..cfg.clone() };
+        let (on, m) = serve(&lm, &trace, &on_cfg, 8);
+        dedup_total.set(dedup_total.get() + m.dedup_pages);
+        if on.responses.len() < off.responses.len() {
+            return Err(format!(
+                "sharing served fewer: {} vs {} (n={n} budget={budget} horizon={horizon} prob={prob})",
+                on.responses.len(),
+                off.responses.len()
+            ));
+        }
+        Ok(())
+    });
+    assert!(
+        dedup_total.get() > 0,
+        "no sampled workload ever deduped a page — the property is vacuous"
+    );
+}
+
+fn tiny_meta() -> ModelMeta {
+    ModelMeta {
+        vocab: 256,
+        layers: 2,
+        d_model: 32,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_head: 8,
+        max_seq: 64,
+        kv_channels: 16,
+        prefill_len: 32,
+        page_tokens: 16,
+        n_pages: 4,
+        param_names: vec![],
+    }
+}
+
+fn kv_filled(meta: &ModelMeta, pos: usize, seed: u64) -> KvState {
+    let row = meta.n_kv_heads * meta.d_head;
+    let mut kv = KvState {
+        k: vec![0.0; meta.layers * meta.max_seq * row],
+        v: vec![0.0; meta.layers * meta.max_seq * row],
+        queries: vec![0.0; meta.layers * meta.n_heads * meta.d_head],
+        pos,
+    };
+    let mut r = Xoshiro256::new(seed);
+    for l in 0..meta.layers {
+        for t in 0..pos {
+            for c in 0..row {
+                kv.k[(l * meta.max_seq + t) * row + c] = (r.normal() * 0.5) as f32;
+                kv.v[(l * meta.max_seq + t) * row + c] = (r.normal() * 0.5) as f32;
+            }
+        }
+    }
+    kv
+}
+
+#[test]
+fn charged_bytes_sum_to_physical_and_ownership_transfers_on_release() {
+    // Two stores share every page: the lowest live request id pays the
+    // full stored bytes, the other rides free, the two charges sum to
+    // the physical bytes — and when the owner drops, the survivor
+    // inherits the bill.
+    let meta = tiny_meta();
+    let kv = kv_filled(&meta, 16, 3); // one full page, no raw tail
+    let index = Arc::new(Mutex::new(PageIndex::default()));
+    let lanes = Arc::new(LaneArray::new(2));
+    let mk = |seq: u64| {
+        let mut s = KvPageStore::with_shared(
+            &meta,
+            Layout::Proposed,
+            Codec::Zstd,
+            Arc::clone(&lanes),
+        );
+        s.attach_sharing(Arc::clone(&index), seq);
+        s.sync(&kv, &meta);
+        assert_eq!(s.len(), 1);
+        s
+    };
+    let a = mk(1);
+    let b = mk(2);
+    assert_eq!(index.lock().unwrap().stats().dedup_pages, 1);
+    let phys = a.footprint_bytes(&kv);
+    assert_eq!(phys, b.footprint_bytes(&kv), "identical content, identical bytes");
+    let (ca, sa) = a.charged_footprint_split(&kv);
+    let (cb, sb) = b.charged_footprint_split(&kv);
+    assert_eq!((ca, sa), (phys, 0), "owner (min id) pays the full page");
+    assert_eq!((cb, sb), (0, phys), "the other sharer rides free");
+    assert_eq!(ca + cb, phys, "charges sum to the physical bytes");
+    drop(a);
+    let (cb2, sb2) = b.charged_footprint_split(&kv);
+    assert_eq!((cb2, sb2), (phys, 0), "survivor inherits the bill");
+    drop(b);
+    let ix = index.lock().unwrap();
+    assert_eq!(ix.entries(), 0);
+    assert_eq!(ix.stats().freed_entries, 1, "last drop frees exactly once");
+}
+
+#[test]
+fn refcounts_conserve_across_random_lifecycles_property() {
+    // Random interleavings of store creation (from a small content pool,
+    // so collisions are common) and drops. After EVERY op: the index's
+    // sharer count equals the page references the live stores hold, no
+    // held entry is ever freed, the charged bytes across stores equal
+    // the unique physical bytes, and at the end every entry created was
+    // freed exactly once.
+    let dedup_total = Cell::new(0u64);
+    check("sharing_refcount_conservation", 16, |g| {
+        let meta = tiny_meta();
+        let lanes = Arc::new(LaneArray::new(4));
+        let index = Arc::new(Mutex::new(PageIndex::default()));
+        let mut stores: Vec<KvPageStore> = Vec::new();
+        let mut next_seq = 0u64;
+        let mut created = 0u64;
+        for _ in 0..24 {
+            if stores.len() < 6 && (stores.is_empty() || g.rng.next_f64() < 0.6) {
+                let content = g.rng.index(3) as u64;
+                let pos = [16usize, 32][g.rng.index(2)];
+                let kv = kv_filled(&meta, pos, 100 + content * 10 + pos as u64);
+                let before = index.lock().unwrap().entries();
+                let mut s = KvPageStore::with_shared(
+                    &meta,
+                    Layout::Proposed,
+                    Codec::Zstd,
+                    Arc::clone(&lanes),
+                );
+                s.attach_sharing(Arc::clone(&index), next_seq);
+                next_seq += 1;
+                s.sync(&kv, &meta);
+                if s.len() != pos / 16 {
+                    return Err(format!("expected {} pages, got {}", pos / 16, s.len()));
+                }
+                created += (index.lock().unwrap().entries() - before) as u64;
+                stores.push(s);
+            } else {
+                let i = g.rng.index(stores.len());
+                stores.swap_remove(i);
+            }
+            // conservation after every op
+            let ix = index.lock().unwrap();
+            let mut held: std::collections::BTreeMap<_, u64> = std::collections::BTreeMap::new();
+            let mut refs = 0u64;
+            for s in &stores {
+                for p in 0..s.len() {
+                    let Some(k) = s.page_key(p) else {
+                        return Err("fault-free page lost its key".into());
+                    };
+                    if ix.refcount(&k) == 0 || ix.frames(&k).is_none() {
+                        return Err("frame freed while still referenced".into());
+                    }
+                    *held.entry(k).or_insert(0) += 1;
+                    refs += 1;
+                }
+            }
+            if ix.total_sharers() != refs {
+                return Err(format!(
+                    "sharer leak: index counts {}, stores hold {refs}",
+                    ix.total_sharers()
+                ));
+            }
+            if ix.entries() != held.len() {
+                return Err(format!(
+                    "entry leak: {} live entries vs {} held keys",
+                    ix.entries(),
+                    held.len()
+                ));
+            }
+            for (k, &n) in &held {
+                if ix.refcount(k) != n {
+                    return Err(format!("refcount {} != holders {n}", ix.refcount(k)));
+                }
+            }
+            drop(ix);
+            let charged: u64 = stores.iter().map(|s| s.charged_stored_bytes()).sum();
+            let uniq: u64 = held.keys().map(|k| k.len).sum();
+            if charged != uniq {
+                return Err(format!("charge leak: charged {charged} vs unique {uniq}"));
+            }
+        }
+        dedup_total.set(dedup_total.get() + index.lock().unwrap().stats().dedup_pages);
+        stores.clear();
+        let ix = index.lock().unwrap();
+        if ix.entries() != 0 || ix.total_sharers() != 0 {
+            return Err("entries survived their last sharer".into());
+        }
+        if ix.stats().freed_entries != created {
+            return Err(format!(
+                "created {created} entries but freed {}",
+                ix.stats().freed_entries
+            ));
+        }
+        Ok(())
+    });
+    assert!(
+        dedup_total.get() > 0,
+        "content pool never collided — the conservation property is vacuous"
+    );
+}
