@@ -24,7 +24,13 @@
 //! content-addressed page sharing serves fewer sequences than
 //! sharing-off at equal budget on the shared-prefix mix, stops
 //! deduplicating bytes there, or stops being bit-identical to
-//! sharing-off on the prefix-free mix (the regressions CI gates on).
+//! sharing-off on the prefix-free mix, if sharded serving at 2+ memory
+//! controllers stops serving at least the solo count at equal aggregate
+//! budget, if served-sequence throughput per modeled DRAM time stops
+//! increasing monotonically across the {1, 2, 4}-shard sweep, or if
+//! cross-shard work stealing stops admitting strictly more than static
+//! home-shard assignment on the skew-heavy whale mix (the regressions
+//! CI gates on).
 //! Also writes the recorder-on run's event stream as
 //! `FLIGHT_serve.trace.json` (Perfetto) + `FLIGHT_serve.bin`
 //! (`CAMCEVT1`) for the CI flight-recorder artifact.
@@ -259,6 +265,55 @@ fn main() {
         && shbm.dedup_bytes_saved == 0
         && shbm.cow_copies == 0;
 
+    // sharded memory-controller sweep: the bursty chat+batch mix at the
+    // SAME aggregate compressed budget partitioned across {1, 2, 4}
+    // shards with cross-shard stealing on. Placement-only sharding:
+    // every shard count serves the bit-identical schedule (the parity
+    // tests/shard_parity.rs pins), while the modeled per-step DRAM time
+    // drops to the max over channels — so served-sequence throughput
+    // per modeled DRAM second rises monotonically with the channel
+    // count. The steal-vs-static pair on a skew-heavy whale mix shows
+    // what cross-shard admission buys: the static home-slice wall
+    // strands budget behind hash-collided whales, stealing converts it
+    // into served sequences.
+    let shard_cfg = |n: usize, steal: bool| -> SchedConfig {
+        capped(SchedConfig {
+            shards: n,
+            steal,
+            ..SchedConfig::compressed(budget)
+        })
+    };
+    let shard_runs: Vec<(usize, SchedOutcome, ServeMetrics)> = [1usize, 2, 4]
+        .into_iter()
+        .map(|n| {
+            let (o, m, _) = run(&shard_cfg(n, true));
+            (n, o, m)
+        })
+        .collect();
+    // served sequences per modeled DRAM millisecond — the quantity the
+    // shard-scaling gate requires to rise 1 -> 2 -> 4
+    let shard_tput = |served: usize, m: &ServeMetrics| -> f64 {
+        served as f64 / (m.channel_overlapped_ns() / 1e6).max(1e-9)
+    };
+    let skew_spec = WorkloadSpec::skewed_whales(
+        ArrivalProcess::Poisson { rate: 1.0 },
+        if fast { 24 } else { 48 },
+        lm.meta.max_seq,
+    );
+    let skew_trace = Trace::generate(&skew_spec, 13);
+    // a tight budget (slices of budget/4) so whale footprints collide
+    // on their home slices — the regime stealing exists for
+    let skew_budget: u64 = 2 * 16 * 1024;
+    let skew_cfg = |steal: bool| -> SchedConfig {
+        capped(SchedConfig {
+            shards: 4,
+            steal,
+            ..SchedConfig::compressed(skew_budget)
+        })
+    };
+    let (steal_out, _, _) = run_with(&lm, &skew_trace, &skew_cfg(true));
+    let (static_out, _, _) = run_with(&lm, &skew_trace, &skew_cfg(false));
+
     let evicts = |o: &SchedOutcome| {
         o.events
             .iter()
@@ -356,6 +411,32 @@ fn main() {
         shm.unique_bytes,
         shm.cow_copies,
         sharing_invisible,
+    );
+
+    let mut shtab = Table::new(
+        "shard scaling (same aggregate budget, steal on)",
+        &[
+            "shards",
+            "served",
+            "serial dram ns",
+            "overlapped ns",
+            "served/modeled ms",
+        ],
+    );
+    for (n, o, m) in &shard_runs {
+        shtab.row(&[
+            n.to_string(),
+            o.responses.len().to_string(),
+            format!("{:.0}", m.attributed.dram_ns()),
+            format!("{:.0}", m.channel_overlapped_ns()),
+            format!("{:.1}", shard_tput(o.responses.len(), m)),
+        ]);
+    }
+    shtab.print();
+    println!(
+        "shard admission (skew whale mix, 4 shards @ {skew_budget} B): steal served {} vs static {}",
+        steal_out.responses.len(),
+        static_out.responses.len()
     );
 
     report.insert(
@@ -468,6 +549,28 @@ fn main() {
     report.insert(
         "sharing invisible on prefix-free mix",
         sharing_invisible as u64 as f64,
+    );
+    for (n, o, m) in &shard_runs {
+        report.insert(
+            &format!("served sequences ({n} shards)"),
+            o.responses.len() as f64,
+        );
+        report.insert(
+            &format!("channel overlapped ns ({n} shards)"),
+            m.channel_overlapped_ns().round(),
+        );
+        report.insert(
+            &format!("shard throughput per modeled ms ({n} shards)"),
+            (shard_tput(o.responses.len(), m) * 10.0).round() / 10.0,
+        );
+    }
+    report.insert(
+        "skew served sequences (steal)",
+        steal_out.responses.len() as f64,
+    );
+    report.insert(
+        "skew served sequences (static)",
+        static_out.responses.len() as f64,
     );
     report.insert("flight recorder events", flight.events.len() as f64);
     report.insert(
@@ -665,6 +768,45 @@ fn main() {
             );
             ok = false;
         }
+        // shard gates: 2+ shards must serve at least the solo count at
+        // equal aggregate budget (placement-only sharding serves the
+        // identical schedule), served-sequence throughput per modeled
+        // DRAM time must rise strictly across the 1 -> 2 -> 4 sweep
+        // (the channel-overlap win), and cross-shard stealing must
+        // admit strictly more than static home-shard assignment on the
+        // skew-heavy whale mix
+        let solo_served = shard_runs[0].1.responses.len();
+        for (n, o, _) in &shard_runs[1..] {
+            if o.responses.len() < solo_served {
+                eprintln!(
+                    "CHECK FAILED: {n} shards served {} sequences, solo served {solo_served} (equal aggregate budget)",
+                    o.responses.len()
+                );
+                ok = false;
+            }
+        }
+        for w in shard_runs.windows(2) {
+            let (na, ref oa, ref ma) = w[0];
+            let (nb, ref ob, ref mb) = w[1];
+            let (ta, tb) = (
+                shard_tput(oa.responses.len(), ma),
+                shard_tput(ob.responses.len(), mb),
+            );
+            if tb <= ta {
+                eprintln!(
+                    "CHECK FAILED: shard throughput not monotonic: {tb:.2} served/modeled-ms at {nb} shards <= {ta:.2} at {na}"
+                );
+                ok = false;
+            }
+        }
+        if steal_out.responses.len() <= static_out.responses.len() {
+            eprintln!(
+                "CHECK FAILED: work stealing served {} sequences, static home-shard assignment served {} (skew mix)",
+                steal_out.responses.len(),
+                static_out.responses.len()
+            );
+            ok = false;
+        }
         if !ok {
             std::process::exit(1);
         }
@@ -706,6 +848,15 @@ fn main() {
             shm.dedup_pages,
             shm.dedup_bytes_saved,
             shm.unique_bytes
+        );
+        println!(
+            "check ✓ shard scaling: served {} at every count, throughput {:.1} -> {:.1} -> {:.1} served/modeled-ms across 1/2/4 shards; steal {} > static {} on the skew mix",
+            solo_served,
+            shard_tput(shard_runs[0].1.responses.len(), &shard_runs[0].2),
+            shard_tput(shard_runs[1].1.responses.len(), &shard_runs[1].2),
+            shard_tput(shard_runs[2].1.responses.len(), &shard_runs[2].2),
+            steal_out.responses.len(),
+            static_out.responses.len()
         );
         println!(
             "check ✓ pressure-driven served {} >= fixed-slot {}, compressed concurrency {} > uncompressed {}, batched fetch served {} >= per-seq {} in {} vs {} dispatches",

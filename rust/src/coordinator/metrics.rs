@@ -176,9 +176,25 @@ pub struct ServeMetrics {
     /// `host_copy_bytes`) — asserted in tests and gated in the serve
     /// bench.
     pub tenant_usage: BTreeMap<u32, TenantUsage>,
+    /// Per-*shard* split of the same attribution stream (see
+    /// `dram::sharded`'s contract: a sequence's shard is fixed while it
+    /// is active, so every `attribute_*` call lands on exactly one
+    /// shard). Same conservation law as [`ServeMetrics::tenant_usage`]:
+    /// the entries sum bit-exactly to [`ServeMetrics::attributed`]. A
+    /// solo run attributes everything to shard 0.
+    pub shard_usage: BTreeMap<u32, TenantUsage>,
     /// Exact sum of every [`ServeMetrics::tenant_usage`] entry,
     /// accumulated from the same per-sequence summands.
     pub attributed: TenantUsage,
+    /// Channel-overlapped DRAM time over the run, integer picoseconds:
+    /// per step, the *max* over shards of that shard's modeled DRAM
+    /// service (`memctrl::modeled_dram_ps` of its byte share) — the N
+    /// channels stream concurrently, so the step waits only for the
+    /// hottest one. At `shards = 1` this equals the serial model
+    /// (`modeled_dram_ps` of the whole step); more shards can only
+    /// shrink it. Reported next to [`ServeMetrics::attributed`]'s
+    /// serial `dram_ps` by the serve bench's shard-scaling sweep.
+    pub channel_overlapped_ps: u64,
 }
 
 impl ServeMetrics {
@@ -244,13 +260,14 @@ impl ServeMetrics {
     }
 
     /// Attribute one sequence's share of a step fetch (`bytes` DRAM
-    /// bytes across `frames` frames) to its tenant, deriving the modeled
-    /// DRAM/lane time and DRAM energy from the same analytic models the
-    /// serve loop's latency figures use. Called at exactly the
-    /// [`ServeMetrics::record_fetch`] sites so
+    /// bytes across `frames` frames) to its tenant and its memory shard,
+    /// deriving the modeled DRAM/lane time and DRAM energy from the same
+    /// analytic models the serve loop's latency figures use. Called at
+    /// exactly the [`ServeMetrics::record_fetch`] sites so
     /// [`TenantUsage::dram_bytes`] conserves against
-    /// [`ServeMetrics::fetched_bytes`].
-    pub fn attribute_fetch(&mut self, tenant: u32, bytes: u64, frames: u64) {
+    /// [`ServeMetrics::fetched_bytes`] — through both the tenant and the
+    /// shard split (`shard` is 0 on a solo run).
+    pub fn attribute_fetch(&mut self, tenant: u32, shard: u32, bytes: u64, frames: u64) {
         let u = TenantUsage {
             dram_bytes: bytes,
             lane_frames: frames,
@@ -260,18 +277,33 @@ impl ServeMetrics {
             energy_fj: modeled_read_energy_fj(&DDR5_4800_PAPER, bytes),
         };
         self.tenant_usage.entry(tenant).or_default().add(&u);
+        self.shard_usage.entry(shard).or_default().add(&u);
         self.attributed.add(&u);
     }
 
-    /// Attribute host-side materialized bytes to a tenant (the
-    /// per-tenant split of [`ServeMetrics::record_host_copy`]).
-    pub fn attribute_host_copy(&mut self, tenant: u32, bytes: u64) {
+    /// Attribute host-side materialized bytes to a tenant and a shard
+    /// (the per-tenant / per-shard split of
+    /// [`ServeMetrics::record_host_copy`]).
+    pub fn attribute_host_copy(&mut self, tenant: u32, shard: u32, bytes: u64) {
         let u = TenantUsage {
             host_copy_bytes: bytes,
             ..TenantUsage::default()
         };
         self.tenant_usage.entry(tenant).or_default().add(&u);
+        self.shard_usage.entry(shard).or_default().add(&u);
         self.attributed.add(&u);
+    }
+
+    /// Record one step's channel-overlapped DRAM service (see
+    /// [`ServeMetrics::channel_overlapped_ps`]): the max over shards of
+    /// the shard's modeled DRAM picoseconds this step.
+    pub fn record_step_channel_overlap(&mut self, ps: u64) {
+        self.channel_overlapped_ps += ps;
+    }
+
+    /// Channel-overlapped DRAM time over the run, ns.
+    pub fn channel_overlapped_ns(&self) -> f64 {
+        self.channel_overlapped_ps as f64 / 1000.0
     }
 
     /// DRAM bytes attributed to `tenant` (0 for an unknown tenant).
@@ -460,6 +492,10 @@ mod tests {
         // one uncontended step, one 8-active step
         m.record_step_fetch_latency(2, 100.0, 40.0);
         m.record_step_fetch_latency(8, 300.0, 60.0);
+        m.record_step_channel_overlap(1500);
+        m.record_step_channel_overlap(2500);
+        assert_eq!(m.channel_overlapped_ps, 4000);
+        assert!((m.channel_overlapped_ns() - 4.0).abs() < 1e-12);
         assert_eq!(m.fetch_latency_steps, 2);
         assert!((m.mean_sync_fetch_ns() - 200.0).abs() < 1e-12);
         assert!((m.mean_overlapped_fetch_ns() - 50.0).abs() < 1e-12);
@@ -494,14 +530,14 @@ mod tests {
         // mirror the serve loop: record_* for globals, attribute_* for
         // the per-tenant split, same summands
         m.record_fetch(4, 1, 4096);
-        m.attribute_fetch(0, 4096, 4);
+        m.attribute_fetch(0, 1, 4096, 4);
         m.record_fetch(2, 1, 1024);
-        m.attribute_fetch(1, 1024, 2);
+        m.attribute_fetch(1, 0, 1024, 2);
         m.record_fetch(0, 0, 96); // raw-tail-only fetch, no frames
-        m.attribute_fetch(0, 96, 0);
+        m.attribute_fetch(0, 1, 96, 0);
         m.record_host_copy(512);
-        m.attribute_host_copy(0, 500);
-        m.attribute_host_copy(1, 12);
+        m.attribute_host_copy(0, 1, 500);
+        m.attribute_host_copy(1, 0, 12);
 
         // conservation against the pre-existing globals
         assert_eq!(m.attributed.dram_bytes, m.fetched_bytes);
@@ -513,6 +549,16 @@ mod tests {
             sum.add(u);
         }
         assert_eq!(sum, m.attributed);
+        // the per-shard split obeys the identical conservation law
+        let mut shard_sum = TenantUsage::default();
+        for u in m.shard_usage.values() {
+            shard_sum.add(u);
+        }
+        assert_eq!(shard_sum, m.attributed);
+        assert_eq!(m.shard_usage.len(), 2);
+        assert_eq!(m.shard_usage[&1].dram_bytes, 4096 + 96);
+        assert_eq!(m.shard_usage[&0].dram_bytes, 1024);
+        assert_eq!(m.shard_usage[&1].host_copy_bytes, 500);
 
         // component split sanity: the frameless raw-tail fetch pays DRAM
         // time but no lane time; framed fetches pay both

@@ -92,6 +92,7 @@ use super::pagestore::{
 };
 use super::sharing::{PageIndex, ShareEventKind};
 use crate::compress::Codec;
+use crate::dram::home_shard;
 use crate::engine::LaneArray;
 use crate::fmt::minifloat::BF16;
 use crate::memctrl::{
@@ -423,6 +424,25 @@ pub struct SchedConfig {
     /// on prefix-heavy mixes it admits strictly more concurrency from
     /// the same budget.
     pub sharing: bool,
+    /// Memory-controller shards (independent DRAM channels) the KV page
+    /// population is partitioned across — see `dram::sharded`'s
+    /// shard/steal contract. 1 (the default) is the solo path,
+    /// bit-identical to the pre-sharding scheduler; with
+    /// [`SchedConfig::steal`] on, any shard count serves the *same*
+    /// schedule (placement-only sharding) while the per-shard
+    /// attribution split and the channel-overlap figure track the
+    /// partition. 0 is treated as 1.
+    pub shards: usize,
+    /// Cross-shard admission (the default). On: the solo global
+    /// admission ladder decides WHO runs; placement steers a new
+    /// admission off a saturated home shard to the coolest one, and the
+    /// work-stealing pass re-homes resuming evicted sequences the same
+    /// way. Off (the static baseline): each sequence may only occupy
+    /// its home shard and admission additionally requires the home
+    /// shard's 1/N budget slice to fit — under skewed footprints this
+    /// strands headroom, which the serve bench's steal-vs-static gate
+    /// measures. Ignored at `shards = 1`.
+    pub steal: bool,
 }
 
 impl SchedConfig {
@@ -444,6 +464,8 @@ impl SchedConfig {
             prefetch_chaos: 0,
             record: None,
             sharing: false,
+            shards: 1,
+            steal: true,
         }
     }
 
@@ -559,6 +581,10 @@ struct Seq {
     /// Controller recovery counters already drained into the run metrics
     /// (the per-step drain folds only the delta).
     recovery_seen: RecoveryStats,
+    /// Memory-controller shard this sequence's pages are attributed to
+    /// (see `dram::sharded`'s contract) — fixed while active, re-chosen
+    /// only at the admission/resume seams. Always 0 at `shards = 1`.
+    shard: usize,
     /// Monotone admission stamp; the eviction victim is the largest.
     admitted_order: u64,
     first_token_step: Option<u64>,
@@ -643,6 +669,10 @@ pub fn serve_trace<M: StepModel>(
         cfg.sharing.then(|| Arc::new(Mutex::new(PageIndex::default())));
     let mut step: u64 = 0;
     let mut admit_counter: u64 = 0;
+    // shard count (1 == the solo path) and the per-step per-shard DRAM
+    // byte scratch behind the channel-overlap model
+    let nshards = cfg.shards.max(1);
+    let mut shard_bytes = vec![0u64; nshards];
     // pressure clamp applied to this step's reads (set by last step's
     // usage measurement)
     let mut clamp: Option<u32> = None;
@@ -689,16 +719,38 @@ pub fn serve_trace<M: StepModel>(
         // ratio-informed *admission* bytes (prompt + first output page —
         // the optimistic reservation continuous batchers use; growth
         // beyond it is what the pressure ladder and eviction govern).
+        // Shard placement happens here too (the only seam that may move
+        // a sequence's shard — see `dram::sharded`'s contract): with
+        // steal on it never changes WHO is admitted, only WHERE.
         {
             let budget = match cfg.admission {
                 Admission::FixedSlots(_) => None,
                 Admission::CompressedBudget { bytes } => Some(bytes),
             };
             let ratio = measured_ratio(&active);
-            let mut committed: u64 = active
-                .iter()
-                .map(|s| committed_bytes(s, meta, ratio))
-                .sum();
+            let mut committed: u64 = 0;
+            let mut shard_committed = vec![0u64; nshards];
+            for s in &active {
+                let c = committed_bytes(s, meta, ratio);
+                committed += c;
+                shard_committed[s.shard] += c;
+            }
+            // this shard's 1/N share of the aggregate budget (remainder
+            // bytes to the low indices) — the steer threshold with steal
+            // on, a hard wall with steal off
+            let slice = |i: usize| -> u64 {
+                let b = budget.unwrap_or(0);
+                b / nshards as u64 + u64::from((i as u64) < b % nshards as u64)
+            };
+            // coolest shard: fewest committed bytes, ties to the lowest
+            // index — a pure function of virtual-step state
+            let coolest = |sc: &[u64]| -> usize {
+                sc.iter()
+                    .enumerate()
+                    .min_by_key(|&(i, &c)| (c, i))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            };
             loop {
                 // FixedSlots honors exactly the caller's slot count (the
                 // legacy serve() contract has no other cap); max_active
@@ -716,6 +768,22 @@ pub fn serve_trace<M: StepModel>(
                     None => true,
                     Some(b) => committed + need <= b || idle,
                 };
+                // home-slice fit (slot admission has no byte slices to
+                // partition, so it never walls a shard)
+                let shard_fits = |sc: &[u64], i: usize, need: u64| match budget {
+                    None => true,
+                    Some(_) => sc[i] + need <= slice(i),
+                };
+                // steal-mode placement: home unless its slice is
+                // saturated, then the coolest shard — never changes WHO
+                // is admitted, only WHERE
+                let place = |sc: &[u64], home: usize, need: u64| -> usize {
+                    if nshards > 1 && !shard_fits(sc, home, need) {
+                        coolest(sc)
+                    } else {
+                        home
+                    }
+                };
                 if let Some(sw) = swapped.front() {
                     // a swapped sequence's size is KNOWN (its stored
                     // pages + raw tail), not a projection — admitting it
@@ -723,12 +791,23 @@ pub fn serve_trace<M: StepModel>(
                     // re-trip eviction (swap ping-pong)
                     let need = swapped_footprint(sw, meta)
                         .max(reserve_bytes(&sw.seq.req, meta, ratio));
-                    if fits(committed, need, active.is_empty()) {
+                    let home = home_shard(sw.seq.req.id, nshards);
+                    let admit_ok = fits(committed, need, active.is_empty())
+                        && (cfg.steal
+                            || shard_fits(&shard_committed, home, need)
+                            || active.is_empty());
+                    if admit_ok {
+                        let chosen = if cfg.steal {
+                            place(&shard_committed, home, need)
+                        } else {
+                            home
+                        };
                         let mut sw = swapped.pop_front().expect("front exists");
                         // swap-in reads run this step's fault draw
                         sw.seq.store.mc.set_fault_step(step);
                         match resume(sw, meta, cfg.codec) {
-                            Ok(seq) => {
+                            Ok(mut seq) => {
+                                seq.shard = chosen;
                                 out.events.push(SchedEvent {
                                     step,
                                     id: seq.req.id,
@@ -736,8 +815,19 @@ pub fn serve_trace<M: StepModel>(
                                 });
                                 if let Some(r) = rec.as_mut() {
                                     r.push(seq.req.id, ObsKind::Resume);
+                                    if nshards > 1 && chosen != home {
+                                        r.push(
+                                            seq.req.id,
+                                            ObsKind::ShardSteal {
+                                                from: home as u32,
+                                                to: chosen as u32,
+                                            },
+                                        );
+                                    }
                                 }
-                                committed += committed_bytes(&seq, meta, ratio);
+                                let c = committed_bytes(&seq, meta, ratio);
+                                committed += c;
+                                shard_committed[chosen] += c;
                                 active.push(seq);
                             }
                             Err((mut seq, e)) => {
@@ -767,7 +857,17 @@ pub fn serve_trace<M: StepModel>(
                 }
                 if let Some(req) = pending.front() {
                     let need = reserve_bytes(req, meta, ratio);
-                    if fits(committed, need, active.is_empty()) {
+                    let home = home_shard(req.id, nshards);
+                    let admit_ok = fits(committed, need, active.is_empty())
+                        && (cfg.steal
+                            || shard_fits(&shard_committed, home, need)
+                            || active.is_empty());
+                    if admit_ok {
+                        let chosen = if cfg.steal {
+                            place(&shard_committed, home, need)
+                        } else {
+                            home
+                        };
                         let req = pending.pop_front().expect("front exists");
                         out.events.push(SchedEvent {
                             step,
@@ -776,8 +876,18 @@ pub fn serve_trace<M: StepModel>(
                         });
                         if let Some(r) = rec.as_mut() {
                             r.push(req.id, ObsKind::Admit);
+                            if nshards > 1 && chosen != home {
+                                r.push(
+                                    req.id,
+                                    ObsKind::ShardSteer {
+                                        from: home as u32,
+                                        to: chosen as u32,
+                                    },
+                                );
+                            }
                         }
                         committed += need;
+                        shard_committed[chosen] += need;
                         active.push(admit(
                             req,
                             meta,
@@ -786,6 +896,7 @@ pub fn serve_trace<M: StepModel>(
                             share_index.as_ref(),
                             admit_counter,
                             step,
+                            chosen,
                         ));
                         admit_counter += 1;
                         continue;
@@ -1023,7 +1134,8 @@ pub fn serve_trace<M: StepModel>(
         // so the tenant entries conserve bit-exactly against
         // fetched_bytes / fetch_frames
         for (s, o) in active.iter().zip(&outs) {
-            metrics.attribute_fetch(s.req.tenant, o.dram_bytes_total(), o.stats.frames);
+            let shard = s.shard as u32;
+            metrics.attribute_fetch(s.req.tenant, shard, o.dram_bytes_total(), o.stats.frames);
         }
         // flight-recorder fetch timeline: the step's aggregate DRAM
         // service vs lane decode intervals, and the virtual clock advance
@@ -1054,6 +1166,16 @@ pub fn serve_trace<M: StepModel>(
                 sync_ns
             };
             metrics.record_step_fetch_latency(active.len(), sync_ns, overlapped_ns);
+            // channel-overlap model: each shard's DRAM traffic services on
+            // its own channel, so the step's modeled DRAM time is the MAX
+            // over shards (== the serial model at shards = 1)
+            shard_bytes.iter_mut().for_each(|b| *b = 0);
+            for (s, o) in active.iter().zip(&outs) {
+                shard_bytes[s.shard] += o.dram_bytes_total();
+            }
+            metrics.record_step_channel_overlap(
+                shard_bytes.iter().map(|&b| modeled_dram_ps(b)).max().unwrap_or(0),
+            );
         }
         // recovery bookkeeping: fold every sequence's ladder counters into
         // the run metrics (including sequences about to be quarantined),
@@ -1107,7 +1229,7 @@ pub fn serve_trace<M: StepModel>(
         // per-tenant split of the arena volume just recorded: the
         // per-sequence consumed-code bytes sum to exactly consumed_codes*2
         for (s, o) in active.iter().zip(&outs) {
-            metrics.attribute_host_copy(s.req.tenant, o.consumed_code_bytes());
+            metrics.attribute_host_copy(s.req.tenant, s.shard as u32, o.consumed_code_bytes());
         }
         let mut step_host_copy = (consumed_codes * 2) as u64;
 
@@ -1130,7 +1252,7 @@ pub fn serve_trace<M: StepModel>(
                 materialize_read(&views, &s.kv, meta, &mut dense_k, &mut dense_v);
                 let dense_bytes = ((dense_k.len() + dense_v.len()) * 4) as u64;
                 metrics.record_host_copy(dense_bytes);
-                metrics.attribute_host_copy(s.req.tenant, dense_bytes);
+                metrics.attribute_host_copy(s.req.tenant, s.shard as u32, dense_bytes);
                 step_host_copy += dense_bytes;
                 lm.decode(
                     &mut s.kv,
@@ -1455,6 +1577,7 @@ fn admit(
     share_index: Option<&Arc<Mutex<PageIndex>>>,
     admitted_order: u64,
     step: u64,
+    shard: usize,
 ) -> Seq {
     let mut store = KvPageStore::with_shared(meta, cfg.layout, cfg.codec, Arc::clone(lanes));
     store.mc.parity = cfg.parity;
@@ -1481,6 +1604,7 @@ fn admit(
         fed: 0,
         evictions: 0,
         recovery_seen: RecoveryStats::default(),
+        shard,
         admitted_order,
         first_token_step: None,
         last_token_step: step,
@@ -1971,7 +2095,7 @@ mod tests {
             policy: KvPolicy::Full,
         };
         let cfg = SchedConfig::compressed(1 << 30);
-        let mut seq = admit(req, &meta, &cfg, &lanes, None, 0, 0);
+        let mut seq = admit(req, &meta, &cfg, &lanes, None, 0, 0, 0);
         // run 41 steps: 2 complete pages + 9-token tail
         for i in 0..41 {
             let tok = if i < 8 { i as u16 } else { 7 };

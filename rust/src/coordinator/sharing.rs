@@ -44,6 +44,13 @@
 //! in a sharer set owns (pays for) the page; everyone else rides free
 //! ([`PageIndex::owner`]). Ownership re-resolves deterministically when
 //! the owner releases.
+//!
+//! **Sharding.** The index stays *serve-wide* under sharded
+//! multi-controller serving (`SchedConfig::shards` — see
+//! `dram::sharded`'s contract): content addressing spans every shard, so
+//! two sequences homed on different memory channels still dedup their
+//! identical prefix pages. Shard placement moves only where a sequence's
+//! traffic is attributed, never which physical frames back a page.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;

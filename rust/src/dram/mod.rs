@@ -4,9 +4,11 @@
 //! of DDR5-4800 with 10 ×4 devices each (`configs::ddr5::DDR5_4800_PAPER`).
 pub mod addrmap;
 pub mod bank;
+pub mod sharded;
 pub mod sim;
 
 pub use addrmap::{AddrMap, Address};
+pub use sharded::{home_shard, ShardedMemSystem};
 pub use sim::{
     modeled_read_energy_fj, Completion, EnergyBreakdown, MemorySystem, Request, SimStats,
 };

@@ -1,0 +1,226 @@
+//! Sharded multi-controller memory system: N independent DDR5 channels,
+//! one [`MemorySystem`] per shard, routed by a deterministic hash of the
+//! owning sequence id.
+//!
+//! # The shard/steal contract
+//!
+//! This module is the sharding seam for the whole serving stack; the
+//! scheduler (`coordinator::scheduler`), the metrics split
+//! (`ServeMetrics::shard_usage`), and the benches all follow the rules
+//! stated here.
+//!
+//! **Who owns placement.** The *scheduler* owns placement, at admission
+//! time only: a sequence's home shard is [`home_shard`]`(id, shards)` —
+//! a pure function of the request id, independent of arrival order, lane
+//! count, or fetch mode. A sequence's shard can change only at the two
+//! admission seams (first admit, or resume after eviction); it never
+//! moves while the sequence is active. Everything below the scheduler
+//! (this module, the metrics split, the flight recorder) *reports* by
+//! shard and never chooses one.
+//!
+//! **When stealing may fire.** With `SchedConfig::steal` on (the
+//! default), admission and eviction stay *global* — the solo admission
+//! ladder over the aggregate budget decides WHO runs, and sharding
+//! decides only WHERE: a new admission whose home shard is over its
+//! 1/N budget slice is steered to the coolest shard (fewest committed
+//! bytes, ties to the lowest shard index), and a resume is re-homed the
+//! same way (the work-stealing pass — an evicted sequence's capacity is
+//! reclaimed by whichever channel has headroom). Both decisions are pure
+//! functions of virtual-step state (committed bytes per shard), so the
+//! schedule — admissions, evictions, responses, digests — is
+//! bit-identical to the solo path at EVERY shard count; `shards` moves
+//! only the shard-attribution split and the channel-overlap figure.
+//! With `steal` off (the static baseline), each shard's budget slice is
+//! a hard wall: a sequence may only occupy its home shard, and admission
+//! additionally requires the home slice to fit — under skewed
+//! footprints this strands headroom on cool shards, which is exactly
+//! the gap the serve bench's steal-vs-static gate measures.
+//!
+//! **Determinism invariants.** [`home_shard`] is FNV-1a over the id's
+//! LE bytes — stable across runs, platforms, and shard counts.
+//! Steer/steal decisions read only committed-byte state that is itself
+//! bit-reproducible, and are logged as *advisory* flight-recorder
+//! records (`ShardSteer`/`ShardSteal`, emitted only when `shards > 1`)
+//! that the schedule digest skips — a solo run's event stream is
+//! byte-identical to the pre-sharding recorder format.
+//!
+//! # What this type models
+//!
+//! [`ShardedMemSystem`] gives each shard an independent single-channel
+//! [`MemorySystem`]: private FR-FCFS queue, bank/rank timing, refresh
+//! clock, and [`SimStats`] — traffic on one shard can never delay
+//! another (the per-channel independence `dram::sim` unit-tests). The
+//! serve loop itself stays on the analytic latency model; this type is
+//! the cycle-level witness the hotpath bench drives to show the
+//! channel-overlap win ([`ShardedMemSystem::drain_overlapped`] vs the
+//! serial sum).
+
+use super::sim::{MemorySystem, SimStats};
+use crate::configs::ddr5::Ddr5Config;
+use crate::util::hash::fnv1a64;
+
+/// Deterministic home shard of a sequence: FNV-1a of the id's LE bytes,
+/// reduced mod `shards`. Pure, platform-independent, and stable across
+/// shard counts (the mod-2 partition is a coarsening of the mod-4 one
+/// for power-of-two counts). `shards = 0` is treated as 1.
+pub fn home_shard(id: u64, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    (fnv1a64(&id.to_le_bytes()) % shards as u64) as usize
+}
+
+/// N independent single-channel memory systems behind one router — see
+/// the module docs for the shard/steal contract.
+pub struct ShardedMemSystem {
+    shards: Vec<MemorySystem>,
+}
+
+impl ShardedMemSystem {
+    /// Build `shards` independent systems, each a single-channel clone
+    /// of `cfg` (one FR-FCFS queue + rank + refresh clock per shard).
+    pub fn new(cfg: Ddr5Config, shards: usize) -> Self {
+        let n = shards.max(1);
+        let mut per_shard = cfg;
+        per_shard.channels = 1;
+        Self {
+            shards: (0..n).map(|_| MemorySystem::new(per_shard.clone())).collect(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &MemorySystem {
+        &self.shards[i]
+    }
+
+    pub fn shard_mut(&mut self, i: usize) -> &mut MemorySystem {
+        &mut self.shards[i]
+    }
+
+    /// Enqueue a byte range on `seq_id`'s home shard (see [`home_shard`]).
+    /// Returns the next free tag, like [`MemorySystem::enqueue_range`].
+    pub fn enqueue_range_for(
+        &mut self,
+        seq_id: u64,
+        base: u64,
+        bytes: u64,
+        is_write: bool,
+        first_tag: u64,
+    ) -> u64 {
+        let s = home_shard(seq_id, self.shards.len());
+        self.shards[s].enqueue_range(base, bytes, is_write, first_tag)
+    }
+
+    /// Drain every shard and return `(overlapped, serial)` finish
+    /// cycles: the channels run concurrently, so the system finishes at
+    /// the *slowest* shard (`overlapped` = max over shards), while a
+    /// single serial channel would have taken the *sum* — the ratio is
+    /// the channel-overlap win the hotpath bench reports.
+    pub fn drain_overlapped(&mut self) -> (u64, u64) {
+        let mut overlapped = 0u64;
+        let mut serial = 0u64;
+        for s in &mut self.shards {
+            let c = s.drain();
+            overlapped = overlapped.max(c);
+            serial += c;
+        }
+        (overlapped, serial)
+    }
+
+    /// Per-shard stats, shard-index order.
+    pub fn per_shard_stats(&self) -> Vec<&SimStats> {
+        self.shards.iter().map(|s| &s.stats).collect()
+    }
+
+    /// Sum of every shard's stats. Traffic counters sum bit-exactly;
+    /// `cycles` folds as the max (the overlapped clock — channels run
+    /// concurrently).
+    pub fn aggregate_stats(&self) -> SimStats {
+        let mut agg = SimStats::default();
+        for s in &self.shards {
+            agg.cycles = agg.cycles.max(s.stats.cycles);
+            agg.requests += s.stats.requests;
+            agg.read_bursts += s.stats.read_bursts;
+            agg.write_bursts += s.stats.write_bursts;
+            agg.activates += s.stats.activates;
+            agg.refreshes += s.stats.refreshes;
+            agg.row_hits += s.stats.row_hits;
+            agg.row_misses += s.stats.row_misses;
+            agg.row_conflicts += s.stats.row_conflicts;
+            agg.total_latency += s.stats.total_latency;
+            agg.retried_requests += s.stats.retried_requests;
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configs::ddr5::DDR5_4800_PAPER;
+
+    #[test]
+    fn home_shard_is_deterministic_in_range_and_spreads() {
+        for shards in [1usize, 2, 4, 8] {
+            let mut hit = vec![false; shards];
+            for id in 0..1000u64 {
+                let s = home_shard(id, shards);
+                assert!(s < shards);
+                assert_eq!(s, home_shard(id, shards), "not deterministic");
+                hit[s] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "some shard never chosen");
+        }
+        assert_eq!(home_shard(42, 0), 0);
+        assert_eq!(home_shard(42, 1), 0);
+    }
+
+    #[test]
+    fn power_of_two_partitions_nest() {
+        // hash % 2 == (hash % 4) % 2: the 2-shard partition coarsens the
+        // 4-shard one, which is what makes the channel-overlap figure
+        // monotone in shard count
+        for id in 0..512u64 {
+            assert_eq!(home_shard(id, 2), home_shard(id, 4) % 2);
+            assert_eq!(home_shard(id, 4), home_shard(id, 8) % 4);
+        }
+    }
+
+    #[test]
+    fn routed_traffic_sums_and_overlaps() {
+        let mut m = ShardedMemSystem::new(DDR5_4800_PAPER.clone(), 4);
+        assert_eq!(m.shards(), 4);
+        // route a stream per sequence id; ids chosen to land on >= 2 shards
+        let mut tag = 0;
+        for id in 0..8u64 {
+            tag = m.enqueue_range_for(id, id * (1 << 16), 64 * 64, false, tag);
+        }
+        let (overlapped, serial) = m.drain_overlapped();
+        assert!(overlapped > 0 && serial > overlapped, "channels must overlap");
+        let agg = m.aggregate_stats();
+        let req_sum: u64 = m.per_shard_stats().iter().map(|s| s.requests).sum();
+        assert_eq!(agg.requests, req_sum);
+        assert_eq!(agg.read_bursts, 8 * 64);
+        assert!(m.per_shard_stats().iter().filter(|s| s.requests > 0).count() >= 2);
+        assert_eq!(agg.cycles, overlapped);
+    }
+
+    #[test]
+    fn one_shard_matches_single_channel_system() {
+        let mut cfg = DDR5_4800_PAPER.clone();
+        cfg.channels = 1;
+        let mut solo = MemorySystem::new(cfg.clone());
+        solo.enqueue_range(0, 64 * 128, false, 0);
+        let solo_cycles = solo.drain();
+
+        let mut sharded = ShardedMemSystem::new(DDR5_4800_PAPER.clone(), 1);
+        sharded.enqueue_range_for(7, 0, 64 * 128, false, 0);
+        let (overlapped, serial) = sharded.drain_overlapped();
+        assert_eq!(overlapped, solo_cycles);
+        assert_eq!(serial, solo_cycles);
+        assert_eq!(sharded.aggregate_stats(), solo.stats);
+    }
+}

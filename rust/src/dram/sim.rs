@@ -283,6 +283,15 @@ pub struct MemorySystem {
     channels: Vec<Channel>,
     cycle: u64,
     pub stats: SimStats,
+    /// Per-channel split of [`MemorySystem::stats`]: every traffic
+    /// counter (requests, bursts, activates, refreshes, row outcomes,
+    /// latency, retries) increments the owning channel's entry at the
+    /// same site as the aggregate, so the non-`cycles` fields sum
+    /// *bit-exactly* to `stats` (unit-tested below). `cycles` is the
+    /// system-wide clock — it lives only in the aggregate and stays 0
+    /// here. A retry tick is attributed to the channel of the retried
+    /// range's base address.
+    pub channel_stats: Vec<SimStats>,
     completions: Vec<Completion>,
     /// Max queued requests per channel before `enqueue` reports backpressure.
     pub queue_depth: usize,
@@ -306,12 +315,14 @@ impl MemorySystem {
                 skip_until: 0,
             })
             .collect();
+        let n_channels = channels.len();
         Self {
             cfg,
             map,
             channels,
             cycle: 0,
             stats: SimStats::default(),
+            channel_stats: vec![SimStats::default(); n_channels],
             completions: Vec::new(),
             queue_depth: 64,
             fast_forward: true,
@@ -341,6 +352,7 @@ impl MemorySystem {
         let floor = ch.rank.issue_floor(&self.cfg);
         ch.skip_until = ch.skip_until.min(floor);
         self.stats.requests += 1;
+        self.channel_stats[addr.channel].requests += 1;
         true
     }
 
@@ -384,6 +396,9 @@ impl MemorySystem {
     /// next free tag, exactly like [`enqueue_range`](Self::enqueue_range).
     pub fn enqueue_retry_tagged(&mut self, base: u64, bytes: u64, first_tag: u64) -> u64 {
         self.stats.retried_requests += 1;
+        let burst = self.cfg.burst_bytes() as u64;
+        let ch = self.map.decode(base / burst * burst).channel;
+        self.channel_stats[ch].retried_requests += 1;
         self.enqueue_range(base, bytes, false, first_tag)
     }
 
@@ -468,7 +483,7 @@ impl MemorySystem {
         let cycle = self.cycle;
         let cfg = &self.cfg;
         let ff = self.fast_forward;
-        for ch in &mut self.channels {
+        for (ci, ch) in self.channels.iter_mut().enumerate() {
             // scan suppression is part of the fast path; the naive
             // reference mode rescans every channel every cycle
             if (ff && cycle < ch.skip_until) || ch.queue.is_empty() {
@@ -484,6 +499,7 @@ impl MemorySystem {
                 }
                 ch.next_refresh += cfg.t_refi;
                 self.stats.refreshes += 1;
+                self.channel_stats[ci].refreshes += 1;
                 progressed = true;
                 continue;
             }
@@ -533,6 +549,7 @@ impl MemorySystem {
                                 bank.next_act = bank.next_act.max(cycle + cfg.t_rp);
                                 bank.row_conflicts += 1;
                                 self.stats.row_conflicts += 1;
+                                self.channel_stats[ci].row_conflicts += 1;
                                 progressed = true;
                             }
                         }
@@ -549,6 +566,8 @@ impl MemorySystem {
                                 bank.row_misses += 1;
                                 self.stats.activates += 1;
                                 self.stats.row_misses += 1;
+                                self.channel_stats[ci].activates += 1;
+                                self.channel_stats[ci].row_misses += 1;
                                 progressed = true;
                             }
                         }
@@ -561,19 +580,23 @@ impl MemorySystem {
                 let bank = &mut ch.banks[p.bank];
                 bank.row_hits += 1;
                 self.stats.row_hits += 1;
+                self.channel_stats[ci].row_hits += 1;
                 ch.rank.record_col(cfg, p.addr.bankgroup, cycle, p.is_write);
                 // data lands after CL/CWL + BL/2
                 let lat = if p.is_write { cfg.cwl } else { cfg.cl };
                 let finish = cycle + lat + cfg.burst_len as u64 / 2;
                 if p.is_write {
                     self.stats.write_bursts += 1;
+                    self.channel_stats[ci].write_bursts += 1;
                     // tWR after write data before precharge
                     bank.next_pre = bank.next_pre.max(finish + cfg.t_wr);
                 } else {
                     self.stats.read_bursts += 1;
+                    self.channel_stats[ci].read_bursts += 1;
                     bank.next_pre = bank.next_pre.max(cycle + cfg.t_rtp);
                 }
                 self.stats.total_latency += finish - p.arrival;
+                self.channel_stats[ci].total_latency += finish - p.arrival;
                 self.completions.push(Completion { tag: p.tag, finish });
                 progressed = true;
             } else {
@@ -741,14 +764,132 @@ mod tests {
         }
     }
 
+    /// Sum of the non-`cycles` fields of every per-channel entry
+    /// (`cycles` is the system-wide clock and lives only in the
+    /// aggregate).
+    fn channel_sum(s: &MemorySystem) -> SimStats {
+        let mut sum = SimStats::default();
+        for c in &s.channel_stats {
+            assert_eq!(c.cycles, 0, "per-channel cycles must stay 0");
+            sum.requests += c.requests;
+            sum.read_bursts += c.read_bursts;
+            sum.write_bursts += c.write_bursts;
+            sum.activates += c.activates;
+            sum.refreshes += c.refreshes;
+            sum.row_hits += c.row_hits;
+            sum.row_misses += c.row_misses;
+            sum.row_conflicts += c.row_conflicts;
+            sum.total_latency += c.total_latency;
+            sum.retried_requests += c.retried_requests;
+        }
+        sum.cycles = s.stats.cycles;
+        sum
+    }
+
+    #[test]
+    fn per_channel_stats_sum_bit_exactly_to_aggregate() {
+        let mut s = sys();
+        let mut tag = 0u64;
+        tag = s.enqueue_range(0, 64 * 512, false, tag);
+        let mut rng = crate::util::rng::Xoshiro256::new(17);
+        for _ in 0..256 {
+            let addr = (rng.next_u64() % (1 << 28)) / 64 * 64;
+            while !s.enqueue(Request {
+                addr,
+                is_write: rng.next_f64() < 0.25,
+                arrival: s.now(),
+                tag,
+            }) {
+                s.tick();
+            }
+            tag += 1;
+        }
+        s.enqueue_retry(128, 64 * 8);
+        s.drain();
+        assert_eq!(s.channel_stats.len(), s.cfg.channels);
+        assert_eq!(channel_sum(&s), s.stats);
+        // the interleaving actually spread traffic: >= 2 channels busy
+        let busy = s.channel_stats.iter().filter(|c| c.requests > 0).count();
+        assert!(busy >= 2, "expected multi-channel traffic, got {busy}");
+    }
+
+    #[test]
+    fn channel_queues_are_independent() {
+        // A probe request on one channel must complete at exactly the
+        // same cycle whether or not another channel is saturated: the
+        // per-channel FR-FCFS queues share only the clock.
+        let cfg = DDR5_4800_PAPER.clone();
+        assert!(cfg.channels >= 2);
+        let map = AddrMap::new(&cfg);
+        // find one 64 B-aligned address per channel
+        let addr_on = |ch: usize| {
+            (0..1u64 << 20)
+                .map(|i| i * 64)
+                .find(|&a| map.decode(a).channel == ch)
+                .expect("address on channel")
+        };
+        let probe = Request {
+            addr: addr_on(1),
+            is_write: false,
+            arrival: 0,
+            tag: 999_999,
+        };
+        let run = |load_ch0: bool| {
+            let mut s = sys();
+            if load_ch0 {
+                // saturate channel 0 with a long streaming run touching
+                // only channel-0 addresses
+                let mut tag = 0;
+                let mut enq = 0;
+                let mut a = 0u64;
+                while enq < 48 {
+                    if map.decode(a).channel == 0 {
+                        while !s.enqueue(Request {
+                            addr: a,
+                            is_write: false,
+                            arrival: 0,
+                            tag,
+                        }) {
+                            s.tick();
+                        }
+                        tag += 1;
+                        enq += 1;
+                    }
+                    a += 64;
+                }
+            }
+            assert!(s.enqueue(probe));
+            s.drain();
+            s.take_completions()
+                .into_iter()
+                .find(|c| c.tag == probe.tag)
+                .expect("probe completes")
+                .finish
+        };
+        assert_eq!(run(false), run(true), "channel-0 load delayed channel 1");
+    }
+
     #[test]
     fn fast_forward_is_cycle_exact_vs_naive_ticking() {
+        fast_forward_equivalence(DDR5_4800_PAPER.clone());
+    }
+
+    #[test]
+    fn fast_forward_is_cycle_exact_at_one_channel() {
+        // the sharded serve path runs one MemorySystem per shard with
+        // channels = 1 — the equivalence must hold there too
+        let mut cfg = DDR5_4800_PAPER.clone();
+        cfg.channels = 1;
+        fast_forward_equivalence(cfg);
+    }
+
+    fn fast_forward_equivalence(cfg: Ddr5Config) {
         // Event skipping must change nothing observable: run the same
         // mixed workload (stream + scattered reads + writes) in both
         // modes and require identical cycle counts, stats, and
         // completion times.
         let run = |fast: bool| -> (u64, SimStats, Vec<Completion>) {
-            let mut s = sys();
+            let mut s = MemorySystem::new(cfg.clone());
             s.fast_forward = fast;
             let mut tag = 0u64;
             // streaming burst
@@ -772,6 +913,7 @@ mod tests {
             let cycles = s.drain();
             let mut comps = s.take_completions();
             comps.sort_by_key(|c| (c.tag, c.finish));
+            assert_eq!(channel_sum(&s), s.stats, "channel split diverged");
             (cycles, s.stats.clone(), comps)
         };
         let (fc, fs, fcomp) = run(true);

@@ -95,6 +95,16 @@ fn encode_record(e: &Event, out: &mut Vec<u8>) {
             out.push(17);
             out.extend_from_slice(&bytes.to_le_bytes());
         }
+        EventKind::ShardSteer { from, to } => {
+            out.push(18);
+            out.extend_from_slice(&from.to_le_bytes());
+            out.extend_from_slice(&to.to_le_bytes());
+        }
+        EventKind::ShardSteal { from, to } => {
+            out.push(19);
+            out.extend_from_slice(&from.to_le_bytes());
+            out.extend_from_slice(&to.to_le_bytes());
+        }
     }
 }
 
@@ -220,6 +230,14 @@ impl FlightRecording {
                 15 => EventKind::Share { bytes: rd.u64()? },
                 16 => EventKind::Unshare { bytes: rd.u64()? },
                 17 => EventKind::Cow { bytes: rd.u64()? },
+                18 => EventKind::ShardSteer {
+                    from: rd.u32()?,
+                    to: rd.u32()?,
+                },
+                19 => EventKind::ShardSteal {
+                    from: rd.u32()?,
+                    to: rd.u32()?,
+                },
                 t => return Err(format!("unknown event tag {t}")),
             };
             events.push(Event {
@@ -354,6 +372,16 @@ impl FlightRecording {
                 EventKind::Cow { bytes } => {
                     args.insert("bytes".into(), Json::Num(bytes as f64));
                     ("cow", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::ShardSteer { from, to } => {
+                    args.insert("from".into(), Json::Num(from as f64));
+                    args.insert("to".into(), Json::Num(to as f64));
+                    ("shard-steer", PID_SEQUENCES, e.seq, None)
+                }
+                EventKind::ShardSteal { from, to } => {
+                    args.insert("from".into(), Json::Num(from as f64));
+                    args.insert("to".into(), Json::Num(to as f64));
+                    ("shard-steal", PID_SEQUENCES, e.seq, None)
                 }
             };
             let tid = if e.seq == NO_SEQ && pid == PID_SEQUENCES {

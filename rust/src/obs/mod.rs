@@ -20,7 +20,10 @@
 //!   cycle-interleaved issue model) and host-copy volume;
 //! - **recovery-ladder rungs** — per-sequence retry / parity-repair /
 //!   salvage / fault deltas ([`EventKind::Recovery`]);
-//! - **prefetch advisories** — issue / hit / miss / discard.
+//! - **prefetch advisories** — issue / hit / miss / discard;
+//! - **shard placement advisories** — admission steer / resume steal
+//!   across memory-controller shards (emitted only when
+//!   `SchedConfig::shards > 1`; see `dram::sharded`'s contract).
 //!
 //! Every record is stamped with the virtual step and modeled time
 //! ([`Event::t_ps`], integer picoseconds derived from the same analytic
@@ -151,11 +154,25 @@ pub enum EventKind {
     /// Sharing: a shared page diverged (copy-on-write — an unrepaired
     /// salvage mutated stored bytes) and went private to its mutator.
     Cow { bytes: u64 },
+    /// Sharding advisory: a new admission was steered off its saturated
+    /// home shard (`from`) to the coolest shard (`to`). Emitted only
+    /// when `SchedConfig::shards > 1`, so a solo run's stream is
+    /// byte-identical to the pre-sharding format; placement is advisory
+    /// — the schedule itself is shard-count-invariant (see
+    /// `dram::sharded`'s contract).
+    ShardSteer { from: u32, to: u32 },
+    /// Sharding advisory: the work-stealing pass re-homed a resuming
+    /// evicted sequence from shard `from` to the coolest shard `to`.
+    /// Same emission rule as [`EventKind::ShardSteer`].
+    ShardSteal { from: u32, to: u32 },
 }
 
 impl EventKind {
-    /// Prefetch advisories — the only records allowed to differ between
-    /// prefetch on/off, excluded from [`FlightRecording::schedule_digest`].
+    /// Advisory records — excluded from
+    /// [`FlightRecording::schedule_digest`]: prefetch advisories (the
+    /// only records allowed to differ between prefetch on/off) and
+    /// shard placement advisories (the only records allowed to differ
+    /// across shard counts).
     pub fn is_advisory(&self) -> bool {
         matches!(
             self,
@@ -163,6 +180,8 @@ impl EventKind {
                 | EventKind::PrefetchHit { .. }
                 | EventKind::PrefetchMiss { .. }
                 | EventKind::PrefetchDiscard { .. }
+                | EventKind::ShardSteer { .. }
+                | EventKind::ShardSteal { .. }
         )
     }
 }
@@ -345,5 +364,9 @@ mod tests {
         assert!(!EventKind::Admit.is_advisory());
         assert!(!EventKind::FetchDram { bytes: 1, frames: 1 }.is_advisory());
         assert!(!EventKind::Dropped { count: 1 }.is_advisory());
+        // shard placement records are advisory too: they may differ
+        // across shard counts while the schedule digest stays fixed
+        assert!(EventKind::ShardSteer { from: 0, to: 1 }.is_advisory());
+        assert!(EventKind::ShardSteal { from: 2, to: 0 }.is_advisory());
     }
 }

@@ -131,6 +131,43 @@ impl WorkloadSpec {
             shared_prefixes: vec![],
         }
     }
+
+    /// A skew-heavy two-class mix: a dominant whale tenant whose prompts
+    /// fill most of the context next to a light chat tenant. The whales
+    /// hash-cluster enough committed bytes onto single shards that a
+    /// static home-shard wall (`SchedConfig::steal = false`) rejects
+    /// admissions a cross-shard steal would place — the workload the
+    /// steal-vs-static bench gate measures on.
+    pub fn skewed_whales(arrival: ArrivalProcess, n_requests: usize, max_seq: usize) -> Self {
+        let whale_hi = (max_seq * 3 / 4).max(2);
+        let chat_hi = (max_seq / 8).max(2);
+        Self {
+            arrival,
+            tenants: vec![
+                TenantSpec {
+                    name: "whale".into(),
+                    weight: 2.0,
+                    policy: KvPolicy::Full,
+                    prompt: LengthDist::Uniform {
+                        lo: whale_hi / 2,
+                        hi: whale_hi,
+                    },
+                    output: LengthDist::Uniform { lo: 4, hi: 12 },
+                },
+                TenantSpec {
+                    name: "light".into(),
+                    weight: 1.0,
+                    policy: KvPolicy::QuestTopK { pages: 4 },
+                    prompt: LengthDist::Uniform { lo: 2, hi: chat_hi },
+                    output: LengthDist::Uniform { lo: 4, hi: chat_hi },
+                },
+            ],
+            n_requests,
+            vocab: 256,
+            max_seq,
+            shared_prefixes: vec![],
+        }
+    }
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@ use camc::coordinator::{
 };
 use camc::engine::LaneArray;
 use camc::memctrl::FaultPlan;
-use camc::obs::{EventKind, FlightRecording, RecorderCfg};
+use camc::obs::{Event, EventKind, FlightRecording, RecorderCfg};
 use camc::quant::policy::KvPolicy;
 use camc::workload::arrival::ArrivalProcess;
 use camc::workload::lengths::LengthDist;
@@ -364,6 +364,79 @@ fn recovery_rungs_land_in_the_stream_and_digest_identically() {
         1,
         "fault-run stream digest must be identical across lanes/fetch modes: {digests:?}"
     );
+}
+
+#[test]
+fn shard_advisories_stay_out_of_solo_streams_and_off_the_schedule_digest() {
+    // Shard placement records (ShardSteer/ShardSteal) are emitted only
+    // when shards > 1: a solo run's event stream — and therefore its
+    // full digest — is byte-identical to the pre-sharding recorder
+    // format. A sharded run may add ONLY those advisory records: the
+    // schedule digest (advisories skipped) never moves, and the new
+    // binary tags round-trip through the CAMCEVT1 form.
+    let lm = SynthLm::tiny(5);
+    let trace = Trace::generate(&dense_spec(8, 8.0, 16, 48), 31);
+    let cfg = SchedConfig {
+        record: Some(RecorderCfg::default()),
+        ..SchedConfig::compressed(9500)
+    };
+    let solo = serve(&lm, &trace, &cfg, 8);
+    let f_solo = flight(&solo);
+    let is_shard_advisory = |k: &EventKind| {
+        matches!(k, EventKind::ShardSteer { .. } | EventKind::ShardSteal { .. })
+    };
+    assert!(
+        !f_solo.events.iter().any(|e| is_shard_advisory(&e.kind)),
+        "solo run emitted a shard placement record"
+    );
+
+    let sharded = serve(&lm, &trace, &SchedConfig { shards: 4, ..cfg.clone() }, 8);
+    let f_sh = flight(&sharded);
+    assert_eq!(
+        f_sh.schedule_digest(),
+        f_solo.schedule_digest(),
+        "shard advisories moved the schedule digest"
+    );
+    for e in &f_sh.events {
+        if is_shard_advisory(&e.kind) {
+            assert!(e.kind.is_advisory(), "shard records must classify advisory");
+        }
+    }
+    // stripped of the advisories, the sharded stream IS the solo stream
+    let stripped = FlightRecording {
+        events: f_sh
+            .events
+            .iter()
+            .filter(|e| !is_shard_advisory(&e.kind))
+            .copied()
+            .collect(),
+    };
+    assert_eq!(&stripped, f_solo, "sharded stream diverged beyond advisories");
+
+    // the new binary tags round-trip (synthetic stream, so the encode /
+    // decode arms are pinned even if this workload never steers)
+    let mut events = f_solo.events.clone();
+    events.push(Event {
+        step: 1,
+        t_ps: 123,
+        seq: 7,
+        kind: EventKind::ShardSteer { from: 3, to: 0 },
+    });
+    events.push(Event {
+        step: 2,
+        t_ps: 456,
+        seq: 9,
+        kind: EventKind::ShardSteal { from: 1, to: 2 },
+    });
+    let synth = FlightRecording { events };
+    let back = FlightRecording::from_bytes(&synth.to_bytes()).expect("round-trip");
+    assert_eq!(back, synth);
+    assert_eq!(
+        synth.schedule_digest(),
+        f_solo.schedule_digest(),
+        "appended advisories must not move the schedule digest"
+    );
+    assert_ne!(synth.digest(), f_solo.digest(), "full digest must see them");
 }
 
 #[test]

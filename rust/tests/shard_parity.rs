@@ -1,0 +1,317 @@
+//! Shard-parity differential suite for sharded multi-controller serving
+//! (`SchedConfig::shards`): with cross-shard stealing on (the default),
+//! sharding is *placement-only* — the solo admission ladder over the
+//! aggregate budget decides WHO runs and sharding decides only WHERE —
+//! so a sharded serve must be **bit-identical** to the solo path at
+//! {2, 4, 8} shards × {1, 8, 32} lanes × fetch modes × prefetch on/off
+//! × sharing on/off, under a budget tight enough to engage the pressure
+//! clamp and force evict/resume cycles: responses, read/page digests,
+//! schedule events, recovery counters, the schedule digest, and the
+//! full flight digest once the advisory `ShardSteer`/`ShardSteal`
+//! records (the only permitted stream difference) are filtered out.
+//! Per-shard attribution must conserve: the `shard_usage` entries sum
+//! bit-exactly to the global `attributed` totals, and the modeled
+//! channel-overlapped DRAM time never exceeds the serial model.
+//!
+//! The payoff side is pinned as a seeded property: on skew-heavy
+//! workloads at equal aggregate budget, work stealing never serves
+//! fewer sequences than static home-shard assignment (`steal = false`),
+//! and beats it on at least one sampled case (non-vacuity).
+
+use std::cell::Cell;
+use std::sync::Arc;
+
+use camc::coordinator::{
+    serve_trace, EventKind, FetchMode, SchedConfig, SchedOutcome, ServeMetrics, TenantUsage,
+    TrafficResponse,
+};
+use camc::engine::LaneArray;
+use camc::obs::{EventKind as ObsKind, FlightRecording, RecorderCfg};
+use camc::quant::policy::KvPolicy;
+use camc::util::check::check;
+use camc::workload::arrival::ArrivalProcess;
+use camc::workload::lengths::LengthDist;
+use camc::workload::synthmodel::SynthLm;
+use camc::workload::tenant::{TenantSpec, WorkloadSpec};
+use camc::workload::trace::Trace;
+
+/// Dense uniform-random workload (no shared prefixes): every request is
+/// unique content, so the sharing legs of the matrix exercise the
+/// content-address path without dedup moving any bytes.
+fn dense_spec(n: usize, rate: f64, prompt: usize, output: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: ArrivalProcess::Poisson { rate },
+        tenants: vec![TenantSpec {
+            name: "t".into(),
+            weight: 1.0,
+            policy: KvPolicy::Full,
+            prompt: LengthDist::Fixed(prompt),
+            output: LengthDist::Fixed(output),
+        }],
+        n_requests: n,
+        vocab: 256,
+        max_seq: 128,
+        shared_prefixes: vec![],
+    }
+}
+
+/// Everything deterministic about a response (wall time excluded).
+fn key(r: &TrafficResponse) -> (u64, Vec<u16>, u64, u64, u64, u64, u32, u64) {
+    (
+        r.id,
+        r.tokens.clone(),
+        r.mean_nll.to_bits(),
+        r.kv_fetched_bytes,
+        r.kv_pages_digest,
+        r.read_digest,
+        r.evictions,
+        r.recovered_faults,
+    )
+}
+
+fn serve(
+    lm: &SynthLm,
+    trace: &Trace,
+    cfg: &SchedConfig,
+    lanes: usize,
+) -> (SchedOutcome, ServeMetrics) {
+    let la = Arc::new(LaneArray::new(lanes));
+    let mut m = ServeMetrics::default();
+    let cfg = SchedConfig { collect_digests: true, ..cfg.clone() };
+    let out = serve_trace(lm, trace, &cfg, la, &mut m).expect("serve_trace");
+    (out, m)
+}
+
+fn is_shard_advisory(k: &ObsKind) -> bool {
+    matches!(k, ObsKind::ShardSteer { .. } | ObsKind::ShardSteal { .. })
+}
+
+/// The recording with the shard placement advisories removed — the only
+/// records a sharded run may add to the solo stream.
+fn strip_shard_advisories(f: &FlightRecording) -> (FlightRecording, usize) {
+    let events: Vec<_> = f
+        .events
+        .iter()
+        .filter(|e| !is_shard_advisory(&e.kind))
+        .copied()
+        .collect();
+    let stripped = f.events.len() - events.len();
+    (FlightRecording { events }, stripped)
+}
+
+/// The integer-domain halves of both runs must match exactly; the f64
+/// latency sums tolerate last-bit merge-order drift only.
+fn assert_serve_identical(
+    tag: &str,
+    solo: &(SchedOutcome, ServeMetrics),
+    sharded: &(SchedOutcome, ServeMetrics),
+) {
+    let ((base, bm), (o, m)) = (solo, sharded);
+    assert_eq!(o.events, base.events, "{tag}: schedule diverged");
+    assert_eq!(o.peak_active, base.peak_active, "{tag}");
+    assert_eq!(o.steps, base.steps, "{tag}");
+    assert_eq!(o.pressure_steps, base.pressure_steps, "{tag}");
+    assert_eq!(
+        o.responses.iter().map(key).collect::<Vec<_>>(),
+        base.responses.iter().map(key).collect::<Vec<_>>(),
+        "{tag}: responses diverged"
+    );
+    assert_eq!(m.steps, bm.steps, "{tag}");
+    assert_eq!(m.fetched_bytes, bm.fetched_bytes, "{tag}: fetched bytes");
+    assert_eq!(m.fetch_frames, bm.fetch_frames, "{tag}: fetched frames");
+    assert_eq!(m.fetch_dispatches, bm.fetch_dispatches, "{tag}: dispatches");
+    assert_eq!(m.host_copy_bytes, bm.host_copy_bytes, "{tag}: host copies");
+    assert_eq!(m.tenants, bm.tenants, "{tag}: per-tenant stats");
+    assert_eq!(m.tenant_usage, bm.tenant_usage, "{tag}: tenant attribution");
+    assert_eq!(m.attributed, bm.attributed, "{tag}: attributed totals");
+    // recovery counters (all zero on this fault-free matrix, pinned so
+    // a sharded run can never silently quarantine)
+    assert_eq!(
+        (m.faults_injected, m.retries, m.parity_repairs, m.salvaged_reads, m.quarantined_seqs),
+        (
+            bm.faults_injected,
+            bm.retries,
+            bm.parity_repairs,
+            bm.salvaged_reads,
+            bm.quarantined_seqs
+        ),
+        "{tag}: recovery counters diverged"
+    );
+    assert_eq!(
+        (m.dedup_pages, m.dedup_bytes_saved, m.cow_copies, m.unique_bytes),
+        (bm.dedup_pages, bm.dedup_bytes_saved, bm.cow_copies, bm.unique_bytes),
+        "{tag}: sharing counters diverged"
+    );
+    let rel = (m.sync_fetch_ns - bm.sync_fetch_ns).abs() / bm.sync_fetch_ns.max(1.0);
+    assert!(
+        rel < 1e-9,
+        "{tag}: modeled sync latency drifted: {} vs {}",
+        m.sync_fetch_ns,
+        bm.sync_fetch_ns
+    );
+}
+
+/// Per-shard attribution conservation: the shard entries sum bit-exactly
+/// to the attributed totals and every key is a live shard index.
+fn assert_shard_conservation(tag: &str, m: &ServeMetrics, nshards: usize) {
+    let mut sum = TenantUsage::default();
+    for (&s, u) in &m.shard_usage {
+        assert!((s as usize) < nshards, "{tag}: shard key {s} out of range");
+        sum.add(u);
+    }
+    assert_eq!(sum, m.attributed, "{tag}: shard attribution does not conserve");
+}
+
+#[test]
+fn sharded_steal_serve_is_bit_identical_to_solo() {
+    // The acceptance matrix: under a budget tight enough to clamp AND
+    // force evict/resume cycles (pinned non-vacuous below), a sharded
+    // serve with stealing on equals the solo serve bit-for-bit at every
+    // shard count, lane count, fetch mode, prefetch and sharing
+    // setting. The flight streams may differ ONLY by the advisory
+    // ShardSteer/ShardSteal records; the schedule digest never moves.
+    let lm = SynthLm::tiny(5);
+    let trace = Trace::generate(&dense_spec(8, 8.0, 16, 48), 31);
+    let budget = 9500u64;
+    let advisories_seen = Cell::new(0usize);
+    for fetch in [FetchMode::Batched, FetchMode::PerSequence] {
+        for prefetch in [false, true] {
+            for sharing in [false, true] {
+                let cfg = SchedConfig {
+                    fetch,
+                    prefetch,
+                    sharing,
+                    record: Some(RecorderCfg::default()),
+                    ..SchedConfig::compressed(budget)
+                };
+                let base = serve(&lm, &trace, &cfg, 1);
+                assert_eq!(base.0.responses.len(), 8, "all requests complete");
+                assert!(
+                    base.0.events.iter().any(|e| e.kind == EventKind::Evict),
+                    "{fetch:?}: budget must force evictions or the test is vacuous"
+                );
+                assert!(
+                    base.0.pressure_steps[1] + base.0.pressure_steps[2] > 0,
+                    "{fetch:?}: budget must engage the pressure clamp"
+                );
+                let bf = base.0.flight.as_ref().expect("recorder on");
+                assert!(
+                    !bf.events.iter().any(|e| is_shard_advisory(&e.kind)),
+                    "solo run must emit no shard advisories"
+                );
+                // solo attribution lands entirely on shard 0
+                assert!(
+                    base.1.shard_usage.keys().all(|&s| s == 0),
+                    "solo shard_usage must be keyed by shard 0 only"
+                );
+                assert_shard_conservation("solo", &base.1, 1);
+                for shards in [2usize, 4, 8] {
+                    for lanes in [1usize, 8, 32] {
+                        let scfg = SchedConfig { shards, ..cfg.clone() };
+                        let sh = serve(&lm, &trace, &scfg, lanes);
+                        let tag =
+                            format!("{fetch:?}/prefetch={prefetch}/sharing={sharing}/{shards} shards/{lanes} lanes");
+                        assert_serve_identical(&tag, &base, &sh);
+                        assert_shard_conservation(&tag, &sh.1, shards);
+                        // channels overlap: the per-step max over shards
+                        // can never exceed the serial (solo) model
+                        assert!(
+                            sh.1.channel_overlapped_ps <= base.1.channel_overlapped_ps,
+                            "{tag}: overlapped {} ps > serial {} ps",
+                            sh.1.channel_overlapped_ps,
+                            base.1.channel_overlapped_ps
+                        );
+                        let sf = sh.0.flight.as_ref().expect("recorder on");
+                        assert_eq!(
+                            sf.schedule_digest(),
+                            bf.schedule_digest(),
+                            "{tag}: schedule digest diverged"
+                        );
+                        let (stripped, n_adv) = strip_shard_advisories(sf);
+                        advisories_seen.set(advisories_seen.get() + n_adv);
+                        assert_eq!(
+                            stripped.digest(),
+                            bf.digest(),
+                            "{tag}: flight digest diverged beyond shard advisories"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        advisories_seen.get() > 0,
+        "no sharded run ever steered/stole — the advisory-stream claim is vacuous"
+    );
+}
+
+#[test]
+fn one_shard_is_bit_identical_in_both_steal_modes() {
+    // shards = 1 must be the pre-sharding path exactly, with stealing
+    // on or off: identical schedule, responses, metrics, AND the full
+    // flight digest (no advisory records exist to strip).
+    let lm = SynthLm::tiny(5);
+    let trace = Trace::generate(&dense_spec(8, 8.0, 16, 48), 31);
+    let cfg = SchedConfig {
+        record: Some(RecorderCfg::default()),
+        ..SchedConfig::compressed(9500)
+    };
+    let base = serve(&lm, &trace, &cfg, 8);
+    let bf = base.0.flight.as_ref().expect("recorder on");
+    for steal in [true, false] {
+        let scfg = SchedConfig { shards: 1, steal, ..cfg.clone() };
+        let solo = serve(&lm, &trace, &scfg, 8);
+        let tag = format!("1 shard, steal={steal}");
+        assert_serve_identical(&tag, &base, &solo);
+        let sf = solo.0.flight.as_ref().expect("recorder on");
+        assert_eq!(sf.digest(), bf.digest(), "{tag}: flight digest diverged");
+        assert_eq!(
+            solo.1.channel_overlapped_ps, base.1.channel_overlapped_ps,
+            "{tag}: at one shard the overlap model IS the serial model"
+        );
+    }
+}
+
+#[test]
+fn work_stealing_never_serves_fewer_property() {
+    // The payoff property at equal aggregate budget: on random
+    // skew-heavy workloads (whale prompts next to light chat), within a
+    // fixed virtual-step horizon, cross-shard stealing completes at
+    // least as many sequences as static home-shard assignment — a
+    // steered admission can only use capacity the static wall strands.
+    // At least one sampled case must show a strict win (non-vacuity).
+    let strict_wins = Cell::new(0u64);
+    check("steal_never_serves_fewer", 12, |g| {
+        let lm = SynthLm::tiny(5);
+        let n = 10 + g.rng.index(9);
+        let rate = 1.0 + g.rng.next_f64() * 2.0;
+        let spec = WorkloadSpec::skewed_whales(ArrivalProcess::Poisson { rate }, n, 128);
+        let trace = Trace::generate(&spec, g.case_seed);
+        let budget = [12 * 1024u64, 16 * 1024, 24 * 1024][g.rng.index(3)];
+        let shards = [2usize, 4, 8][g.rng.index(3)];
+        let horizon = 64 + g.rng.index(5) as u64 * 16;
+        let cfg = |steal: bool| SchedConfig {
+            shards,
+            steal,
+            max_steps: horizon,
+            ..SchedConfig::compressed(budget)
+        };
+        let (steal_out, _) = serve(&lm, &trace, &cfg(true), 8);
+        let (static_out, _) = serve(&lm, &trace, &cfg(false), 8);
+        if steal_out.responses.len() < static_out.responses.len() {
+            return Err(format!(
+                "stealing served fewer: {} vs {} (n={n} budget={budget} shards={shards} horizon={horizon})",
+                steal_out.responses.len(),
+                static_out.responses.len()
+            ));
+        }
+        if steal_out.responses.len() > static_out.responses.len() {
+            strict_wins.set(strict_wins.get() + 1);
+        }
+        Ok(())
+    });
+    assert!(
+        strict_wins.get() > 0,
+        "stealing never beat the static wall on any sampled case — the property is vacuous"
+    );
+}
